@@ -1,0 +1,52 @@
+//! Batch processing on the public cloud (the paper's Sec. 5.2 scenario):
+//! run all four policies on the same recurring PageRank workload and
+//! compare converged performance and cost — the Fig. 7a/7b story in one
+//! program, including the scheduling advantage Drone gets from its
+//! zone sub-vector on this network-bound job.
+//!
+//! Run: cargo run --release --example batch_public_cloud [steps]
+
+use drone::apps::batch::BatchWorkload;
+use drone::config::SystemConfig;
+use drone::experiments::harness::post_warmup;
+use drone::experiments::{run_batch_env, BatchEnvConfig, CloudSetting};
+use drone::runtime::Backend;
+use drone::util::stats;
+use drone::util::table::Table;
+
+fn main() {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(25);
+    let mut sys = SystemConfig::default();
+    sys.seed = 11;
+
+    let mut tab = Table::new(
+        "PageRank, public cloud — converged comparison",
+        &["policy", "elapsed s (post-conv)", "cost $/run", "halts", "mean cross-zone"],
+    );
+    for policy in ["k8s-hpa", "cherrypick", "accordia", "drone"] {
+        let mut backend = Backend::auto(&sys.artifacts_dir);
+        let env = BatchEnvConfig::new(BatchWorkload::PageRank, CloudSetting::Public, steps);
+        let recs = run_batch_env(policy, &env, &sys, &mut backend, sys.seed);
+        let post = post_warmup(&recs, (steps / 3) as usize);
+        let times: Vec<f64> = post.iter().filter(|r| !r.halted).map(|r| r.perf_raw).collect();
+        let costs: Vec<f64> = post.iter().map(|r| r.cost).collect();
+        let halts = post.iter().filter(|r| r.halted).count();
+        let cross: Vec<f64> = post
+            .iter()
+            .filter_map(|r| r.action.as_ref().map(|a| a.cross_zone_frac()))
+            .collect();
+        tab.row(&[
+            policy.into(),
+            format!("{:.0} ± {:.0}", stats::mean(&times), stats::std_dev(&times)),
+            format!("{:.3}", stats::mean(&costs)),
+            format!("{halts}"),
+            format!("{:.2}", stats::mean(&cross)),
+        ]);
+    }
+    tab.print();
+    println!("\nExpected shape (paper Fig. 7): drone fastest + cheapest; its");
+    println!("cross-zone fraction drops as it learns to colocate the shuffle.");
+}

@@ -1,0 +1,45 @@
+//! Quickstart: the smallest end-to-end Drone loop.
+//!
+//! Builds the simulated cluster, loads the AOT GP artifact through PJRT
+//! (native fallback if `make artifacts` hasn't run), and lets Drone
+//! orchestrate a recurring Logistic-Regression job on the public cloud for
+//! 15 decision periods, printing the learning curve.
+//!
+//! Run: cargo run --release --example quickstart
+
+use drone::apps::batch::BatchWorkload;
+use drone::config::SystemConfig;
+use drone::experiments::{run_batch_env, BatchEnvConfig, CloudSetting};
+use drone::runtime::Backend;
+
+fn main() {
+    let mut sys = SystemConfig::default();
+    sys.seed = 7;
+
+    let mut backend = Backend::auto(&sys.artifacts_dir);
+    println!("posterior backend: {}", backend.name());
+
+    let env = BatchEnvConfig::new(BatchWorkload::LogisticRegression, CloudSetting::Public, 15);
+    let records = run_batch_env("drone", &env, &sys, &mut backend, sys.seed);
+
+    println!("\nstep  elapsed_s  cost_$   reward-relevant signals");
+    for r in &records {
+        let bar = "#".repeat((r.perf_raw / 15.0).min(60.0) as usize);
+        println!(
+            "{:>4}  {:>8.1}  {:>6.3}   {bar}",
+            r.step,
+            r.perf_raw,
+            r.cost
+        );
+    }
+    let first = &records[0];
+    let last = &records[records.len() - 1];
+    println!(
+        "\nelapsed: {:.0}s -> {:.0}s ({:+.0}%), cost/run: {:.3}$ -> {:.3}$",
+        first.perf_raw,
+        last.perf_raw,
+        (last.perf_raw / first.perf_raw - 1.0) * 100.0,
+        first.cost,
+        last.cost
+    );
+}

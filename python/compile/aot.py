@@ -1,0 +1,100 @@
+"""AOT artifact emitter: lower the L2 GP-posterior graphs to HLO *text*.
+
+HLO text (NOT lowered.compiler_ir(...).serialize() / HloModuleProto bytes) is
+the interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the rust runtime's xla_extension 0.5.1 rejects (proto.id() <= INT_MAX);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md and gen_hlo.py there.
+
+Run once at build time (`make artifacts`); the rust binary is self-contained
+afterwards. Emits a manifest so the rust runtime can discover artifact
+geometries without parsing HLO.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# (name, fn, example_args builder, geometry kwargs)
+def artifact_specs():
+    specs = []
+    for m in (64, 256, 1024):
+        specs.append(
+            (
+                f"gp_posterior_n{model.N_WINDOW}_m{m}_d{model.DIM}",
+                model.gp_posterior_fn,
+                model.example_args(m=m),
+                dict(n=model.N_WINDOW, m=m, d=model.DIM, kind="single"),
+            )
+        )
+    specs.append(
+        (
+            f"gp_dual_n{model.N_WINDOW}_m{model.M_CANDIDATES}_d{model.DIM}",
+            model.gp_posterior_dual_fn,
+            model.example_args_dual(),
+            dict(n=model.N_WINDOW, m=model.M_CANDIDATES, d=model.DIM, kind="dual"),
+        )
+    )
+    # Window-size ablation geometry (bench `ablation`).
+    for n in (8, 16, 64):
+        specs.append(
+            (
+                f"gp_posterior_n{n}_m{model.M_CANDIDATES}_d{model.DIM}",
+                model.gp_posterior_fn,
+                model.example_args(n=n),
+                dict(n=n, m=model.M_CANDIDATES, d=model.DIM, kind="single"),
+            )
+        )
+    return specs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the primary artifact (Make dependency anchor)")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest_lines = []
+    primary = f"gp_posterior_n{model.N_WINDOW}_m{model.M_CANDIDATES}_d{model.DIM}"
+    for name, fn, ex_args, geom in artifact_specs():
+        lowered = jax.jit(fn).lower(*ex_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(
+            f"{name} kind={geom['kind']} n={geom['n']} m={geom['m']} d={geom['d']}"
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # The Make anchor: a copy of the primary single-GP artifact.
+    primary_path = os.path.join(out_dir, f"{primary}.hlo.txt")
+    with open(primary_path) as f:
+        primary_text = f.read()
+    with open(os.path.abspath(args.out), "w") as f:
+        f.write(primary_text)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

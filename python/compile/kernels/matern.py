@@ -1,0 +1,119 @@
+"""L1 — Pallas kernel: tiled Matern-3/2 cross-covariance matrix.
+
+This is the O(N*M*D) compute hot-spot of Drone's GP posterior: every decision
+period the coordinator evaluates the surrogate on a candidate batch, which
+requires the cross-covariance between the sliding-window inputs Z [N, D] and
+the candidate batch X [M, D].
+
+The kernel computes, over *pre-scaled* inputs (a' = a * sqrt(3)/lengthscale):
+
+    r[i, j]  = || a'[i] - b'[j] ||_2
+    K[i, j]  = (1 + r) * exp(-r)          (unit-variance Matern nu=3/2)
+
+Signal variance is applied by the caller (L2), where XLA fuses the scalar
+multiply into the surrounding graph. Scaling outside the kernel keeps the
+kernel scalar-free, which keeps the BlockSpec layout trivial.
+
+TPU mapping (see DESIGN.md #Hardware-Adaptation): the -2*A.B^T term of the
+squared-distance expansion is an MXU matmul; the elementwise Matern transform
+fuses onto the VPU over the same [block_n, block_m] tile held in VMEM. On CPU
+we run interpret=True (Mosaic custom-calls are TPU-only), so correctness is
+validated here and performance is estimated structurally.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. N (window) is small and fits one tile; M (candidates)
+# is streamed in blocks. Chosen so a tile's working set
+# (bn*d + bm*d + bn*bm floats) stays well under VMEM on real hardware.
+DEFAULT_BLOCK_N = 32
+DEFAULT_BLOCK_M = 128
+
+
+def _matern_tile_kernel(a_ref, b_ref, o_ref):
+    """One [bn, bm] tile: pairwise distance + Matern-3/2 transform.
+
+    a_ref: [bn, d] scaled window inputs (VMEM)
+    b_ref: [bm, d] scaled candidate inputs (VMEM)
+    o_ref: [bn, bm] output tile (VMEM)
+    """
+    a = a_ref[...]
+    b = b_ref[...]
+    # Squared distances via the MXU-friendly expansion.
+    aa = jnp.sum(a * a, axis=1, keepdims=True)          # [bn, 1]
+    bb = jnp.sum(b * b, axis=1, keepdims=True).T        # [1, bm]
+    ab = jnp.dot(a, b.T, preferred_element_type=jnp.float32)  # [bn, bm] (MXU)
+    sq = jnp.maximum(aa + bb - 2.0 * ab, 0.0)
+    r = jnp.sqrt(sq)
+    o_ref[...] = (1.0 + r) * jnp.exp(-r)
+
+
+def _pad_rows(x: jax.Array, to: int) -> jax.Array:
+    """Pad rows up to a tile multiple. Padded rows produce garbage covariance
+    entries which the caller slices away; they never alias real outputs."""
+    n = x.shape[0]
+    if n == to:
+        return x
+    return jnp.pad(x, ((0, to - n), (0, 0)))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def matern_unit(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Unit-variance Matern-3/2 cross-covariance of pre-scaled inputs.
+
+    a: [n, d], b: [m, d] already multiplied by sqrt(3)/lengthscale.
+    Returns K [n, m].
+    """
+    n, d = a.shape
+    m, d2 = b.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    bn = min(block_n, max(n, 1))
+    bm = min(block_m, max(m, 1))
+    n_pad = -(-n // bn) * bn
+    m_pad = -(-m // bm) * bm
+    a_p = _pad_rows(a, n_pad)
+    b_p = _pad_rows(b, m_pad)
+
+    grid = (n_pad // bn, m_pad // bm)
+    out = pl.pallas_call(
+        _matern_tile_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_pad, m_pad), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bm), lambda i, j: (i, j)),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:n, :m]
+
+
+def matern(
+    a: jax.Array,
+    b: jax.Array,
+    lengthscale: jax.Array,
+    signal_var: jax.Array,
+    *,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_m: int = DEFAULT_BLOCK_M,
+    interpret: bool = True,
+) -> jax.Array:
+    """Full Matern-3/2 kernel k(a, b) = sv * (1 + sqrt3 r/l) exp(-sqrt3 r/l)."""
+    scale = jnp.sqrt(3.0) / lengthscale
+    return signal_var * matern_unit(
+        a * scale, b * scale, block_n=block_n, block_m=block_m, interpret=interpret
+    )

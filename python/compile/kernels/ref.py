@@ -1,0 +1,84 @@
+"""Pure-numpy correctness oracles for the L1 kernel and the L2 GP posterior.
+
+Deliberately independent of jax: the oracle must not share lowering bugs with
+the implementation under test. numpy.linalg is used for the reference solve
+(the production path cannot — LAPACK custom-calls are not loadable by the
+rust-side xla_extension 0.5.1 runtime — which is exactly why the L2 model
+carries its own loop-based Cholesky; this oracle checks it).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+SQRT3 = np.sqrt(3.0)
+
+
+def matern32_ref(
+    a: np.ndarray, b: np.ndarray, lengthscale: float, signal_var: float
+) -> np.ndarray:
+    """k(a,b) = sv * (1 + sqrt3 r / l) * exp(-sqrt3 r / l), r = ||a - b||."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    diff = a[:, None, :] - b[None, :, :]
+    r = np.sqrt(np.maximum((diff**2).sum(-1), 0.0))
+    s = SQRT3 * r / lengthscale
+    return signal_var * (1.0 + s) * np.exp(-s)
+
+
+def gp_posterior_ref(
+    z: np.ndarray,
+    y: np.ndarray,
+    mask: np.ndarray,
+    x: np.ndarray,
+    noise_var: float,
+    lengthscale: float,
+    signal_var: float,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Dense GP posterior on the *unmasked* rows only (the ground truth the
+    masked fixed-shape production graph must reproduce exactly).
+
+    Returns (mu [M], sigma [M]).
+    """
+    keep = np.asarray(mask, dtype=bool)
+    z_a = np.asarray(z, dtype=np.float64)[keep]
+    y_a = np.asarray(y, dtype=np.float64)[keep]
+    x = np.asarray(x, dtype=np.float64)
+    if z_a.shape[0] == 0:
+        # Prior: mean 0, variance = signal_var.
+        mu = np.zeros(x.shape[0])
+        sigma = np.full(x.shape[0], np.sqrt(signal_var))
+        return mu, sigma
+    k_zz = matern32_ref(z_a, z_a, lengthscale, signal_var)
+    k_zx = matern32_ref(z_a, x, lengthscale, signal_var)
+    km = k_zz + noise_var * np.eye(z_a.shape[0])
+    sol = np.linalg.solve(km, np.concatenate([y_a[:, None], k_zx], axis=1))
+    alpha, v = sol[:, 0], sol[:, 1:]
+    mu = k_zx.T @ alpha
+    var = signal_var - np.einsum("nm,nm->m", k_zx, v)
+    sigma = np.sqrt(np.maximum(var, 0.0))
+    return mu, sigma
+
+
+def ucb_ref(mu: np.ndarray, sigma: np.ndarray, zeta: float) -> np.ndarray:
+    return mu + np.sqrt(zeta) * sigma
+
+
+def expected_improvement_ref(
+    mu: np.ndarray, sigma: np.ndarray, best: float, xi: float = 0.0
+) -> np.ndarray:
+    """EI oracle for the Cherrypick baseline's acquisition."""
+    from math import erf, exp, pi, sqrt
+
+    imp = mu - best - xi
+    out = np.zeros_like(mu)
+    for i in range(len(mu)):
+        s = sigma[i]
+        if s < 1e-12:
+            out[i] = max(imp[i], 0.0)
+            continue
+        zz = imp[i] / s
+        cdf = 0.5 * (1.0 + erf(zz / sqrt(2.0)))
+        pdf = exp(-0.5 * zz * zz) / sqrt(2.0 * pi)
+        out[i] = imp[i] * cdf + s * pdf
+    return out

@@ -1,0 +1,160 @@
+"""L2 — JAX compute graph: masked sliding-window GP posterior over a
+candidate batch, calling the L1 Pallas Matern kernel.
+
+This is the module that gets AOT-lowered (once, at build time) to HLO text
+and executed from the rust coordinator every decision period. Constraints
+shaping the design:
+
+* **Static shapes.** PJRT executables are shape-specialized. The sliding
+  window is padded to N rows with a {0,1} mask; candidates are a fixed
+  M-row batch. The masking construction below makes the padded posterior
+  *exactly* equal to the dense posterior on the unmasked rows (tested in
+  python/tests/test_masking.py):
+
+      K~        = (m m^T) . K  + diag(1 - m)        (masked rows isolated)
+      K~ + s2 I is block diagonal: [K_act + s2 I]  (+)  (1 + s2) I_masked
+      y~        = m . y,   k*~ = m . k*
+
+  so masked rows contribute exactly zero to both mu and sigma.
+
+* **No LAPACK custom-calls.** jnp.linalg.cholesky lowers on CPU to a
+  lapack_*_ffi custom-call that xla_extension 0.5.1 (the rust runtime)
+  cannot execute. We carry a loop-based Cholesky + forward substitution in
+  plain HLO (fori_loop -> while). N is the sliding window (32); the
+  sequential factor is negligible next to the O(N^2 M) batched solve,
+  which stays fully vectorized.
+
+Artifact signature (all f32):
+    inputs:  z [N, D], y [N], mask [N], x [M, D], hyp [3]
+             hyp = [noise_var, lengthscale, signal_var]
+    outputs: (mu [M], sigma [M])
+
+Acquisition (UCB / EI / safe-LCB) is computed by the rust coordinator from
+(mu, sigma) — one artifact serves Drone, Cherrypick and Accordia.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matern as matern_kernel
+
+# Default artifact geometry (must match rust/src/bandit/encode.rs):
+#   action  = 4 zone-scheduling counts + cpu + ram + net_bw      (7 dims)
+#   context = workload, cpu_util, ram_util, net_util, contention,
+#             spot_price                                          (6 dims)
+N_WINDOW = 32
+M_CANDIDATES = 256
+DIM = 13
+
+_JITTER = 1e-6
+
+
+def _cholesky_loop(k: jax.Array) -> jax.Array:
+    """Left-looking Cholesky in plain HLO ops (no LAPACK custom-call).
+
+    At iteration j, columns >= j of L are still zero, so `l @ l[j]` sums
+    exactly over the already-computed columns k < j.
+    """
+    n = k.shape[0]
+    idx = jnp.arange(n)
+
+    def body(j, l):
+        s = k[:, j] - l @ l[j, :]
+        d = jnp.sqrt(jnp.maximum(s[j], _JITTER))
+        col = jnp.where(idx >= j, s / d, 0.0)
+        return l.at[:, j].set(col)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(k))
+
+
+def _solve_lower(l: jax.Array, b: jax.Array) -> jax.Array:
+    """Forward substitution L X = B for lower-triangular L. B is [N, R]
+    (R = 1 + M here), so each of the N sequential steps is a vectorized
+    [N]x[N,R] contraction — the batched part stays on the matrix units.
+    """
+    n = l.shape[0]
+
+    def body(i, x):
+        xi = (b[i] - l[i] @ x) / l[i, i]
+        return x.at[i].set(xi)
+
+    return jax.lax.fori_loop(0, n, body, jnp.zeros_like(b))
+
+
+def gp_posterior(
+    z: jax.Array,
+    y: jax.Array,
+    mask: jax.Array,
+    x: jax.Array,
+    hyp: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Masked-window GP posterior. Returns (mu [M], sigma [M])."""
+    noise_var, lengthscale, signal_var = hyp[0], hyp[1], hyp[2]
+    scale = jnp.sqrt(3.0) / lengthscale
+    z_s = z * scale
+    x_s = x * scale
+
+    # L1 Pallas kernel: the O(N*M*D) hot-spot.
+    k_zz = signal_var * matern_kernel.matern_unit(z_s, z_s)
+    k_zx = signal_var * matern_kernel.matern_unit(z_s, x_s)
+
+    m_outer = mask[:, None] * mask[None, :]
+    k_m = k_zz * m_outer + jnp.diag(1.0 - mask)
+    k_m = k_m + noise_var * jnp.eye(z.shape[0], dtype=z.dtype)
+    k_zx = k_zx * mask[:, None]
+    y_m = y * mask
+
+    l = _cholesky_loop(k_m)
+    # One fused forward solve for [y | K_zx].
+    sol = _solve_lower(l, jnp.concatenate([y_m[:, None], k_zx], axis=1))
+    w, v = sol[:, 0], sol[:, 1:]
+
+    mu = v.T @ w
+    var = jnp.maximum(signal_var - jnp.sum(v * v, axis=0), 0.0)
+    sigma = jnp.sqrt(var)
+    return mu, sigma
+
+
+def gp_posterior_fn(z, y, mask, x, hyp):
+    """Tuple-returning wrapper used for AOT lowering (return_tuple=True)."""
+    mu, sigma = gp_posterior(z, y, mask, x, hyp)
+    return (mu, sigma)
+
+
+def gp_posterior_dual_fn(z, y_p, y_r, mask, x, hyp_p, hyp_r):
+    """Fused dual-GP posterior for the private-cloud safe bandit (Alg. 2):
+    one shared Z/X geometry, two targets (performance p and resource usage P)
+    with independent hyperparameters. Fusing shares the candidate transfer
+    and lets XLA fuse both Matern evaluations over the same scaled inputs.
+
+    Returns (mu_p, sigma_p, mu_r, sigma_r), each [M].
+    """
+    mu_p, sigma_p = gp_posterior(z, y_p, mask, x, hyp_p)
+    mu_r, sigma_r = gp_posterior(z, y_r, mask, x, hyp_r)
+    return (mu_p, sigma_p, mu_r, sigma_r)
+
+
+def example_args(n: int = N_WINDOW, m: int = M_CANDIDATES, d: int = DIM):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, d), f32),   # z
+        jax.ShapeDtypeStruct((n,), f32),     # y
+        jax.ShapeDtypeStruct((n,), f32),     # mask
+        jax.ShapeDtypeStruct((m, d), f32),   # x
+        jax.ShapeDtypeStruct((3,), f32),     # hyp
+    )
+
+
+def example_args_dual(n: int = N_WINDOW, m: int = M_CANDIDATES, d: int = DIM):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, d), f32),   # z
+        jax.ShapeDtypeStruct((n,), f32),     # y_p
+        jax.ShapeDtypeStruct((n,), f32),     # y_r
+        jax.ShapeDtypeStruct((n,), f32),     # mask
+        jax.ShapeDtypeStruct((m, d), f32),   # x
+        jax.ShapeDtypeStruct((3,), f32),     # hyp_p
+        jax.ShapeDtypeStruct((3,), f32),     # hyp_r
+    )

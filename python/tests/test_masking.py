@@ -1,0 +1,100 @@
+"""The fixed-shape masking identity: a padded window's posterior must equal
+the dense posterior computed on only the unmasked rows — exactly the property
+the rust coordinator relies on while the sliding window is filling up."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _posterior(z, y, mask, x, hyp):
+    mu, sigma = jax.jit(model.gp_posterior)(
+        jnp.asarray(z, jnp.float32), jnp.asarray(y, jnp.float32),
+        jnp.asarray(mask, jnp.float32), jnp.asarray(x, jnp.float32),
+        jnp.asarray(hyp, jnp.float32),
+    )
+    return np.asarray(mu), np.asarray(sigma)
+
+
+def test_masked_equals_dense_prefix():
+    """Window padded 5 -> 32 == dense 5-point GP."""
+    rng = np.random.default_rng(0)
+    n, active, m, d = 32, 5, 64, 13
+    z = rng.uniform(-2, 2, size=(n, d)).astype(np.float32)
+    # Poison the padded rows to prove they cannot leak into the result.
+    z[active:] = 1e6
+    y = rng.normal(size=n).astype(np.float32)
+    y[active:] = -1e6
+    x = rng.uniform(-2, 2, size=(m, d)).astype(np.float32)
+    mask = np.zeros(n, np.float32)
+    mask[:active] = 1.0
+    hyp = [0.01, 1.0, 1.0]
+
+    mu_pad, sig_pad = _posterior(z, y, mask, x, hyp)
+    mu_ref, sig_ref = ref.gp_posterior_ref(
+        z[:active], y[:active], np.ones(active), x, *hyp
+    )
+    np.testing.assert_allclose(mu_pad, mu_ref, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(sig_pad, sig_ref, rtol=1e-2, atol=2e-3)
+
+
+def test_empty_window_is_prior():
+    """t=0: all-masked window must return the prior (mu=0, sigma=sqrt(sv))."""
+    rng = np.random.default_rng(1)
+    z = rng.normal(size=(32, 13)).astype(np.float32)
+    y = rng.normal(size=32).astype(np.float32)
+    x = rng.normal(size=(16, 13)).astype(np.float32)
+    mu, sigma = _posterior(z, y, np.zeros(32), x, [0.01, 1.0, 2.0])
+    np.testing.assert_allclose(mu, 0.0, atol=1e-5)
+    np.testing.assert_allclose(sigma, np.sqrt(2.0), atol=1e-4)
+
+
+def test_mask_permutation_invariance():
+    """Which *slots* hold the active points must not matter."""
+    rng = np.random.default_rng(2)
+    n, active, m, d = 16, 6, 32, 4
+    z_act = rng.uniform(-2, 2, size=(active, d)).astype(np.float32)
+    y_act = rng.normal(size=active).astype(np.float32)
+    x = rng.uniform(-2, 2, size=(m, d)).astype(np.float32)
+    hyp = [0.05, 1.0, 1.0]
+
+    def padded(perm):
+        z = rng.normal(size=(n, d)).astype(np.float32) * 50
+        y = np.zeros(n, np.float32)
+        mask = np.zeros(n, np.float32)
+        for i, slot in enumerate(perm):
+            z[slot], y[slot], mask[slot] = z_act[i], y_act[i], 1.0
+        return _posterior(z, y, mask, x, hyp)
+
+    mu_a, sig_a = padded(list(range(active)))
+    mu_b, sig_b = padded([15, 3, 8, 0, 11, 6])
+    np.testing.assert_allclose(mu_a, mu_b, atol=1e-4)
+    np.testing.assert_allclose(sig_a, sig_b, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    active=st.integers(1, 31),
+    m=st.integers(1, 32),
+    d=st.integers(1, 13),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_masking_identity(active, m, d, seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    z = rng.uniform(-2, 2, size=(n, d)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    x = rng.uniform(-2, 2, size=(m, d)).astype(np.float32)
+    mask = np.zeros(n, np.float32)
+    mask[:active] = 1.0
+    hyp = [0.02, 1.0, 1.0]
+    mu_pad, sig_pad = _posterior(z, y, mask, x, hyp)
+    mu_ref, sig_ref = ref.gp_posterior_ref(
+        z[:active], y[:active], np.ones(active), x, *hyp
+    )
+    np.testing.assert_allclose(mu_pad, mu_ref, rtol=5e-3, atol=5e-3)
+    np.testing.assert_allclose(sig_pad, sig_ref, rtol=3e-2, atol=5e-3)

@@ -1,0 +1,108 @@
+"""L2 correctness: the loop-based Cholesky GP posterior vs the numpy oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _posterior(z, y, mask, x, noise, ls, sv):
+    mu, sigma = jax.jit(model.gp_posterior)(
+        jnp.asarray(z, jnp.float32),
+        jnp.asarray(y, jnp.float32),
+        jnp.asarray(mask, jnp.float32),
+        jnp.asarray(x, jnp.float32),
+        jnp.asarray([noise, ls, sv], jnp.float32),
+    )
+    return np.asarray(mu), np.asarray(sigma)
+
+
+def _rand_problem(rng, n, m, d, active=None):
+    z = rng.uniform(-2, 2, size=(n, d)).astype(np.float32)
+    y = rng.normal(size=n).astype(np.float32)
+    x = rng.uniform(-2, 2, size=(m, d)).astype(np.float32)
+    mask = np.zeros(n, np.float32)
+    k = n if active is None else active
+    mask[:k] = 1.0
+    return z, y, mask, x
+
+
+def test_full_window_matches_ref():
+    rng = np.random.default_rng(0)
+    z, y, mask, x = _rand_problem(rng, 32, 256, 13)
+    mu, sigma = _posterior(z, y, mask, x, 0.01, 1.0, 1.0)
+    mu_r, sigma_r = ref.gp_posterior_ref(z, y, mask, x, 0.01, 1.0, 1.0)
+    np.testing.assert_allclose(mu, mu_r, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(sigma, sigma_r, rtol=1e-2, atol=2e-3)
+
+
+def test_interpolation_at_training_points():
+    """With small noise, posterior mean at a training input ~= its target."""
+    rng = np.random.default_rng(1)
+    z = rng.uniform(-1, 1, size=(10, 3)).astype(np.float32)
+    y = rng.normal(size=10).astype(np.float32)
+    mask = np.ones(10, np.float32)
+    mu, sigma = _posterior(z, y, mask, z, 1e-5, 1.0, 1.0)
+    np.testing.assert_allclose(mu, y, atol=5e-3)
+    assert sigma.max() < 0.05
+
+
+def test_prior_far_from_data():
+    """Candidates far from all data revert to the prior (mu~0, sigma~sqrt(sv))."""
+    rng = np.random.default_rng(2)
+    z = rng.uniform(-1, 1, size=(8, 2)).astype(np.float32)
+    y = rng.normal(size=8).astype(np.float32)
+    mask = np.ones(8, np.float32)
+    x_far = np.full((4, 2), 100.0, np.float32)
+    mu, sigma = _posterior(z, y, mask, x_far, 0.01, 1.0, 2.0)
+    np.testing.assert_allclose(mu, 0.0, atol=1e-4)
+    np.testing.assert_allclose(sigma, np.sqrt(2.0), atol=1e-3)
+
+
+def test_sigma_nonnegative_and_bounded():
+    rng = np.random.default_rng(3)
+    z, y, mask, x = _rand_problem(rng, 32, 64, 13)
+    _, sigma = _posterior(z, y, mask, x, 0.05, 0.5, 3.0)
+    assert (sigma >= 0).all()
+    assert (sigma <= np.sqrt(3.0) + 1e-4).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 32),
+    m=st.integers(1, 64),
+    d=st.integers(1, 13),
+    noise=st.floats(1e-3, 1.0),
+    ls=st.floats(0.3, 5.0),
+    sv=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_posterior_matches_ref(n, m, d, noise, ls, sv, seed):
+    rng = np.random.default_rng(seed)
+    z, y, mask, x = _rand_problem(rng, n, m, d)
+    mu, sigma = _posterior(z, y, mask, x, noise, ls, sv)
+    mu_r, sigma_r = ref.gp_posterior_ref(z, y, mask, x, noise, ls, sv)
+    scale = max(1.0, np.abs(y).max()) * sv
+    np.testing.assert_allclose(mu, mu_r, rtol=5e-3, atol=5e-3 * scale)
+    np.testing.assert_allclose(sigma, sigma_r, rtol=3e-2, atol=5e-3 * np.sqrt(sv))
+
+
+def test_dual_matches_two_singles():
+    rng = np.random.default_rng(4)
+    z, y_p, mask, x = _rand_problem(rng, 32, 32, 13)
+    y_r = rng.normal(size=32).astype(np.float32)
+    hyp_p = jnp.asarray([0.01, 1.0, 1.0], jnp.float32)
+    hyp_r = jnp.asarray([0.05, 2.0, 0.5], jnp.float32)
+    out = jax.jit(model.gp_posterior_dual_fn)(
+        jnp.asarray(z), jnp.asarray(y_p), jnp.asarray(y_r),
+        jnp.asarray(mask), jnp.asarray(x), hyp_p, hyp_r,
+    )
+    mu_p, sig_p = _posterior(z, y_p, mask, x, 0.01, 1.0, 1.0)
+    mu_r, sig_r = _posterior(z, y_r, mask, x, 0.05, 2.0, 0.5)
+    np.testing.assert_allclose(np.asarray(out[0]), mu_p, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), sig_p, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[2]), mu_r, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[3]), sig_r, atol=1e-5)

@@ -1,0 +1,264 @@
+//! Bench harness — `cargo bench` entrypoint (custom harness; the offline
+//! vendor set has no criterion, so this carries its own criterion-style
+//! measurement core: warmup, timed iterations, mean/p50/p99, throughput).
+//!
+//! Two kinds of benches:
+//!  * perf micro-benches — the §Perf hot paths: GP posterior (XLA artifact
+//!    vs native mirror), end-to-end decision latency, DES throughput,
+//!    scheduler rolling update.
+//!  * experiment benches — one per paper table/figure (DESIGN.md §5):
+//!    regenerate the rows/series at a reduced scale and time the run.
+//!
+//! Usage:
+//!   cargo bench                    # everything (default scale 0.25)
+//!   cargo bench -- perf            # only the perf micro-benches
+//!   cargo bench -- fig7a table3    # selected experiments
+//!   cargo bench -- --scale 0.5     # bigger experiment scale
+
+use std::time::Instant;
+
+use drone::bandit::gp::{self, GpHyper};
+use drone::config::SystemConfig;
+use drone::experiments;
+use drone::runtime::{Backend, PosteriorRequest};
+use drone::util::rng::Pcg64;
+use drone::util::stats;
+
+// ---------------------------------------------------------------------------
+// measurement core
+// ---------------------------------------------------------------------------
+
+struct BenchResult {
+    name: String,
+    iters: usize,
+    mean_ms: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+    throughput: Option<(f64, &'static str)>,
+}
+
+fn bench<F: FnMut()>(name: &str, target_time_s: f64, mut f: F) -> BenchResult {
+    // Warmup: ~10% of budget, at least 3 iterations.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0;
+    while warm_start.elapsed().as_secs_f64() < target_time_s * 0.1 || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+        if warm_iters > 10_000 {
+            break;
+        }
+    }
+    let mut samples_ms = vec![];
+    let start = Instant::now();
+    while start.elapsed().as_secs_f64() < target_time_s && samples_ms.len() < 100_000 {
+        let t0 = Instant::now();
+        f();
+        samples_ms.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    samples_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        iters: samples_ms.len(),
+        mean_ms: stats::mean(&samples_ms),
+        p50_ms: stats::percentile_sorted(&samples_ms, 50.0),
+        p99_ms: stats::percentile_sorted(&samples_ms, 99.0),
+        throughput: None,
+    }
+}
+
+fn report(r: &BenchResult) {
+    let tp = r
+        .throughput
+        .map(|(v, unit)| format!("  {v:>12.0} {unit}"))
+        .unwrap_or_default();
+    println!(
+        "{:<46} {:>6} it  mean {:>9.4} ms  p50 {:>9.4}  p99 {:>9.4}{tp}",
+        r.name, r.iters, r.mean_ms, r.p50_ms, r.p99_ms
+    );
+}
+
+// ---------------------------------------------------------------------------
+// perf micro-benches (§Perf)
+// ---------------------------------------------------------------------------
+
+fn rand_inputs(
+    rng: &mut Pcg64,
+    n: usize,
+    m: usize,
+    d: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let z: Vec<f64> = (0..n * d).map(|_| rng.f64()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mask = vec![1.0; n];
+    let x: Vec<f64> = (0..m * d).map(|_| rng.f64()).collect();
+    (z, y, mask, x)
+}
+
+fn perf_benches(sys: &SystemConfig, budget_s: f64) {
+    println!("\n== perf: GP posterior (L1/L2 hot path), n=32 d=13 ==");
+    let mut rng = Pcg64::new(1);
+    for &m in &[64usize, 256, 1024] {
+        let (z, y, mask, x) = rand_inputs(&mut rng, 32, m, 13);
+        let hyp = GpHyper::default();
+        let mut r = bench(&format!("native gp_posterior m={m}"), budget_s, || {
+            let _ = gp::gp_posterior(&z, &y, &mask, &x, 13, hyp);
+        });
+        r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
+        report(&r);
+        if let Ok(rt) = drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
+            let mut backend = Backend::Xla(rt);
+            let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d: 13, hyp };
+            let _ = backend.posterior(&req); // compile outside timing
+            let mut r = bench(&format!("xla    gp_posterior m={m}"), budget_s, || {
+                let _ = backend.posterior(&req).unwrap();
+            });
+            r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
+            report(&r);
+        }
+    }
+
+    println!("\n== perf: end-to-end decision latency (candidates + posterior + argmax) ==");
+    {
+        use drone::bandit::encode::ActionSpace;
+        use drone::config::BanditConfig;
+        use drone::monitor::context::ContextVector;
+        use drone::orchestrators::bandit_core::{Acquisition, BanditCore};
+        for backend_kind in ["native", "xla"] {
+            let mut backend = match backend_kind {
+                "xla" => match drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
+                    Ok(rt) => Backend::Xla(rt),
+                    Err(_) => continue,
+                },
+                _ => Backend::Native,
+            };
+            let cfg = BanditConfig::default();
+            let mut core = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, true, 0);
+            let mut rng2 = Pcg64::new(2);
+            let ctx = ContextVector { workload: 0.5, ..Default::default() };
+            for i in 0..30 {
+                let a = core.candgen.decode(&vec![0.5; 7]);
+                core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
+            }
+            let _ = core.select(&mut backend, &ctx, &mut rng2); // warm compile
+            let r = bench(
+                &format!("decide backend={backend_kind} m=256 window=30"),
+                budget_s,
+                || {
+                    let _ = core.select(&mut backend, &ctx, &mut rng2);
+                },
+            );
+            report(&r);
+        }
+    }
+
+    println!("\n== perf: DES microservice window (60 s of traffic) ==");
+    {
+        use drone::apps::microservice::{run_window, ServiceGraph};
+        use drone::sim::cluster::Cluster;
+        use drone::sim::resources::Resources;
+        use drone::sim::scheduler::{apply_deployment, Deployment};
+        let mut cluster = Cluster::new(&sys.cluster);
+        let g = ServiceGraph::socialnet();
+        for sid in 0..g.services.len() {
+            apply_deployment(
+                &mut cluster,
+                &Deployment {
+                    app: g.app_name(sid),
+                    zone_pods: vec![1; 4],
+                    limits: Resources::new(1500.0, 1536.0, 300.0),
+                },
+                true,
+            );
+        }
+        let mut rng3 = Pcg64::new(3);
+        let mut r = bench("DES run_window rate=150rps window=60s", budget_s, || {
+            let s = run_window(&cluster, &g, 150.0, 60.0, &mut rng3);
+            assert!(s.offered > 0);
+        });
+        r.throughput = Some((150.0 * 60.0 / (r.mean_ms / 1000.0), "req/s-sim"));
+        report(&r);
+    }
+
+    println!("\n== perf: scheduler (rolling update, 32 pods over 15 nodes) ==");
+    {
+        use drone::sim::cluster::Cluster;
+        use drone::sim::resources::Resources;
+        use drone::sim::scheduler::{apply_deployment, Deployment};
+        let mut cluster = Cluster::new(&sys.cluster);
+        let dep = Deployment {
+            app: "bench".into(),
+            zone_pods: vec![8; 4],
+            limits: Resources::new(900.0, 3000.0, 500.0),
+        };
+        let r = bench("apply_deployment 32 pods", budget_s, || {
+            let pr = apply_deployment(&mut cluster, &dep, true);
+            assert!(!pr.placed.is_empty());
+        });
+        report(&r);
+    }
+
+    println!("\n== perf: batch job model ==");
+    {
+        use drone::apps::batch::{run_batch_job, BatchWorkload, DeployMode, Platform, RunSpec};
+        use drone::sim::resources::Resources;
+        let spec = RunSpec {
+            workload: BatchWorkload::PageRank,
+            platform: Platform::Spark,
+            deploy: DeployMode::Container,
+            pods: 12,
+            per_pod: Resources::new(3000.0, 16_384.0, 4000.0),
+            cross_zone_frac: 0.25,
+            contention: Resources::new(0.05, 0.05, 0.05),
+            data_gb: 150.0,
+            external_mem_frac: 0.0,
+            cluster_ram_mb: 15.0 * 30_720.0,
+        };
+        let mut rng4 = Pcg64::new(4);
+        let r = bench("run_batch_job PageRank", budget_s.min(0.5), || {
+            let _ = run_batch_job(&spec, &mut rng4);
+        });
+        report(&r);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// main
+// ---------------------------------------------------------------------------
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    let mut scale = 0.25;
+    let mut filters: Vec<String> = vec![];
+    let mut i = 0;
+    while i < args.len() {
+        if args[i] == "--scale" && i + 1 < args.len() {
+            scale = args[i + 1].parse().unwrap_or(scale);
+            i += 2;
+        } else {
+            filters.push(args[i].clone());
+            i += 1;
+        }
+    }
+    let wants =
+        |name: &str| filters.is_empty() || filters.iter().any(|f| name.contains(f.as_str()));
+
+    let sys = SystemConfig::default();
+    println!("drone bench harness (scale {scale}); filters: {filters:?}");
+
+    if wants("perf") {
+        perf_benches(&sys, 1.0);
+    }
+
+    for id in experiments::ALL_EXPERIMENTS {
+        if !wants(id) {
+            continue;
+        }
+        println!("\n== experiment bench: {id} (scale {scale}) ==");
+        let t0 = Instant::now();
+        if let Err(e) = experiments::run(id, &sys, scale) {
+            eprintln!("{id} FAILED: {e}");
+            std::process::exit(1);
+        }
+        println!("[{id} took {:.2}s]", t0.elapsed().as_secs_f64());
+    }
+}

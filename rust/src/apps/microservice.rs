@@ -1,0 +1,512 @@
+//! Microservice application model: a service call-graph executed as a
+//! discrete-event queueing simulation on the cluster substrate.
+//!
+//! Stand-in for the paper's Sockshop (Fig. 3/4) and DeathStarBench
+//! SocialNet (Sec. 5.3) deployments: per-request end-to-end latency emerges
+//! from per-pod queueing, CPU-dependent service times, interference, and
+//! inter-zone network hops — so placement (affinity) and rightsizing move
+//! the P90 exactly the way the paper's experiments need.
+
+use std::collections::VecDeque;
+
+use crate::sim::cluster::{Cluster, PodState};
+use crate::sim::des::EventQueue;
+use crate::util::rng::Pcg64;
+
+pub type ServiceId = usize;
+
+#[derive(Clone, Debug)]
+pub struct Service {
+    pub name: &'static str,
+    /// Mean service time (ms) at 1 full core with no contention.
+    pub base_ms: f64,
+    /// Relative CPU weight (bottleneck services get more work per request).
+    pub weight: f64,
+}
+
+/// A request type: the sequence of services a request visits (call graph
+/// fan-outs are flattened into the visit sequence) plus its traffic share.
+#[derive(Clone, Debug)]
+pub struct RequestType {
+    pub name: &'static str,
+    pub path: Vec<ServiceId>,
+    pub share: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ServiceGraph {
+    pub services: Vec<Service>,
+    pub request_types: Vec<RequestType>,
+}
+
+impl ServiceGraph {
+    pub fn service_id(&self, name: &str) -> Option<ServiceId> {
+        self.services.iter().position(|s| s.name == name)
+    }
+
+    /// Sockshop-style online-shop graph (Fig. 3): front-end fans into
+    /// catalogue/user/cart/orders; `orders` is the connected bottleneck.
+    pub fn sockshop() -> Self {
+        let services = vec![
+            Service { name: "front-end", base_ms: 1.6, weight: 1.0 },  // 0
+            Service { name: "catalogue", base_ms: 2.2, weight: 1.0 },  // 1
+            Service { name: "catalogue-db", base_ms: 1.8, weight: 1.0 }, // 2
+            Service { name: "user", base_ms: 1.8, weight: 1.0 },       // 3
+            Service { name: "user-db", base_ms: 1.6, weight: 1.0 },    // 4
+            Service { name: "carts", base_ms: 2.0, weight: 1.0 },      // 5
+            Service { name: "carts-db", base_ms: 1.7, weight: 1.0 },   // 6
+            Service { name: "orders", base_ms: 3.4, weight: 2.0 },     // 7
+            Service { name: "orders-db", base_ms: 1.9, weight: 1.0 },  // 8
+            Service { name: "payment", base_ms: 1.5, weight: 1.0 },    // 9
+            Service { name: "shipping", base_ms: 1.5, weight: 1.0 },   // 10
+            Service { name: "queue-master", base_ms: 1.3, weight: 0.5 }, // 11
+        ];
+        let request_types = vec![
+            RequestType { name: "browse", path: vec![0, 1, 2, 1, 0], share: 0.45 },
+            RequestType { name: "login", path: vec![0, 3, 4, 3, 0], share: 0.15 },
+            RequestType { name: "cart", path: vec![0, 5, 6, 5, 0], share: 0.2 },
+            // Checkout traverses the Order hub and everything behind it.
+            RequestType {
+                name: "checkout",
+                path: vec![0, 5, 6, 7, 3, 4, 9, 10, 11, 8, 7, 0],
+                share: 0.2,
+            },
+        ];
+        Self { services, request_types }
+    }
+
+    /// Condensed DeathStarBench SocialNetwork graph (the paper's Sec. 5.3
+    /// application, 36 microservices condensed to the 16 on the hot paths).
+    pub fn socialnet() -> Self {
+        let services = vec![
+            Service { name: "nginx", base_ms: 1.2, weight: 1.0 },          // 0
+            Service { name: "compose-post", base_ms: 2.8, weight: 1.6 },   // 1
+            Service { name: "text", base_ms: 1.9, weight: 1.0 },           // 2
+            Service { name: "unique-id", base_ms: 0.9, weight: 0.5 },      // 3
+            Service { name: "media", base_ms: 2.4, weight: 1.0 },          // 4
+            Service { name: "user", base_ms: 1.7, weight: 1.0 },           // 5
+            Service { name: "url-shorten", base_ms: 1.3, weight: 0.5 },    // 6
+            Service { name: "user-mention", base_ms: 1.5, weight: 0.5 },   // 7
+            Service { name: "post-storage", base_ms: 2.6, weight: 1.4 },   // 8
+            Service { name: "user-timeline", base_ms: 2.2, weight: 1.2 },  // 9
+            Service { name: "home-timeline", base_ms: 2.4, weight: 1.4 },  // 10
+            Service { name: "social-graph", base_ms: 2.0, weight: 1.0 },   // 11
+            Service { name: "post-storage-db", base_ms: 1.8, weight: 1.0 }, // 12
+            Service { name: "user-timeline-db", base_ms: 1.7, weight: 1.0 }, // 13
+            Service { name: "social-graph-db", base_ms: 1.6, weight: 1.0 }, // 14
+            Service { name: "media-db", base_ms: 1.7, weight: 1.0 },       // 15
+        ];
+        let request_types = vec![
+            RequestType {
+                name: "compose",
+                path: vec![0, 1, 2, 6, 7, 3, 4, 15, 5, 1, 8, 12, 9, 13, 10, 0],
+                share: 0.1,
+            },
+            RequestType {
+                name: "read-home",
+                path: vec![0, 10, 11, 14, 8, 12, 0],
+                share: 0.6,
+            },
+            RequestType {
+                name: "read-user",
+                path: vec![0, 9, 13, 8, 12, 0],
+                share: 0.3,
+            },
+        ];
+        Self { services, request_types }
+    }
+
+    /// App name used for the pods of service `s` in the cluster.
+    pub fn app_name(&self, s: ServiceId) -> String {
+        format!("ms-{}", self.services[s].name)
+    }
+}
+
+/// Aggregated outcome of one simulated window.
+#[derive(Clone, Debug, Default)]
+pub struct WindowStats {
+    pub offered: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// End-to-end latencies (ms) of completed requests.
+    pub latencies_ms: Vec<f64>,
+    pub in_flight_at_end: u64,
+}
+
+impl WindowStats {
+    pub fn p50(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies_ms, 50.0)
+    }
+    pub fn p90(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies_ms, 90.0)
+    }
+    pub fn p99(&self) -> f64 {
+        crate::util::stats::percentile(&self.latencies_ms, 99.0)
+    }
+    pub fn drop_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.dropped as f64 / self.offered as f64
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DES internals
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Ev {
+    /// A new request of type `rt` enters the system.
+    Arrival { rt: usize },
+    /// Pod finished serving the head of its queue.
+    PodDone { pod: usize },
+    /// A request hop arrives at a service after a network delay.
+    HopArrive { req: usize, hop: usize },
+}
+
+#[derive(Clone, Debug)]
+struct SimPod {
+    service: ServiceId,
+    zone: usize,
+    /// Mean service time multiplier from its cpu allocation + interference.
+    speed: f64,
+    queue: VecDeque<(usize, usize)>, // (req, hop)
+    queue_cap: usize,
+    busy: bool,
+    alive: bool,
+}
+
+struct ReqState {
+    rt: usize,
+    start: f64,
+    done: bool,
+    dropped: bool,
+    /// Zone of the pod that served the previous hop (for network latency).
+    prev_zone: Option<usize>,
+}
+
+/// Run one window of request traffic against the current deployment.
+///
+/// `rate_rps` requests/s Poisson arrivals for `window_s` seconds. Pods are
+/// read from the cluster (apps named by `graph.app_name`); their speed
+/// reflects CPU allocation and the node's current interference contention.
+pub fn run_window(
+    cluster: &Cluster,
+    graph: &ServiceGraph,
+    rate_rps: f64,
+    window_s: f64,
+    rng: &mut Pcg64,
+) -> WindowStats {
+    let mut stats = WindowStats::default();
+
+    // --- materialize pods ---------------------------------------------------
+    let mut pods: Vec<SimPod> = vec![];
+    let mut service_pods: Vec<Vec<usize>> = vec![vec![]; graph.services.len()];
+    for (sid, svc) in graph.services.iter().enumerate() {
+        let app = graph.app_name(sid);
+        for p in cluster.pods.iter().filter(|p| p.app == app) {
+            if p.state != PodState::Running {
+                continue;
+            }
+            let node = &cluster.nodes[p.node];
+            let cores = (p.limits.cpu_m / 1000.0).max(0.05);
+            // Sub-linear speedup in cores (single-request parallelism is
+            // limited), degraded by CPU contention on the node, boosted by
+            // RAM headroom (page cache / in-memory indices) saturating at
+            // ~1.5 GB per pod.
+            let cache = 0.55 + 0.45 * (p.limits.ram_mb / 1536.0).min(1.0);
+            let speed =
+                cores.powf(0.7) * cache * (1.0 - node.contention.cpu_m).max(0.1) / svc.weight;
+            // Queue capacity scales with RAM: each queued request holds
+            // buffers (~24 MB); at least 4 slots.
+            let queue_cap = ((p.limits.ram_mb / 24.0) as usize).max(4);
+            service_pods[sid].push(pods.len());
+            pods.push(SimPod {
+                service: sid,
+                zone: node.zone,
+                speed,
+                queue: VecDeque::new(),
+                queue_cap,
+                busy: false,
+                alive: true,
+            });
+        }
+    }
+    // A service with no pods drops everything routed to it.
+    let mut rr: Vec<usize> = vec![0; graph.services.len()];
+
+    let mut reqs: Vec<ReqState> = vec![];
+    let mut q: EventQueue<Ev> = EventQueue::new();
+
+    // Request-type sampling CDF.
+    let total_share: f64 = graph.request_types.iter().map(|r| r.share).sum();
+
+    // Schedule Poisson arrivals for the whole window up-front.
+    let mut t = 0.0;
+    loop {
+        t += rng.exponential(rate_rps.max(1e-9));
+        if t >= window_s {
+            break;
+        }
+        let mut u = rng.f64() * total_share;
+        let mut rt = 0;
+        for (i, r) in graph.request_types.iter().enumerate() {
+            if u < r.share {
+                rt = i;
+                break;
+            }
+            u -= r.share;
+        }
+        q.schedule(t, Ev::Arrival { rt });
+    }
+
+    let net_ms = |cluster: &Cluster, a: Option<usize>, b: usize| -> f64 {
+        match a {
+            None => 0.05,
+            Some(za) => cluster.zone_latency_ms[za][b],
+        }
+    };
+
+    // Route (req, hop) to a pod of the hop's service; returns false -> drop.
+    // Round-robin over alive pods, skipping full queues.
+    fn route(
+        pods: &mut [SimPod],
+        service_pods: &[Vec<usize>],
+        rr: &mut [usize],
+        q: &mut EventQueue<Ev>,
+        rng: &mut Pcg64,
+        graph: &ServiceGraph,
+        req: usize,
+        hop: usize,
+        sid: ServiceId,
+    ) -> bool {
+        let list = &service_pods[sid];
+        if list.is_empty() {
+            return false;
+        }
+        for k in 0..list.len() {
+            let idx = list[(rr[sid] + k) % list.len()];
+            let pod = &mut pods[idx];
+            if !pod.alive || pod.queue.len() >= pod.queue_cap {
+                continue;
+            }
+            rr[sid] = (rr[sid] + k + 1) % list.len();
+            pod.queue.push_back((req, hop));
+            if !pod.busy {
+                pod.busy = true;
+                let svc_ms = graph.services[sid].base_ms / pod.speed;
+                let dt = rng.exponential(1.0 / (svc_ms / 1000.0));
+                q.schedule_in(dt, Ev::PodDone { pod: idx });
+            }
+            return true;
+        }
+        false
+    }
+
+    while let Some((now, ev)) = q.next_before(window_s * 1.25) {
+        match ev {
+            Ev::Arrival { rt } => {
+                stats.offered += 1;
+                let req = reqs.len();
+                reqs.push(ReqState { rt, start: now, done: false, dropped: false, prev_zone: None });
+                let sid = graph.request_types[rt].path[0];
+                if !route(&mut pods, &service_pods, &mut rr, &mut q, rng, graph, req, 0, sid) {
+                    reqs[req].dropped = true;
+                    stats.dropped += 1;
+                }
+            }
+            Ev::HopArrive { req, hop } => {
+                let sid = graph.request_types[reqs[req].rt].path[hop];
+                if !route(&mut pods, &service_pods, &mut rr, &mut q, rng, graph, req, hop, sid) {
+                    reqs[req].dropped = true;
+                    stats.dropped += 1;
+                }
+            }
+            Ev::PodDone { pod: idx } => {
+                let (req, hop, zone, sid) = {
+                    let pod = &mut pods[idx];
+                    let (req, hop) = pod.queue.pop_front().expect("busy pod has head");
+                    (req, hop, pod.zone, pod.service)
+                };
+                // Next hop or completion.
+                let path = &graph.request_types[reqs[req].rt].path;
+                debug_assert_eq!(path[hop], sid);
+                if hop + 1 < path.len() {
+                    let lat = net_ms(cluster, Some(zone), {
+                        // Latency to the *service*'s zone is decided at
+                        // routing time; approximate with the next pod's zone
+                        // by sampling one (cheap and unbiased for spread
+                        // deployments).
+                        let nlist = &service_pods[path[hop + 1]];
+                        if nlist.is_empty() { zone } else { pods[nlist[rr[path[hop + 1]] % nlist.len()]].zone }
+                    });
+                    reqs[req].prev_zone = Some(zone);
+                    q.schedule_in(lat / 1000.0, Ev::HopArrive { req, hop: hop + 1 });
+                } else {
+                    let r = &mut reqs[req];
+                    if !r.dropped {
+                        r.done = true;
+                        stats.completed += 1;
+                        stats.latencies_ms.push((q.now() - r.start) * 1000.0);
+                    }
+                }
+                // Serve next queued item.
+                let pod = &mut pods[idx];
+                if let Some(&(_r2, _h2)) = pod.queue.front() {
+                    let svc_ms = graph.services[pod.service].base_ms / pod.speed;
+                    let dt = rng.exponential(1.0 / (svc_ms / 1000.0));
+                    q.schedule_in(dt, Ev::PodDone { pod: idx });
+                } else {
+                    pod.busy = false;
+                }
+            }
+        }
+    }
+
+    stats.in_flight_at_end = stats.offered - stats.completed - stats.dropped;
+    stats
+}
+
+/// Approximate RAM *usage* of a microservice pod given recent load — used to
+/// drive OOM dynamics and give vertical autoscalers a signal to act on.
+pub fn pod_ram_usage_mb(base_mb: f64, rps_per_pod: f64) -> f64 {
+    base_mb + 2.0 * rps_per_pod
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::sim::resources::Resources;
+    use crate::sim::scheduler::{apply_deployment, Deployment};
+
+    fn deploy_uniform(cluster: &mut Cluster, graph: &ServiceGraph, per_zone: usize, lim: Resources) {
+        for sid in 0..graph.services.len() {
+            let dep = Deployment {
+                app: graph.app_name(sid),
+                zone_pods: vec![per_zone; cluster.n_zones()],
+                limits: lim,
+            };
+            let r = apply_deployment(cluster, &dep, true);
+            assert!(r.pending.is_empty(), "deployment must fit: {:?}", r.pending);
+        }
+    }
+
+    fn cluster() -> Cluster {
+        Cluster::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn conservation_of_requests() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
+        let mut rng = Pcg64::new(1);
+        let s = run_window(&c, &g, 50.0, 20.0, &mut rng);
+        assert!(s.offered > 500);
+        assert_eq!(s.offered, s.completed + s.dropped + s.in_flight_at_end);
+        assert!(s.drop_rate() < 0.05, "healthy system drops little: {}", s.drop_rate());
+    }
+
+    #[test]
+    fn latency_reasonable_and_positive() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(2000.0, 2048.0, 200.0));
+        let mut rng = Pcg64::new(2);
+        let s = run_window(&c, &g, 30.0, 20.0, &mut rng);
+        assert!(s.p50() > 1.0, "p50={}ms", s.p50());
+        assert!(s.p90() < 500.0, "p90={}ms", s.p90());
+        assert!(s.p99() >= s.p90() && s.p90() >= s.p50());
+    }
+
+    #[test]
+    fn overload_causes_drops() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        // Tiny single pod per service, small queues.
+        deploy_uniform(&mut c, &g, 1, Resources::new(150.0, 128.0, 50.0));
+        // Concentrate into zone 0 only? keep uniform; drive way over capacity.
+        let mut rng = Pcg64::new(3);
+        let s = run_window(&c, &g, 800.0, 10.0, &mut rng);
+        assert!(s.drop_rate() > 0.2, "overload must drop: {}", s.drop_rate());
+    }
+
+    #[test]
+    fn more_cpu_lowers_latency() {
+        let g = ServiceGraph::sockshop();
+        let run_with = |cpu: f64, seed: u64| {
+            let mut c = cluster();
+            deploy_uniform(&mut c, &g, 1, Resources::new(cpu, 2048.0, 200.0));
+            let mut rng = Pcg64::new(seed);
+            run_window(&c, &g, 60.0, 20.0, &mut rng).p90()
+        };
+        let slow = run_with(300.0, 4);
+        let fast = run_with(2000.0, 4);
+        assert!(fast < slow * 0.6, "cpu should speed up: {slow:.1} vs {fast:.1}");
+    }
+
+    #[test]
+    fn colocating_order_hub_beats_isolation() {
+        // Fig. 4: isolating `orders` from its callers on distant nodes is
+        // ~26% worse P90 than best-effort colocation.
+        let g = ServiceGraph::sockshop();
+        let lim = Resources::new(1200.0, 1536.0, 200.0);
+        let orders = g.service_id("orders").unwrap();
+
+        // Colocated: everything in zone 0.
+        let mut c1 = cluster();
+        for sid in 0..g.services.len() {
+            let dep = Deployment {
+                app: g.app_name(sid),
+                zone_pods: vec![2, 0, 0, 0],
+                limits: lim,
+            };
+            apply_deployment(&mut c1, &dep, false);
+        }
+        // Isolated: orders pinned alone in zone 3, callers in zone 0.
+        let mut c2 = cluster();
+        for sid in 0..g.services.len() {
+            let zone_pods = if sid == orders { vec![0, 0, 0, 2] } else { vec![2, 0, 0, 0] };
+            let dep = Deployment { app: g.app_name(sid), zone_pods, limits: lim };
+            apply_deployment(&mut c2, &dep, false);
+        }
+        let mut rng1 = Pcg64::new(5);
+        let mut rng2 = Pcg64::new(5);
+        let p_co = run_window(&c1, &g, 80.0, 30.0, &mut rng1).p90();
+        let p_iso = run_window(&c2, &g, 80.0, 30.0, &mut rng2).p90();
+        assert!(
+            p_iso > p_co * 1.1,
+            "isolation should hurt the hub: colocated {p_co:.1}ms vs isolated {p_iso:.1}ms"
+        );
+    }
+
+    #[test]
+    fn missing_service_drops_requests_routed_to_it() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
+        // Remove the catalogue service entirely.
+        c.remove_app(&g.app_name(g.service_id("catalogue").unwrap()));
+        let mut rng = Pcg64::new(6);
+        let s = run_window(&c, &g, 50.0, 10.0, &mut rng);
+        assert!(s.drop_rate() > 0.3, "browse traffic must drop: {}", s.drop_rate());
+        assert!(s.completed > 0, "non-catalogue traffic still completes");
+    }
+
+    #[test]
+    fn socialnet_graph_well_formed() {
+        let g = ServiceGraph::socialnet();
+        assert_eq!(g.services.len(), 16);
+        for rt in &g.request_types {
+            for &sid in &rt.path {
+                assert!(sid < g.services.len());
+            }
+            assert_eq!(rt.path[0], 0, "all requests enter via nginx");
+        }
+        let share: f64 = g.request_types.iter().map(|r| r.share).sum();
+        assert!((share - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Application models: batch analytics jobs (Spark/Flink analytic perf
+//! models) and microservice applications (DES queueing over a call graph).
+
+pub mod batch;
+pub mod microservice;
+
+pub use batch::{
+    run_batch_job, run_cost, BatchWorkload, DeployMode, JobResult, Platform, RunSpec,
+};
+pub use microservice::{run_window, RequestType, Service, ServiceGraph, WindowStats};

@@ -1,0 +1,136 @@
+//! Acquisition functions computed by the coordinator from the artifact's
+//! (mu, sigma) posterior batch. One AOT artifact serves every policy:
+//!   - GP-UCB (Eq. 7)            -> Drone, Accordia
+//!   - Expected Improvement      -> Cherrypick
+//!   - safe LCB filtering (Alg.2)-> Drone private cloud
+
+use crate::util::stats::{norm_cdf, norm_pdf};
+
+/// UCB score mu + sqrt(zeta) * sigma.
+pub fn ucb(mu: &[f64], sigma: &[f64], zeta: f64) -> Vec<f64> {
+    let s = zeta.max(0.0).sqrt();
+    mu.iter().zip(sigma).map(|(m, sg)| m + s * sg).collect()
+}
+
+/// The paper's zeta_t schedule shape: grows ~log t. Theorem 4.1's exact
+/// constants are hopelessly conservative in practice (as the GP-UCB
+/// literature notes); the standard practical surrogate keeps the log-t
+/// growth but a unit-scale magnitude so exploration does not drown a
+/// [0,1]-normalized reward. `dim` enters only weakly (sqrt).
+pub fn zeta_schedule(t: u64, dim: usize, scale: f64) -> f64 {
+    let tt = (t.max(1)) as f64;
+    scale * (dim as f64).sqrt() * (1.0 + tt).ln() / 6.0
+}
+
+/// Expected Improvement over `best` (maximization).
+pub fn expected_improvement(mu: &[f64], sigma: &[f64], best: f64, xi: f64) -> Vec<f64> {
+    mu.iter()
+        .zip(sigma)
+        .map(|(&m, &s)| {
+            let imp = m - best - xi;
+            if s < 1e-12 {
+                imp.max(0.0)
+            } else {
+                let z = imp / s;
+                imp * norm_cdf(z) + s * norm_pdf(z)
+            }
+        })
+        .collect()
+}
+
+/// Lower confidence bound used to build the safe set (Alg. 2 line 12):
+/// points with lcb_resource <= budget are certified safe w.h.p.
+pub fn lcb(mu: &[f64], sigma: &[f64], beta: f64) -> Vec<f64> {
+    let s = beta.max(0.0).sqrt();
+    mu.iter().zip(sigma).map(|(m, sg)| m - s * sg).collect()
+}
+
+pub fn argmax(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        if best.map_or(true, |(_, b)| x > b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+/// Argmax over only the indices where `allowed` is true.
+pub fn argmax_filtered(xs: &[f64], allowed: &[bool]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if !allowed[i] || x.is_nan() {
+            continue;
+        }
+        if best.map_or(true, |(_, b)| x > b) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ucb_tradeoff() {
+        let mu = [1.0, 0.0];
+        let sigma = [0.0, 1.0];
+        // Small zeta -> exploit mean; large zeta -> explore variance.
+        assert_eq!(argmax(&ucb(&mu, &sigma, 0.01)), Some(0));
+        assert_eq!(argmax(&ucb(&mu, &sigma, 9.0)), Some(1));
+    }
+
+    #[test]
+    fn zeta_grows_logarithmically() {
+        let z1 = zeta_schedule(1, 13, 1.0);
+        let z10 = zeta_schedule(10, 13, 1.0);
+        let z100 = zeta_schedule(100, 13, 1.0);
+        assert!(z10 > z1 && z100 > z10);
+        assert!(z100 / z10 < z10 / z1 * 2.0, "sub-linear growth");
+    }
+
+    #[test]
+    fn ei_properties() {
+        // Zero sigma, below best -> zero EI; above best -> improvement.
+        let ei = expected_improvement(&[0.5, 2.0], &[0.0, 0.0], 1.0, 0.0);
+        assert_eq!(ei[0], 0.0);
+        assert!((ei[1] - 1.0).abs() < 1e-12);
+        // Positive sigma always gives positive EI.
+        let ei2 = expected_improvement(&[0.0], &[1.0], 5.0, 0.0);
+        assert!(ei2[0] > 0.0);
+        // EI increases with mu.
+        let ei3 = expected_improvement(&[0.0, 0.5], &[1.0, 1.0], 1.0, 0.0);
+        assert!(ei3[1] > ei3[0]);
+    }
+
+    #[test]
+    fn ei_matches_python_oracle_values() {
+        // Cross-checked against python/compile/kernels/ref.py
+        // expected_improvement_ref(mu=[1.2], sigma=[0.7], best=1.0).
+        let ei = expected_improvement(&[1.2], &[0.7], 1.0, 0.0);
+        // imp=0.2, z=0.2857..; EI = 0.2*cdf + 0.7*pdf ≈ 0.2*0.6124 + 0.7*0.3829
+        assert!((ei[0] - 0.3905).abs() < 2e-3, "{}", ei[0]);
+    }
+
+    #[test]
+    fn lcb_below_mu() {
+        let l = lcb(&[1.0], &[0.5], 4.0);
+        assert!((l[0] - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_variants() {
+        assert_eq!(argmax(&[1.0, f64::NAN, 3.0, 2.0]), Some(2));
+        assert_eq!(argmax(&[]), None);
+        assert_eq!(
+            argmax_filtered(&[5.0, 4.0, 3.0], &[false, true, true]),
+            Some(1)
+        );
+        assert_eq!(argmax_filtered(&[1.0], &[false]), None);
+    }
+}

@@ -1,0 +1,177 @@
+//! Candidate generation for the acquisition argmax: since the action space
+//! is continuous x integer (Sec. 4.1 notes exhaustive search is
+//! intractable), each decision evaluates the posterior on a fixed-size batch
+//! mixing (a) global Halton space-filling points, (b) local Gaussian
+//! perturbations of the incumbent best action, and (c) the incumbent itself
+//! (so the argmax can always stand pat). The batch size matches the
+//! artifact's M.
+
+use super::encode::{Action, ActionSpace};
+use crate::util::rng::{Halton, Pcg64};
+
+#[derive(Clone, Debug)]
+pub struct CandidateGen {
+    space: ActionSpace,
+    halton: Halton,
+    /// Local-perturbation scale in normalized units.
+    pub local_sigma: f64,
+    /// Fraction of the batch drawn locally around the incumbent.
+    pub local_frac: f64,
+}
+
+impl CandidateGen {
+    pub fn new(space: ActionSpace, seed_offset: u64) -> Self {
+        let dims = space.dim();
+        Self {
+            space,
+            halton: Halton::with_offset(dims, seed_offset),
+            local_sigma: 0.08,
+            local_frac: 0.6,
+        }
+    }
+
+    pub fn space(&self) -> &ActionSpace {
+        &self.space
+    }
+
+    /// Generate `m` candidates (normalized encodings). The incumbent (if
+    /// any) occupies slot 0 exactly.
+    pub fn generate(
+        &mut self,
+        m: usize,
+        incumbent: Option<&Action>,
+        rng: &mut Pcg64,
+    ) -> Vec<Vec<f64>> {
+        let dim = self.space.dim();
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(m);
+        let inc_enc = incumbent.map(|a| self.space.encode(a));
+        if let Some(enc) = &inc_enc {
+            out.push(enc.clone());
+        }
+        let target_with_local = if let Some(_) = &inc_enc {
+            1 + (((m as f64) * self.local_frac) as usize).min(m.saturating_sub(1))
+        } else {
+            0
+        };
+        while out.len() < target_with_local {
+            let enc = inc_enc.as_ref().unwrap();
+            let p: Vec<f64> = enc
+                .iter()
+                .map(|&v| (v + self.local_sigma * rng.normal()).clamp(0.0, 1.0))
+                .collect();
+            out.push(p);
+        }
+        while out.len() < m {
+            out.push(self.halton.next_point());
+        }
+        debug_assert!(out.iter().all(|p| p.len() == dim));
+        out
+    }
+
+    /// Decode candidate `i` into a concrete (clamped) action.
+    pub fn decode(&self, enc: &[f64]) -> Action {
+        self.space.clamp(self.space.decode(enc))
+    }
+}
+
+/// The paper's initial-point heuristic (Sec. 4.5): start from *half of the
+/// currently available resources* — minimum configurations can stall
+/// (PageRank under 12 GB), maximums waste money.
+pub fn initial_action(space: &ActionSpace, free_frac: f64) -> Action {
+    let f = 0.5 * free_frac.clamp(0.0, 1.0);
+    let mid = |(lo, hi): (f64, f64)| lo + f * (hi - lo);
+    let pods_per_zone = ((space.max_pods_per_zone as f64) * f).round().max(1.0) as usize;
+    space.clamp(Action {
+        zone_pods: vec![pods_per_zone; space.zones],
+        cpu_m: mid(space.cpu_m),
+        ram_mb: mid(space.ram_mb),
+        net_mbps: mid(space.net_mbps),
+    })
+}
+
+/// Failure-recovery escalation (Sec. 4.5): midpoint between the failed
+/// action and the maximum configuration.
+pub fn recovery_action(space: &ActionSpace, failed: &Action) -> Action {
+    let mid = |v: f64, (_, hi): (f64, f64)| 0.5 * (v + hi);
+    let pods: Vec<usize> = failed
+        .zone_pods
+        .iter()
+        .map(|&k| ((k + space.max_pods_per_zone) as f64 / 2.0).round() as usize)
+        .collect();
+    space.clamp(Action {
+        zone_pods: pods,
+        cpu_m: mid(failed.cpu_m, space.cpu_m),
+        ram_mb: mid(failed.ram_mb, space.ram_mb),
+        net_mbps: mid(failed.net_mbps, space.net_mbps),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_size_and_bounds() {
+        let mut g = CandidateGen::new(ActionSpace::default(), 0);
+        let mut rng = Pcg64::new(1);
+        let inc = initial_action(g.space(), 1.0);
+        let c = g.generate(64, Some(&inc), &mut rng);
+        assert_eq!(c.len(), 64);
+        for p in &c {
+            assert_eq!(p.len(), 7);
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        }
+        // Slot 0 is the incumbent exactly.
+        assert_eq!(c[0], g.space().encode(&inc));
+    }
+
+    #[test]
+    fn local_candidates_cluster_near_incumbent() {
+        let mut g = CandidateGen::new(ActionSpace::default(), 0);
+        let mut rng = Pcg64::new(2);
+        let inc = initial_action(g.space(), 1.0);
+        let enc = g.space().encode(&inc);
+        let c = g.generate(128, Some(&inc), &mut rng);
+        let dist = |p: &[f64]| -> f64 {
+            p.iter().zip(&enc).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+        };
+        let local: Vec<f64> = c[1..65].iter().map(|p| dist(p)).collect();
+        let global: Vec<f64> = c[65..].iter().map(|p| dist(p)).collect();
+        assert!(
+            crate::util::stats::mean(&local) < crate::util::stats::mean(&global) * 0.6,
+            "local should be nearer"
+        );
+    }
+
+    #[test]
+    fn no_incumbent_is_all_global() {
+        let mut g = CandidateGen::new(ActionSpace::default(), 7);
+        let mut rng = Pcg64::new(3);
+        let c = g.generate(16, None, &mut rng);
+        assert_eq!(c.len(), 16);
+    }
+
+    #[test]
+    fn initial_action_half_of_available() {
+        let space = ActionSpace::default();
+        let a = initial_action(&space, 1.0);
+        assert_eq!(a.zone_pods, vec![4; 4]);
+        assert!((a.cpu_m - (250.0 + 0.5 * (8000.0 - 250.0))).abs() < 1e-9);
+        // Busy cluster: half of 40% free.
+        let b = initial_action(&space, 0.4);
+        assert!(b.total_pods() < a.total_pods());
+        assert!(b.cpu_m < a.cpu_m);
+        assert!(b.total_pods() >= 1);
+    }
+
+    #[test]
+    fn recovery_escalates_toward_max() {
+        let space = ActionSpace::default();
+        let failed = Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 500.0, ram_mb: 1024.0, net_mbps: 200.0 };
+        let r = recovery_action(&space, &failed);
+        assert!(r.ram_mb > failed.ram_mb);
+        assert!(r.cpu_m > failed.cpu_m);
+        assert!(r.total_pods() > failed.total_pods());
+        assert!(r.ram_mb <= space.ram_mb.1);
+    }
+}

@@ -1,0 +1,217 @@
+//! Action encoding (Sec. 4.5): the 7-dimensional action space — a per-zone
+//! scheduling sub-vector (4 zones) plus per-pod CPU, RAM and network
+//! bandwidth — scalarized and min-max normalized into [0,1]^7 for the GP's
+//! stationary kernel. Joint GP inputs are [action || context] = 13 dims,
+//! matching the AOT artifact geometry (python/compile/model.py).
+
+use crate::monitor::context::{ContextVector, CTX_DIM};
+use crate::sim::resources::Resources;
+
+pub const ACTION_DIM: usize = 7;
+pub const JOINT_DIM: usize = ACTION_DIM + CTX_DIM; // 13
+
+/// A concrete resource-orchestration decision.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Action {
+    /// Pods scheduled to each zone (the scheduling sub-vector).
+    pub zone_pods: Vec<usize>,
+    /// Per-pod allocation.
+    pub cpu_m: f64,
+    pub ram_mb: f64,
+    pub net_mbps: f64,
+}
+
+impl Action {
+    pub fn total_pods(&self) -> usize {
+        self.zone_pods.iter().sum()
+    }
+    pub fn total_ram_mb(&self) -> f64 {
+        self.total_pods() as f64 * self.ram_mb
+    }
+    pub fn total_cpu_m(&self) -> f64 {
+        self.total_pods() as f64 * self.cpu_m
+    }
+    pub fn per_pod(&self) -> Resources {
+        Resources::new(self.cpu_m, self.ram_mb, self.net_mbps)
+    }
+
+    /// Fraction of pod pairs that live in different zones (the placement
+    /// signal batch models consume; 0 when <= 1 pod).
+    pub fn cross_zone_frac(&self) -> f64 {
+        let total = self.total_pods();
+        if total <= 1 {
+            return 0.0;
+        }
+        let same: usize = self.zone_pods.iter().map(|&k| k * k.saturating_sub(1)).sum();
+        let all = total * (total - 1);
+        1.0 - same as f64 / all as f64
+    }
+}
+
+/// Bounds of each action dimension; encoding is min-max over these.
+#[derive(Clone, Debug)]
+pub struct ActionSpace {
+    pub zones: usize,
+    pub max_pods_per_zone: usize,
+    pub cpu_m: (f64, f64),
+    pub ram_mb: (f64, f64),
+    pub net_mbps: (f64, f64),
+}
+
+impl Default for ActionSpace {
+    fn default() -> Self {
+        // Per-pod ranges sized to the paper's worker nodes (8 vCPU / 30 GB).
+        Self {
+            zones: 4,
+            max_pods_per_zone: 8,
+            cpu_m: (250.0, 8_000.0),
+            ram_mb: (512.0, 28_672.0),
+            net_mbps: (100.0, 10_000.0),
+        }
+    }
+}
+
+impl ActionSpace {
+    /// Per-pod ranges for microservice pods — each *service* gets this
+    /// allocation per replica, so pods are container-sized, not
+    /// executor-sized (the paper's fine-grained container rightsizing).
+    pub fn microservices(zones: usize) -> Self {
+        Self {
+            zones,
+            max_pods_per_zone: 6,
+            cpu_m: (150.0, 4_000.0),
+            // Floor above the container idle footprint (~180 MB): limits
+            // below it are guaranteed OOM-kills, not a useful search region.
+            ram_mb: (320.0, 4_096.0),
+            net_mbps: (50.0, 2_000.0),
+        }
+    }
+}
+
+fn norm(v: f64, (lo, hi): (f64, f64)) -> f64 {
+    ((v - lo) / (hi - lo)).clamp(0.0, 1.0)
+}
+
+fn denorm(u: f64, (lo, hi): (f64, f64)) -> f64 {
+    lo + u.clamp(0.0, 1.0) * (hi - lo)
+}
+
+impl ActionSpace {
+    pub fn dim(&self) -> usize {
+        self.zones + 3
+    }
+
+    /// Encode an action into [0,1]^(zones+3).
+    pub fn encode(&self, a: &Action) -> Vec<f64> {
+        assert_eq!(a.zone_pods.len(), self.zones);
+        let mut v = Vec::with_capacity(self.dim());
+        for &k in &a.zone_pods {
+            v.push((k as f64 / self.max_pods_per_zone as f64).clamp(0.0, 1.0));
+        }
+        v.push(norm(a.cpu_m, self.cpu_m));
+        v.push(norm(a.ram_mb, self.ram_mb));
+        v.push(norm(a.net_mbps, self.net_mbps));
+        v
+    }
+
+    /// Decode a normalized point back into a concrete action (zone counts
+    /// round to integers).
+    pub fn decode(&self, v: &[f64]) -> Action {
+        assert!(v.len() >= self.dim());
+        let zone_pods: Vec<usize> = v[..self.zones]
+            .iter()
+            .map(|&u| (u.clamp(0.0, 1.0) * self.max_pods_per_zone as f64).round() as usize)
+            .collect();
+        Action {
+            zone_pods,
+            cpu_m: denorm(v[self.zones], self.cpu_m),
+            ram_mb: denorm(v[self.zones + 1], self.ram_mb),
+            net_mbps: denorm(v[self.zones + 2], self.net_mbps),
+        }
+    }
+
+    /// Clamp an action into bounds and guarantee at least one pod.
+    pub fn clamp(&self, mut a: Action) -> Action {
+        for k in a.zone_pods.iter_mut() {
+            *k = (*k).min(self.max_pods_per_zone);
+        }
+        if a.total_pods() == 0 {
+            a.zone_pods[0] = 1;
+        }
+        a.cpu_m = a.cpu_m.clamp(self.cpu_m.0, self.cpu_m.1);
+        a.ram_mb = a.ram_mb.clamp(self.ram_mb.0, self.ram_mb.1);
+        a.net_mbps = a.net_mbps.clamp(self.net_mbps.0, self.net_mbps.1);
+        a
+    }
+}
+
+/// Joint [action || context] feature vector fed to the GP.
+pub fn joint_features(space: &ActionSpace, a: &Action, ctx: &ContextVector) -> Vec<f64> {
+    let mut v = space.encode(a);
+    v.extend_from_slice(&ctx.to_array());
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dims_match_artifact_geometry() {
+        let s = ActionSpace::default();
+        assert_eq!(s.dim(), ACTION_DIM);
+        assert_eq!(ACTION_DIM + CTX_DIM, JOINT_DIM);
+        assert_eq!(JOINT_DIM, 13);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let s = ActionSpace::default();
+        let a = Action { zone_pods: vec![2, 0, 5, 1], cpu_m: 4000.0, ram_mb: 8192.0, net_mbps: 2500.0 };
+        let v = s.encode(&a);
+        assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
+        let b = s.decode(&v);
+        assert_eq!(a.zone_pods, b.zone_pods);
+        assert!((a.cpu_m - b.cpu_m).abs() < 1.0);
+        assert!((a.ram_mb - b.ram_mb).abs() < 1.0);
+        assert!((a.net_mbps - b.net_mbps).abs() < 1.0);
+    }
+
+    #[test]
+    fn decode_clamps_out_of_range() {
+        let s = ActionSpace::default();
+        let a = s.decode(&[-0.5, 2.0, 0.5, 0.0, 1.5, -1.0, 0.5]);
+        assert_eq!(a.zone_pods, vec![0, 8, 4, 0]);
+        assert_eq!(a.cpu_m, s.cpu_m.1);
+        assert_eq!(a.ram_mb, s.ram_mb.0);
+    }
+
+    #[test]
+    fn cross_zone_fraction() {
+        let all_one_zone = Action { zone_pods: vec![4, 0, 0, 0], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
+        assert_eq!(all_one_zone.cross_zone_frac(), 0.0);
+        let spread = Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
+        assert_eq!(spread.cross_zone_frac(), 1.0);
+        let mixed = Action { zone_pods: vec![2, 2, 0, 0], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
+        // same-pairs = 2*(2*1) = 4 of 4*3 = 12 -> cross = 2/3
+        assert!((mixed.cross_zone_frac() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clamp_guarantees_a_pod() {
+        let s = ActionSpace::default();
+        let a = s.clamp(Action { zone_pods: vec![0, 0, 0, 0], cpu_m: 1.0, ram_mb: 1.0, net_mbps: 1.0 });
+        assert_eq!(a.total_pods(), 1);
+        assert_eq!(a.cpu_m, s.cpu_m.0);
+    }
+
+    #[test]
+    fn joint_features_layout() {
+        let s = ActionSpace::default();
+        let a = Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 1000.0, ram_mb: 1024.0, net_mbps: 500.0 };
+        let ctx = ContextVector { workload: 0.9, ..Default::default() };
+        let f = joint_features(&s, &a, &ctx);
+        assert_eq!(f.len(), JOINT_DIM);
+        assert!((f[ACTION_DIM] - 0.9).abs() < 1e-12);
+    }
+}

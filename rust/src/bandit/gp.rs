@@ -1,0 +1,324 @@
+//! Native-rust GP posterior — the f64 mirror of the L2 JAX graph
+//! (python/compile/model.py). Two jobs:
+//!   1. cross-validate the loaded HLO artifact (integration test asserts
+//!      |Δmu|,|Δsigma| < 1e-4 on random windows), and
+//!   2. serve as the runtime fallback backend when artifacts are absent
+//!      (tests, quick experiments), keeping every code path exercisable.
+//!
+//! Identical masking construction, Matern-3/2 kernel, loop Cholesky and
+//! forward substitution as the AOT'd graph.
+
+pub const JITTER: f64 = 1e-6;
+const SQRT3: f64 = 1.732_050_807_568_877_2;
+
+/// Matern-3/2 covariance between row-major point sets a [n,d], b [m,d].
+pub fn matern32(a: &[f64], b: &[f64], d: usize, lengthscale: f64, signal_var: f64) -> Vec<f64> {
+    assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
+    let n = a.len() / d;
+    let m = b.len() / d;
+    let s = SQRT3 / lengthscale;
+    let mut k = vec![0.0; n * m];
+    for i in 0..n {
+        let ai = &a[i * d..(i + 1) * d];
+        for j in 0..m {
+            let bj = &b[j * d..(j + 1) * d];
+            let mut sq = 0.0;
+            for t in 0..d {
+                let diff = ai[t] - bj[t];
+                sq += diff * diff;
+            }
+            let r = s * sq.max(0.0).sqrt();
+            k[i * m + j] = signal_var * (1.0 + r) * (-r).exp();
+        }
+    }
+    k
+}
+
+/// Left-looking Cholesky of a PD matrix (row-major n x n). Returns lower L.
+pub fn cholesky(k: &[f64], n: usize) -> Vec<f64> {
+    let mut l = vec![0.0; n * n];
+    for j in 0..n {
+        // s = K[:, j] - L[:, :j] @ L[j, :j]
+        for i in j..n {
+            let mut s = k[i * n + j];
+            for t in 0..j {
+                s -= l[i * n + t] * l[j * n + t];
+            }
+            if i == j {
+                l[j * n + j] = s.max(JITTER).sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    l
+}
+
+/// Forward substitution: solve L X = B for lower-triangular L; B is n x r
+/// row-major, overwritten in place.
+pub fn solve_lower_inplace(l: &[f64], n: usize, b: &mut [f64], r: usize) {
+    assert_eq!(b.len(), n * r);
+    for i in 0..n {
+        let (head, tail) = b.split_at_mut(i * r);
+        let bi = &mut tail[..r];
+        for t in 0..i {
+            let lit = l[i * n + t];
+            if lit != 0.0 {
+                let bt = &head[t * r..(t + 1) * r];
+                for c in 0..r {
+                    bi[c] -= lit * bt[c];
+                }
+            }
+        }
+        let d = l[i * n + i];
+        for c in 0..r {
+            bi[c] /= d;
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct GpHyper {
+    pub noise_var: f64,
+    pub lengthscale: f64,
+    pub signal_var: f64,
+}
+
+impl Default for GpHyper {
+    fn default() -> Self {
+        Self { noise_var: 0.01, lengthscale: 0.6, signal_var: 1.0 }
+    }
+}
+
+/// Masked-window GP posterior: exactly the artifact's semantics.
+///
+/// z: [n, d] row-major window inputs; y: [n]; mask: [n] in {0,1};
+/// x: [m, d] candidates. Returns (mu [m], sigma [m]).
+pub fn gp_posterior(
+    z: &[f64],
+    y: &[f64],
+    mask: &[f64],
+    x: &[f64],
+    d: usize,
+    hyp: GpHyper,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = y.len();
+    assert_eq!(z.len(), n * d);
+    assert_eq!(mask.len(), n);
+    let m = x.len() / d;
+
+    let mut k_zz = matern32(z, z, d, hyp.lengthscale, hyp.signal_var);
+    let mut k_zx = matern32(z, x, d, hyp.lengthscale, hyp.signal_var);
+
+    // Masking: zero masked rows/cols, isolate masked diagonal at 1 + noise.
+    for i in 0..n {
+        for j in 0..n {
+            k_zz[i * n + j] *= mask[i] * mask[j];
+        }
+        k_zz[i * n + i] += (1.0 - mask[i]) + hyp.noise_var;
+        for c in 0..m {
+            k_zx[i * m + c] *= mask[i];
+        }
+    }
+    let y_m: Vec<f64> = y.iter().zip(mask).map(|(v, mk)| v * mk).collect();
+
+    let l = cholesky(&k_zz, n);
+    // Fused RHS [y | K_zx] -> one forward solve.
+    let r = 1 + m;
+    let mut rhs = vec![0.0; n * r];
+    for i in 0..n {
+        rhs[i * r] = y_m[i];
+        rhs[i * r + 1..(i + 1) * r].copy_from_slice(&k_zx[i * m..(i + 1) * m]);
+    }
+    solve_lower_inplace(&l, n, &mut rhs, r);
+
+    let mut mu = vec![0.0; m];
+    let mut var = vec![hyp.signal_var; m];
+    for i in 0..n {
+        let w = rhs[i * r];
+        let v_row = &rhs[i * r + 1..(i + 1) * r];
+        for c in 0..m {
+            mu[c] += v_row[c] * w;
+            var[c] -= v_row[c] * v_row[c];
+        }
+    }
+    let sigma: Vec<f64> = var.iter().map(|&v| v.max(0.0).sqrt()).collect();
+    (mu, sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rand_mat(rng: &mut Pcg64, n: usize, d: usize) -> Vec<f64> {
+        (0..n * d).map(|_| rng.uniform(-2.0, 2.0)).collect()
+    }
+
+    /// Dense reference posterior via Gauss elimination on the active rows.
+    fn dense_ref(
+        z: &[f64],
+        y: &[f64],
+        x: &[f64],
+        d: usize,
+        hyp: GpHyper,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let n = y.len();
+        let m = x.len() / d;
+        let mut k = matern32(z, z, d, hyp.lengthscale, hyp.signal_var);
+        for i in 0..n {
+            k[i * n + i] += hyp.noise_var;
+        }
+        let kzx = matern32(z, x, d, hyp.lengthscale, hyp.signal_var);
+        // Solve K a = [y | kzx] by Gaussian elimination with partial pivot.
+        let r = 1 + m;
+        let mut aug = vec![0.0; n * (n + r)];
+        for i in 0..n {
+            aug[i * (n + r)..i * (n + r) + n].copy_from_slice(&k[i * n..(i + 1) * n]);
+            aug[i * (n + r) + n] = y[i];
+            for c in 0..m {
+                aug[i * (n + r) + n + 1 + c] = kzx[i * m + c];
+            }
+        }
+        let w = n + r;
+        for col in 0..n {
+            let piv = (col..n).max_by(|&a, &b| {
+                aug[a * w + col].abs().partial_cmp(&aug[b * w + col].abs()).unwrap()
+            }).unwrap();
+            if piv != col {
+                for c in 0..w {
+                    aug.swap(col * w + c, piv * w + c);
+                }
+            }
+            let p = aug[col * w + col];
+            for i in 0..n {
+                if i != col {
+                    let f = aug[i * w + col] / p;
+                    for c in col..w {
+                        aug[i * w + c] -= f * aug[col * w + c];
+                    }
+                }
+            }
+        }
+        let mut sol = vec![0.0; n * r];
+        for i in 0..n {
+            let p = aug[i * w + i];
+            for c in 0..r {
+                sol[i * r + c] = aug[i * w + n + c] / p;
+            }
+        }
+        let mut mu = vec![0.0; m];
+        let mut var = vec![hyp.signal_var; m];
+        for c in 0..m {
+            for i in 0..n {
+                mu[c] += kzx[i * m + c] * sol[i * r];
+                var[c] -= kzx[i * m + c] * sol[i * r + 1 + c];
+            }
+        }
+        (mu, var.iter().map(|&v| v.max(0.0).sqrt()).collect())
+    }
+
+    #[test]
+    fn matern_diag_is_signal_var() {
+        let mut rng = Pcg64::new(0);
+        let a = rand_mat(&mut rng, 6, 3);
+        let k = matern32(&a, &a, 3, 1.0, 2.5);
+        for i in 0..6 {
+            assert!((k[i * 6 + i] - 2.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg64::new(1);
+        let z = rand_mat(&mut rng, 8, 4);
+        let mut k = matern32(&z, &z, 4, 1.0, 1.0);
+        for i in 0..8 {
+            k[i * 8 + i] += 0.1;
+        }
+        let l = cholesky(&k, 8);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for t in 0..8 {
+                    s += l[i * 8 + t] * l[j * 8 + t];
+                }
+                assert!((s - k[i * 8 + j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn posterior_matches_dense_reference() {
+        let mut rng = Pcg64::new(2);
+        let (n, m, d) = (20, 40, 13);
+        let z = rand_mat(&mut rng, n, d);
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let x = rand_mat(&mut rng, m, d);
+        let mask = vec![1.0; n];
+        let hyp = GpHyper::default();
+        let (mu, sig) = gp_posterior(&z, &y, &mask, &x, d, hyp);
+        let (mu_r, sig_r) = dense_ref(&z, &y, &x, d, hyp);
+        for c in 0..m {
+            assert!((mu[c] - mu_r[c]).abs() < 1e-7, "mu[{c}]");
+            assert!((sig[c] - sig_r[c]).abs() < 1e-6, "sigma[{c}]");
+        }
+    }
+
+    #[test]
+    fn masking_identity() {
+        let mut rng = Pcg64::new(3);
+        let (n, active, m, d) = (16, 5, 10, 6);
+        let mut z = rand_mat(&mut rng, n, d);
+        let mut y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        // Poison padded region.
+        for v in z[active * d..].iter_mut() {
+            *v = 1e9;
+        }
+        for v in y[active..].iter_mut() {
+            *v = -1e9;
+        }
+        let x = rand_mat(&mut rng, m, d);
+        let mut mask = vec![0.0; n];
+        for v in mask[..active].iter_mut() {
+            *v = 1.0;
+        }
+        let hyp = GpHyper::default();
+        let (mu_pad, sig_pad) = gp_posterior(&z, &y, &mask, &x, d, hyp);
+        let (mu_ref, sig_ref) =
+            dense_ref(&z[..active * d], &y[..active], &x, d, hyp);
+        for c in 0..m {
+            assert!((mu_pad[c] - mu_ref[c]).abs() < 1e-7);
+            assert!((sig_pad[c] - sig_ref[c]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_window_gives_prior() {
+        let mut rng = Pcg64::new(4);
+        let z = rand_mat(&mut rng, 8, 3);
+        let y = vec![0.5; 8];
+        let mask = vec![0.0; 8];
+        let x = rand_mat(&mut rng, 5, 3);
+        let hyp = GpHyper { signal_var: 3.0, ..Default::default() };
+        let (mu, sig) = gp_posterior(&z, &y, &mask, &x, 3, hyp);
+        for c in 0..5 {
+            assert!(mu[c].abs() < 1e-10);
+            assert!((sig[c] - 3.0f64.sqrt()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn interpolates_training_points() {
+        let mut rng = Pcg64::new(5);
+        let z = rand_mat(&mut rng, 10, 4);
+        let y: Vec<f64> = (0..10).map(|_| rng.normal()).collect();
+        let mask = vec![1.0; 10];
+        let hyp = GpHyper { noise_var: 1e-8, ..Default::default() };
+        let (mu, sig) = gp_posterior(&z, &y, &mask, &z, 4, hyp);
+        for i in 0..10 {
+            assert!((mu[i] - y[i]).abs() < 1e-3, "mu[{i}]={} y={}", mu[i], y[i]);
+            assert!(sig[i] < 0.02);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The contextual-bandit engine: action/context encoding, the sliding
+//! observation window, candidate generation, acquisition functions, and the
+//! native-rust GP that mirrors (and cross-validates) the AOT'd L2 graph.
+
+pub mod acquisition;
+pub mod candidates;
+pub mod encode;
+pub mod gp;
+pub mod window;
+
+pub use acquisition::{argmax, argmax_filtered, expected_improvement, lcb, ucb, zeta_schedule};
+pub use candidates::{initial_action, recovery_action, CandidateGen};
+pub use encode::{joint_features, Action, ActionSpace, ACTION_DIM, JOINT_DIM};
+pub use gp::{gp_posterior, GpHyper};
+pub use window::{Observation, SlidingWindow};

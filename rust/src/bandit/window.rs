@@ -1,0 +1,149 @@
+//! Sliding-window observation store (Sec. 4.5 "Reducing computational
+//! complexity"): only the most recent N data points feed the surrogate,
+//! keeping per-decision cost flat over time. Points are padded/masked to
+//! the artifact's fixed N so the AOT'd GP sees static shapes.
+
+#[derive(Clone, Debug)]
+pub struct Observation {
+    /// Joint [action || context] features, normalized.
+    pub z: Vec<f64>,
+    /// Primary reward (public: alpha*perf - beta*cost; private: perf).
+    pub y: f64,
+    /// Secondary target for the safe bandit (resource usage); unused = 0.
+    pub y_resource: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct SlidingWindow {
+    dim: usize,
+    capacity: usize,
+    buf: Vec<Observation>,
+    head: usize,
+    len: usize,
+    total_pushed: u64,
+}
+
+impl SlidingWindow {
+    pub fn new(capacity: usize, dim: usize) -> Self {
+        assert!(capacity > 0 && dim > 0);
+        Self { dim, capacity, buf: Vec::with_capacity(capacity), head: 0, len: 0, total_pushed: 0 }
+    }
+
+    pub fn push(&mut self, obs: Observation) {
+        assert_eq!(obs.z.len(), self.dim, "feature dim mismatch");
+        if self.buf.len() < self.capacity {
+            self.buf.push(obs);
+            self.len = self.buf.len();
+        } else {
+            self.buf[self.head] = obs;
+            self.head = (self.head + 1) % self.capacity;
+        }
+        self.total_pushed += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len.max(self.buf.len().min(self.capacity))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn total_pushed(&self) -> u64 {
+        self.total_pushed
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Observation> {
+        self.buf.iter()
+    }
+
+    /// Best (max) primary reward currently in the window (for EI).
+    pub fn best_y(&self) -> Option<f64> {
+        self.buf.iter().map(|o| o.y).fold(None, |acc, y| Some(acc.map_or(y, |a: f64| a.max(y))))
+    }
+
+    /// Pack into fixed-shape padded arrays for the artifact:
+    /// (z [n_pad*dim], y [n_pad], y_resource [n_pad], mask [n_pad]).
+    /// Slot order is arbitrary (the GP is permutation-invariant; tested in
+    /// python/tests/test_masking.py).
+    pub fn padded(&self, n_pad: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+        assert!(n_pad >= self.buf.len(), "window larger than artifact N");
+        let mut z = vec![0.0; n_pad * self.dim];
+        let mut y = vec![0.0; n_pad];
+        let mut yr = vec![0.0; n_pad];
+        let mut mask = vec![0.0; n_pad];
+        for (i, o) in self.buf.iter().enumerate() {
+            z[i * self.dim..(i + 1) * self.dim].copy_from_slice(&o.z);
+            y[i] = o.y;
+            yr[i] = o.y_resource;
+            mask[i] = 1.0;
+        }
+        (z, y, yr, mask)
+    }
+
+    /// Mean/std of the primary rewards in-window (for normalization).
+    pub fn y_stats(&self) -> (f64, f64) {
+        let ys: Vec<f64> = self.buf.iter().map(|o| o.y).collect();
+        (crate::util::stats::mean(&ys), crate::util::stats::std_dev(&ys))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(v: f64) -> Observation {
+        Observation { z: vec![v, v], y: v, y_resource: -v }
+    }
+
+    #[test]
+    fn fills_then_overwrites_oldest() {
+        let mut w = SlidingWindow::new(3, 2);
+        for i in 0..5 {
+            w.push(obs(i as f64));
+        }
+        assert_eq!(w.len(), 3);
+        assert_eq!(w.total_pushed(), 5);
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        let mut sorted = ys.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(sorted, vec![2.0, 3.0, 4.0], "oldest evicted: {ys:?}");
+    }
+
+    #[test]
+    fn padded_shapes_and_mask() {
+        let mut w = SlidingWindow::new(30, 2);
+        w.push(obs(1.0));
+        w.push(obs(2.0));
+        let (z, y, yr, mask) = w.padded(32);
+        assert_eq!(z.len(), 64);
+        assert_eq!(y.len(), 32);
+        assert_eq!(mask.iter().sum::<f64>(), 2.0);
+        assert_eq!(y[0], 1.0);
+        assert_eq!(yr[1], -2.0);
+        assert_eq!(&z[2..4], &[2.0, 2.0]);
+        assert_eq!(mask[2], 0.0);
+    }
+
+    #[test]
+    fn best_y() {
+        let mut w = SlidingWindow::new(4, 2);
+        assert_eq!(w.best_y(), None);
+        for v in [3.0, -1.0, 7.0, 2.0] {
+            w.push(obs(v));
+        }
+        assert_eq!(w.best_y(), Some(7.0));
+        // Evict 3.0 and 7.0 with small values.
+        w.push(obs(0.0));
+        w.push(obs(0.0));
+        w.push(obs(0.0));
+        assert_eq!(w.best_y(), Some(2.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn dim_mismatch_panics() {
+        let mut w = SlidingWindow::new(2, 3);
+        w.push(obs(1.0)); // dim 2 != 3
+    }
+}

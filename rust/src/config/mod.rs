@@ -1,0 +1,11 @@
+//! Configuration: a TOML-subset parser plus the typed schema with
+//! paper-faithful defaults (cluster geometry, interference model, bandit
+//! hyperparameters, objective weights).
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::{Config, Value};
+pub use schema::{
+    BanditConfig, ClusterConfig, InterferenceConfig, ObjectiveConfig, SystemConfig,
+};

@@ -1,0 +1,255 @@
+//! TOML-subset parser (offline vendor set has no serde/toml).
+//!
+//! Supported syntax — everything the shipped configs/ use:
+//!   [section] and [section.sub] headers
+//!   key = 1, key = 1.5, key = true, key = "string"
+//!   key = [1, 2, 3] / key = ["a", "b"]
+//!   # comments, blank lines
+//!
+//! Values are stored flat under "section.sub.key" dotted paths.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    List(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64_list(&self) -> Option<Vec<f64>> {
+        match self {
+            Value::List(xs) => xs.iter().map(|x| x.as_f64()).collect(),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Self, ParseError> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(ParseError { line: lineno, msg: "unterminated section header".into() });
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    return Err(ParseError { line: lineno, msg: "empty section name".into() });
+                }
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let key = k.trim();
+            if key.is_empty() {
+                return Err(ParseError { line: lineno, msg: "empty key".into() });
+            }
+            let value = parse_value(v.trim()).map_err(|msg| ParseError { line: lineno, msg })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(Self { values })
+    }
+
+    pub fn load(path: &str) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+    pub fn i64(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.i64(key, default as i64).max(0) as usize
+    }
+    pub fn bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+    pub fn str(&self, key: &str, default: &str) -> String {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        self.get(key).and_then(|v| v.as_f64_list())
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.values.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a string literal.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated list")?;
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::List(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::List(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top-level
+seed = 42
+alpha = 0.5
+name = "drone"  # inline comment
+enabled = true
+
+[cluster]
+workers = 15
+ram_mb = 30720
+zones = [4, 4, 4, 3]
+
+[bandit.window]
+size = 32
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.i64("seed", 0), 42);
+        assert!((c.f64("alpha", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.str("name", ""), "drone");
+        assert!(c.bool("enabled", false));
+        assert_eq!(c.usize("cluster.workers", 0), 15);
+        assert_eq!(c.f64_list("cluster.zones").unwrap(), vec![4.0, 4.0, 4.0, 3.0]);
+        assert_eq!(c.usize("bandit.window.size", 0), 32);
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.i64("nope", 7), 7);
+        assert_eq!(c.str("nope", "d"), "d");
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("just words").is_err());
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("k = ").is_err());
+        assert!(Config::parse("k = \"open").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let c = Config::parse("k = \"a#b\"").unwrap();
+        assert_eq!(c.str("k", ""), "a#b");
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let c = Config::parse("a = 3\nb = 3.0").unwrap();
+        assert_eq!(c.get("a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("b"), Some(&Value::Float(3.0)));
+        assert_eq!(c.f64("a", 0.0), 3.0);
+    }
+}

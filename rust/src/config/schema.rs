@@ -1,0 +1,219 @@
+//! Typed experiment/system configuration with paper-faithful defaults,
+//! overridable from a config file (configs/*.toml) and/or CLI options.
+
+use super::parser::Config;
+use crate::util::cli::Args;
+
+/// Testbed geometry — defaults mirror the paper's Compute Canada cluster
+/// (Sec. 5.1): 15 worker nodes, 8 vCPU / 30 GB each, 10 GbE, 4 zones.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub workers: usize,
+    pub zones: usize,
+    pub node_cpu_millicores: f64,
+    pub node_ram_mb: f64,
+    pub node_net_mbps: f64,
+    /// Artificial inter-zone latency (the paper injects it with `tc`), ms.
+    pub inter_zone_latency_ms: f64,
+    pub intra_zone_latency_ms: f64,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            workers: 15,
+            zones: 4,
+            node_cpu_millicores: 8_000.0,
+            node_ram_mb: 30_720.0,
+            node_net_mbps: 10_000.0,
+            inter_zone_latency_ms: 2.0,
+            intra_zone_latency_ms: 0.1,
+        }
+    }
+}
+
+/// Interference injection (Sec. 3): Poisson arrivals, uniform intensity.
+#[derive(Clone, Debug)]
+pub struct InterferenceConfig {
+    pub enabled: bool,
+    /// Cluster-wide arrival rate, events/second (paper: 0.5).
+    pub rate_per_sec: f64,
+    /// Intensity uniform in [0, max_intensity] of capacity (paper: 0.5).
+    pub max_intensity: f64,
+    /// Mean event duration, seconds (exponential).
+    pub mean_duration_s: f64,
+}
+
+impl Default for InterferenceConfig {
+    fn default() -> Self {
+        Self {
+            enabled: true,
+            rate_per_sec: 0.5,
+            max_intensity: 0.5,
+            mean_duration_s: 20.0,
+        }
+    }
+}
+
+/// Bandit engine knobs (Sec. 4).
+#[derive(Clone, Debug)]
+pub struct BanditConfig {
+    /// Sliding window size (paper: N = 30; artifact pads to 32).
+    pub window: usize,
+    /// Candidate batch per decision.
+    pub candidates: usize,
+    /// UCB exploration weight schedule scale (zeta_t = scale * ln(t+1)^1.5).
+    pub zeta_scale: f64,
+    /// GP hyperparameters over the normalized [0,1]^D space.
+    pub noise_var: f64,
+    pub lengthscale: f64,
+    pub signal_var: f64,
+    /// Safe-bandit (Alg. 2) exploration phase length T'.
+    pub explore_steps: usize,
+    /// Safe-bandit confidence multiplier beta_t.
+    pub safety_beta: f64,
+}
+
+impl Default for BanditConfig {
+    fn default() -> Self {
+        Self {
+            window: 30,
+            candidates: 256,
+            zeta_scale: 1.0,
+            noise_var: 0.01,
+            lengthscale: 0.6,
+            signal_var: 1.0,
+            explore_steps: 5,
+            safety_beta: 2.0,
+        }
+    }
+}
+
+/// Objective weights (Eq. 3): alpha * perf - beta * cost; paper evaluates
+/// with alpha = beta = 0.5.
+#[derive(Clone, Debug)]
+pub struct ObjectiveConfig {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Private-cloud hard memory cap as a fraction of cluster RAM
+    /// (paper: 0.65).
+    pub mem_cap_frac: f64,
+}
+
+impl Default for ObjectiveConfig {
+    fn default() -> Self {
+        Self { alpha: 0.5, beta: 0.5, mem_cap_frac: 0.65 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SystemConfig {
+    pub cluster: ClusterConfig,
+    pub interference: InterferenceConfig,
+    pub bandit: BanditConfig,
+    pub objective: ObjectiveConfig,
+    pub seed: u64,
+    /// Directory holding AOT artifacts (HLO text + manifest).
+    pub artifacts_dir: String,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        Self {
+            cluster: ClusterConfig::default(),
+            interference: InterferenceConfig::default(),
+            bandit: BanditConfig::default(),
+            objective: ObjectiveConfig::default(),
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl SystemConfig {
+    pub fn from_sources(file: Option<&Config>, args: &Args) -> Self {
+        let mut c = SystemConfig::default();
+        if let Some(f) = file {
+            c.cluster.workers = f.usize("cluster.workers", c.cluster.workers);
+            c.cluster.zones = f.usize("cluster.zones", c.cluster.zones);
+            c.cluster.node_cpu_millicores =
+                f.f64("cluster.node_cpu_millicores", c.cluster.node_cpu_millicores);
+            c.cluster.node_ram_mb = f.f64("cluster.node_ram_mb", c.cluster.node_ram_mb);
+            c.cluster.node_net_mbps = f.f64("cluster.node_net_mbps", c.cluster.node_net_mbps);
+            c.cluster.inter_zone_latency_ms =
+                f.f64("cluster.inter_zone_latency_ms", c.cluster.inter_zone_latency_ms);
+            c.interference.enabled = f.bool("interference.enabled", c.interference.enabled);
+            c.interference.rate_per_sec =
+                f.f64("interference.rate_per_sec", c.interference.rate_per_sec);
+            c.interference.max_intensity =
+                f.f64("interference.max_intensity", c.interference.max_intensity);
+            c.interference.mean_duration_s =
+                f.f64("interference.mean_duration_s", c.interference.mean_duration_s);
+            c.bandit.window = f.usize("bandit.window", c.bandit.window);
+            c.bandit.candidates = f.usize("bandit.candidates", c.bandit.candidates);
+            c.bandit.zeta_scale = f.f64("bandit.zeta_scale", c.bandit.zeta_scale);
+            c.bandit.noise_var = f.f64("bandit.noise_var", c.bandit.noise_var);
+            c.bandit.lengthscale = f.f64("bandit.lengthscale", c.bandit.lengthscale);
+            c.bandit.signal_var = f.f64("bandit.signal_var", c.bandit.signal_var);
+            c.bandit.explore_steps = f.usize("bandit.explore_steps", c.bandit.explore_steps);
+            c.bandit.safety_beta = f.f64("bandit.safety_beta", c.bandit.safety_beta);
+            c.objective.alpha = f.f64("objective.alpha", c.objective.alpha);
+            c.objective.beta = f.f64("objective.beta", c.objective.beta);
+            c.objective.mem_cap_frac = f.f64("objective.mem_cap_frac", c.objective.mem_cap_frac);
+            c.seed = f.i64("seed", c.seed as i64) as u64;
+            c.artifacts_dir = f.str("artifacts_dir", &c.artifacts_dir);
+        }
+        // CLI overrides file.
+        c.seed = args.get_u64("seed", c.seed);
+        c.objective.alpha = args.get_f64("alpha", c.objective.alpha);
+        c.objective.beta = args.get_f64("beta", c.objective.beta);
+        c.objective.mem_cap_frac = args.get_f64("mem-cap", c.objective.mem_cap_frac);
+        c.bandit.window = args.get_usize("window", c.bandit.window);
+        c.bandit.candidates = args.get_usize("candidates", c.bandit.candidates);
+        c.cluster.workers = args.get_usize("workers", c.cluster.workers);
+        c.artifacts_dir = args.get_str("artifacts", &c.artifacts_dir);
+        if args.get_bool("no-interference", false) {
+            c.interference.enabled = false;
+        }
+        c
+    }
+
+    /// Total schedulable cluster capacity.
+    pub fn cluster_cpu_millicores(&self) -> f64 {
+        self.cluster.workers as f64 * self.cluster.node_cpu_millicores
+    }
+    pub fn cluster_ram_mb(&self) -> f64 {
+        self.cluster.workers as f64 * self.cluster.node_ram_mb
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let c = SystemConfig::default();
+        assert_eq!(c.cluster.workers, 15);
+        assert_eq!(c.cluster.zones, 4);
+        assert_eq!(c.bandit.window, 30);
+        assert!((c.interference.rate_per_sec - 0.5).abs() < 1e-12);
+        assert!((c.objective.mem_cap_frac - 0.65).abs() < 1e-12);
+        assert!((c.cluster_ram_mb() - 15.0 * 30_720.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn file_and_cli_override_precedence() {
+        let file = Config::parse("seed = 9\n[bandit]\nwindow = 16\n[objective]\nalpha = 0.7").unwrap();
+        let args = crate::util::cli::Args::parse(&[
+            "--alpha=0.9".to_string(),
+            "--candidates".to_string(),
+            "64".to_string(),
+        ]);
+        let c = SystemConfig::from_sources(Some(&file), &args);
+        assert_eq!(c.bandit.window, 16); // from file
+        assert!((c.objective.alpha - 0.9).abs() < 1e-12); // CLI wins
+        assert_eq!(c.bandit.candidates, 64); // CLI only
+        assert_eq!(c.seed, 9); // file only
+    }
+}

@@ -1,0 +1,502 @@
+//! Figure drivers — each regenerates the series the corresponding paper
+//! figure plots, prints a summary table, and writes results/<id>.csv.
+
+use crate::apps::batch::{run_batch_job, BatchWorkload, DeployMode, Platform, RunSpec};
+use crate::apps::microservice::{self, ServiceGraph};
+use crate::config::SystemConfig;
+use crate::runtime::Backend;
+use crate::sim::cluster::Cluster;
+use crate::sim::interference::InterferenceModel;
+use crate::sim::resources::Resources;
+use crate::sim::scheduler::{apply_deployment, Deployment};
+use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
+use crate::trace::spot::{SpotConfig, SpotTrace};
+use crate::util::csv::CsvWriter;
+use crate::util::rng::Pcg64;
+use crate::util::stats;
+use crate::util::table::{pm, Table};
+
+use super::harness::{
+    post_warmup, run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
+    StepRecord,
+};
+
+fn reps_for(scale: f64, full: usize) -> usize {
+    ((full as f64 * scale).round() as usize).max(2)
+}
+
+fn steps_for(scale: f64, full: u64) -> u64 {
+    ((full as f64 * scale).round() as u64).max(6)
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — performance vs RAM allocation, container vs VM
+// ---------------------------------------------------------------------------
+
+pub fn fig1(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let reps = reps_for(scale, 5).max(5);
+    let rams_gb = [48.0, 96.0, 144.0, 192.0];
+    let workloads = [
+        BatchWorkload::PageRank,
+        BatchWorkload::Sort,
+        BatchWorkload::LogisticRegression,
+    ];
+    let mut tab = Table::new(
+        "Fig.1 — Spark workloads vs total RAM (elapsed s, mean±std)",
+        &["workload", "deploy", "48GB", "96GB", "144GB", "192GB"],
+    );
+    let mut csv = CsvWriter::for_experiment(
+        "fig1",
+        &["workload", "deploy", "ram_gb", "mean_s", "std_s"],
+    );
+    let mut rng = Pcg64::new(sys.seed ^ 0xf1);
+    for &w in &workloads {
+        for deploy in [DeployMode::Container, DeployMode::Vm] {
+            let mut cells = vec![
+                w.name().to_string(),
+                format!("{deploy:?}"),
+            ];
+            for &ram in &rams_gb {
+                // Spark-style scaling: total RAM grows by adding 12 GB
+                // executors (the paper's allocation knob).
+                let per_pod_gb = 12.0f64;
+                let pods = (ram / per_pod_gb).round() as usize;
+                let spec = RunSpec {
+                    workload: w,
+                    platform: Platform::Spark,
+                    deploy,
+                    pods,
+                    per_pod: Resources::new(3000.0, per_pod_gb * 1024.0, 4000.0),
+                    cross_zone_frac: 0.25,
+                    contention: Resources::new(0.05, 0.05, 0.05),
+                    data_gb: 150.0,
+                    external_mem_frac: 0.0,
+                    cluster_ram_mb: sys.cluster_ram_mb(),
+                };
+                let xs: Vec<f64> = (0..reps)
+                    .map(|_| run_batch_job(&spec, &mut rng))
+                    .filter(|r| !r.halted)
+                    .map(|r| r.elapsed_s)
+                    .collect();
+                let (m, s) = (stats::mean(&xs), stats::std_dev(&xs));
+                csv.row(&[
+                    w.name().into(),
+                    format!("{deploy:?}"),
+                    format!("{ram}"),
+                    format!("{m:.1}"),
+                    format!("{s:.1}"),
+                ]);
+                cells.push(pm(m, s));
+            }
+            tab.row(&cells);
+        }
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 2 — Sort variance vs data size, Spark vs Flink
+// ---------------------------------------------------------------------------
+
+pub fn fig2(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let reps = reps_for(scale, 60); // many reps to estimate CoV
+    let sizes = [30.0, 60.0, 90.0, 120.0, 150.0];
+    let mut tab = Table::new(
+        "Fig.2 — Sort on Spark/Flink under interference (mean±std s, CoV)",
+        &["platform", "data_gb", "elapsed", "cov"],
+    );
+    let mut csv = CsvWriter::for_experiment(
+        "fig2",
+        &["platform", "data_gb", "mean_s", "std_s", "cov"],
+    );
+    let mut rng = Pcg64::new(sys.seed ^ 0xf2);
+    let mut interf = InterferenceModel::new(sys.interference.clone(), Pcg64::new(sys.seed ^ 77));
+    for platform in [Platform::Spark, Platform::Flink] {
+        for &gb in &sizes {
+            let xs: Vec<f64> = (0..reps)
+                .map(|_| {
+                    let contention = interf.sample_window_contention(sys.cluster.workers, 300.0);
+                    let spec = RunSpec {
+                        workload: BatchWorkload::Sort,
+                        platform,
+                        deploy: DeployMode::Container,
+                        pods: 12,
+                        per_pod: Resources::new(3000.0, 16_384.0, 4000.0),
+                        cross_zone_frac: 0.25,
+                        contention,
+                        data_gb: gb,
+                        external_mem_frac: 0.0,
+                        cluster_ram_mb: sys.cluster_ram_mb(),
+                    };
+                    run_batch_job(&spec, &mut rng).elapsed_s
+                })
+                .collect();
+            let (m, s, c) = (stats::mean(&xs), stats::std_dev(&xs), stats::cov(&xs));
+            tab.row(&[
+                format!("{platform:?}"),
+                format!("{gb}"),
+                pm(m, s),
+                format!("{:.1}%", c * 100.0),
+            ]);
+            csv.row(&[
+                format!("{platform:?}"),
+                format!("{gb}"),
+                format!("{m:.1}"),
+                format!("{s:.1}"),
+                format!("{c:.4}"),
+            ]);
+        }
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 4 — Sockshop latency CDF: isolate vs colocate the Order hub
+// ---------------------------------------------------------------------------
+
+pub fn fig4(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let window_s = 120.0 * scale.max(0.25);
+    let g = ServiceGraph::sockshop();
+    let lim = Resources::new(1200.0, 1536.0, 200.0);
+    let orders = g.service_id("orders").unwrap();
+
+    let deploy_variant = |isolate: bool| -> Cluster {
+        let mut c = Cluster::new(&sys.cluster);
+        for sid in 0..g.services.len() {
+            let zone_pods = if isolate && sid == orders {
+                vec![0, 0, 0, 2]
+            } else {
+                vec![2, 0, 0, 0]
+            };
+            apply_deployment(
+                &mut c,
+                &Deployment { app: g.app_name(sid), zone_pods, limits: lim },
+                false,
+            );
+        }
+        c
+    };
+
+    let mut csv = CsvWriter::for_experiment("fig4", &["variant", "latency_ms", "cdf"]);
+    let mut tab = Table::new(
+        "Fig.4 — Sockshop e2e latency under two affinity rules",
+        &["variant", "p50_ms", "p90_ms", "p99_ms"],
+    );
+    let mut p90s = vec![];
+    for (name, isolate) in [("colocated", false), ("isolated", true)] {
+        let c = deploy_variant(isolate);
+        let mut rng = Pcg64::new(sys.seed ^ 0xf4);
+        let s = microservice::run_window(&c, &g, 80.0, window_s, &mut rng);
+        for (v, f) in stats::cdf(&s.latencies_ms, 64) {
+            csv.row(&[name.into(), format!("{v:.3}"), format!("{f:.4}")]);
+        }
+        tab.row(&[
+            name.into(),
+            format!("{:.1}", s.p50()),
+            format!("{:.1}", s.p90()),
+            format!("{:.1}", s.p99()),
+        ]);
+        p90s.push(s.p90());
+    }
+    tab.print();
+    println!(
+        "isolation P90 penalty: {:.0}% (paper: ~26%)",
+        (p90s[1] / p90s[0] - 1.0) * 100.0
+    );
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 — spot price traces
+// ---------------------------------------------------------------------------
+
+pub fn fig5(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let hours = 24.0 * 30.0 * scale.max(0.1);
+    let mut csv = CsvWriter::for_experiment("fig5", &["family", "t_hours", "price"]);
+    let mut tab = Table::new(
+        "Fig.5 — simulated spot price traces (1 month)",
+        &["family", "mean", "min", "max", "cov"],
+    );
+    for (name, cfg) in [
+        ("m5.16xlarge", SpotConfig::m5_16xlarge()),
+        ("c5.18xlarge", SpotConfig::c5_18xlarge()),
+        ("r5.16xlarge", SpotConfig::r5_16xlarge()),
+    ] {
+        let mut tr = SpotTrace::new(cfg, Pcg64::new(sys.seed ^ name.len() as u64));
+        let series = tr.series(hours, 1.0);
+        let prices: Vec<f64> = series.iter().map(|x| x.1).collect();
+        for (t, p) in &series {
+            csv.row(&[name.into(), format!("{t:.1}"), format!("{p:.4}")]);
+        }
+        tab.row(&[
+            name.into(),
+            format!("{:.3}", stats::mean(&prices)),
+            format!("{:.3}", stats::min(&prices)),
+            format!("{:.3}", stats::max(&prices)),
+            format!("{:.3}", stats::cov(&prices)),
+        ]);
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7a — LR elapsed time vs iteration (public cloud)
+// ---------------------------------------------------------------------------
+
+const FIG7_POLICIES: &[&str] = &["k8s-hpa", "cherrypick", "accordia", "drone"];
+
+pub fn fig7a(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let steps = steps_for(scale, 30);
+    let seeds = reps_for(scale, 3);
+    let mut csv = CsvWriter::for_experiment("fig7a", &["policy", "iteration", "elapsed_s"]);
+    let mut tab = Table::new(
+        "Fig.7a — LR elapsed time by iteration (public cloud)",
+        &["policy", "first5_s", "last5_s", "improvement", "post-conv osc (std)"],
+    );
+    for &policy in FIG7_POLICIES {
+        // Average the learning curve across seeds.
+        let mut curves: Vec<Vec<f64>> = vec![];
+        for s in 0..seeds {
+            let env = BatchEnvConfig::new(
+                BatchWorkload::LogisticRegression,
+                CloudSetting::Public,
+                steps,
+            );
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let recs = run_batch_env(policy, &env, sys, &mut backend, sys.seed + s as u64);
+            curves.push(recs.iter().map(|r| if r.halted { 1200.0 } else { r.perf_raw }).collect());
+        }
+        let mean_curve: Vec<f64> = (0..steps as usize)
+            .map(|i| stats::mean(&curves.iter().map(|c| c[i]).collect::<Vec<_>>()))
+            .collect();
+        for (i, v) in mean_curve.iter().enumerate() {
+            csv.row(&[policy.into(), format!("{i}"), format!("{v:.1}")]);
+        }
+        let head = stats::mean(&mean_curve[..5.min(mean_curve.len())]);
+        let tail_n = 5.min(mean_curve.len());
+        let tail = &mean_curve[mean_curve.len() - tail_n..];
+        let conv_window = &mean_curve[mean_curve.len() / 2..];
+        tab.row(&[
+            policy.into(),
+            format!("{head:.0}"),
+            format!("{:.0}", stats::mean(tail)),
+            format!("{:.0}%", (1.0 - stats::mean(tail) / head) * 100.0),
+            format!("{:.1}", stats::std_dev(conv_window)),
+        ]);
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7b — resource cost savings vs the Kubernetes native solution
+// ---------------------------------------------------------------------------
+
+pub fn fig7b(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let steps = steps_for(scale, 30);
+    let warmup = (steps / 3) as usize;
+    let workloads = [
+        BatchWorkload::SparkPi,
+        BatchWorkload::LogisticRegression,
+        BatchWorkload::PageRank,
+    ];
+    let mut tab = Table::new(
+        "Fig.7b — cost saving vs k8s (post-convergence)",
+        &["workload", "cherrypick", "accordia", "drone"],
+    );
+    let mut csv = CsvWriter::for_experiment("fig7b", &["workload", "policy", "saving_pct"]);
+    for &w in &workloads {
+        let mut base_cost = 0.0;
+        let mut row = vec![w.name().to_string()];
+        for &policy in &["k8s-hpa", "cherrypick", "accordia", "drone"] {
+            let env = BatchEnvConfig::new(w, CloudSetting::Public, steps);
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let recs = run_batch_env(policy, &env, sys, &mut backend, sys.seed + 17);
+            let cost = super::harness::mean_of(post_warmup(&recs, warmup), |r| r.cost);
+            if policy == "k8s-hpa" {
+                base_cost = cost;
+            } else {
+                let saving = (1.0 - cost / base_cost.max(1e-9)) * 100.0;
+                csv.row(&[w.name().into(), policy.into(), format!("{saving:.1}")]);
+                row.push(format!("{saving:.0}%"));
+            }
+        }
+        tab.row(&row);
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7c — private-cloud memory utilization vs the 65% cap
+// ---------------------------------------------------------------------------
+
+pub fn fig7c(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let steps = steps_for(scale, 40);
+    let cap = sys.objective.mem_cap_frac;
+    let policies = ["k8s-hpa", "cherrypick", "accordia", "drone-safe"];
+    let mut csv = CsvWriter::for_experiment("fig7c", &["policy", "step", "mem_frac"]);
+    let mut tab = Table::new(
+        &format!("Fig.7c — memory utilization under the private cloud (cap {:.0}%)", cap * 100.0),
+        &["policy", "mean mem%", "post-warmup mem%", "violation steps"],
+    );
+    for &policy in &policies {
+        // Aggregate the three representative batch workloads (as the paper).
+        let mut series = vec![0.0f64; steps as usize];
+        let workloads = [
+            BatchWorkload::SparkPi,
+            BatchWorkload::LogisticRegression,
+            BatchWorkload::PageRank,
+        ];
+        for &w in &workloads {
+            let mut env = BatchEnvConfig::new(w, CloudSetting::Private, steps);
+            env.external_mem_frac = 0.05;
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let recs = run_batch_env(policy, &env, sys, &mut backend, sys.seed + 31);
+            for (i, r) in recs.iter().enumerate() {
+                series[i] += r.resource_frac / workloads.len() as f64;
+            }
+        }
+        for (i, v) in series.iter().enumerate() {
+            csv.row(&[policy.into(), format!("{i}"), format!("{v:.4}")]);
+        }
+        let post = &series[(steps as usize) / 3..];
+        let violations = post.iter().filter(|&&v| v > cap).count();
+        tab.row(&[
+            policy.into(),
+            format!("{:.1}%", stats::mean(&series) * 100.0),
+            format!("{:.1}%", stats::mean(post) * 100.0),
+            format!("{violations}/{}", post.len()),
+        ]);
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8a — the diurnal workload trace
+// ---------------------------------------------------------------------------
+
+pub fn fig8a(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let duration = 6.0 * 3600.0 * scale.max(0.1);
+    let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(sys.seed ^ 0x8a));
+    let series = tr.series(duration, 60.0);
+    let mut csv = CsvWriter::for_experiment("fig8a", &["t_s", "rps"]);
+    for (t, r) in &series {
+        csv.row(&[format!("{t}"), format!("{r:.2}")]);
+    }
+    let rates: Vec<f64> = series.iter().map(|x| x.1).collect();
+    let mut tab = Table::new("Fig.8a — diurnal workload window", &["stat", "value"]);
+    tab.row_strs(&["samples", &format!("{}", rates.len())]);
+    tab.row_strs(&["min rps", &format!("{:.1}", stats::min(&rates))]);
+    tab.row_strs(&["peak rps", &format!("{:.1}", stats::max(&rates))]);
+    tab.row_strs(&["peak/trough", &format!("{:.2}x", stats::max(&rates) / stats::min(&rates))]);
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 8b/8c — SocialNet RAM-allocation CDF and latency CDF
+// ---------------------------------------------------------------------------
+
+const FIG8_POLICIES: &[&str] = &["k8s-hpa", "autopilot", "showar", "drone"];
+
+fn run_micro_suite(
+    sys: &SystemConfig,
+    scale: f64,
+    setting: CloudSetting,
+) -> Vec<(&'static str, Vec<StepRecord>)> {
+    let duration = 6.0 * 3600.0 * scale.clamp(0.05, 1.0);
+    FIG8_POLICIES
+        .iter()
+        .map(|&policy| {
+            let env = MicroEnvConfig::socialnet(setting, duration);
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let recs = run_micro_env(policy, &env, sys, &mut backend, sys.seed + 8);
+            (policy, recs)
+        })
+        .collect()
+}
+
+pub fn fig8b(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let suite = run_micro_suite(sys, scale, CloudSetting::Public);
+    let mut csv = CsvWriter::for_experiment("fig8b", &["policy", "ram_gb", "cdf"]);
+    let mut tab = Table::new(
+        "Fig.8b — overall RAM allocation CDF (SocialNet, public cloud)",
+        &["policy", "median GB", "p90 GB", "mean GB"],
+    );
+    for (policy, recs) in &suite {
+        let ram_gb: Vec<f64> = recs.iter().map(|r| r.ram_alloc_mb / 1024.0).collect();
+        for (v, f) in stats::cdf(&ram_gb, 48) {
+            csv.row(&[(*policy).into(), format!("{v:.2}"), format!("{f:.4}")]);
+        }
+        tab.row(&[
+            (*policy).into(),
+            format!("{:.1}", stats::percentile(&ram_gb, 50.0)),
+            format!("{:.1}", stats::percentile(&ram_gb, 90.0)),
+            format!("{:.1}", stats::mean(&ram_gb)),
+        ]);
+    }
+    tab.print();
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}
+
+pub fn fig8c(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    let suite = run_micro_suite(sys, scale, CloudSetting::Public);
+    let mut csv = CsvWriter::for_experiment("fig8c", &["policy", "latency_ms", "cdf"]);
+    let mut tab = Table::new(
+        "Fig.8c — end-to-end latency CDF (SocialNet, public cloud)",
+        &["policy", "p50 ms", "p90 ms", "p99 ms"],
+    );
+    let mut p90_by_policy = vec![];
+    for (policy, recs) in &suite {
+        // Pool request latencies over the whole span (skip warmup third).
+        let warmup = recs.len() / 3;
+        let mut all: Vec<f64> = vec![];
+        for r in &recs[warmup..] {
+            all.extend_from_slice(&r.latencies_ms);
+        }
+        for (v, f) in stats::cdf(&all, 64) {
+            csv.row(&[(*policy).into(), format!("{v:.2}"), format!("{f:.4}")]);
+        }
+        let p90 = stats::percentile(&all, 90.0);
+        p90_by_policy.push((*policy, p90));
+        tab.row(&[
+            (*policy).into(),
+            format!("{:.1}", stats::percentile(&all, 50.0)),
+            format!("{p90:.1}"),
+            format!("{:.1}", stats::percentile(&all, 99.0)),
+        ]);
+    }
+    tab.print();
+    let drone = p90_by_policy.iter().find(|(p, _)| *p == "drone").unwrap().1;
+    for (p, v) in &p90_by_policy {
+        if *p != "drone" {
+            println!("drone P90 vs {p}: {:+.0}%", (drone / v - 1.0) * 100.0);
+        }
+    }
+    let p = csv.finish()?;
+    println!("series -> {}\n", p.display());
+    Ok(())
+}

@@ -1,0 +1,590 @@
+//! Experiment harness: the closed control loops that evaluate a policy
+//! against the simulated cloud. Two environments mirror the paper's two
+//! application profiles (Sec. 4.5): recurring batch jobs (quasi-online) and
+//! a trace-driven microservice application (fully online, 60 s periods).
+
+use crate::apps::batch::{run_batch_job, run_cost, BatchWorkload, DeployMode, Platform, RunSpec};
+use crate::apps::microservice::{self, ServiceGraph};
+use crate::bandit::encode::{Action, ActionSpace};
+use crate::config::SystemConfig;
+use crate::monitor::context::ContextVector;
+use crate::monitor::store::MetricStore;
+use crate::orchestrators::{self, Telemetry};
+use crate::runtime::Backend;
+use crate::sim::cluster::Cluster;
+use crate::sim::interference::InterferenceModel;
+use crate::sim::resources::Resources;
+use crate::sim::scheduler::{apply_deployment, Deployment};
+use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
+use crate::trace::spot::{SpotConfig, SpotTrace};
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CloudSetting {
+    /// Unlimited resources; optimize alpha*perf - beta*cost (Alg. 1).
+    Public,
+    /// Hard memory cap; optimize perf within the cap (Alg. 2).
+    Private,
+}
+
+/// One decision period's outcome — the row every figure/table aggregates.
+#[derive(Clone, Debug, Default)]
+pub struct StepRecord {
+    pub step: u64,
+    pub t: f64,
+    /// Raw performance: batch elapsed seconds, or microservice P90 ms.
+    pub perf_raw: f64,
+    pub perf_score: f64,
+    pub cost: f64,
+    pub ram_alloc_mb: f64,
+    pub resource_frac: f64,
+    pub errors: u32,
+    pub halted: bool,
+    pub dropped: u64,
+    pub offered: u64,
+    pub latencies_ms: Vec<f64>,
+    pub action: Option<Action>,
+}
+
+// ---------------------------------------------------------------------------
+// Batch environment
+// ---------------------------------------------------------------------------
+
+pub struct BatchEnvConfig {
+    pub workload: BatchWorkload,
+    pub platform: Platform,
+    pub setting: CloudSetting,
+    pub steps: u64,
+    /// Co-tenant memory stress (Table 3 runs with 0.30).
+    pub external_mem_frac: f64,
+    pub data_gb: f64,
+    pub interference: bool,
+}
+
+impl BatchEnvConfig {
+    pub fn new(workload: BatchWorkload, setting: CloudSetting, steps: u64) -> Self {
+        Self {
+            workload,
+            platform: Platform::Spark,
+            setting,
+            steps,
+            external_mem_frac: 0.0,
+            data_gb: 150.0,
+            interference: true,
+        }
+    }
+}
+
+/// Reference times used to squash elapsed seconds into a (0,1) score:
+/// score = T_ref / (T_ref + elapsed). Monotone, scale-free across policies.
+pub fn batch_perf_score(workload: BatchWorkload, elapsed_s: f64) -> f64 {
+    let t_ref = match workload {
+        BatchWorkload::SparkPi => 45.0,
+        BatchWorkload::LogisticRegression => 250.0,
+        BatchWorkload::PageRank => 600.0,
+        BatchWorkload::Sort => 300.0,
+    };
+    if !elapsed_s.is_finite() {
+        return 0.0;
+    }
+    t_ref / (t_ref + elapsed_s.max(0.0))
+}
+
+/// Per-workload cost scale so cost_norm spans ~[0,1] like perf_score does —
+/// the paper "normalizes the performance and cost values to the same
+/// magnitude" (Sec. 5.2); without it the beta term is too weak to trim
+/// over-allocation.
+pub fn batch_cost_scale(workload: BatchWorkload) -> f64 {
+    match workload {
+        BatchWorkload::SparkPi => 0.12,
+        BatchWorkload::LogisticRegression => 0.45,
+        BatchWorkload::PageRank => 0.8,
+        BatchWorkload::Sort => 0.5,
+    }
+}
+
+/// Cross-zone fraction of the app's *actual* placement in the cluster.
+pub fn placed_cross_zone_frac(cluster: &Cluster, app: &str) -> f64 {
+    let zones: Vec<usize> = cluster.pods_of(app).map(|p| cluster.nodes[p.node].zone).collect();
+    let total = zones.len();
+    if total <= 1 {
+        return 0.0;
+    }
+    let mut same = 0usize;
+    for i in 0..total {
+        for j in 0..total {
+            if i != j && zones[i] == zones[j] {
+                same += 1;
+            }
+        }
+    }
+    1.0 - same as f64 / (total * (total - 1)) as f64
+}
+
+/// Run one policy through the recurring-batch loop. Returns per-step rows.
+pub fn run_batch_env(
+    policy_name: &str,
+    env: &BatchEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut root = Pcg64::new(seed ^ (0xba7c_u64 << 4));
+    let mut rng_policy = root.fork(1);
+    let mut rng_jobs = root.fork(2);
+    let mut rng_interf = root.fork(3);
+    let mut rng_spot = root.fork(4);
+
+    let space = ActionSpace { zones: sys.cluster.zones, ..Default::default() };
+    let mut policy = orchestrators::make(
+        policy_name,
+        space.clone(),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        orchestrators::AppProfile::Batch,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let mut cluster = Cluster::new(&sys.cluster);
+    let mut interference = if env.interference && sys.interference.enabled {
+        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+    } else {
+        InterferenceModel::disabled()
+    };
+    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
+    let spot_mean = SpotConfig::gcp_e2().mean_price;
+    let mut store = MetricStore::new(3600.0 * 12.0);
+
+    let cluster_ram_mb = sys.cluster_ram_mb();
+    // External co-tenant stress occupies contention on every node's RAM.
+    let dt = 300.0; // one recurring run every ~5 simulated minutes
+
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(env.steps as usize);
+
+    for step in 0..env.steps {
+        let now = step as f64 * dt;
+        interference.step(&mut cluster, now, dt.min(60.0));
+        let price = spot.step(dt / 3600.0);
+        store.push("spot_price", now, price);
+        store.push("workload", now, env.data_gb);
+
+        // Observe context (spot omitted in the private setting, Sec. 5.1).
+        let spot_for_ctx = match env.setting {
+            CloudSetting::Public => Some(spot_mean),
+            CloudSetting::Private => None,
+        };
+        let mut ctx = ContextVector::observe(&cluster, &store, now, 200.0, spot_for_ctx);
+        ctx.ram_util = (ctx.ram_util + env.external_mem_frac).min(1.0);
+        tel.ctx = ctx;
+        tel.t = now;
+        tel.step = step;
+
+        let action = policy.decide(&tel, backend, &mut rng_policy);
+
+        // Actuate: rolling-update deploy of the executor pods.
+        let dep = Deployment {
+            app: "batch".into(),
+            zone_pods: action.zone_pods.clone(),
+            limits: action.per_pod(),
+        };
+        let placement = apply_deployment(&mut cluster, &dep, true);
+        let placed_pods = placement.placed.len();
+        let cross = placed_cross_zone_frac(&cluster, "batch");
+
+        // Run the job under window contention: a blend of the currently
+        // observed cluster contention (persistent regimes — the part the
+        // context vector can *predict*) and a fresh stochastic draw (the
+        // irreducible uncertainty).
+        let current = cluster.mean_contention();
+        let sampled = interference.sample_window_contention(cluster.nodes.len(), dt);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let spec = RunSpec {
+            workload: env.workload,
+            platform: env.platform,
+            deploy: DeployMode::Container,
+            pods: placed_pods.max(1),
+            per_pod: action.per_pod(),
+            cross_zone_frac: cross,
+            contention,
+            data_gb: env.data_gb,
+            external_mem_frac: env.external_mem_frac,
+            cluster_ram_mb,
+        };
+        let result = run_batch_job(&spec, &mut rng_jobs);
+
+        let spot_mult = price / spot_mean;
+        let elapsed_for_cost = if result.halted { dt } else { result.elapsed_s };
+        let cost = run_cost(&spec, elapsed_for_cost, spot_mult, 0.2);
+        let perf_score = if result.halted {
+            0.0
+        } else {
+            batch_perf_score(env.workload, result.elapsed_s)
+        };
+        let ram_alloc = cluster.total_ram_allocated();
+        // The private-cloud constraint P(x, w) is on the *application's*
+        // allocation (the organization caps what this tenant may take);
+        // co-tenant pressure enters through the context (ram_util) and the
+        // OOM-collision model, not the cap itself.
+        let resource_frac = ram_alloc / cluster_ram_mb;
+
+        // Feedback for the next decision.
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        // Private clouds have no pay-as-you-go cost (hardware is paid
+        // upfront); the optimization objective is performance-only (Eq. 9).
+        tel.cost_norm = match env.setting {
+            CloudSetting::Public => Some((cost / batch_cost_scale(env.workload)).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        tel.failure = result.halted;
+        // Reactive-scaler signals: utilization = workload CPU demand over
+        // the allocated cores (saturates at 1 when under-provisioned).
+        let demand_cores = crate::apps::batch::cpu_demand_cores(env.workload, env.data_gb);
+        tel.app_cpu_util = if placed_pods > 0 {
+            (demand_cores / spec.total_cpu_cores()).min(1.0)
+        } else {
+            0.0
+        };
+        tel.ram_usage_mb_per_pod = action.ram_mb * 0.8;
+        tel.p90_latency_ms = None;
+
+        records.push(StepRecord {
+            step,
+            t: now,
+            perf_raw: result.elapsed_s,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: result.executor_errors,
+            halted: result.halted,
+            dropped: 0,
+            offered: 0,
+            latencies_ms: vec![],
+            action: Some(action),
+        });
+    }
+    records
+}
+
+// ---------------------------------------------------------------------------
+// Microservice environment
+// ---------------------------------------------------------------------------
+
+pub struct MicroEnvConfig {
+    pub setting: CloudSetting,
+    /// Total simulated span and the decision period (paper: 60 s).
+    pub duration_s: f64,
+    pub period_s: f64,
+    pub graph: ServiceGraph,
+    pub trace: DiurnalConfig,
+    pub interference: bool,
+}
+
+impl MicroEnvConfig {
+    pub fn socialnet(setting: CloudSetting, duration_s: f64) -> Self {
+        Self {
+            setting,
+            duration_s,
+            period_s: 60.0,
+            graph: ServiceGraph::socialnet(),
+            trace: DiurnalConfig::default(),
+            interference: true,
+        }
+    }
+}
+
+/// P90-to-score squashing for microservices (lower latency = higher score).
+pub fn micro_perf_score(p90_ms: f64) -> f64 {
+    let ref_ms = 60.0;
+    ref_ms / (ref_ms + p90_ms.max(0.0))
+}
+
+/// Run one policy through the trace-driven microservice loop.
+pub fn run_micro_env(
+    policy_name: &str,
+    env: &MicroEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut root = Pcg64::new(seed ^ 0x51c0_u64 << 8);
+    let mut rng_policy = root.fork(1);
+    let mut rng_des = root.fork(2);
+    let mut rng_interf = root.fork(3);
+    let mut rng_trace = root.fork(4);
+    let mut rng_spot = root.fork(5);
+
+    let space = ActionSpace::microservices(sys.cluster.zones);
+    let mut policy = orchestrators::make(
+        policy_name,
+        space.clone(),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        orchestrators::AppProfile::Microservices,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let mut cluster = Cluster::new(&sys.cluster);
+    let mut interference = if env.interference && sys.interference.enabled {
+        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+    } else {
+        InterferenceModel::disabled()
+    };
+    let mut trace = DiurnalTrace::new(env.trace.clone(), rng_trace.fork(0));
+    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
+    let spot_mean = SpotConfig::gcp_e2().mean_price;
+    let mut store = MetricStore::new(3600.0 * 8.0);
+
+    let n_services = env.graph.services.len();
+    let cluster_ram_mb = sys.cluster_ram_mb();
+    let steps = (env.duration_s / env.period_s).ceil() as u64;
+    let workload_scale = env.trace.base_rps + env.trace.amplitude_rps * 1.2;
+
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(steps as usize);
+
+    for step in 0..steps {
+        let now = step as f64 * env.period_s;
+        interference.step(&mut cluster, now, env.period_s);
+        let rate = trace.sample_rate(now);
+        store.push("workload", now, rate);
+        let price = spot.step(env.period_s / 3600.0);
+        store.push("spot_price", now, price);
+
+        let spot_for_ctx = match env.setting {
+            CloudSetting::Public => Some(spot_mean),
+            CloudSetting::Private => None,
+        };
+        tel.ctx = ContextVector::observe(&cluster, &store, now, workload_scale, spot_for_ctx);
+        tel.t = now;
+        tel.step = step;
+
+        let action = policy.decide(&tel, backend, &mut rng_policy);
+
+        // Actuate: every service gets the per-service slice of the action.
+        // The zone vector is shared (the paper's single scheduling
+        // sub-vector); per-pod resources are scaled by the service weight.
+        let mut requested_ram_mb = 0.0;
+        let deps: Vec<Deployment> = (0..n_services)
+            .map(|sid| {
+                let w = env.graph.services[sid].weight;
+                // Weights only upsize bottleneck services; the action's
+                // per-pod RAM is the floor for every service.
+                let lim = Resources::new(
+                    (action.cpu_m * w).min(space.cpu_m.1),
+                    (action.ram_mb * w.max(1.0)).min(space.ram_mb.1),
+                    action.net_mbps,
+                );
+                requested_ram_mb += action.total_pods() as f64 * lim.ram_mb;
+                Deployment {
+                    app: env.graph.app_name(sid),
+                    zone_pods: action.zone_pods.clone(),
+                    limits: lim,
+                }
+            })
+            .collect();
+        // Fair (interleaved) placement: capacity pressure degrades every
+        // service a little instead of zero-ing out the last ones deployed.
+        let results = crate::sim::scheduler::apply_deployments_fair(&mut cluster, &deps, true);
+        let pending: usize = results.iter().map(|r| r.pending_total()).sum();
+
+        // RAM usage under this window's load drives OOM *before* traffic is
+        // served: an under-provisioned pod dies as load arrives and its
+        // capacity is lost for the window (drops/latency the policy must
+        // learn from), not silently refunded afterwards.
+        let total_pods: usize =
+            (0..n_services).map(|sid| cluster.running_pod_count(&env.graph.app_name(sid))).sum();
+        let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
+        for p in cluster.pods.iter_mut() {
+            if p.app.starts_with("ms-") {
+                let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
+                p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
+            }
+        }
+        let errors = cluster.sweep_oom().len() as u32;
+
+        // Run the window of traffic on the surviving pods.
+        let stats = microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
+
+        if std::env::var("DRONE_DEBUG").is_ok() {
+            let alive: Vec<usize> = (0..n_services)
+                .map(|sid| cluster.running_pod_count(&env.graph.app_name(sid)))
+                .collect();
+            eprintln!(
+                "[micro step={step}] rate={rate:.0} action={:?} pending={pending} oom={errors} alive={alive:?} offered={} done={} drop={}",
+                action, stats.offered, stats.completed, stats.dropped
+            );
+        }
+
+        let p90 = stats.p90();
+        // Drops must hurt the score: a policy that sheds 98% of its load
+        // and serves the remainder quickly is NOT performing well. Squared
+        // completion ratio makes even moderate drop rates costly.
+        let completion = if stats.offered == 0 {
+            1.0
+        } else {
+            stats.completed as f64 / stats.offered as f64
+        };
+        let perf_score = micro_perf_score(p90) * completion * completion;
+        let ram_alloc = cluster.total_ram_allocated();
+        // The safe bandit's P(x, w) observes the *requested* footprint:
+        // demands the scheduler could not even place are the most unsafe
+        // actions of all, and must not be laundered into a low "placed"
+        // number.
+        let resource_frac = requested_ram_mb.max(ram_alloc) / cluster_ram_mb;
+        // Cost: resource-based pricing of the allocation for this period.
+        let hours = env.period_s / 3600.0;
+        let cost = (cluster
+            .pods
+            .iter()
+            .filter(|p| p.app.starts_with("ms-"))
+            .map(|p| p.limits.cpu_m / 1000.0 * 0.0332 + p.limits.ram_mb / 1024.0 * 0.0045)
+            .sum::<f64>())
+            * hours
+            * (0.8 + 0.2 * price / spot_mean);
+
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match env.setting {
+            CloudSetting::Public => Some((cost / 0.25).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        // Microservices always produce metrics (drop counts, allocation),
+        // so the batch-style "no metrics -> restart at midpoint-to-max"
+        // recovery never applies here: a zero-completion window is ordinary
+        // (terrible) feedback the bandit must learn from, not a halt.
+        // Escalating toward max on a capacity-infeasible action would loop.
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        records.push(StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: errors + pending as u32,
+            halted: tel.failure,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(action),
+        });
+    }
+    records
+}
+
+// ---------------------------------------------------------------------------
+// Aggregation helpers shared by the figure/table drivers
+// ---------------------------------------------------------------------------
+
+pub fn mean_of(records: &[StepRecord], f: impl Fn(&StepRecord) -> f64) -> f64 {
+    let xs: Vec<f64> = records.iter().map(f).collect();
+    crate::util::stats::mean(&xs)
+}
+
+/// Skip the first `warmup` steps (exploration) then aggregate.
+pub fn post_warmup(records: &[StepRecord], warmup: usize) -> &[StepRecord] {
+    if records.len() > warmup {
+        &records[warmup..]
+    } else {
+        records
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.bandit.candidates = 32; // keep native-backend tests fast
+        s.artifacts_dir = "/nonexistent".into();
+        s
+    }
+
+    #[test]
+    fn batch_env_runs_all_policies() {
+        let sys = sys();
+        let env = BatchEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 6);
+        for policy in ["drone", "cherrypick", "accordia", "k8s-hpa"] {
+            let mut backend = Backend::Native;
+            let recs = run_batch_env(policy, &env, &sys, &mut backend, 7);
+            assert_eq!(recs.len(), 6, "{policy}");
+            for r in &recs {
+                assert!(r.halted || r.perf_raw > 0.0);
+                assert!(r.cost >= 0.0);
+                assert!(r.action.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn batch_env_deterministic_per_seed() {
+        let sys = sys();
+        let env = BatchEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 4);
+        let mut b1 = Backend::Native;
+        let mut b2 = Backend::Native;
+        let a = run_batch_env("drone", &env, &sys, &mut b1, 3);
+        let b = run_batch_env("drone", &env, &sys, &mut b2, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf_raw, y.perf_raw);
+            assert_eq!(x.cost, y.cost);
+        }
+    }
+
+    #[test]
+    fn micro_env_runs_and_conserves() {
+        let sys = sys();
+        let mut env = MicroEnvConfig::socialnet(CloudSetting::Public, 300.0);
+        env.trace.base_rps = 20.0;
+        env.trace.amplitude_rps = 30.0;
+        let mut backend = Backend::Native;
+        let recs = run_micro_env("drone", &env, &sys, &mut backend, 11);
+        assert_eq!(recs.len(), 5);
+        for r in &recs {
+            assert!(r.offered > 0);
+            assert!(r.dropped <= r.offered);
+        }
+    }
+
+    #[test]
+    fn micro_env_heuristics_work() {
+        let sys = sys();
+        let mut env = MicroEnvConfig::socialnet(CloudSetting::Private, 240.0);
+        env.trace.base_rps = 15.0;
+        env.trace.amplitude_rps = 20.0;
+        for policy in ["k8s-hpa", "autopilot", "showar"] {
+            let mut backend = Backend::Native;
+            let recs = run_micro_env(policy, &env, &sys, &mut backend, 13);
+            assert_eq!(recs.len(), 4, "{policy}");
+        }
+    }
+
+    #[test]
+    fn perf_scores_monotone() {
+        assert!(
+            batch_perf_score(BatchWorkload::SparkPi, 40.0)
+                > batch_perf_score(BatchWorkload::SparkPi, 80.0)
+        );
+        assert!(micro_perf_score(20.0) > micro_perf_score(100.0));
+        assert_eq!(batch_perf_score(BatchWorkload::Sort, f64::NAN), 0.0);
+    }
+}

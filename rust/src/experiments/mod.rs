@@ -1,0 +1,46 @@
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §5),
+//! all built on the shared `harness` control loops. Each driver prints the
+//! paper's rows/series and writes results/<id>.csv.
+
+pub mod harness;
+
+pub mod figures;
+pub mod regret;
+pub mod tables;
+
+pub use harness::{
+    run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+};
+
+use crate::config::SystemConfig;
+
+/// Registry of experiment ids -> runner (scale ~0.2..1.0 shrinks runs for
+/// benches/smoke; 1.0 = paper scale).
+pub fn run(id: &str, sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+    match id {
+        "fig1" => figures::fig1(sys, scale),
+        "fig2" => figures::fig2(sys, scale),
+        "fig4" => figures::fig4(sys, scale),
+        "fig5" => figures::fig5(sys, scale),
+        "fig7a" => figures::fig7a(sys, scale),
+        "fig7b" => figures::fig7b(sys, scale),
+        "fig7c" => figures::fig7c(sys, scale),
+        "fig8a" => figures::fig8a(sys, scale),
+        "fig8b" => figures::fig8b(sys, scale),
+        "fig8c" => figures::fig8c(sys, scale),
+        "table2" => tables::table2(sys, scale),
+        "table3" => tables::table3(sys, scale),
+        "table4" => tables::table4(sys, scale),
+        "regret" => regret::regret(sys, scale),
+        "ablation" => regret::ablation(sys, scale),
+        _ => Err(anyhow::anyhow!(
+            "unknown experiment {id}; known: {:?}",
+            ALL_EXPERIMENTS
+        )),
+    }
+}
+
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig8c",
+    "table2", "table3", "table4", "regret", "ablation",
+];

@@ -1,0 +1,32 @@
+//! # Drone — dynamic resource orchestration for the containerized cloud
+//!
+//! A full-system reproduction of "Lifting the Fog of Uncertainties: Dynamic
+//! Resource Orchestration for the Containerized Cloud" as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)**: the Drone coordinator — contextual GP-UCB
+//!   orchestration (public-cloud Alg. 1 and private-cloud safe Alg. 2),
+//!   baselines (HPA, Cherrypick, Accordia, SHOWAR, Autopilot), and every
+//!   substrate: a Kubernetes-like cluster simulator, batch/microservice
+//!   application models, interference injection, trace generators, and a
+//!   Prometheus-like monitoring store.
+//! - **L2 (python/compile/model.py)**: the masked sliding-window GP
+//!   posterior graph, AOT-lowered to HLO text once at build time.
+//! - **L1 (python/compile/kernels/matern.py)**: the Pallas Matern-3/2
+//!   cross-covariance kernel inside that graph.
+//!
+//! Python never runs on the decision path: `runtime` loads the HLO
+//! artifacts through the PJRT C API (`xla` crate) and executes them from
+//! the 60 s decision loop.
+
+pub mod apps;
+pub mod bandit;
+pub mod config;
+pub mod monitor;
+pub mod orchestrators;
+pub mod runtime;
+pub mod sim;
+pub mod trace;
+pub mod util;
+
+pub mod experiments;

@@ -1,0 +1,223 @@
+//! `drone` — CLI entrypoint for the Drone resource-orchestration framework.
+//!
+//! Subcommands:
+//!   run         one policy through an environment (batch | micro)
+//!   experiment  regenerate a paper table/figure (see `drone list`)
+//!   list        list experiments, policies and artifact status
+//!   selfcheck   cross-validate the XLA artifact against the native GP
+
+use drone::bandit::gp::GpHyper;
+use drone::config::{Config, SystemConfig};
+use drone::experiments::{self, BatchEnvConfig, CloudSetting, MicroEnvConfig};
+use drone::runtime::{Backend, PosteriorRequest, XlaRuntime};
+use drone::util::cli::Args;
+use drone::util::rng::Pcg64;
+use drone::util::table::Table;
+
+fn main() {
+    let args = Args::from_env();
+    let file = args.get("config").and_then(|p| match Config::load(p) {
+        Ok(c) => Some(c),
+        Err(e) => {
+            eprintln!("error loading config {p}: {e}");
+            std::process::exit(2);
+        }
+    });
+    let sys = SystemConfig::from_sources(file.as_ref(), &args);
+
+    let code = match args.subcommand() {
+        Some("run") => cmd_run(&args, &sys),
+        Some("experiment") => cmd_experiment(&args, &sys),
+        Some("list") => cmd_list(&sys),
+        Some("selfcheck") => cmd_selfcheck(&sys),
+        _ => {
+            print_usage();
+            0
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "drone — dynamic resource orchestration for the containerized cloud
+
+USAGE:
+  drone run --policy <name> --env <batch|micro> [--workload <w>] [--setting <public|private>]
+            [--steps N] [--seed S] [--config file.toml]
+  drone experiment <id|all> [--scale 0.2] [--seed S]
+  drone list
+  drone selfcheck
+
+POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
+WORKLOADS: sparkpi lr pagerank sort
+EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
+             table2 table3 table4 regret ablation"
+    );
+}
+
+fn parse_workload(s: &str) -> Option<drone::apps::batch::BatchWorkload> {
+    use drone::apps::batch::BatchWorkload::*;
+    Some(match s {
+        "sparkpi" | "pi" => SparkPi,
+        "lr" | "logistic" => LogisticRegression,
+        "pagerank" | "pr" => PageRank,
+        "sort" => Sort,
+        _ => return None,
+    })
+}
+
+fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
+    let policy = args.get_str("policy", "drone");
+    let envname = args.get_str("env", "batch");
+    let setting = match args.get_str("setting", "public").as_str() {
+        "private" => CloudSetting::Private,
+        _ => CloudSetting::Public,
+    };
+    let steps = args.get_u64("steps", 20);
+    let mut backend = Backend::auto(&sys.artifacts_dir);
+    println!(
+        "# policy={policy} env={envname} setting={setting:?} steps={steps} backend={}",
+        backend.name()
+    );
+    match envname.as_str() {
+        "batch" => {
+            let w = match parse_workload(&args.get_str("workload", "lr")) {
+                Some(w) => w,
+                None => {
+                    eprintln!("unknown workload");
+                    return 2;
+                }
+            };
+            let env = BatchEnvConfig::new(w, setting, steps);
+            let recs = experiments::run_batch_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mut tab = Table::new(
+                &format!("{policy} on {} ({setting:?})", w.name()),
+                &["step", "elapsed_s", "cost_$", "mem_frac", "errors"],
+            );
+            for r in &recs {
+                tab.row(&[
+                    format!("{}", r.step),
+                    if r.halted { "HALT".into() } else { format!("{:.1}", r.perf_raw) },
+                    format!("{:.3}", r.cost),
+                    format!("{:.2}", r.resource_frac),
+                    format!("{}", r.errors),
+                ]);
+            }
+            tab.print();
+        }
+        "micro" => {
+            let duration = steps as f64 * 60.0;
+            let env = MicroEnvConfig::socialnet(setting, duration);
+            let recs = experiments::run_micro_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mut tab = Table::new(
+                &format!("{policy} on SocialNet ({setting:?})"),
+                &["step", "p90_ms", "drops", "offered", "ram_gb"],
+            );
+            for r in &recs {
+                tab.row(&[
+                    format!("{}", r.step),
+                    format!("{:.1}", r.perf_raw),
+                    format!("{}", r.dropped),
+                    format!("{}", r.offered),
+                    format!("{:.1}", r.ram_alloc_mb / 1024.0),
+                ]);
+            }
+            tab.print();
+        }
+        other => {
+            eprintln!("unknown env {other}");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let scale = args.get_f64("scale", 0.3);
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL_EXPERIMENTS.to_vec()
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        println!("\n##### experiment {id} (scale {scale}) #####");
+        if let Err(e) = experiments::run(id, sys, scale) {
+            eprintln!("experiment {id} failed: {e}");
+            return 1;
+        }
+    }
+    0
+}
+
+fn cmd_list(sys: &SystemConfig) -> i32 {
+    println!("policies:    {}", drone::orchestrators::ALL_POLICIES.join(" "));
+    println!("experiments: {}", experiments::ALL_EXPERIMENTS.join(" "));
+    match XlaRuntime::open(&sys.artifacts_dir) {
+        Ok(rt) => {
+            println!("artifacts ({}, platform {}):", sys.artifacts_dir, rt.platform());
+            for a in &rt.artifacts {
+                println!("  {} kind={} n={} m={} d={}", a.name, a.kind, a.n, a.m, a.d);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — native fallback will be used"),
+    }
+    0
+}
+
+/// Cross-validate the AOT artifact against the native GP on random windows.
+fn cmd_selfcheck(sys: &SystemConfig) -> i32 {
+    let rt = match XlaRuntime::open(&sys.artifacts_dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("selfcheck needs artifacts: {e}");
+            return 1;
+        }
+    };
+    println!("platform: {}", rt.platform());
+    let infos = rt.artifacts.clone();
+    let mut backend = Backend::Xla(rt);
+    let mut worst: f64 = 0.0;
+    for info in infos.iter().filter(|a| a.kind == "single") {
+        let mut rng = Pcg64::new(42);
+        let (n, m, d) = (info.n, info.m, info.d);
+        let z: Vec<f64> = (0..n * d).map(|_| rng.f64()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mut mask = vec![0.0; n];
+        for v in mask[..n * 3 / 4].iter_mut() {
+            *v = 1.0;
+        }
+        let x: Vec<f64> = (0..m * d).map(|_| rng.f64()).collect();
+        let hyp = GpHyper::default();
+        let (mu_n, sig_n) = drone::bandit::gp::gp_posterior(&z, &y, &mask, &x, d, hyp);
+        let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp };
+        match backend.posterior(&req) {
+            Ok((mu_x, sig_x)) => {
+                let dmu = mu_n
+                    .iter()
+                    .zip(&mu_x)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                let dsig = sig_n
+                    .iter()
+                    .zip(&sig_x)
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f64, f64::max);
+                worst = worst.max(dmu).max(dsig);
+                println!("{}: |dmu|={dmu:.2e} |dsigma|={dsig:.2e}", info.name);
+            }
+            Err(e) => {
+                eprintln!("{}: execution failed: {e}", info.name);
+                return 1;
+            }
+        }
+    }
+    if worst < 1e-3 {
+        println!("selfcheck OK (worst |delta| = {worst:.2e})");
+        0
+    } else {
+        eprintln!("selfcheck FAILED (worst |delta| = {worst:.2e})");
+        1
+    }
+}

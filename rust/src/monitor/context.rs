@@ -1,0 +1,142 @@
+//! Context-vector construction (Sec. 5.1): the 6 uncertainty dimensions
+//! Drone conditions on — workload intensity, cluster CPU/RAM/network
+//! utilization, potential traffic contention, and the spot price — each
+//! normalized into [0,1] for the GP's stationary kernel.
+
+use super::store::MetricStore;
+use crate::sim::cluster::Cluster;
+
+pub const CTX_DIM: usize = 6;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ContextVector {
+    /// Workload intensity normalized by `workload_scale` (rps or job size).
+    pub workload: f64,
+    pub cpu_util: f64,
+    pub ram_util: f64,
+    pub net_util: f64,
+    /// Traffic-contention code in [0,1] (the paper's integer encoding of
+    /// congested node-pair patterns, scaled).
+    pub contention: f64,
+    /// Spot price normalized by its long-run mean (clipped to [0,2]/2).
+    pub spot: f64,
+}
+
+impl ContextVector {
+    pub fn to_array(&self) -> [f64; CTX_DIM] {
+        [
+            self.workload,
+            self.cpu_util,
+            self.ram_util,
+            self.net_util,
+            self.contention,
+            self.spot,
+        ]
+    }
+
+    pub fn from_array(a: &[f64]) -> Self {
+        assert!(a.len() >= CTX_DIM);
+        Self {
+            workload: a[0],
+            cpu_util: a[1],
+            ram_util: a[2],
+            net_util: a[3],
+            contention: a[4],
+            spot: a[5],
+        }
+    }
+
+    /// Build the context from live cluster state + monitored series.
+    ///
+    /// `workload_scale` maps the raw intensity metric to [0,1];
+    /// `spot_mean` normalizes the spot price. In the private-cloud setting
+    /// the spot dimension is fixed at 0 (Sec. 5.1: "the spot price dimension
+    /// is omitted").
+    pub fn observe(
+        cluster: &Cluster,
+        store: &MetricStore,
+        now: f64,
+        workload_scale: f64,
+        spot_mean: Option<f64>,
+    ) -> Self {
+        let usage = cluster.usage_ratio();
+        let cont = cluster.mean_contention();
+        let workload = store
+            .avg_over("workload", now, 120.0)
+            .unwrap_or(0.0)
+            / workload_scale.max(1e-9);
+        let spot = match spot_mean {
+            None => 0.0,
+            Some(mean) => {
+                let p = store.last("spot_price").unwrap_or(mean);
+                (p / mean.max(1e-9) / 2.0).clamp(0.0, 1.0)
+            }
+        };
+        // Traffic contention: scalarized mix of network contention intensity
+        // and how many nodes are currently affected.
+        let affected = cluster
+            .nodes
+            .iter()
+            .filter(|n| n.contention.net_mbps > 0.05)
+            .count() as f64
+            / cluster.nodes.len().max(1) as f64;
+        let contention = (0.5 * cont.net_mbps / 0.9 + 0.5 * affected).clamp(0.0, 1.0);
+        Self {
+            workload: workload.clamp(0.0, 1.0),
+            cpu_util: usage.cpu_m.clamp(0.0, 1.0),
+            ram_util: usage.ram_mb.clamp(0.0, 1.0),
+            net_util: usage.net_mbps.clamp(0.0, 1.0),
+            contention,
+            spot,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::sim::resources::Resources;
+
+    #[test]
+    fn roundtrip_array() {
+        let c = ContextVector {
+            workload: 0.1,
+            cpu_util: 0.2,
+            ram_util: 0.3,
+            net_util: 0.4,
+            contention: 0.5,
+            spot: 0.6,
+        };
+        assert_eq!(ContextVector::from_array(&c.to_array()), c);
+    }
+
+    #[test]
+    fn observe_reflects_cluster_state() {
+        let mut cluster = Cluster::new(&ClusterConfig::default());
+        let mut store = MetricStore::new(0.0);
+        store.push("workload", 100.0, 150.0);
+        store.push("spot_price", 100.0, 2.0);
+        // Allocate half of node 0's RAM as usage.
+        cluster.place_pod("x", 0, Resources::new(1000.0, 15_360.0, 100.0)).unwrap();
+        cluster.pods[0].usage = Resources::new(1000.0, 15_360.0, 100.0);
+        let ctx = ContextVector::observe(&cluster, &store, 100.0, 300.0, Some(1.0));
+        assert!((ctx.workload - 0.5).abs() < 1e-9);
+        assert!(ctx.ram_util > 0.0 && ctx.ram_util < 0.1);
+        assert!((ctx.spot - 1.0).abs() < 1e-9, "2x mean price clips to 1.0");
+        // Private cloud: no spot dimension.
+        let ctx2 = ContextVector::observe(&cluster, &store, 100.0, 300.0, None);
+        assert_eq!(ctx2.spot, 0.0);
+    }
+
+    #[test]
+    fn all_fields_bounded() {
+        let cluster = Cluster::new(&ClusterConfig::default());
+        let mut store = MetricStore::new(0.0);
+        store.push("workload", 0.0, 1e9);
+        let ctx = ContextVector::observe(&cluster, &store, 0.0, 1.0, Some(0.001));
+        for v in ctx.to_array() {
+            assert!((0.0..=1.0).contains(&v), "{ctx:?}");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Monitoring substrate — the Prometheus stand-in: a time-series store with
+//! windowed queries plus the context-vector builder that feeds Drone's
+//! contextual bandit (DESIGN.md §3).
+
+pub mod context;
+pub mod store;
+
+pub use context::{ContextVector, CTX_DIM};
+pub use store::MetricStore;

@@ -1,0 +1,129 @@
+//! In-memory time-series store: named series of (t, value) samples with
+//! windowed aggregation queries — the subset of Prometheus/PromQL the
+//! orchestrators actually consume (last, avg_over, max_over, quantile_over).
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricStore {
+    series: BTreeMap<String, Vec<(f64, f64)>>,
+    /// Retention horizon in seconds (old samples are pruned on push).
+    retention_s: f64,
+}
+
+impl MetricStore {
+    pub fn new(retention_s: f64) -> Self {
+        Self { series: BTreeMap::new(), retention_s }
+    }
+
+    pub fn push(&mut self, metric: &str, t: f64, v: f64) {
+        let s = self.series.entry(metric.to_string()).or_default();
+        debug_assert!(s.last().map_or(true, |&(lt, _)| t >= lt), "non-monotone time");
+        s.push((t, v));
+        if self.retention_s > 0.0 {
+            let cutoff = t - self.retention_s;
+            let drop = s.partition_point(|&(st, _)| st < cutoff);
+            if drop > 0 {
+                s.drain(..drop);
+            }
+        }
+    }
+
+    pub fn last(&self, metric: &str) -> Option<f64> {
+        self.series.get(metric).and_then(|s| s.last()).map(|&(_, v)| v)
+    }
+
+    fn window(&self, metric: &str, now: f64, window_s: f64) -> &[(f64, f64)] {
+        match self.series.get(metric) {
+            None => &[],
+            Some(s) => {
+                let from = s.partition_point(|&(t, _)| t < now - window_s);
+                &s[from..]
+            }
+        }
+    }
+
+    pub fn avg_over(&self, metric: &str, now: f64, window_s: f64) -> Option<f64> {
+        let w = self.window(metric, now, window_s);
+        if w.is_empty() {
+            None
+        } else {
+            Some(w.iter().map(|&(_, v)| v).sum::<f64>() / w.len() as f64)
+        }
+    }
+
+    pub fn max_over(&self, metric: &str, now: f64, window_s: f64) -> Option<f64> {
+        let w = self.window(metric, now, window_s);
+        w.iter().map(|&(_, v)| v).fold(None, |acc, v| Some(acc.map_or(v, |a: f64| a.max(v))))
+    }
+
+    pub fn quantile_over(&self, metric: &str, now: f64, window_s: f64, q: f64) -> Option<f64> {
+        let w = self.window(metric, now, window_s);
+        if w.is_empty() {
+            return None;
+        }
+        let vals: Vec<f64> = w.iter().map(|&(_, v)| v).collect();
+        Some(crate::util::stats::percentile(&vals, q * 100.0))
+    }
+
+    pub fn len(&self, metric: &str) -> usize {
+        self.series.get(metric).map_or(0, |s| s.len())
+    }
+
+    pub fn metrics(&self) -> impl Iterator<Item = &String> {
+        self.series.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_query() {
+        let mut m = MetricStore::new(0.0);
+        for i in 0..10 {
+            m.push("cpu", i as f64, i as f64 * 0.1);
+        }
+        assert_eq!(m.last("cpu"), Some(0.9));
+        // window [5, 9]: samples t in {5..9}, values 0.5..0.9 -> mean 0.7
+        assert!((m.avg_over("cpu", 9.0, 4.0).unwrap() - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn windows_are_half_open() {
+        let mut m = MetricStore::new(0.0);
+        m.push("x", 0.0, 1.0);
+        m.push("x", 5.0, 2.0);
+        m.push("x", 10.0, 3.0);
+        // window [4,10]: samples at 5 and 10
+        assert_eq!(m.avg_over("x", 10.0, 6.0), Some(2.5));
+        assert_eq!(m.max_over("x", 10.0, 100.0), Some(3.0));
+    }
+
+    #[test]
+    fn retention_prunes() {
+        let mut m = MetricStore::new(10.0);
+        for i in 0..100 {
+            m.push("x", i as f64, 1.0);
+        }
+        assert!(m.len("x") <= 12, "len={}", m.len("x"));
+    }
+
+    #[test]
+    fn quantile() {
+        let mut m = MetricStore::new(0.0);
+        for i in 1..=100 {
+            m.push("lat", i as f64, i as f64);
+        }
+        let p90 = m.quantile_over("lat", 100.0, 1000.0, 0.9).unwrap();
+        assert!((p90 - 90.1).abs() < 0.2, "p90={p90}");
+    }
+
+    #[test]
+    fn missing_metric_is_none() {
+        let m = MetricStore::new(0.0);
+        assert_eq!(m.last("nope"), None);
+        assert_eq!(m.avg_over("nope", 0.0, 10.0), None);
+    }
+}

@@ -1,0 +1,349 @@
+//! Heuristic / reactive comparison baselines:
+//!
+//! - **KubeHpa** — the default Kubernetes Horizontal Pod Autoscaler: scale
+//!   replicas to hold CPU utilization at a target; fixed per-pod requests;
+//!   native scheduler's even spread. Suspends scale-up under cluster memory
+//!   stress (the behaviour the paper observes in Table 3).
+//! - **Autopilot** (EuroSys'20) — Google's production autoscaler: a moving
+//!   window over recent usage; vertical limit = windowed peak x margin;
+//!   linear horizontal scaling to the utilization target.
+//! - **SHOWAR** (SoCC'21) — hybrid rightsizing: vertical via the empirical
+//!   rule (mean + k*sigma of usage), horizontal via a PI controller on the
+//!   latency SLO error, plus locality affinity (concentrate pods into few
+//!   zones to cut cross-zone hops).
+
+use std::collections::VecDeque;
+
+use super::traits::{Orchestrator, Telemetry};
+use crate::bandit::encode::{Action, ActionSpace};
+use crate::runtime::Backend;
+use crate::sim::scheduler::spread_evenly;
+use crate::util::rng::Pcg64;
+
+fn clamp_pods(space: &ActionSpace, n: f64) -> usize {
+    (n.round() as usize).clamp(1, space.zones * space.max_pods_per_zone)
+}
+
+pub struct KubeHpa {
+    space: ActionSpace,
+    pub target_cpu_util: f64,
+    /// Rule-based replica floor — deployment specs ship a generous
+    /// `minReplicas` (the "default executor count" users configure).
+    pub min_pods: usize,
+    pub per_pod_cpu_m: f64,
+    pub per_pod_ram_mb: f64,
+    pub per_pod_net_mbps: f64,
+    pods: usize,
+}
+
+impl KubeHpa {
+    pub fn new(space: ActionSpace) -> Self {
+        Self::with_profile(space, super::AppProfile::Batch)
+    }
+
+    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+        match profile {
+            // Executor-sized pods with a generous minReplicas (typical
+            // Spark-on-k8s deployment spec).
+            super::AppProfile::Batch => Self {
+                space,
+                target_cpu_util: 0.5,
+                min_pods: 8,
+                per_pod_cpu_m: 2000.0,
+                per_pod_ram_mb: 8192.0,
+                per_pod_net_mbps: 2000.0,
+                pods: 12,
+            },
+            // Container-sized service pods.
+            super::AppProfile::Microservices => Self {
+                space,
+                target_cpu_util: 0.5,
+                min_pods: 2,
+                per_pod_cpu_m: 1000.0,
+                per_pod_ram_mb: 1024.0,
+                per_pod_net_mbps: 500.0,
+                pods: 4,
+            },
+        }
+    }
+}
+
+impl Orchestrator for KubeHpa {
+    fn name(&self) -> &'static str {
+        "k8s-hpa"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+        // desired = ceil(current * util / target), the HPA formula,
+        // clamped to the rule-based minReplicas floor.
+        if tel.app_cpu_util > 0.0 {
+            let desired = (self.pods as f64 * tel.app_cpu_util / self.target_cpu_util).ceil();
+            let scaling_up = desired > self.pods as f64;
+            // Memory-stress guard: do not add pods when cluster RAM is hot.
+            if !(scaling_up && tel.ctx.ram_util > 0.8) {
+                self.pods = clamp_pods(&self.space, desired).max(self.min_pods);
+            }
+        }
+        Action {
+            zone_pods: spread_evenly(self.pods, self.space.zones),
+            cpu_m: self.per_pod_cpu_m,
+            ram_mb: self.per_pod_ram_mb,
+            net_mbps: self.per_pod_net_mbps,
+        }
+    }
+}
+
+pub struct Autopilot {
+    space: ActionSpace,
+    /// Moving window of per-pod RAM usage samples (MB).
+    ram_window: VecDeque<f64>,
+    cpu_window: VecDeque<f64>,
+    pub window_len: usize,
+    pub margin: f64,
+    pub target_cpu_util: f64,
+    pods: usize,
+    per_pod_cpu_m: f64,
+}
+
+impl Autopilot {
+    pub fn new(space: ActionSpace) -> Self {
+        Self::with_profile(space, super::AppProfile::Batch)
+    }
+
+    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+        let (pods, cpu) = match profile {
+            super::AppProfile::Batch => (4, 2000.0),
+            super::AppProfile::Microservices => (3, 1000.0),
+        };
+        Self {
+            space,
+            ram_window: VecDeque::new(),
+            cpu_window: VecDeque::new(),
+            window_len: 12,
+            margin: 1.15,
+            target_cpu_util: 0.6,
+            pods,
+            per_pod_cpu_m: cpu,
+        }
+    }
+
+    fn push(w: &mut VecDeque<f64>, v: f64, cap: usize) {
+        w.push_back(v);
+        while w.len() > cap {
+            w.pop_front();
+        }
+    }
+
+    /// Autopilot's recommendation: weighted max of recent usage peaks.
+    fn windowed_peak(w: &VecDeque<f64>) -> Option<f64> {
+        if w.is_empty() {
+            return None;
+        }
+        // Exponentially-decayed peak (recent peaks weigh more).
+        let n = w.len();
+        let mut best = 0.0f64;
+        for (i, &v) in w.iter().enumerate() {
+            let decay = 0.9f64.powi((n - 1 - i) as i32);
+            best = best.max(v * decay);
+        }
+        Some(best)
+    }
+}
+
+impl Orchestrator for Autopilot {
+    fn name(&self) -> &'static str {
+        "autopilot"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+        if tel.ram_usage_mb_per_pod > 0.0 {
+            Self::push(&mut self.ram_window, tel.ram_usage_mb_per_pod, self.window_len);
+        }
+        if tel.app_cpu_util > 0.0 {
+            Self::push(&mut self.cpu_window, tel.app_cpu_util, self.window_len);
+        }
+        // Vertical: limit = windowed peak usage * safety margin.
+        let ram_mb = Self::windowed_peak(&self.ram_window)
+            .map(|p| p * self.margin)
+            .unwrap_or(6144.0)
+            .clamp(self.space.ram_mb.0, self.space.ram_mb.1);
+        // Horizontal: linear scaling toward the utilization target.
+        if let Some(u) = Self::windowed_peak(&self.cpu_window) {
+            let desired = self.pods as f64 * u / self.target_cpu_util;
+            self.pods = clamp_pods(&self.space, desired);
+        }
+        Action {
+            zone_pods: spread_evenly(self.pods, self.space.zones),
+            cpu_m: self.per_pod_cpu_m,
+            ram_mb,
+            net_mbps: 2000.0,
+        }
+    }
+}
+
+pub struct Showar {
+    space: ActionSpace,
+    usage_samples: VecDeque<f64>,
+    pub k_sigma: f64,
+    /// PI controller on P90 latency vs SLO.
+    pub slo_p90_ms: f64,
+    ki: f64,
+    kp: f64,
+    integral: f64,
+    pods: f64,
+    per_pod_cpu_m: f64,
+}
+
+impl Showar {
+    pub fn new(space: ActionSpace) -> Self {
+        Self::with_profile(space, super::AppProfile::Batch)
+    }
+
+    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+        let (pods, cpu) = match profile {
+            super::AppProfile::Batch => (4.0, 2000.0),
+            super::AppProfile::Microservices => (3.0, 1200.0),
+        };
+        Self {
+            space,
+            usage_samples: VecDeque::new(),
+            k_sigma: 2.0,
+            slo_p90_ms: 120.0,
+            ki: 0.06,
+            kp: 0.35,
+            integral: 0.0,
+            pods,
+            per_pod_cpu_m: cpu,
+        }
+    }
+}
+
+impl Orchestrator for Showar {
+    fn name(&self) -> &'static str {
+        "showar"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+        if tel.ram_usage_mb_per_pod > 0.0 {
+            self.usage_samples.push_back(tel.ram_usage_mb_per_pod);
+            while self.usage_samples.len() > 30 {
+                self.usage_samples.pop_front();
+            }
+        }
+        // Vertical: mean + k*sigma (SHOWAR's empirical rule).
+        let xs: Vec<f64> = self.usage_samples.iter().cloned().collect();
+        let ram_mb = if xs.is_empty() {
+            6144.0
+        } else {
+            (crate::util::stats::mean(&xs) + self.k_sigma * crate::util::stats::std_dev(&xs))
+                .clamp(self.space.ram_mb.0, self.space.ram_mb.1)
+        };
+        // Horizontal: PI control on relative SLO error.
+        if let Some(p90) = tel.p90_latency_ms {
+            let err = (p90 - self.slo_p90_ms) / self.slo_p90_ms;
+            self.integral = (self.integral + err).clamp(-8.0, 8.0);
+            self.pods = (self.pods + self.kp * err + self.ki * self.integral)
+                .clamp(1.0, (self.space.zones * self.space.max_pods_per_zone) as f64);
+        }
+        let pods = self.pods.round() as usize;
+        // Affinity: concentrate pods into as few zones as possible
+        // (locality-oriented placement — SHOWAR's microservice affinity).
+        let mut zone_pods = vec![0usize; self.space.zones];
+        let mut left = pods;
+        for z in 0..self.space.zones {
+            let take = left.min(self.space.max_pods_per_zone);
+            zone_pods[z] = take;
+            left -= take;
+            if left == 0 {
+                break;
+            }
+        }
+        Action { zone_pods, cpu_m: self.per_pod_cpu_m, ram_mb, net_mbps: 2000.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::context::ContextVector;
+
+    fn tel() -> Telemetry {
+        Telemetry::initial(ContextVector::default())
+    }
+
+    #[test]
+    fn hpa_scales_with_utilization() {
+        let mut h = KubeHpa::new(ActionSpace::default());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        t.app_cpu_util = 1.0; // 2x over the 0.5 target
+        let a1 = h.decide(&t, &mut b, &mut rng);
+        assert_eq!(a1.total_pods(), 24);
+        t.app_cpu_util = 0.0625; // scale down hits the minReplicas floor
+        let a2 = h.decide(&t, &mut b, &mut rng);
+        assert_eq!(a2.total_pods(), 8);
+    }
+
+    #[test]
+    fn hpa_suspends_scaleup_under_memory_stress() {
+        let mut h = KubeHpa::new(ActionSpace::default());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        t.app_cpu_util = 1.0;
+        t.ctx.ram_util = 0.9;
+        let a = h.decide(&t, &mut b, &mut rng);
+        assert_eq!(a.total_pods(), 12, "no scale-up under RAM stress");
+        // Scale-down still allowed (to the floor).
+        t.app_cpu_util = 0.05;
+        t.ctx.ram_util = 0.9;
+        let a2 = h.decide(&t, &mut b, &mut rng);
+        assert_eq!(a2.total_pods(), 8);
+    }
+
+    #[test]
+    fn autopilot_tracks_usage_peak() {
+        let mut ap = Autopilot::new(ActionSpace::default());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        for usage in [3000.0, 4000.0, 3500.0] {
+            t.ram_usage_mb_per_pod = usage;
+            ap.decide(&t, &mut b, &mut rng);
+        }
+        t.ram_usage_mb_per_pod = 3200.0;
+        let a = ap.decide(&t, &mut b, &mut rng);
+        // Peak 4000 decayed by <= 1 step * margin 1.15.
+        assert!(a.ram_mb > 3200.0 * 1.15 && a.ram_mb < 4000.0 * 1.2, "{}", a.ram_mb);
+    }
+
+    #[test]
+    fn showar_pi_reacts_to_slo_violation() {
+        let mut sh = Showar::new(ActionSpace::default());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        t.p90_latency_ms = Some(400.0); // way over 120ms SLO
+        let before = sh.pods;
+        let a = sh.decide(&t, &mut b, &mut rng);
+        assert!(sh.pods > before);
+        // Affinity: pods concentrated, not spread.
+        let nonzero = a.zone_pods.iter().filter(|&&k| k > 0).count();
+        assert_eq!(nonzero, 1, "{:?}", a.zone_pods);
+    }
+
+    #[test]
+    fn showar_vertical_mean_plus_sigma() {
+        let mut sh = Showar::new(ActionSpace::default());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        for u in [1000.0, 1200.0, 800.0, 1000.0] {
+            t.ram_usage_mb_per_pod = u;
+            sh.decide(&t, &mut b, &mut rng);
+        }
+        let a = sh.decide(&t, &mut b, &mut rng);
+        assert!(a.ram_mb > 1000.0 && a.ram_mb < 1600.0, "{}", a.ram_mb);
+    }
+}

@@ -1,0 +1,282 @@
+//! Drone itself — the paper's contribution.
+//!
+//! `DronePublic` implements Algorithm 1 (public cloud): contextual GP-UCB
+//! over the joint action+context space, maximizing the reward
+//! alpha * perf - beta * cost (Eq. 3).
+//!
+//! `DronePrivate` implements Algorithm 2 (private cloud): two GPs over the
+//! same joint space — performance p(x, w) and resource usage P(x, w) — with
+//! a random-exploration warmup inside a guaranteed-safe initial set, then
+//! UCB on performance restricted to the safe set
+//! { x : LCB_P(x, w) <= P_max } expanded each step from the P GP.
+
+use super::bandit_core::{Acquisition, BanditCore};
+use super::traits::{Orchestrator, Telemetry};
+use crate::bandit::acquisition;
+use crate::bandit::candidates::initial_action;
+use crate::bandit::encode::{Action, ActionSpace, JOINT_DIM};
+use crate::config::{BanditConfig, ObjectiveConfig};
+use crate::runtime::Backend;
+use crate::util::rng::Pcg64;
+
+pub struct DronePublic {
+    core: BanditCore,
+    obj: ObjectiveConfig,
+}
+
+impl DronePublic {
+    pub fn new(space: ActionSpace, bandit: BanditConfig, obj: ObjectiveConfig, seed: u64) -> Self {
+        let mut core = BanditCore::new(space, bandit, Acquisition::Ucb, true, seed);
+        core.stickiness = Some(0.03);
+        Self { core, obj }
+    }
+
+    /// Eq. 3 on the harness's already-normalized [0,1] signals. Using the
+    /// raw signals (not a running min-max) keeps the GP's stored targets
+    /// stationary — re-stretching history is what makes surrogates
+    /// oscillate after convergence.
+    fn reward(&self, perf: f64, cost: f64) -> f64 {
+        self.obj.alpha * perf - self.obj.beta * cost
+    }
+}
+
+impl Orchestrator for DronePublic {
+    fn name(&self) -> &'static str {
+        "drone"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+        if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
+            let cost = tel.cost_norm.unwrap_or(0.0);
+            let r = self.reward(perf, cost);
+            self.core.record(&a.clone(), &tel.ctx, r, tel.resource_frac.unwrap_or(0.0));
+        }
+        if tel.failure {
+            if let Some(a) = &tel.last_action {
+                return self.core.recover(&a.clone());
+            }
+        }
+        self.core.select(backend, &tel.ctx, rng)
+    }
+}
+
+pub struct DronePrivate {
+    core: BanditCore,
+    /// Hard cap on the constrained resource (fraction of cluster RAM).
+    pub p_max: f64,
+    explore_steps: u64,
+    safety_beta: f64,
+    steps: u64,
+}
+
+impl DronePrivate {
+    pub fn new(
+        space: ActionSpace,
+        bandit: BanditConfig,
+        p_max: f64,
+        seed: u64,
+    ) -> Self {
+        let explore_steps = bandit.explore_steps as u64;
+        let safety_beta = bandit.safety_beta;
+        Self {
+            core: BanditCore::new(space, bandit, Acquisition::Ucb, true, seed),
+            p_max,
+            explore_steps,
+            safety_beta,
+            steps: 0,
+        }
+    }
+
+    /// The guaranteed-safe initial set: conservative configurations whose
+    /// worst-case allocation stays well under the cap (Sec. 4.5 initial
+    /// point selection: half of currently-available within the cap).
+    fn safe_initial(&self, rng: &mut Pcg64, available_frac: f64) -> Action {
+        let space = &self.core.space;
+        let frac = (0.5 * self.p_max * available_frac).clamp(0.05, 0.5);
+        let base = initial_action(space, frac);
+        // Random jitter inside the conservative region for exploration.
+        let zone_pods: Vec<usize> = base
+            .zone_pods
+            .iter()
+            .map(|&k| {
+                let k = k.max(1);
+                (k as f64 * rng.uniform(0.5, 1.2)).round().max(0.0) as usize
+            })
+            .collect();
+        let cpu_m = (base.cpu_m * rng.uniform(0.6, 1.1)).max(space.cpu_m.0);
+        let ram_mb = (base.ram_mb * rng.uniform(0.6, 1.1)).max(space.ram_mb.0);
+        let net_mbps = (base.net_mbps * rng.uniform(0.6, 1.1)).max(space.net_mbps.0);
+        space.clamp(Action { zone_pods, cpu_m, ram_mb, net_mbps })
+    }
+}
+
+impl Orchestrator for DronePrivate {
+    fn name(&self) -> &'static str {
+        "drone-safe"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+        self.steps += 1;
+        if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
+            let resource = tel.resource_frac.unwrap_or(0.0);
+            self.core.record(&a.clone(), &tel.ctx, perf, resource);
+        }
+        if tel.failure {
+            if let Some(a) = &tel.last_action {
+                // Recovery must still respect the cap: escalate, then shrink
+                // RAM back under the budget if needed.
+                let mut rec = self.core.recover(&a.clone());
+                let cap_mb = self.p_max * 0.9; // leave headroom
+                let total = rec.total_ram_mb();
+                let cluster_guess = total / tel.resource_frac.unwrap_or(0.5).max(0.05);
+                if total > cap_mb * cluster_guess {
+                    rec.ram_mb *= cap_mb * cluster_guess / total;
+                    rec = self.core.space.clamp(rec);
+                }
+                self.core.incumbent = Some(rec.clone());
+                return rec;
+            }
+        }
+
+        // Phase 1: pure exploration inside the guaranteed-safe set.
+        if self.steps <= self.explore_steps {
+            let a = self.safe_initial(rng, 1.0 - tel.ctx.ram_util);
+            self.core.incumbent = Some(a.clone());
+            return a;
+        }
+
+        // Phase 2: UCB on perf restricted to { lcb_P <= P_max }.
+        self.core.t += 1;
+        let (encs, actions) = self.core.candidates(rng);
+        let perf_post = self.core.posterior_primary(backend, &tel.ctx, &encs);
+        let res_post = self.core.posterior_resource(backend, &tel.ctx, &encs);
+        let (mu_p, sig_p, mu_r, sig_r) = match (perf_post, res_post) {
+            (Ok((mp, sp)), Ok((mr, sr))) => (mp, sp, mr, sr),
+            _ => {
+                let a = self.safe_initial(rng, 1.0 - tel.ctx.ram_util);
+                self.core.incumbent = Some(a.clone());
+                return a;
+            }
+        };
+        // Safety certification. NOTE — deliberate deviation from the
+        // paper's Alg. 2 line 12/14, which filters on the LOWER confidence
+        // bound of P: that certifies *optimistically*, so every unexplored
+        // corner (large sigma => low LCB) counts as safe and the cap is
+        // violated during exploration — contradicting the paper's own
+        // Fig. 7c claim. The SafeOpt line of work the paper cites ([70],
+        // [71], [12]) certifies with the UPPER bound: x is safe only when
+        // even the pessimistic estimate of its resource usage fits the
+        // budget. The safe set still expands as observations shrink sigma.
+        let budget = self.p_max - 0.03; // headroom for context drift
+        let ucb_r = acquisition::ucb(&mu_r, &sig_r, self.safety_beta);
+        let safe: Vec<bool> = ucb_r.iter().map(|&u| u <= budget).collect();
+        let zeta = acquisition::zeta_schedule(self.core.t, JOINT_DIM, self.core.cfg.zeta_scale);
+        let ucb_p = acquisition::ucb(&mu_p, &sig_p, zeta);
+        let mut idx = match acquisition::argmax_filtered(&ucb_p, &safe) {
+            Some(i) => i,
+            // Empty safe set: fall back to the most conservative candidate
+            // (smallest certified resource usage).
+            None => acquisition::argmax(&ucb_r.iter().map(|&u| -u).collect::<Vec<_>>()).unwrap_or(0),
+        };
+        // Hysteresis (part of the paper's latency-aware scheduling
+        // enhancements): candidate slot 0 is the incumbent; a challenger
+        // must beat the incumbent's posterior *mean* by a margin before we
+        // disturb a serving deployment — re-deploys are not free for a
+        // live latency-critical application.
+        if self.core.incumbent.is_some() && idx != 0 && safe.first() == Some(&true) {
+            // Challenger must show a *confident* improvement: its posterior
+            // mean (not just its optimism bonus) has to beat the incumbent's.
+            // Never stick to a below-average incumbent (lock-in; see
+            // bandit_core::select).
+            let margin = 0.03;
+            let (y_mean, _) = self.core.window.y_stats();
+            if mu_p[0] >= y_mean && mu_p[idx] < mu_p[0] + margin {
+                idx = 0;
+            }
+        }
+        if std::env::var("DRONE_DEBUG").is_ok() {
+            let n_safe = safe.iter().filter(|&&s| s).count();
+            eprintln!(
+                "[drone-safe t={}] safe={}/{} idx={} ucb={:.3} mu_p={:.3} sig_p={:.3} ucb_r={:.3} action={:?}",
+                self.core.t, n_safe, safe.len(), idx, ucb_p[idx], mu_p[idx], sig_p[idx], ucb_r[idx],
+                actions[idx]
+            );
+        }
+        let a = actions[idx].clone();
+        self.core.incumbent = Some(a.clone());
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::context::ContextVector;
+
+    fn tel_with(a: Option<Action>, perf: Option<f64>, resource: Option<f64>) -> Telemetry {
+        let mut t = Telemetry::initial(ContextVector::default());
+        t.last_action = a;
+        t.perf_score = perf;
+        t.cost_norm = Some(0.3);
+        t.resource_frac = resource;
+        t
+    }
+
+    #[test]
+    fn public_first_action_reasonable() {
+        let mut d = DronePublic::new(
+            ActionSpace::default(),
+            BanditConfig { candidates: 32, ..Default::default() },
+            ObjectiveConfig::default(),
+            0,
+        );
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(1);
+        let a = d.decide(&tel_with(None, None, None), &mut b, &mut rng);
+        assert!(a.total_pods() >= 1);
+    }
+
+    #[test]
+    fn public_recovers_on_failure() {
+        let mut d = DronePublic::new(
+            ActionSpace::default(),
+            BanditConfig { candidates: 16, ..Default::default() },
+            ObjectiveConfig::default(),
+            0,
+        );
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(2);
+        let failed = Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 120.0 };
+        let mut t = tel_with(Some(failed.clone()), Some(0.0), Some(0.1));
+        t.failure = true;
+        let a = d.decide(&t, &mut b, &mut rng);
+        assert!(a.ram_mb > failed.ram_mb, "recovery escalates RAM");
+    }
+
+    #[test]
+    fn private_explores_safely_then_respects_cap() {
+        let space = ActionSpace::default();
+        let cfg = BanditConfig { candidates: 64, explore_steps: 4, ..Default::default() };
+        let cluster_ram_mb = 15.0 * 30_720.0;
+        let p_max = 0.65;
+        let mut d = DronePrivate::new(space, cfg, p_max, 3);
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(3);
+        let mut tel = tel_with(None, None, None);
+        let mut last: Option<Action> = None;
+        for step in 0..25u64 {
+            let a = d.decide(&tel, &mut b, &mut rng);
+            let alloc_frac = a.total_ram_mb() / cluster_ram_mb;
+            if step < 4 {
+                assert!(alloc_frac <= p_max, "warmup must stay safe: {alloc_frac}");
+            }
+            // Feedback: perf grows with ram until the cap, resource = alloc.
+            let perf = (alloc_frac / p_max).min(1.2);
+            tel = tel_with(Some(a.clone()), Some(perf), Some(alloc_frac));
+            last = Some(a);
+        }
+        // After learning, allocation should track but not wildly exceed cap.
+        let final_frac = last.unwrap().total_ram_mb() / cluster_ram_mb;
+        assert!(final_frac < p_max * 1.3, "post-convergence near/below cap: {final_frac}");
+    }
+}

@@ -1,0 +1,93 @@
+//! Orchestration policies: Drone (public-cloud Alg. 1 and private-cloud
+//! safe Alg. 2) and the paper's comparison baselines — Kubernetes HPA,
+//! Google Autopilot, SHOWAR, Cherrypick and Accordia.
+
+pub mod bandit_core;
+pub mod baselines_bandit;
+pub mod baselines_heuristic;
+pub mod drone;
+pub mod traits;
+
+pub use baselines_bandit::{Accordia, Cherrypick};
+pub use baselines_heuristic::{Autopilot, KubeHpa, Showar};
+pub use drone::{DronePrivate, DronePublic};
+pub use traits::{Orchestrator, Telemetry};
+
+use crate::bandit::encode::ActionSpace;
+use crate::config::{BanditConfig, ObjectiveConfig};
+
+/// Which application profile a policy instance will manage — heuristic
+/// baselines ship different fixed per-pod requests for executor-sized
+/// batch pods vs container-sized microservice pods (Sec. 4.5
+/// "characterization of applications").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppProfile {
+    Batch,
+    Microservices,
+}
+
+/// Factory used by the CLI/experiments: construct a policy by name.
+pub fn make(
+    name: &str,
+    space: ActionSpace,
+    bandit: BanditConfig,
+    obj: ObjectiveConfig,
+    p_max: f64,
+    seed: u64,
+    profile: AppProfile,
+) -> Option<Box<dyn Orchestrator>> {
+    Some(match name {
+        "drone" => Box::new(DronePublic::new(space, bandit, obj, seed)) as Box<dyn Orchestrator>,
+        "drone-safe" => Box::new(DronePrivate::new(space, bandit, p_max, seed)),
+        "cherrypick" => Box::new(Cherrypick::new(space, bandit, seed)),
+        "accordia" => Box::new(Accordia::new(space, bandit, seed)),
+        "k8s-hpa" | "k8s" => Box::new(KubeHpa::with_profile(space, profile)),
+        "autopilot" => Box::new(Autopilot::with_profile(space, profile)),
+        "showar" => Box::new(Showar::with_profile(space, profile)),
+        _ => return None,
+    })
+}
+
+pub const ALL_POLICIES: &[&str] = &[
+    "drone",
+    "drone-safe",
+    "cherrypick",
+    "accordia",
+    "k8s-hpa",
+    "autopilot",
+    "showar",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_constructs_every_policy() {
+        for profile in [AppProfile::Batch, AppProfile::Microservices] {
+            for name in ALL_POLICIES {
+                let o = make(
+                    name,
+                    ActionSpace::default(),
+                    BanditConfig::default(),
+                    ObjectiveConfig::default(),
+                    0.65,
+                    0,
+                    profile,
+                );
+                assert!(o.is_some(), "{name}");
+                assert!(!o.unwrap().name().is_empty());
+            }
+        }
+        assert!(make(
+            "nope",
+            ActionSpace::default(),
+            BanditConfig::default(),
+            ObjectiveConfig::default(),
+            0.65,
+            0,
+            AppProfile::Batch,
+        )
+        .is_none());
+    }
+}

@@ -1,0 +1,62 @@
+//! The orchestrator interface every policy implements — Drone and all five
+//! baselines. Each decision period the experiment harness observes the
+//! previous period's outcome, packages it as `Telemetry`, and asks the
+//! policy for the next `Action`.
+
+use crate::bandit::encode::Action;
+use crate::monitor::context::ContextVector;
+use crate::runtime::Backend;
+use crate::util::rng::Pcg64;
+
+/// Everything a policy may condition on for one decision.
+#[derive(Clone, Debug)]
+pub struct Telemetry {
+    /// Simulated time (s) and decision index.
+    pub t: f64,
+    pub step: u64,
+    /// Current cloud-uncertainty context (Sec. 5.1's 6 dimensions).
+    pub ctx: ContextVector,
+    /// The action that produced the feedback below (None on step 0).
+    pub last_action: Option<Action>,
+    /// Normalized performance score in ~[0,1], higher = better
+    /// (batch: inverse elapsed time; microservices: inverse P90).
+    pub perf_score: Option<f64>,
+    /// Normalized resource cost in ~[0,1] of the last period.
+    pub cost_norm: Option<f64>,
+    /// Fraction of the constrained resource (cluster RAM) in use —
+    /// the safe-bandit's P(x, omega) observation.
+    pub resource_frac: Option<f64>,
+    /// The last job halted / produced no metrics (triggers recovery).
+    pub failure: bool,
+    /// Reactive-scaler signals.
+    pub app_cpu_util: f64,
+    pub ram_usage_mb_per_pod: f64,
+    pub p90_latency_ms: Option<f64>,
+}
+
+impl Telemetry {
+    pub fn initial(ctx: ContextVector) -> Self {
+        Self {
+            t: 0.0,
+            step: 0,
+            ctx,
+            last_action: None,
+            perf_score: None,
+            cost_norm: None,
+            resource_frac: None,
+            failure: false,
+            app_cpu_util: 0.0,
+            ram_usage_mb_per_pod: 0.0,
+            p90_latency_ms: None,
+        }
+    }
+}
+
+pub trait Orchestrator {
+    fn name(&self) -> &'static str;
+
+    /// Choose the next resource configuration. `backend` carries the GP
+    /// posterior engine (AOT artifact via PJRT, or the native mirror);
+    /// heuristic baselines ignore it.
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action;
+}

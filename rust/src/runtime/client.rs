@@ -1,0 +1,161 @@
+//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! python/compile/aot.py), compile them once on the CPU PJRT client, and
+//! cache the loaded executables. Python never runs here — the rust binary
+//! is self-contained after `make artifacts`.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Geometry parsed from artifacts/manifest.txt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ArtifactInfo {
+    pub name: String,
+    pub kind: String, // "single" | "dual"
+    pub n: usize,
+    pub m: usize,
+    pub d: usize,
+}
+
+pub fn parse_manifest(text: &str) -> Vec<ArtifactInfo> {
+    let mut out = vec![];
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut name = String::new();
+        let mut kind = String::new();
+        let (mut n, mut m, mut d) = (0usize, 0usize, 0usize);
+        for (i, tok) in line.split_whitespace().enumerate() {
+            if i == 0 {
+                name = tok.to_string();
+                continue;
+            }
+            if let Some((k, v)) = tok.split_once('=') {
+                match k {
+                    "kind" => kind = v.to_string(),
+                    "n" => n = v.parse().unwrap_or(0),
+                    "m" => m = v.parse().unwrap_or(0),
+                    "d" => d = v.parse().unwrap_or(0),
+                    _ => {}
+                }
+            }
+        }
+        if !name.is_empty() && n > 0 && m > 0 && d > 0 {
+            out.push(ArtifactInfo { name, kind, n, m, d });
+        }
+    }
+    out
+}
+
+/// PJRT CPU client + compiled-executable cache keyed by artifact name.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Open the artifact directory; errors if it or the manifest is missing.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let artifacts = parse_manifest(&text);
+        if artifacts.is_empty() {
+            return Err(anyhow!("manifest {manifest_path:?} lists no artifacts"));
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self { client, dir, artifacts, executables: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn info(&self, name: &str) -> Option<&ArtifactInfo> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Pick the single-GP artifact matching (n, m, d) exactly.
+    pub fn find(&self, kind: &str, n: usize, m: usize, d: usize) -> Option<&ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.n == n && a.m == m && a.d == d)
+    }
+
+    /// Compile (or fetch the cached) executable for `name`.
+    pub fn executable(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing HLO text {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(self.executables.get(name).unwrap())
+    }
+
+    /// Execute artifact `name` with f32 inputs of the given shapes; returns
+    /// the flattened f32 outputs of the result tuple.
+    pub fn execute_f32(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(shape)
+                .map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        let parts = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parser() {
+        let text = "\
+gp_posterior_n32_m256_d13 kind=single n=32 m=256 d=13
+gp_dual_n32_m256_d13 kind=dual n=32 m=256 d=13
+
+malformed line without fields
+";
+        let infos = parse_manifest(text);
+        assert_eq!(infos.len(), 2);
+        assert_eq!(infos[0].name, "gp_posterior_n32_m256_d13");
+        assert_eq!(infos[0].kind, "single");
+        assert_eq!((infos[0].n, infos[0].m, infos[0].d), (32, 256, 13));
+        assert_eq!(infos[1].kind, "dual");
+    }
+
+    #[test]
+    fn open_missing_dir_errors() {
+        assert!(XlaRuntime::open("/definitely/not/here").is_err());
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime layer: wraps the `xla` crate (PJRT C API) to load and execute
+//! the AOT artifacts from the coordinator hot path, with a native fallback
+//! backend so every code path runs without artifacts too.
+//! Pattern adapted from /opt/xla-example/src/bin/load_hlo.rs.
+
+pub mod client;
+pub mod posterior;
+
+pub use client::{parse_manifest, ArtifactInfo, XlaRuntime};
+pub use posterior::{Backend, PosteriorRequest};

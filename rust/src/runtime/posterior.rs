@@ -1,0 +1,127 @@
+//! Typed posterior backend: the one call the coordinator hot path makes
+//! every decision period. Two interchangeable implementations:
+//!
+//!   - `Backend::Xla`    — the AOT'd L1/L2 artifact through PJRT (production
+//!                          path; Pallas Matern kernel + loop Cholesky).
+//!   - `Backend::Native` — the in-repo f64 GP (bandit::gp), used when
+//!                          artifacts are absent and to cross-validate the
+//!                          artifact numerics.
+//!
+//! Both take the padded window + candidate batch and return (mu, sigma) per
+//! candidate.
+
+use anyhow::{anyhow, Result};
+
+use super::client::XlaRuntime;
+use crate::bandit::gp::{self, GpHyper};
+
+pub struct PosteriorRequest<'a> {
+    /// Padded window inputs [n_pad * d].
+    pub z: &'a [f64],
+    pub y: &'a [f64],
+    pub mask: &'a [f64],
+    /// Candidate batch [m * d].
+    pub x: &'a [f64],
+    pub d: usize,
+    pub hyp: GpHyper,
+}
+
+pub enum Backend {
+    Native,
+    Xla(XlaRuntime),
+}
+
+impl Backend {
+    /// Open the XLA backend if artifacts exist, else fall back to native.
+    pub fn auto(artifacts_dir: &str) -> Backend {
+        match XlaRuntime::open(artifacts_dir) {
+            Ok(rt) => Backend::Xla(rt),
+            Err(_) => Backend::Native,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Xla(_) => "xla",
+        }
+    }
+
+    /// Posterior (mu, sigma) for each candidate.
+    pub fn posterior(&mut self, req: &PosteriorRequest) -> Result<(Vec<f64>, Vec<f64>)> {
+        match self {
+            Backend::Native => {
+                let (mu, sigma) = gp::gp_posterior(req.z, req.y, req.mask, req.x, req.d, req.hyp);
+                Ok((mu, sigma))
+            }
+            Backend::Xla(rt) => {
+                let n = req.y.len();
+                let m = req.x.len() / req.d;
+                let info = rt
+                    .find("single", n, m, req.d)
+                    .ok_or_else(|| {
+                        anyhow!("no artifact for kind=single n={n} m={m} d={}", req.d)
+                    })?
+                    .clone();
+                let z32: Vec<f32> = req.z.iter().map(|&v| v as f32).collect();
+                let y32: Vec<f32> = req.y.iter().map(|&v| v as f32).collect();
+                let mask32: Vec<f32> = req.mask.iter().map(|&v| v as f32).collect();
+                let x32: Vec<f32> = req.x.iter().map(|&v| v as f32).collect();
+                let hyp32 = [
+                    req.hyp.noise_var as f32,
+                    req.hyp.lengthscale as f32,
+                    req.hyp.signal_var as f32,
+                ];
+                let outs = rt.execute_f32(
+                    &info.name,
+                    &[
+                        (&z32, &[n as i64, req.d as i64]),
+                        (&y32, &[n as i64]),
+                        (&mask32, &[n as i64]),
+                        (&x32, &[m as i64, req.d as i64]),
+                        (&hyp32, &[3]),
+                    ],
+                )?;
+                if outs.len() != 2 || outs[0].len() != m || outs[1].len() != m {
+                    return Err(anyhow!(
+                        "artifact returned unexpected shapes: {:?}",
+                        outs.iter().map(|o| o.len()).collect::<Vec<_>>()
+                    ));
+                }
+                Ok((
+                    outs[0].iter().map(|&v| v as f64).collect(),
+                    outs[1].iter().map(|&v| v as f64).collect(),
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn native_backend_round_trip() {
+        let mut rng = Pcg64::new(1);
+        let (n, m, d) = (8, 5, 3);
+        let z: Vec<f64> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mask = vec![1.0; n];
+        let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut b = Backend::Native;
+        let (mu, sigma) = b
+            .posterior(&PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp: GpHyper::default() })
+            .unwrap();
+        assert_eq!(mu.len(), m);
+        assert_eq!(sigma.len(), m);
+        assert!(sigma.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn auto_falls_back_to_native() {
+        let b = Backend::auto("/nonexistent/artifacts");
+        assert_eq!(b.name(), "native");
+    }
+}

@@ -1,0 +1,359 @@
+//! The Kubernetes-like cluster substrate: nodes grouped into zones, pods with
+//! requests/limits, allocation accounting, interference-adjusted effective
+//! capacity, and OOM-kill semantics.
+//!
+//! This is the simulated stand-in for the paper's 16-VM Compute Canada
+//! testbed (1 control + 15 workers, 8 vCPU / 30 GB each, 10 GbE, 4 zones via
+//! `tc`). The orchestrators only interact with it through metrics + an
+//! actuation API, mirroring how Drone talks to the Kubernetes API server.
+
+use super::resources::Resources;
+use crate::config::ClusterConfig;
+
+pub type NodeId = usize;
+pub type ZoneId = usize;
+pub type PodId = u64;
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub zone: ZoneId,
+    pub capacity: Resources,
+    pub allocated: Resources,
+    /// Interference-driven contention factors in [0,1] (fraction of capacity
+    /// stolen by co-tenants). Updated each tick by the interference model.
+    pub contention: Resources,
+}
+
+impl Node {
+    pub fn free(&self) -> Resources {
+        self.capacity.sub(&self.allocated).max0()
+    }
+
+    /// Capacity effectively usable this tick after interference.
+    pub fn effective_capacity(&self) -> Resources {
+        Resources::new(
+            self.capacity.cpu_m * (1.0 - self.contention.cpu_m).max(0.05),
+            self.capacity.ram_mb * (1.0 - self.contention.ram_mb).max(0.05),
+            self.capacity.net_mbps * (1.0 - self.contention.net_mbps).max(0.05),
+        )
+    }
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PodState {
+    Running,
+    /// Killed by the OOM watchdog; restart pending.
+    OomKilled,
+    Terminated,
+}
+
+#[derive(Clone, Debug)]
+pub struct Pod {
+    pub id: PodId,
+    /// Owning workload/service name (e.g. "orders", "spark-exec").
+    pub app: String,
+    pub node: NodeId,
+    pub limits: Resources,
+    /// Current measured usage (set by the application models).
+    pub usage: Resources,
+    pub state: PodState,
+}
+
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub nodes: Vec<Node>,
+    pub pods: Vec<Pod>,
+    next_pod_id: PodId,
+    /// Inter-zone latency matrix, ms.
+    pub zone_latency_ms: Vec<Vec<f64>>,
+    pub oom_kills: u64,
+}
+
+impl Cluster {
+    pub fn new(cfg: &ClusterConfig) -> Self {
+        let cap = Resources::new(cfg.node_cpu_millicores, cfg.node_ram_mb, cfg.node_net_mbps);
+        let nodes = (0..cfg.workers)
+            .map(|id| Node {
+                id,
+                zone: id % cfg.zones,
+                capacity: cap,
+                allocated: Resources::ZERO,
+                contention: Resources::ZERO,
+            })
+            .collect();
+        let mut zone_latency_ms = vec![vec![cfg.inter_zone_latency_ms; cfg.zones]; cfg.zones];
+        for (z, row) in zone_latency_ms.iter_mut().enumerate() {
+            row[z] = cfg.intra_zone_latency_ms;
+        }
+        Self { nodes, pods: vec![], next_pod_id: 1, zone_latency_ms, oom_kills: 0 }
+    }
+
+    pub fn n_zones(&self) -> usize {
+        self.zone_latency_ms.len()
+    }
+
+    pub fn nodes_in_zone(&self, z: ZoneId) -> impl Iterator<Item = &Node> {
+        self.nodes.iter().filter(move |n| n.zone == z)
+    }
+
+    /// Try to place a pod on a specific node; fails if it does not fit.
+    pub fn place_pod(&mut self, app: &str, node: NodeId, limits: Resources) -> Option<PodId> {
+        let n = &mut self.nodes[node];
+        if !limits.fits_in(&n.free()) {
+            return None;
+        }
+        n.allocated = n.allocated.add(&limits);
+        let id = self.next_pod_id;
+        self.next_pod_id += 1;
+        self.pods.push(Pod {
+            id,
+            app: app.to_string(),
+            node,
+            limits,
+            usage: Resources::ZERO,
+            state: PodState::Running,
+        });
+        Some(id)
+    }
+
+    pub fn remove_pod(&mut self, id: PodId) -> bool {
+        if let Some(idx) = self.pods.iter().position(|p| p.id == id) {
+            let pod = self.pods.remove(idx);
+            if pod.state != PodState::OomKilled {
+                // OOM-killed pods already released their allocation.
+                let n = &mut self.nodes[pod.node];
+                n.allocated = n.allocated.sub(&pod.limits).max0();
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Remove every pod of an app (rolling-update teardown).
+    pub fn remove_app(&mut self, app: &str) {
+        let ids: Vec<PodId> =
+            self.pods.iter().filter(|p| p.app == app).map(|p| p.id).collect();
+        for id in ids {
+            self.remove_pod(id);
+        }
+    }
+
+    pub fn pods_of<'a>(&'a self, app: &'a str) -> impl Iterator<Item = &'a Pod> {
+        self.pods.iter().filter(move |p| p.app == app && p.state == PodState::Running)
+    }
+
+    pub fn running_pod_count(&self, app: &str) -> usize {
+        self.pods_of(app).count()
+    }
+
+    /// OOM watchdog: kill any running pod whose RAM usage exceeds its limit.
+    /// Returns the ids killed this sweep. Memory is the paper's
+    /// "non-negotiable" resource — CPU/network overuse throttles instead.
+    pub fn sweep_oom(&mut self) -> Vec<PodId> {
+        let mut killed = vec![];
+        for i in 0..self.pods.len() {
+            let (over, node, limits) = {
+                let p = &self.pods[i];
+                (
+                    p.state == PodState::Running && p.usage.ram_mb > p.limits.ram_mb + 1e-9,
+                    p.node,
+                    p.limits,
+                )
+            };
+            if over {
+                self.pods[i].state = PodState::OomKilled;
+                let n = &mut self.nodes[node];
+                n.allocated = n.allocated.sub(&limits).max0();
+                self.oom_kills += 1;
+                killed.push(self.pods[i].id);
+            }
+        }
+        killed
+    }
+
+    /// Cluster-wide utilization of *allocated* resources vs capacity.
+    pub fn allocation_ratio(&self) -> Resources {
+        let mut alloc = Resources::ZERO;
+        let mut cap = Resources::ZERO;
+        for n in &self.nodes {
+            alloc = alloc.add(&n.allocated);
+            cap = cap.add(&n.capacity);
+        }
+        Resources::new(
+            alloc.cpu_m / cap.cpu_m.max(1e-9),
+            alloc.ram_mb / cap.ram_mb.max(1e-9),
+            alloc.net_mbps / cap.net_mbps.max(1e-9),
+        )
+    }
+
+    /// Cluster-wide *usage* ratio (what Prometheus/node-exporter reports).
+    pub fn usage_ratio(&self) -> Resources {
+        let mut used = Resources::ZERO;
+        let mut cap = Resources::ZERO;
+        for n in &self.nodes {
+            cap = cap.add(&n.capacity);
+            // Contention counts as usage by co-tenants.
+            used = used.add(&Resources::new(
+                n.capacity.cpu_m * n.contention.cpu_m,
+                n.capacity.ram_mb * n.contention.ram_mb,
+                n.capacity.net_mbps * n.contention.net_mbps,
+            ));
+        }
+        for p in &self.pods {
+            if p.state == PodState::Running {
+                used = used.add(&p.usage);
+            }
+        }
+        Resources::new(
+            (used.cpu_m / cap.cpu_m.max(1e-9)).min(1.0),
+            (used.ram_mb / cap.ram_mb.max(1e-9)).min(1.0),
+            (used.net_mbps / cap.net_mbps.max(1e-9)).min(1.0),
+        )
+    }
+
+    pub fn total_capacity(&self) -> Resources {
+        self.nodes
+            .iter()
+            .fold(Resources::ZERO, |acc, n| acc.add(&n.capacity))
+    }
+
+    /// Total RAM currently allocated to running pods (MB).
+    pub fn total_ram_allocated(&self) -> f64 {
+        self.pods
+            .iter()
+            .filter(|p| p.state == PodState::Running)
+            .map(|p| p.limits.ram_mb)
+            .sum()
+    }
+
+    /// Mean contention across nodes (a context signal).
+    pub fn mean_contention(&self) -> Resources {
+        let n = self.nodes.len().max(1) as f64;
+        let sum = self
+            .nodes
+            .iter()
+            .fold(Resources::ZERO, |acc, nd| acc.add(&nd.contention));
+        sum.scale(1.0 / n)
+    }
+
+    /// Invariant check used by property tests: allocation never exceeds
+    /// capacity and matches the sum of running pod limits.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for n in &self.nodes {
+            if !n.allocated.fits_in(&n.capacity) {
+                return Err(format!("node {} over-allocated: {:?}", n.id, n.allocated));
+            }
+            if !n.allocated.is_nonneg() {
+                return Err(format!("node {} negative allocation", n.id));
+            }
+            let sum = self
+                .pods
+                .iter()
+                .filter(|p| p.node == n.id && p.state == PodState::Running)
+                .fold(Resources::ZERO, |acc, p| acc.add(&p.limits));
+            let d = n.allocated.sub(&sum);
+            if d.cpu_m.abs() > 1e-6 || d.ram_mb.abs() > 1e-6 || d.net_mbps.abs() > 1e-6 {
+                return Err(format!(
+                    "node {} accounting drift: allocated {:?} vs pod sum {:?}",
+                    n.id, n.allocated, sum
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Cluster {
+        Cluster::new(&ClusterConfig {
+            workers: 4,
+            zones: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn zones_round_robin() {
+        let c = small();
+        assert_eq!(c.nodes_in_zone(0).count(), 2);
+        assert_eq!(c.nodes_in_zone(1).count(), 2);
+        assert!(c.zone_latency_ms[0][1] > c.zone_latency_ms[0][0]);
+    }
+
+    #[test]
+    fn place_and_remove_accounting() {
+        let mut c = small();
+        let lim = Resources::new(2000.0, 8000.0, 1000.0);
+        let id = c.place_pod("svc", 0, lim).unwrap();
+        assert_eq!(c.nodes[0].allocated, lim);
+        c.check_invariants().unwrap();
+        assert!(c.remove_pod(id));
+        assert_eq!(c.nodes[0].allocated, Resources::ZERO);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn placement_rejects_overflow() {
+        let mut c = small();
+        let big = Resources::new(9000.0, 1000.0, 100.0);
+        assert!(c.place_pod("svc", 0, big).is_none());
+        // Fill then reject.
+        let half = Resources::new(4000.0, 15000.0, 5000.0);
+        assert!(c.place_pod("a", 1, half).is_some());
+        assert!(c.place_pod("b", 1, half).is_some());
+        assert!(c.place_pod("c", 1, Resources::new(1.0, 1000.0, 1.0)).is_none());
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn oom_kill_releases_allocation() {
+        let mut c = small();
+        let lim = Resources::new(1000.0, 4000.0, 100.0);
+        let id = c.place_pod("svc", 2, lim).unwrap();
+        c.pods[0].usage = Resources::new(500.0, 5000.0, 10.0); // over RAM limit
+        let killed = c.sweep_oom();
+        assert_eq!(killed, vec![id]);
+        assert_eq!(c.oom_kills, 1);
+        assert_eq!(c.nodes[2].allocated, Resources::ZERO);
+        assert_eq!(c.pods[0].state, PodState::OomKilled);
+        // Double sweep must not double-release.
+        assert!(c.sweep_oom().is_empty());
+        assert!(c.remove_pod(id));
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn usage_within_limit_not_killed() {
+        let mut c = small();
+        c.place_pod("svc", 0, Resources::new(1000.0, 4000.0, 100.0)).unwrap();
+        c.pods[0].usage = Resources::new(2000.0, 3999.0, 500.0); // CPU over, RAM under
+        assert!(c.sweep_oom().is_empty());
+    }
+
+    #[test]
+    fn ratios() {
+        let mut c = small();
+        let quarter_ram = c.nodes[0].capacity.ram_mb; // 1 node of 4
+        c.place_pod("svc", 0, Resources::new(0.0, quarter_ram, 0.0)).unwrap();
+        let r = c.allocation_ratio();
+        assert!((r.ram_mb - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn remove_app_clears_all() {
+        let mut c = small();
+        for node in 0..3 {
+            c.place_pod("svc", node, Resources::new(100.0, 100.0, 10.0)).unwrap();
+        }
+        c.place_pod("other", 3, Resources::new(100.0, 100.0, 10.0)).unwrap();
+        c.remove_app("svc");
+        assert_eq!(c.running_pod_count("svc"), 0);
+        assert_eq!(c.running_pod_count("other"), 1);
+        c.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,157 @@
+//! Generic discrete-event simulation engine (binary-heap event queue).
+//!
+//! The microservice application model runs on top of this: request arrivals,
+//! per-pod queueing, service completions. Time is f64 seconds.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event carrying an opaque payload `E`, ordered by time (min-heap).
+#[derive(Clone, Debug)]
+struct Scheduled<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap; tie-break on sequence for determinism.
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+    pub processed: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> Self {
+        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Schedule `payload` at absolute time `t` (must be >= now).
+    pub fn schedule(&mut self, t: f64, payload: E) {
+        debug_assert!(t >= self.now - 1e-9, "scheduling into the past: {t} < {}", self.now);
+        self.seq += 1;
+        self.heap.push(Scheduled { time: t.max(self.now), seq: self.seq, payload });
+    }
+
+    pub fn schedule_in(&mut self, dt: f64, payload: E) {
+        self.schedule(self.now + dt.max(0.0), payload);
+    }
+
+    /// Pop the next event if it occurs at or before `horizon`.
+    pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
+        if let Some(top) = self.heap.peek() {
+            if top.time <= horizon {
+                let ev = self.heap.pop().unwrap();
+                self.now = ev.time;
+                self.processed += 1;
+                return Some((ev.time, ev.payload));
+            }
+        }
+        None
+    }
+
+    /// Advance the clock to `t` without processing (end-of-window).
+    pub fn advance_to(&mut self, t: f64) {
+        if t > self.now {
+            self.now = t;
+        }
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule(3.0, "c");
+        q.schedule(1.0, "a");
+        q.schedule(2.0, "b");
+        let mut out = vec![];
+        while let Some((t, e)) = q.next_before(f64::INFINITY) {
+            out.push((t, e));
+        }
+        assert_eq!(out, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
+        assert_eq!(q.processed, 3);
+    }
+
+    #[test]
+    fn ties_fifo_by_insertion() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, 1);
+        q.schedule(1.0, 2);
+        q.schedule(1.0, 3);
+        let mut out = vec![];
+        while let Some((_, e)) = q.next_before(10.0) {
+            out.push(e);
+        }
+        assert_eq!(out, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn horizon_respected() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, ());
+        q.schedule(5.0, ());
+        assert!(q.next_before(2.0).is_some());
+        assert!(q.next_before(2.0).is_none());
+        assert_eq!(q.len(), 1);
+        q.advance_to(2.0);
+        assert_eq!(q.now(), 2.0);
+        assert!(q.next_before(5.0).is_some());
+    }
+
+    #[test]
+    fn clock_monotone() {
+        let mut q = EventQueue::new();
+        q.schedule(2.0, ());
+        let _ = q.next_before(10.0);
+        assert_eq!(q.now(), 2.0);
+        q.schedule_in(0.5, ());
+        let (t, _) = q.next_before(10.0).unwrap();
+        assert_eq!(t, 2.5);
+        q.advance_to(1.0); // no-op backwards
+        assert_eq!(q.now(), 2.5);
+    }
+}

@@ -1,0 +1,190 @@
+//! Interference injection — the paper's cloud-uncertainty generator (Sec. 3):
+//! resource-contention events arrive as a Poisson process (default rate
+//! 0.5/s cluster-wide), each stealing a uniform [0, 50%] slice of one
+//! resource (CPU, RAM bandwidth, or network) on one node for an
+//! exponentially-distributed duration.
+
+use super::cluster::Cluster;
+use super::resources::Resources;
+use crate::config::InterferenceConfig;
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InterferenceKind {
+    Cpu,
+    RamBandwidth,
+    Network,
+}
+
+#[derive(Clone, Debug)]
+pub struct InterferenceEvent {
+    pub kind: InterferenceKind,
+    pub node: usize,
+    /// Fraction of capacity stolen, in [0, max_intensity].
+    pub intensity: f64,
+    pub ends_at: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct InterferenceModel {
+    cfg: InterferenceConfig,
+    active: Vec<InterferenceEvent>,
+    rng: Pcg64,
+    pub events_injected: u64,
+}
+
+impl InterferenceModel {
+    pub fn new(cfg: InterferenceConfig, rng: Pcg64) -> Self {
+        Self { cfg, active: vec![], rng, events_injected: 0 }
+    }
+
+    pub fn disabled() -> Self {
+        Self::new(InterferenceConfig { enabled: false, ..Default::default() }, Pcg64::new(0))
+    }
+
+    /// Advance simulated time by `dt` seconds ending at `now`; spawn/expire
+    /// events and write per-node contention factors into the cluster.
+    pub fn step(&mut self, cluster: &mut Cluster, now: f64, dt: f64) {
+        self.active.retain(|e| e.ends_at > now);
+        if self.cfg.enabled && dt > 0.0 {
+            let n_new = self.rng.poisson(self.cfg.rate_per_sec * dt);
+            for _ in 0..n_new {
+                let kind = *self.rng.choice(&[
+                    InterferenceKind::Cpu,
+                    InterferenceKind::RamBandwidth,
+                    InterferenceKind::Network,
+                ]);
+                let node = self.rng.below(cluster.nodes.len());
+                let intensity = self.rng.uniform(0.0, self.cfg.max_intensity);
+                let dur = self.rng.exponential(1.0 / self.cfg.mean_duration_s.max(1e-6));
+                self.active.push(InterferenceEvent { kind, node, intensity, ends_at: now + dur });
+                self.events_injected += 1;
+            }
+        }
+        // Aggregate into per-node contention, saturating at 0.9.
+        for n in cluster.nodes.iter_mut() {
+            n.contention = Resources::ZERO;
+        }
+        for e in &self.active {
+            let c = &mut cluster.nodes[e.node].contention;
+            match e.kind {
+                InterferenceKind::Cpu => c.cpu_m = (c.cpu_m + e.intensity).min(0.9),
+                InterferenceKind::RamBandwidth => c.ram_mb = (c.ram_mb + e.intensity).min(0.9),
+                InterferenceKind::Network => c.net_mbps = (c.net_mbps + e.intensity).min(0.9),
+            }
+        }
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Mean contention sampled over a window — used by batch-job models that
+    /// integrate interference over a whole run without ticking per-second.
+    pub fn sample_window_contention(&mut self, n_nodes: usize, window_s: f64) -> Resources {
+        if !self.cfg.enabled || window_s <= 0.0 {
+            return Resources::ZERO;
+        }
+        // Expected number of concurrently-active events per node:
+        // rate * mean_duration / n_nodes (M/G/inf occupancy), each with mean
+        // intensity max/2 on one of three resources. Sample around it.
+        let occupancy = self.cfg.rate_per_sec * self.cfg.mean_duration_s / n_nodes.max(1) as f64;
+        let mean_each = occupancy * self.cfg.max_intensity * 0.5 / 3.0;
+        let draw = |rng: &mut Pcg64| -> f64 {
+            // Fewer independent events in shorter windows => noisier.
+            let k = (window_s / self.cfg.mean_duration_s).max(1.0).sqrt();
+            (mean_each * (1.0 + rng.normal() / k)).clamp(0.0, 0.9)
+        };
+        let r = Resources::new(
+            draw(&mut self.rng),
+            draw(&mut self.rng),
+            draw(&mut self.rng),
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::new(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn poisson_arrivals_roughly_match_rate() {
+        let mut c = cluster();
+        let cfg = InterferenceConfig::default(); // 0.5/s
+        let mut m = InterferenceModel::new(cfg, Pcg64::new(11));
+        let mut t = 0.0;
+        for _ in 0..2000 {
+            t += 1.0;
+            m.step(&mut c, t, 1.0);
+        }
+        let rate = m.events_injected as f64 / t;
+        assert!((rate - 0.5).abs() < 0.05, "rate={rate}");
+    }
+
+    #[test]
+    fn events_expire() {
+        let mut c = cluster();
+        let cfg = InterferenceConfig { mean_duration_s: 5.0, ..Default::default() };
+        let mut m = InterferenceModel::new(cfg, Pcg64::new(3));
+        for i in 1..=100 {
+            m.step(&mut c, i as f64, 1.0);
+        }
+        assert!(m.active_count() > 0);
+        // Jump far into the future with no dt: all events must expire.
+        m.step(&mut c, 1e9, 0.0);
+        assert_eq!(m.active_count(), 0);
+        assert!(c.mean_contention().cpu_m.abs() < 1e-12);
+    }
+
+    #[test]
+    fn contention_bounded() {
+        let mut c = cluster();
+        let cfg = InterferenceConfig {
+            rate_per_sec: 50.0,
+            max_intensity: 0.5,
+            mean_duration_s: 100.0,
+            ..Default::default()
+        };
+        let mut m = InterferenceModel::new(cfg, Pcg64::new(5));
+        for i in 1..=50 {
+            m.step(&mut c, i as f64, 1.0);
+        }
+        for n in &c.nodes {
+            assert!(n.contention.cpu_m <= 0.9 + 1e-12);
+            assert!(n.contention.ram_mb <= 0.9 + 1e-12);
+            assert!(n.contention.net_mbps <= 0.9 + 1e-12);
+            assert!(n.effective_capacity().cpu_m >= 0.05 * n.capacity.cpu_m - 1e-9);
+        }
+    }
+
+    #[test]
+    fn disabled_injects_nothing() {
+        let mut c = cluster();
+        let mut m = InterferenceModel::disabled();
+        for i in 1..=100 {
+            m.step(&mut c, i as f64, 1.0);
+        }
+        assert_eq!(m.events_injected, 0);
+        assert_eq!(m.sample_window_contention(15, 300.0), Resources::ZERO);
+    }
+
+    #[test]
+    fn window_contention_reasonable() {
+        let mut m = InterferenceModel::new(InterferenceConfig::default(), Pcg64::new(9));
+        let mut tot = 0.0;
+        let reps = 500;
+        for _ in 0..reps {
+            tot += m.sample_window_contention(15, 300.0).cpu_m;
+        }
+        let mean = tot / reps as f64;
+        // occupancy = .5*20/15 = 0.667 events/node; per-resource mean
+        // = .667 * .25 / 3 = .0556
+        assert!((mean - 0.0556).abs() < 0.01, "mean={mean}");
+    }
+}

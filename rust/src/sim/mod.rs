@@ -1,0 +1,15 @@
+//! The simulated cloud substrate: a Kubernetes-like cluster (nodes, zones,
+//! pods, scheduler, OOM semantics), stochastic interference injection, and a
+//! discrete-event engine for request-level workloads. This replaces the
+//! paper's physical Compute Canada testbed (see DESIGN.md §3 substitutions).
+
+pub mod cluster;
+pub mod des;
+pub mod interference;
+pub mod resources;
+pub mod scheduler;
+
+pub use cluster::{Cluster, Node, Pod, PodState};
+pub use interference::{InterferenceKind, InterferenceModel};
+pub use resources::Resources;
+pub use scheduler::{apply_deployment, spread_evenly, Deployment, PlacementResult};

@@ -1,0 +1,66 @@
+//! Resource vectors shared across the simulator: CPU (millicores), RAM (MB)
+//! and network bandwidth (Mbps) — the three dimensions the paper's action
+//! space rightsizes per pod.
+
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct Resources {
+    pub cpu_m: f64,
+    pub ram_mb: f64,
+    pub net_mbps: f64,
+}
+
+impl Resources {
+    pub fn new(cpu_m: f64, ram_mb: f64, net_mbps: f64) -> Self {
+        Self { cpu_m, ram_mb, net_mbps }
+    }
+
+    pub const ZERO: Resources = Resources { cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources::new(self.cpu_m + o.cpu_m, self.ram_mb + o.ram_mb, self.net_mbps + o.net_mbps)
+    }
+
+    pub fn sub(&self, o: &Resources) -> Resources {
+        Resources::new(self.cpu_m - o.cpu_m, self.ram_mb - o.ram_mb, self.net_mbps - o.net_mbps)
+    }
+
+    pub fn scale(&self, k: f64) -> Resources {
+        Resources::new(self.cpu_m * k, self.ram_mb * k, self.net_mbps * k)
+    }
+
+    /// Component-wise <=.
+    pub fn fits_in(&self, cap: &Resources) -> bool {
+        self.cpu_m <= cap.cpu_m + 1e-9
+            && self.ram_mb <= cap.ram_mb + 1e-9
+            && self.net_mbps <= cap.net_mbps + 1e-9
+    }
+
+    pub fn max0(&self) -> Resources {
+        Resources::new(self.cpu_m.max(0.0), self.ram_mb.max(0.0), self.net_mbps.max(0.0))
+    }
+
+    pub fn is_nonneg(&self) -> bool {
+        self.cpu_m >= -1e-9 && self.ram_mb >= -1e-9 && self.net_mbps >= -1e-9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arithmetic() {
+        let a = Resources::new(1000.0, 2048.0, 100.0);
+        let b = Resources::new(500.0, 1024.0, 50.0);
+        assert_eq!(a.add(&b), Resources::new(1500.0, 3072.0, 150.0));
+        assert_eq!(a.sub(&b), b);
+        assert_eq!(b.scale(2.0), a);
+    }
+
+    #[test]
+    fn fits() {
+        let cap = Resources::new(8000.0, 30720.0, 10000.0);
+        assert!(Resources::new(8000.0, 30720.0, 10000.0).fits_in(&cap));
+        assert!(!Resources::new(8001.0, 1.0, 1.0).fits_in(&cap));
+    }
+}

@@ -1,0 +1,245 @@
+//! Pod placement: turn a desired deployment (per-zone pod counts + per-pod
+//! limits) into node-level placements, kube-scheduler-style.
+//!
+//! Drone's action space includes the scheduling sub-vector x = [x_1..x_m]
+//! (pods per zone, Sec. 4.5 "Encoding of actions and contexts"); baselines
+//! use the default spreading policy. Both funnel through this module so the
+//! comparison isolates the *policy*, not the mechanism.
+
+use super::cluster::{Cluster, PodId, ZoneId};
+use super::resources::Resources;
+
+#[derive(Clone, Debug, Default)]
+pub struct Deployment {
+    pub app: String,
+    /// Desired pods per zone (the paper's scheduling sub-vector).
+    pub zone_pods: Vec<usize>,
+    pub limits: Resources,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PlacementResult {
+    pub placed: Vec<PodId>,
+    /// Pods that could not be scheduled (insufficient capacity) per zone.
+    pub pending: Vec<(ZoneId, usize)>,
+}
+
+impl PlacementResult {
+    pub fn pending_total(&self) -> usize {
+        self.pending.iter().map(|(_, k)| k).sum()
+    }
+}
+
+/// Best-fit-decreasing within each requested zone, spilling to other zones
+/// only if `allow_spill` (kube default spreads; Drone pins to zones).
+pub fn apply_deployment(
+    cluster: &mut Cluster,
+    dep: &Deployment,
+    allow_spill: bool,
+) -> PlacementResult {
+    // Rolling update: tear down the previous generation first. (The paper
+    // notes Drone follows the standard rolling-update procedure; modelling
+    // the overlap window is unnecessary for 60 s decision periods.)
+    cluster.remove_app(&dep.app);
+    let mut result = PlacementResult::default();
+    for (zone, &want) in dep.zone_pods.iter().enumerate() {
+        let mut unplaced = 0usize;
+        for _ in 0..want {
+            match place_in_zone(cluster, &dep.app, zone, dep.limits) {
+                Some(id) => result.placed.push(id),
+                None => unplaced += 1,
+            }
+        }
+        if unplaced > 0 && allow_spill {
+            let mut still = 0usize;
+            for _ in 0..unplaced {
+                match place_anywhere(cluster, &dep.app, dep.limits) {
+                    Some(id) => result.placed.push(id),
+                    None => still += 1,
+                }
+            }
+            unplaced = still;
+        }
+        if unplaced > 0 {
+            result.pending.push((zone, unplaced));
+        }
+    }
+    result
+}
+
+/// Pick the node in `zone` with the *least* free RAM that still fits
+/// (best-fit packs tightly, preserving headroom for big pods elsewhere).
+fn place_in_zone(cluster: &mut Cluster, app: &str, zone: ZoneId, lim: Resources) -> Option<PodId> {
+    let mut best: Option<(usize, f64)> = None;
+    for n in cluster.nodes.iter() {
+        if n.zone != zone {
+            continue;
+        }
+        let free = n.free();
+        if lim.fits_in(&free) {
+            let slack = free.ram_mb - lim.ram_mb;
+            if best.map_or(true, |(_, s)| slack < s) {
+                best = Some((n.id, slack));
+            }
+        }
+    }
+    best.and_then(|(node, _)| cluster.place_pod(app, node, lim))
+}
+
+fn place_anywhere(cluster: &mut Cluster, app: &str, lim: Resources) -> Option<PodId> {
+    let zones = cluster.n_zones();
+    for z in 0..zones {
+        if let Some(id) = place_in_zone(cluster, app, z, lim) {
+            return Some(id);
+        }
+    }
+    None
+}
+
+/// Apply a *set* of deployments fairly: tear all of them down, then place
+/// pods round-robin across deployments (one pod of each per round). When
+/// capacity binds, starvation is spread across services instead of
+/// zero-ing out whichever service happened to deploy last — matching how
+/// concurrent kube-scheduler queues behave in aggregate.
+pub fn apply_deployments_fair(
+    cluster: &mut Cluster,
+    deps: &[Deployment],
+    allow_spill: bool,
+) -> Vec<PlacementResult> {
+    for dep in deps {
+        cluster.remove_app(&dep.app);
+    }
+    let mut results: Vec<PlacementResult> = vec![PlacementResult::default(); deps.len()];
+    let max_rounds = deps
+        .iter()
+        .map(|d| d.zone_pods.iter().max().copied().unwrap_or(0))
+        .max()
+        .unwrap_or(0);
+    for round in 0..max_rounds {
+        for (di, dep) in deps.iter().enumerate() {
+            for (zone, &want) in dep.zone_pods.iter().enumerate() {
+                if round >= want {
+                    continue;
+                }
+                let placed = place_in_zone(cluster, &dep.app, zone, dep.limits)
+                    .or_else(|| {
+                        if allow_spill {
+                            place_anywhere(cluster, &dep.app, dep.limits)
+                        } else {
+                            None
+                        }
+                    });
+                match placed {
+                    Some(id) => results[di].placed.push(id),
+                    None => {
+                        if let Some(e) =
+                            results[di].pending.iter_mut().find(|(z, _)| *z == zone)
+                        {
+                            e.1 += 1;
+                        } else {
+                            results[di].pending.push((zone, 1));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    results
+}
+
+/// Even spreading used by the HPA/default baseline: k pods over all zones.
+pub fn spread_evenly(total: usize, zones: usize) -> Vec<usize> {
+    let base = total / zones.max(1);
+    let extra = total % zones.max(1);
+    (0..zones).map(|z| base + usize::from(z < extra)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn cluster() -> Cluster {
+        Cluster::new(&ClusterConfig { workers: 8, zones: 4, ..Default::default() })
+    }
+
+    #[test]
+    fn places_requested_counts() {
+        let mut c = cluster();
+        let dep = Deployment {
+            app: "svc".into(),
+            zone_pods: vec![2, 1, 0, 3],
+            limits: Resources::new(1000.0, 2048.0, 500.0),
+        };
+        let r = apply_deployment(&mut c, &dep, false);
+        assert_eq!(r.placed.len(), 6);
+        assert!(r.pending.is_empty());
+        // Zone pinning respected.
+        for z in 0..4 {
+            let in_zone = c
+                .pods_of("svc")
+                .filter(|p| c.nodes[p.node].zone == z)
+                .count();
+            assert_eq!(in_zone, dep.zone_pods[z], "zone {z}");
+        }
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn rolling_update_replaces_pods() {
+        let mut c = cluster();
+        let mut dep = Deployment {
+            app: "svc".into(),
+            zone_pods: vec![4, 0, 0, 0],
+            limits: Resources::new(500.0, 1024.0, 100.0),
+        };
+        apply_deployment(&mut c, &dep, false);
+        dep.zone_pods = vec![1, 1, 0, 0];
+        let r = apply_deployment(&mut c, &dep, false);
+        assert_eq!(r.placed.len(), 2);
+        assert_eq!(c.running_pod_count("svc"), 2);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn overflow_goes_pending_or_spills() {
+        let mut c = cluster();
+        // Each zone has 2 nodes * 30 GB; pods of 20 GB -> 2 per zone max
+        // (one per node: 2x20 GB does not fit a 30 GB node).
+        let dep = Deployment {
+            app: "big".into(),
+            zone_pods: vec![5, 0, 0, 0],
+            limits: Resources::new(100.0, 20_000.0, 10.0),
+        };
+        let r = apply_deployment(&mut c, &dep, false);
+        assert_eq!(r.placed.len(), 2);
+        assert_eq!(r.pending_total(), 3);
+
+        let r2 = apply_deployment(&mut c, &dep, true);
+        assert_eq!(r2.placed.len(), 5, "spill places all 5 across zones");
+        assert_eq!(r2.pending_total(), 0);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn best_fit_packs_tightly() {
+        let mut c = cluster();
+        // Pre-load node 0 so it has less free RAM than node 4 (same zone 0).
+        c.place_pod("filler", 0, Resources::new(100.0, 20_000.0, 10.0)).unwrap();
+        let dep = Deployment {
+            app: "svc".into(),
+            zone_pods: vec![1, 0, 0, 0],
+            limits: Resources::new(100.0, 5_000.0, 10.0),
+        };
+        apply_deployment(&mut c, &dep, false);
+        let pod = c.pods_of("svc").next().unwrap();
+        assert_eq!(pod.node, 0, "best-fit should pick the fuller node");
+    }
+
+    #[test]
+    fn spread_evenly_sums() {
+        assert_eq!(spread_evenly(10, 4), vec![3, 3, 2, 2]);
+        assert_eq!(spread_evenly(3, 4), vec![1, 1, 1, 0]);
+        assert_eq!(spread_evenly(0, 4), vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,113 @@
+//! Workload-intensity trace generator — the stand-in for the paper's 6-hour
+//! Twitter Streaming sample (Fig. 8a): a diurnal sinusoidal envelope with
+//! minute-scale stochastic ripple and occasional bursts, scaled to the
+//! simulated cluster.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct DiurnalConfig {
+    /// Baseline request rate (req/s) at the diurnal trough.
+    pub base_rps: f64,
+    /// Peak-to-trough amplitude (req/s).
+    pub amplitude_rps: f64,
+    /// Diurnal period in seconds (24 h scaled into the experiment span).
+    pub period_s: f64,
+    /// Relative ripple (lognormal-ish multiplicative noise per sample).
+    pub ripple: f64,
+    /// Probability per sample of a short burst, and its multiplier.
+    pub burst_prob: f64,
+    pub burst_mult: f64,
+}
+
+impl Default for DiurnalConfig {
+    fn default() -> Self {
+        // A 6-hour window covering one trough-to-peak-to-trough swing,
+        // matching the paper's Fig. 8a shape at our cluster's scale.
+        Self {
+            base_rps: 60.0,
+            amplitude_rps: 140.0,
+            period_s: 6.0 * 3600.0,
+            ripple: 0.08,
+            burst_prob: 0.01,
+            burst_mult: 1.8,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct DiurnalTrace {
+    cfg: DiurnalConfig,
+    rng: Pcg64,
+    /// Smoothed ripple state (AR(1)).
+    ripple_state: f64,
+}
+
+impl DiurnalTrace {
+    pub fn new(cfg: DiurnalConfig, rng: Pcg64) -> Self {
+        Self { cfg, rng, ripple_state: 0.0 }
+    }
+
+    /// Deterministic diurnal envelope at time t (no noise).
+    pub fn envelope(&self, t: f64) -> f64 {
+        let phase = 2.0 * std::f64::consts::PI * t / self.cfg.period_s;
+        // Trough at t=0, peak mid-window; mild second harmonic for the
+        // characteristic asymmetric social-traffic shape.
+        let s = 0.5 - 0.5 * phase.cos() + 0.08 * (2.0 * phase).sin();
+        self.cfg.base_rps + self.cfg.amplitude_rps * s.clamp(0.0, 1.2)
+    }
+
+    /// Sample the request rate for the window starting at `t` (stateful:
+    /// ripple is AR(1)-correlated across consecutive samples).
+    pub fn sample_rate(&mut self, t: f64) -> f64 {
+        let env = self.envelope(t);
+        self.ripple_state = 0.7 * self.ripple_state + 0.3 * self.rng.normal();
+        let mut rate = env * (1.0 + self.cfg.ripple * self.ripple_state);
+        if self.rng.chance(self.cfg.burst_prob) {
+            rate *= self.cfg.burst_mult;
+        }
+        rate.max(1.0)
+    }
+
+    /// Generate a full series of (t, rate) samples every `dt` seconds.
+    pub fn series(&mut self, duration_s: f64, dt: f64) -> Vec<(f64, f64)> {
+        let n = (duration_s / dt).ceil() as usize;
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * dt;
+                (t, self.sample_rate(t))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn envelope_trough_and_peak() {
+        let tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(0));
+        let trough = tr.envelope(0.0);
+        let peak = tr.envelope(3.0 * 3600.0);
+        assert!(peak > trough * 2.0, "peak={peak} trough={trough}");
+    }
+
+    #[test]
+    fn series_positive_and_diurnal() {
+        let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(1));
+        let s = tr.series(6.0 * 3600.0, 60.0);
+        assert_eq!(s.len(), 360);
+        assert!(s.iter().all(|(_, r)| *r >= 1.0));
+        let first_hour: f64 = s[..60].iter().map(|x| x.1).sum::<f64>() / 60.0;
+        let mid: f64 = s[150..210].iter().map(|x| x.1).sum::<f64>() / 60.0;
+        assert!(mid > first_hour * 1.5, "diurnal swing visible: {first_hour} vs {mid}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(5));
+        let mut b = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(5));
+        assert_eq!(a.series(3600.0, 60.0), b.series(3600.0, 60.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! Exogenous trace generators: the diurnal request-rate workload (the
+//! paper's Twitter-sample stand-in) and mean-reverting jump-diffusion spot
+//! prices (the Fig. 5 stand-in).
+
+pub mod diurnal;
+pub mod spot;
+
+pub use diurnal::{DiurnalConfig, DiurnalTrace};
+pub use spot::{SpotConfig, SpotTrace};

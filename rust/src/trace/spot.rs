@@ -1,0 +1,119 @@
+//! Spot-price trace generator — the stand-in for the paper's Fig. 5 (AWS
+//! m5.16xlarge / c5.18xlarge / r5.16xlarge April-2023 spot prices): a
+//! mean-reverting jump-diffusion per instance family. Prices are exogenous,
+//! unpredictable, and family-specific — exactly the contextual role they
+//! play in Drone's public-cloud objective.
+
+use crate::util::rng::Pcg64;
+
+#[derive(Clone, Debug)]
+pub struct SpotConfig {
+    /// Long-run mean price, $/hour.
+    pub mean_price: f64,
+    /// Mean-reversion speed per hour.
+    pub reversion: f64,
+    /// Diffusion volatility per sqrt(hour).
+    pub volatility: f64,
+    /// Jump probability per hour and jump magnitude (relative).
+    pub jump_prob: f64,
+    pub jump_scale: f64,
+    /// Price floor/cap as fractions of the mean.
+    pub floor_frac: f64,
+    pub cap_frac: f64,
+}
+
+impl SpotConfig {
+    /// Presets loosely shaped like the three families in Fig. 5.
+    pub fn m5_16xlarge() -> Self {
+        Self { mean_price: 1.33, reversion: 0.08, volatility: 0.05, jump_prob: 0.02, jump_scale: 0.25, floor_frac: 0.55, cap_frac: 1.9 }
+    }
+    pub fn c5_18xlarge() -> Self {
+        Self { mean_price: 1.55, reversion: 0.05, volatility: 0.08, jump_prob: 0.04, jump_scale: 0.35, floor_frac: 0.5, cap_frac: 2.2 }
+    }
+    pub fn r5_16xlarge() -> Self {
+        Self { mean_price: 1.12, reversion: 0.10, volatility: 0.04, jump_prob: 0.015, jump_scale: 0.2, floor_frac: 0.6, cap_frac: 1.8 }
+    }
+    /// GCP E2-family preset used for the evaluation's cost model (Sec. 5.1).
+    pub fn gcp_e2() -> Self {
+        Self { mean_price: 0.067, reversion: 0.12, volatility: 0.05, jump_prob: 0.02, jump_scale: 0.3, floor_frac: 0.5, cap_frac: 2.0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SpotTrace {
+    cfg: SpotConfig,
+    rng: Pcg64,
+    price: f64,
+}
+
+impl SpotTrace {
+    pub fn new(cfg: SpotConfig, rng: Pcg64) -> Self {
+        let price = cfg.mean_price;
+        Self { cfg, rng, price }
+    }
+
+    pub fn current(&self) -> f64 {
+        self.price
+    }
+
+    /// Advance by `dt_hours` and return the new price.
+    pub fn step(&mut self, dt_hours: f64) -> f64 {
+        let c = &self.cfg;
+        let drift = c.reversion * (c.mean_price - self.price) * dt_hours;
+        let diff = c.volatility * c.mean_price * dt_hours.sqrt() * self.rng.normal();
+        let mut p = self.price + drift + diff;
+        if self.rng.chance(c.jump_prob * dt_hours) {
+            let dir = if self.rng.chance(0.6) { 1.0 } else { -1.0 };
+            p += dir * c.jump_scale * c.mean_price * self.rng.f64();
+        }
+        self.price = p.clamp(c.floor_frac * c.mean_price, c.cap_frac * c.mean_price);
+        self.price
+    }
+
+    /// Generate (t_hours, price) over `hours` at `dt_hours` resolution.
+    pub fn series(&mut self, hours: f64, dt_hours: f64) -> Vec<(f64, f64)> {
+        let n = (hours / dt_hours).ceil() as usize;
+        (0..n)
+            .map(|i| {
+                let t = i as f64 * dt_hours;
+                (t, self.step(dt_hours))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stays_within_bounds() {
+        let cfg = SpotConfig::c5_18xlarge();
+        let (lo, hi) = (cfg.floor_frac * cfg.mean_price, cfg.cap_frac * cfg.mean_price);
+        let mut tr = SpotTrace::new(cfg, Pcg64::new(1));
+        for (_, p) in tr.series(24.0 * 30.0, 0.25) {
+            assert!(p >= lo - 1e-12 && p <= hi + 1e-12, "p={p}");
+        }
+    }
+
+    #[test]
+    fn mean_reverts_to_long_run_mean() {
+        let cfg = SpotConfig::m5_16xlarge();
+        let mean = cfg.mean_price;
+        let mut tr = SpotTrace::new(cfg, Pcg64::new(2));
+        let s = tr.series(24.0 * 60.0, 1.0);
+        let avg: f64 = s.iter().map(|x| x.1).sum::<f64>() / s.len() as f64;
+        assert!((avg - mean).abs() / mean < 0.25, "avg={avg} mean={mean}");
+    }
+
+    #[test]
+    fn traces_vary_and_differ_across_families() {
+        let mut a = SpotTrace::new(SpotConfig::m5_16xlarge(), Pcg64::new(3));
+        let mut b = SpotTrace::new(SpotConfig::r5_16xlarge(), Pcg64::new(3));
+        let sa = a.series(24.0 * 30.0, 1.0);
+        let sb = b.series(24.0 * 30.0, 1.0);
+        let va: Vec<f64> = sa.iter().map(|x| x.1).collect();
+        assert!(crate::util::stats::std_dev(&va) > 0.01, "price must move");
+        assert_ne!(sa, sb);
+    }
+}

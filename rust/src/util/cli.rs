@@ -1,0 +1,122 @@
+//! Minimal argument parser (no clap in the offline vendor set).
+//!
+//! Supports: a positional subcommand chain, `--flag`, `--key value` and
+//! `--key=value`. Typed getters with defaults keep call sites compact.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Self {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.options.insert(rest.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv)
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        if self.has_flag(key) {
+            return true;
+        }
+        self.get(key)
+            .map(|v| matches!(v, "1" | "true" | "yes" | "on"))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["experiment", "fig7a", "--seed", "7", "--steps=50"]);
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positional[1], "fig7a");
+        assert_eq!(a.get_u64("seed", 0), 7);
+        assert_eq!(a.get_usize("steps", 0), 50);
+    }
+
+    #[test]
+    fn flags_and_defaults() {
+        let a = parse(&["run", "--verbose", "--alpha=0.3"]);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("quiet"));
+        assert!((a.get_f64("alpha", 0.5) - 0.3).abs() < 1e-12);
+        assert!((a.get_f64("beta", 0.5) - 0.5).abs() < 1e-12);
+        assert_eq!(a.get_str("mode", "public"), "public");
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse(&["--dry-run", "--out", "x.csv"]);
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn bool_variants() {
+        let a = parse(&["--ctx=true", "--safe=0"]);
+        assert!(a.get_bool("ctx", false));
+        assert!(!a.get_bool("safe", true));
+        assert!(a.get_bool("missing", true));
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny CSV writer: every experiment also persists its series/rows under
+//! results/<id>.csv so figures can be re-plotted outside the binary.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+pub struct CsvWriter {
+    path: PathBuf,
+    buf: String,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn new(path: impl AsRef<Path>, header: &[&str]) -> Self {
+        let mut buf = String::new();
+        buf.push_str(&header.join(","));
+        buf.push('\n');
+        Self {
+            path: path.as_ref().to_path_buf(),
+            buf,
+            cols: header.len(),
+        }
+    }
+
+    /// Convenience constructor writing under results/.
+    pub fn for_experiment(id: &str, header: &[&str]) -> Self {
+        let dir = results_dir();
+        let _ = fs::create_dir_all(&dir);
+        Self::new(dir.join(format!("{id}.csv")), header)
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.cols, "csv row arity mismatch");
+        let escaped: Vec<String> = cells.iter().map(|c| escape(c)).collect();
+        self.buf.push_str(&escaped.join(","));
+        self.buf.push('\n');
+    }
+
+    pub fn row_f64(&mut self, cells: &[f64]) {
+        let owned: Vec<String> = cells.iter().map(|v| format!("{v}")).collect();
+        self.row(&owned);
+    }
+
+    pub fn finish(self) -> std::io::Result<PathBuf> {
+        if let Some(parent) = self.path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        let mut f = fs::File::create(&self.path)?;
+        f.write_all(self.buf.as_bytes())?;
+        Ok(self.path)
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// results/ next to the workspace root (overridable for tests).
+pub fn results_dir() -> PathBuf {
+    std::env::var("DRONE_RESULTS_DIR")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("results"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_csv() {
+        let dir = std::env::temp_dir().join(format!("drone-csv-{}", std::process::id()));
+        let mut w = CsvWriter::new(dir.join("t.csv"), &["a", "b"]);
+        w.row_f64(&[1.0, 2.5]);
+        w.row(&["x,y".into(), "q\"z".into()]);
+        let p = w.finish().unwrap();
+        let body = fs::read_to_string(&p).unwrap();
+        assert_eq!(body, "a,b\n1,2.5\n\"x,y\",\"q\"\"z\"\n");
+        let _ = fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        let mut w = CsvWriter::new("/tmp/never-written.csv", &["a", "b"]);
+        w.row(&["one".into()]);
+    }
+}

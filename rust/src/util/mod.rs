@@ -1,0 +1,9 @@
+//! Support utilities implemented in-repo (the offline vendor set carries no
+//! rand/clap/serde/criterion): RNG + distributions, statistics, CLI parsing,
+//! table rendering and CSV output.
+
+pub mod cli;
+pub mod csv;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,122 @@
+//! Cross-layer integration: the AOT'd L1/L2 artifact (Pallas Matern kernel
+//! inside the JAX GP graph, loaded via PJRT) must numerically match the
+//! native-rust GP mirror on random windows — the contract the coordinator
+//! relies on when it swaps backends.
+//!
+//! These tests skip cleanly when artifacts/ has not been built
+//! (`make artifacts`), so `cargo test` stays green in a bare checkout.
+
+use drone::bandit::gp::{self, GpHyper};
+use drone::runtime::{Backend, PosteriorRequest, XlaRuntime};
+use drone::util::rng::Pcg64;
+
+fn artifacts_dir() -> Option<String> {
+    let dir = std::env::var("DRONE_ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".into());
+    if std::path::Path::new(&dir).join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: no artifacts at {dir} (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_window(
+    rng: &mut Pcg64,
+    n: usize,
+    m: usize,
+    d: usize,
+    active: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let z: Vec<f64> = (0..n * d).map(|_| rng.f64()).collect();
+    let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let mut mask = vec![0.0; n];
+    for v in mask[..active].iter_mut() {
+        *v = 1.0;
+    }
+    let x: Vec<f64> = (0..m * d).map(|_| rng.f64()).collect();
+    (z, y, mask, x)
+}
+
+#[test]
+fn xla_artifact_matches_native_gp() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).expect("open runtime");
+    let mut backend = Backend::Xla(rt);
+    let mut rng = Pcg64::new(0xA11A);
+    for &(n, m, active) in &[(32usize, 256usize, 32usize), (32, 256, 7), (32, 64, 1), (64, 256, 50)] {
+        let d = 13;
+        let (z, y, mask, x) = rand_window(&mut rng, n, m, d, active);
+        for hyp in [
+            GpHyper::default(),
+            GpHyper { noise_var: 0.2, lengthscale: 1.5, signal_var: 4.0 },
+        ] {
+            let (mu_n, sig_n) = gp::gp_posterior(&z, &y, &mask, &x, d, hyp);
+            let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp };
+            let (mu_x, sig_x) = backend.posterior(&req).expect("xla posterior");
+            for i in 0..m {
+                assert!(
+                    (mu_n[i] - mu_x[i]).abs() < 1e-4,
+                    "n={n} m={m} active={active} mu[{i}]: {} vs {}",
+                    mu_n[i],
+                    mu_x[i]
+                );
+                assert!(
+                    (sig_n[i] - sig_x[i]).abs() < 1e-4,
+                    "n={n} m={m} active={active} sigma[{i}]: {} vs {}",
+                    sig_n[i],
+                    sig_x[i]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_empty_window_prior() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).expect("open runtime");
+    let mut backend = Backend::Xla(rt);
+    let mut rng = Pcg64::new(7);
+    let (z, y, _mask, x) = rand_window(&mut rng, 32, 64, 13, 0);
+    let mask = vec![0.0; 32];
+    let hyp = GpHyper { signal_var: 2.0, ..Default::default() };
+    let (mu, sigma) = backend
+        .posterior(&PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d: 13, hyp })
+        .unwrap();
+    for i in 0..mu.len() {
+        assert!(mu[i].abs() < 1e-5, "prior mean");
+        assert!((sigma[i] - 2.0f64.sqrt()).abs() < 1e-4, "prior sigma");
+    }
+}
+
+#[test]
+fn xla_artifact_deterministic_across_calls() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = XlaRuntime::open(&dir).expect("open runtime");
+    let mut backend = Backend::Xla(rt);
+    let mut rng = Pcg64::new(9);
+    let (z, y, mask, x) = rand_window(&mut rng, 32, 256, 13, 20);
+    let hyp = GpHyper::default();
+    let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d: 13, hyp };
+    let (mu1, sig1) = backend.posterior(&req).unwrap();
+    let (mu2, sig2) = backend.posterior(&req).unwrap();
+    assert_eq!(mu1, mu2);
+    assert_eq!(sig1, sig2);
+}
+
+#[test]
+fn full_drone_loop_on_xla_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    use drone::apps::batch::BatchWorkload;
+    use drone::config::SystemConfig;
+    use drone::experiments::{run_batch_env, BatchEnvConfig, CloudSetting};
+    let mut sys = SystemConfig::default();
+    sys.artifacts_dir = dir;
+    sys.bandit.candidates = 256;
+    let mut backend = Backend::auto(&sys.artifacts_dir);
+    assert_eq!(backend.name(), "xla");
+    let env = BatchEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 8);
+    let recs = run_batch_env("drone", &env, &sys, &mut backend, 5);
+    assert_eq!(recs.len(), 8);
+    assert!(recs.iter().all(|r| r.halted || r.perf_raw.is_finite()));
+}

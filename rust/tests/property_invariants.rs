@@ -1,0 +1,246 @@
+//! Property-based invariant tests over the substrates (DESIGN.md §6):
+//! randomized operation sequences (in-repo generator; no proptest offline)
+//! asserting the invariants that every experiment silently relies on.
+
+use drone::apps::microservice::{run_window, ServiceGraph};
+use drone::bandit::encode::{Action, ActionSpace};
+use drone::bandit::gp::{gp_posterior, GpHyper};
+use drone::config::ClusterConfig;
+use drone::sim::cluster::Cluster;
+use drone::sim::resources::Resources;
+use drone::sim::scheduler::{apply_deployment, apply_deployments_fair, Deployment};
+use drone::util::rng::Pcg64;
+
+fn rand_limits(rng: &mut Pcg64) -> Resources {
+    Resources::new(
+        rng.uniform(100.0, 6000.0),
+        rng.uniform(128.0, 20_000.0),
+        rng.uniform(50.0, 5000.0),
+    )
+}
+
+fn rand_zone_pods(rng: &mut Pcg64, zones: usize) -> Vec<usize> {
+    (0..zones).map(|_| rng.below(7)).collect()
+}
+
+/// Invariant: no operation sequence may over-allocate a node or drift the
+/// allocation accounting.
+#[test]
+fn prop_cluster_accounting_under_random_ops() {
+    let mut rng = Pcg64::new(101);
+    for case in 0..60 {
+        let mut cluster = Cluster::new(&ClusterConfig {
+            workers: 4 + rng.below(12),
+            zones: 2 + rng.below(3),
+            ..Default::default()
+        });
+        let apps: [&str; 3] = ["a", "b", "c"];
+        for op in 0..40 {
+            match rng.below(4) {
+                0 | 1 => {
+                    let dep = Deployment {
+                        app: (*rng.choice(&apps)).to_string(),
+                        zone_pods: rand_zone_pods(&mut rng, cluster.n_zones()),
+                        limits: rand_limits(&mut rng),
+                    };
+                    apply_deployment(&mut cluster, &dep, rng.chance(0.5));
+                }
+                2 => {
+                    // Random usage + OOM sweep.
+                    for i in 0..cluster.pods.len() {
+                        let lim = cluster.pods[i].limits;
+                        cluster.pods[i].usage =
+                            Resources::new(lim.cpu_m, lim.ram_mb * rng.uniform(0.2, 1.4), 0.0);
+                    }
+                    cluster.sweep_oom();
+                }
+                _ => {
+                    let app = *rng.choice(&apps);
+                    cluster.remove_app(app);
+                }
+            }
+            cluster
+                .check_invariants()
+                .unwrap_or_else(|e| panic!("case {case} op {op}: {e}"));
+        }
+    }
+}
+
+/// Invariant: fair multi-deployment placement never exceeds capacity and
+/// places exactly requested-or-pending for every deployment; when capacity
+/// binds, starvation is spread (no service gets zero while another gets
+/// its full request at the same per-pod size).
+#[test]
+fn prop_fair_scheduler_spreads_starvation() {
+    let mut rng = Pcg64::new(202);
+    for case in 0..40 {
+        let mut cluster = Cluster::new(&ClusterConfig {
+            workers: 6,
+            zones: 3,
+            ..Default::default()
+        });
+        let lim = rand_limits(&mut rng);
+        let zone_pods = vec![1 + rng.below(6); 3];
+        let deps: Vec<Deployment> = (0..8)
+            .map(|i| Deployment {
+                app: format!("svc{i}"),
+                zone_pods: zone_pods.clone(),
+                limits: lim,
+            })
+            .collect();
+        let results = apply_deployments_fair(&mut cluster, &deps, true);
+        cluster.check_invariants().unwrap();
+        let want: usize = zone_pods.iter().sum();
+        let placed: Vec<usize> = results.iter().map(|r| r.placed.len()).collect();
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(
+                r.placed.len() + r.pending_total(),
+                want,
+                "case {case} svc{i}: placed+pending == requested"
+            );
+        }
+        // Fairness granularity is one round = one pod per requested zone:
+        // when capacity runs out mid-round, services differ by at most the
+        // number of zones — never "first service gets everything".
+        let max = placed.iter().max().unwrap();
+        let min = placed.iter().min().unwrap();
+        assert!(
+            max - min <= zone_pods.len(),
+            "case {case}: fair placement must balance: {placed:?}"
+        );
+    }
+}
+
+/// Invariant: DES conserves requests for arbitrary deployments and rates.
+#[test]
+fn prop_des_conservation_random_deployments() {
+    let mut rng = Pcg64::new(303);
+    let graphs = [ServiceGraph::sockshop(), ServiceGraph::socialnet()];
+    for case in 0..25 {
+        let g = &graphs[case % 2];
+        let mut cluster = Cluster::new(&ClusterConfig::default());
+        for sid in 0..g.services.len() {
+            // Some services may end up with zero pods — still must conserve.
+            let dep = Deployment {
+                app: g.app_name(sid),
+                zone_pods: rand_zone_pods(&mut rng, 4),
+                limits: Resources::new(
+                    rng.uniform(150.0, 3000.0),
+                    rng.uniform(320.0, 3000.0),
+                    rng.uniform(50.0, 1000.0),
+                ),
+            };
+            apply_deployment(&mut cluster, &dep, true);
+        }
+        let rate = rng.uniform(5.0, 400.0);
+        let s = run_window(&cluster, g, rate, 15.0, &mut rng);
+        assert_eq!(
+            s.offered,
+            s.completed + s.dropped + s.in_flight_at_end,
+            "case {case}: conservation"
+        );
+        assert_eq!(s.latencies_ms.len() as u64, s.completed);
+        assert!(s.latencies_ms.iter().all(|&l| l >= 0.0));
+    }
+}
+
+/// Invariant: encode/decode round-trips for random actions in both spaces.
+#[test]
+fn prop_encode_roundtrip_random() {
+    let mut rng = Pcg64::new(404);
+    for space in [ActionSpace::default(), ActionSpace::microservices(4)] {
+        for _ in 0..200 {
+            let a = Action {
+                zone_pods: (0..space.zones)
+                    .map(|_| rng.below(space.max_pods_per_zone + 1))
+                    .collect(),
+                cpu_m: rng.uniform(space.cpu_m.0, space.cpu_m.1),
+                ram_mb: rng.uniform(space.ram_mb.0, space.ram_mb.1),
+                net_mbps: rng.uniform(space.net_mbps.0, space.net_mbps.1),
+            };
+            let enc = space.encode(&a);
+            assert!(enc.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let b = space.decode(&enc);
+            assert_eq!(a.zone_pods, b.zone_pods);
+            assert!((a.cpu_m - b.cpu_m).abs() < 1.0);
+            assert!((a.ram_mb - b.ram_mb).abs() < 1.0);
+            assert!((a.net_mbps - b.net_mbps).abs() < 1.0);
+        }
+    }
+}
+
+/// Invariant: the masked GP posterior is permutation-invariant in slot
+/// order and monotone in noise (more noise => no less predictive sigma).
+#[test]
+fn prop_gp_masking_permutation_and_noise_monotonicity() {
+    let mut rng = Pcg64::new(505);
+    for case in 0..20 {
+        let (n, active, m, d) = (16usize, 1 + rng.below(15), 8usize, 5usize);
+        let zs: Vec<Vec<f64>> =
+            (0..active).map(|_| (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect()).collect();
+        let ys: Vec<f64> = (0..active).map(|_| rng.normal()).collect();
+        let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let hyp = GpHyper::default();
+
+        let build = |perm: &[usize]| {
+            let mut z = vec![9e5; n * d];
+            let mut y = vec![-9e5; n];
+            let mut mask = vec![0.0; n];
+            for (i, &slot) in perm.iter().enumerate() {
+                z[slot * d..(slot + 1) * d].copy_from_slice(&zs[i]);
+                y[slot] = ys[i];
+                mask[slot] = 1.0;
+            }
+            gp_posterior(&z, &y, &mask, &x, d, hyp)
+        };
+        let id: Vec<usize> = (0..active).collect();
+        let mut shuffled: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut shuffled);
+        shuffled.truncate(active);
+        let (mu_a, sig_a) = build(&id);
+        let (mu_b, sig_b) = build(&shuffled);
+        for c in 0..m {
+            assert!((mu_a[c] - mu_b[c]).abs() < 1e-8, "case {case} mu perm");
+            assert!((sig_a[c] - sig_b[c]).abs() < 1e-8, "case {case} sigma perm");
+        }
+
+        // Noise monotonicity at the identity layout.
+        let noisy = GpHyper { noise_var: hyp.noise_var * 100.0, ..hyp };
+        let mut z = vec![0.0; n * d];
+        let mut y = vec![0.0; n];
+        let mut mask = vec![0.0; n];
+        for (i, zi) in zs.iter().enumerate() {
+            z[i * d..(i + 1) * d].copy_from_slice(zi);
+            y[i] = ys[i];
+            mask[i] = 1.0;
+        }
+        let (_, sig_lo) = gp_posterior(&z, &y, &mask, &x, d, hyp);
+        let (_, sig_hi) = gp_posterior(&z, &y, &mask, &x, d, noisy);
+        for c in 0..m {
+            assert!(sig_hi[c] >= sig_lo[c] - 1e-9, "case {case}: noise monotone");
+        }
+    }
+}
+
+/// Failure injection: the batch environment must survive pathological
+/// actions (halt floor, OOM storms) without panicking, for every policy.
+#[test]
+fn prop_batch_env_survives_failure_injection() {
+    use drone::apps::batch::BatchWorkload;
+    use drone::config::SystemConfig;
+    use drone::experiments::{run_batch_env, BatchEnvConfig, CloudSetting};
+    use drone::runtime::Backend;
+    let mut sys = SystemConfig::default();
+    sys.bandit.candidates = 32;
+    sys.artifacts_dir = "/nonexistent".into();
+    for policy in ["drone", "drone-safe", "cherrypick", "accordia", "k8s-hpa"] {
+        let mut env =
+            BatchEnvConfig::new(BatchWorkload::PageRank, CloudSetting::Private, 10);
+        env.external_mem_frac = 0.45; // heavy co-tenant stress
+        let mut backend = Backend::Native;
+        let recs = run_batch_env(policy, &env, &sys, &mut backend, 99);
+        assert_eq!(recs.len(), 10, "{policy}");
+        // Halted steps are allowed; crashes and NaN costs are not.
+        assert!(recs.iter().all(|r| r.cost.is_finite()), "{policy}");
+    }
+}
