@@ -82,8 +82,11 @@ fn main() {
     let mut errs_by_policy = vec![];
     for policy in ["k8s-hpa", "cherrypick", "accordia", "drone-safe"] {
         let mut backend = Backend::auto(&sys.artifacts_dir);
-        let mut env =
-            BatchEnvConfig::new(BatchWorkload::LogisticRegression, CloudSetting::Private, batch_steps);
+        let mut env = BatchEnvConfig::new(
+            BatchWorkload::LogisticRegression,
+            CloudSetting::Private,
+            batch_steps,
+        );
         env.external_mem_frac = 0.30;
         let recs = run_batch_env(policy, &env, &sys, &mut backend, sys.seed);
         let post = post_warmup(&recs, (batch_steps / 3) as usize);

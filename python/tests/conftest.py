@@ -1,0 +1,17 @@
+"""Path bootstrap local to the test directory.
+
+pytest only walks conftest.py files from its computed rootdir downward,
+so when the suite is invoked from an unrelated cwd (e.g.
+`pytest /path/to/repo/python/tests`) the `python/conftest.py` one level
+up is never loaded. This copy lives next to the tests — pytest always
+loads it — and makes `compile` plus the local helper modules importable
+regardless of invocation directory.
+"""
+
+import os
+import sys
+
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+for _p in (os.path.dirname(_TESTS), _TESTS):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)

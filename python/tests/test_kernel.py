@@ -9,7 +9,7 @@ D=13).
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile.kernels import matern, ref
 

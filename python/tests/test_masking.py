@@ -5,7 +5,7 @@ the rust coordinator relies on while the sliding window is filling up."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from compile import model
 from compile.kernels import ref

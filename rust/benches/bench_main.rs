@@ -20,7 +20,9 @@ use std::time::Instant;
 use drone::bandit::gp::{self, GpHyper};
 use drone::config::SystemConfig;
 use drone::experiments;
-use drone::runtime::{Backend, PosteriorRequest};
+use drone::runtime::Backend;
+#[cfg(feature = "pjrt")]
+use drone::runtime::PosteriorRequest;
 use drone::util::rng::Pcg64;
 use drone::util::stats;
 
@@ -105,6 +107,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         });
         r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
         report(&r);
+        #[cfg(feature = "pjrt")]
         if let Ok(rt) = drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
             let mut backend = Backend::Xla(rt);
             let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d: 13, hyp };
@@ -123,20 +126,20 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         use drone::config::BanditConfig;
         use drone::monitor::context::ContextVector;
         use drone::orchestrators::bandit_core::{Acquisition, BanditCore};
-        for backend_kind in ["native", "xla"] {
-            let mut backend = match backend_kind {
-                "xla" => match drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
-                    Ok(rt) => Backend::Xla(rt),
-                    Err(_) => continue,
-                },
-                _ => Backend::Native,
-            };
+        #[cfg(feature = "pjrt")]
+        let backends = match drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
+            Ok(rt) => vec![("native", Backend::Native), ("xla", Backend::Xla(rt))],
+            Err(_) => vec![("native", Backend::Native)],
+        };
+        #[cfg(not(feature = "pjrt"))]
+        let backends = vec![("native", Backend::Native)];
+        for (backend_kind, mut backend) in backends {
             let cfg = BanditConfig::default();
             let mut core = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, true, 0);
             let mut rng2 = Pcg64::new(2);
             let ctx = ContextVector { workload: 0.5, ..Default::default() };
             for i in 0..30 {
-                let a = core.candgen.decode(&vec![0.5; 7]);
+                let a = core.candgen.decode(&[0.5; 7]);
                 core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
             }
             let _ = core.select(&mut backend, &ctx, &mut rng2); // warm compile

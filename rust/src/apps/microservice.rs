@@ -181,10 +181,7 @@ struct SimPod {
 struct ReqState {
     rt: usize,
     start: f64,
-    done: bool,
     dropped: bool,
-    /// Zone of the pod that served the previous hop (for network latency).
-    prev_zone: Option<usize>,
 }
 
 /// Run one window of request traffic against the current deployment.
@@ -310,7 +307,7 @@ pub fn run_window(
             Ev::Arrival { rt } => {
                 stats.offered += 1;
                 let req = reqs.len();
-                reqs.push(ReqState { rt, start: now, done: false, dropped: false, prev_zone: None });
+                reqs.push(ReqState { rt, start: now, dropped: false });
                 let sid = graph.request_types[rt].path[0];
                 if !route(&mut pods, &service_pods, &mut rr, &mut q, rng, graph, req, 0, sid) {
                     reqs[req].dropped = true;
@@ -334,20 +331,22 @@ pub fn run_window(
                 let path = &graph.request_types[reqs[req].rt].path;
                 debug_assert_eq!(path[hop], sid);
                 if hop + 1 < path.len() {
-                    let lat = net_ms(cluster, Some(zone), {
-                        // Latency to the *service*'s zone is decided at
-                        // routing time; approximate with the next pod's zone
-                        // by sampling one (cheap and unbiased for spread
-                        // deployments).
+                    // Latency to the *service*'s zone is decided at routing
+                    // time; approximate with the next pod's zone by sampling
+                    // one (cheap and unbiased for spread deployments).
+                    let next_zone = {
                         let nlist = &service_pods[path[hop + 1]];
-                        if nlist.is_empty() { zone } else { pods[nlist[rr[path[hop + 1]] % nlist.len()]].zone }
-                    });
-                    reqs[req].prev_zone = Some(zone);
+                        if nlist.is_empty() {
+                            zone
+                        } else {
+                            pods[nlist[rr[path[hop + 1]] % nlist.len()]].zone
+                        }
+                    };
+                    let lat = net_ms(cluster, Some(zone), next_zone);
                     q.schedule_in(lat / 1000.0, Ev::HopArrive { req, hop: hop + 1 });
                 } else {
                     let r = &mut reqs[req];
                     if !r.dropped {
-                        r.done = true;
                         stats.completed += 1;
                         stats.latencies_ms.push((q.now() - r.start) * 1000.0);
                     }
@@ -382,7 +381,12 @@ mod tests {
     use crate::sim::resources::Resources;
     use crate::sim::scheduler::{apply_deployment, Deployment};
 
-    fn deploy_uniform(cluster: &mut Cluster, graph: &ServiceGraph, per_zone: usize, lim: Resources) {
+    fn deploy_uniform(
+        cluster: &mut Cluster,
+        graph: &ServiceGraph,
+        per_zone: usize,
+        lim: Resources,
+    ) {
         for sid in 0..graph.services.len() {
             let dep = Deployment {
                 app: graph.app_name(sid),

@@ -48,7 +48,7 @@ impl CandidateGen {
         if let Some(enc) = &inc_enc {
             out.push(enc.clone());
         }
-        let target_with_local = if let Some(_) = &inc_enc {
+        let target_with_local = if inc_enc.is_some() {
             1 + (((m as f64) * self.local_frac) as usize).min(m.saturating_sub(1))
         } else {
             0
@@ -167,7 +167,8 @@ mod tests {
     #[test]
     fn recovery_escalates_toward_max() {
         let space = ActionSpace::default();
-        let failed = Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 500.0, ram_mb: 1024.0, net_mbps: 200.0 };
+        let failed =
+            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 500.0, ram_mb: 1024.0, net_mbps: 200.0 };
         let r = recovery_action(&space, &failed);
         assert!(r.ram_mb > failed.ram_mb);
         assert!(r.cpu_m > failed.cpu_m);

@@ -167,7 +167,8 @@ mod tests {
     #[test]
     fn encode_decode_roundtrip() {
         let s = ActionSpace::default();
-        let a = Action { zone_pods: vec![2, 0, 5, 1], cpu_m: 4000.0, ram_mb: 8192.0, net_mbps: 2500.0 };
+        let a =
+            Action { zone_pods: vec![2, 0, 5, 1], cpu_m: 4000.0, ram_mb: 8192.0, net_mbps: 2500.0 };
         let v = s.encode(&a);
         assert!(v.iter().all(|&x| (0.0..=1.0).contains(&x)));
         let b = s.decode(&v);
@@ -188,7 +189,8 @@ mod tests {
 
     #[test]
     fn cross_zone_fraction() {
-        let all_one_zone = Action { zone_pods: vec![4, 0, 0, 0], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
+        let all_one_zone =
+            Action { zone_pods: vec![4, 0, 0, 0], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
         assert_eq!(all_one_zone.cross_zone_frac(), 0.0);
         let spread = Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 0.0, ram_mb: 0.0, net_mbps: 0.0 };
         assert_eq!(spread.cross_zone_frac(), 1.0);
@@ -200,7 +202,8 @@ mod tests {
     #[test]
     fn clamp_guarantees_a_pod() {
         let s = ActionSpace::default();
-        let a = s.clamp(Action { zone_pods: vec![0, 0, 0, 0], cpu_m: 1.0, ram_mb: 1.0, net_mbps: 1.0 });
+        let a =
+            s.clamp(Action { zone_pods: vec![0, 0, 0, 0], cpu_m: 1.0, ram_mb: 1.0, net_mbps: 1.0 });
         assert_eq!(a.total_pods(), 1);
         assert_eq!(a.cpu_m, s.cpu_m.0);
     }
@@ -208,7 +211,8 @@ mod tests {
     #[test]
     fn joint_features_layout() {
         let s = ActionSpace::default();
-        let a = Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 1000.0, ram_mb: 1024.0, net_mbps: 500.0 };
+        let a =
+            Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 1000.0, ram_mb: 1024.0, net_mbps: 500.0 };
         let ctx = ContextVector { workload: 0.9, ..Default::default() };
         let f = joint_features(&s, &a, &ctx);
         assert_eq!(f.len(), JOINT_DIM);

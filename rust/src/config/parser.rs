@@ -85,7 +85,8 @@ impl Config {
             }
             if line.starts_with('[') {
                 if !line.ends_with(']') {
-                    return Err(ParseError { line: lineno, msg: "unterminated section header".into() });
+                    let msg = "unterminated section header".to_string();
+                    return Err(ParseError { line: lineno, msg });
                 }
                 section = line[1..line.len() - 1].trim().to_string();
                 if section.is_empty() {

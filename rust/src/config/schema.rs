@@ -204,7 +204,8 @@ mod tests {
 
     #[test]
     fn file_and_cli_override_precedence() {
-        let file = Config::parse("seed = 9\n[bandit]\nwindow = 16\n[objective]\nalpha = 0.7").unwrap();
+        let file =
+            Config::parse("seed = 9\n[bandit]\nwindow = 16\n[objective]\nalpha = 0.7").unwrap();
         let args = crate::util::cli::Args::parse(&[
             "--alpha=0.9".to_string(),
             "--candidates".to_string(),

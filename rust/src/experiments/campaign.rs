@@ -1,0 +1,801 @@
+//! Scenario registry + deterministic parallel campaign runner.
+//!
+//! Every aggregate claim the paper makes (perf improvement, footprint
+//! reduction, error counts) is a statistic over many (environment ×
+//! workload × policy × setting × seed) runs. This module makes that
+//! cross-product a first-class object:
+//!
+//!   - [`CampaignSpec`] selects suites, policies, seeds and run lengths;
+//!   - [`enumerate`] expands it into an ordered list of [`Scenario`]
+//!     descriptors (stable ids, stable names);
+//!   - [`run_campaign`] fans the scenarios out across `--jobs` OS threads.
+//!     Each scenario derives every random stream from its own seed, so the
+//!     result is **byte-identical regardless of the thread count** — the
+//!     workers only race for *which* scenario to run next, never for any
+//!     random state;
+//!   - the aggregator merges per-step [`StepRecord`]s into per-scenario
+//!     summaries, per-(suite, workload, policy) aggregates, the familiar
+//!     stdout tables, and machine-readable `campaign.json` / `campaign.csv`
+//!     under `results/`.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::apps::batch::BatchWorkload;
+use crate::config::SystemConfig;
+use crate::runtime::Backend;
+use crate::util::csv::CsvWriter;
+use crate::util::stats;
+use crate::util::table::{pm, Table};
+
+use super::harness::{
+    post_warmup, run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
+    StepRecord,
+};
+
+// ---------------------------------------------------------------------------
+// Scenario descriptors
+// ---------------------------------------------------------------------------
+
+/// The four experiment families the paper's figures/tables draw from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Suite {
+    /// Recurring batch jobs, pay-as-you-go cloud (Fig. 7a/7b).
+    BatchPublic,
+    /// Recurring batch jobs under the memory cap + co-tenant (Table 3).
+    BatchPrivate,
+    /// Trace-driven SocialNet microservices, public cloud (Fig. 8).
+    MicroPublic,
+    /// SocialNet under the private-cloud memory cap (Table 4).
+    MicroPrivate,
+}
+
+pub const ALL_SUITES: &[Suite] =
+    &[Suite::BatchPublic, Suite::BatchPrivate, Suite::MicroPublic, Suite::MicroPrivate];
+
+impl Suite {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Suite::BatchPublic => "batch-public",
+            Suite::BatchPrivate => "batch-private",
+            Suite::MicroPublic => "micro-public",
+            Suite::MicroPrivate => "micro-private",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Suite> {
+        ALL_SUITES.iter().copied().find(|x| x.name() == s)
+    }
+
+    pub fn setting(&self) -> CloudSetting {
+        match self {
+            Suite::BatchPublic | Suite::MicroPublic => CloudSetting::Public,
+            Suite::BatchPrivate | Suite::MicroPrivate => CloudSetting::Private,
+        }
+    }
+
+    /// The paper's baseline lineup for this family.
+    pub fn default_policies(&self) -> &'static [&'static str] {
+        match self {
+            Suite::BatchPublic => &["k8s-hpa", "cherrypick", "accordia", "drone"],
+            Suite::BatchPrivate => &["k8s-hpa", "cherrypick", "accordia", "drone-safe"],
+            Suite::MicroPublic => &["k8s-hpa", "autopilot", "showar", "drone"],
+            Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
+        }
+    }
+}
+
+/// Which simulated environment a scenario runs in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EnvKind {
+    Batch(BatchWorkload),
+    Micro,
+}
+
+impl EnvKind {
+    pub fn workload_name(&self) -> &'static str {
+        match self {
+            EnvKind::Batch(w) => w.name(),
+            EnvKind::Micro => "SocialNet",
+        }
+    }
+}
+
+/// One concrete run: env × workload × policy × setting × seed.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    /// Stable index in enumeration order (also the worker dispatch key).
+    pub id: usize,
+    pub suite: Suite,
+    pub env: EnvKind,
+    pub setting: CloudSetting,
+    pub policy: String,
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// Stable human-readable id, e.g. `batch-public/LR/drone/s3`.
+    pub fn name(&self) -> String {
+        let (suite, workload) = (self.suite.name(), self.env.workload_name());
+        format!("{suite}/{workload}/{}/s{}", self.policy, self.seed)
+    }
+}
+
+/// What to run: the cross-product request the CLI builds from flags.
+#[derive(Clone, Debug)]
+pub struct CampaignSpec {
+    pub suites: Vec<Suite>,
+    /// Override the per-suite policy lineup (None = paper defaults).
+    pub policies: Option<Vec<String>>,
+    /// Batch workloads included in the batch suites.
+    pub workloads: Vec<BatchWorkload>,
+    pub seeds: Vec<u64>,
+    /// Decision periods per batch scenario.
+    pub batch_steps: u64,
+    /// 60 s decision periods per microservice scenario.
+    pub micro_steps: u64,
+    /// SocialNet trace shape (trough rps, peak-to-trough amplitude rps).
+    pub micro_base_rps: f64,
+    pub micro_amplitude_rps: f64,
+}
+
+impl Default for CampaignSpec {
+    fn default() -> Self {
+        Self {
+            suites: ALL_SUITES.to_vec(),
+            policies: None,
+            workloads: vec![
+                BatchWorkload::SparkPi,
+                BatchWorkload::LogisticRegression,
+                BatchWorkload::PageRank,
+            ],
+            seeds: (0..3).collect(),
+            batch_steps: 12,
+            micro_steps: 12,
+            micro_base_rps: 60.0,
+            micro_amplitude_rps: 140.0,
+        }
+    }
+}
+
+/// Expand the spec into the ordered scenario list. Order (and therefore
+/// scenario ids) is deterministic: suites, then workloads, then policies,
+/// then seeds — exactly the nesting a human would write as four loops.
+pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
+    let mut out = vec![];
+    for &suite in &spec.suites {
+        let envs: Vec<EnvKind> = match suite {
+            Suite::BatchPublic | Suite::BatchPrivate => {
+                spec.workloads.iter().map(|&w| EnvKind::Batch(w)).collect()
+            }
+            Suite::MicroPublic | Suite::MicroPrivate => vec![EnvKind::Micro],
+        };
+        let defaults = suite.default_policies();
+        let policies: Vec<String> = match &spec.policies {
+            Some(ps) => ps.clone(),
+            None => defaults.iter().map(|s| s.to_string()).collect(),
+        };
+        for env in envs {
+            for policy in &policies {
+                for &seed in &spec.seeds {
+                    out.push(Scenario {
+                        id: out.len(),
+                        suite,
+                        env,
+                        setting: suite.setting(),
+                        policy: policy.clone(),
+                        seed,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse a `--seeds` argument: `N` (N seeds starting at `base`),
+/// `a..b` (half-open) or `a..=b` (inclusive).
+pub fn parse_seeds(s: &str, base: u64) -> anyhow::Result<Vec<u64>> {
+    let s = s.trim();
+    if let Some((lo, hi)) = s.split_once("..=") {
+        let (lo, hi) = (parse_u64(lo)?, parse_u64(hi)?);
+        if lo > hi {
+            return Err(anyhow::anyhow!("inverted seed range {s:?}"));
+        }
+        return Ok((lo..=hi).collect());
+    }
+    if let Some((lo, hi)) = s.split_once("..") {
+        let (lo, hi) = (parse_u64(lo)?, parse_u64(hi)?);
+        if lo > hi {
+            return Err(anyhow::anyhow!("inverted seed range {s:?}"));
+        }
+        return Ok((lo..hi).collect());
+    }
+    let n = parse_u64(s)?;
+    Ok((base..base + n).collect())
+}
+
+fn parse_u64(s: &str) -> anyhow::Result<u64> {
+    s.trim().parse::<u64>().map_err(|_| anyhow::anyhow!("invalid seed value {s:?}"))
+}
+
+/// Parse a `--experiments` argument: `all` or a comma-separated suite list.
+pub fn parse_suites(s: &str) -> anyhow::Result<Vec<Suite>> {
+    if s == "all" {
+        return Ok(ALL_SUITES.to_vec());
+    }
+    s.split(',')
+        .map(|p| {
+            Suite::parse(p.trim()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown experiment suite {p:?}; known: all, {}",
+                    ALL_SUITES.iter().map(|x| x.name()).collect::<Vec<_>>().join(", ")
+                )
+            })
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Per-scenario execution + summaries
+// ---------------------------------------------------------------------------
+
+/// Deterministic digest of one scenario's step records.
+#[derive(Clone, Debug, Default)]
+pub struct Summary {
+    pub steps: usize,
+    pub halts: u64,
+    pub errors: u64,
+    pub offered: u64,
+    pub dropped: u64,
+    /// Mean raw performance over non-halted steps (elapsed s / P90 ms).
+    pub mean_perf_raw: f64,
+    /// Same, restricted to the post-warmup (last two-thirds) window.
+    pub post_perf_raw: f64,
+    pub mean_perf_score: f64,
+    pub total_cost: f64,
+    pub mean_resource_frac: f64,
+}
+
+/// Mean that distinguishes "no data" from "zero": an empty slice yields
+/// NaN, which renders as `null` in JSON and `halted` in tables — a
+/// scenario whose every step halted must not rank as 0 elapsed seconds.
+fn mean_or_nan(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        f64::NAN
+    } else {
+        stats::mean(xs)
+    }
+}
+
+pub fn summarize(records: &[StepRecord]) -> Summary {
+    let live = |rs: &[StepRecord]| -> Vec<f64> {
+        rs.iter().filter(|r| !r.halted).map(|r| r.perf_raw).collect()
+    };
+    let post = post_warmup(records, records.len() / 3);
+    Summary {
+        steps: records.len(),
+        halts: records.iter().filter(|r| r.halted).count() as u64,
+        errors: records.iter().map(|r| r.errors as u64).sum(),
+        offered: records.iter().map(|r| r.offered).sum(),
+        dropped: records.iter().map(|r| r.dropped).sum(),
+        mean_perf_raw: mean_or_nan(&live(records)),
+        post_perf_raw: mean_or_nan(&live(post)),
+        mean_perf_score: stats::mean(
+            &records.iter().map(|r| r.perf_score).collect::<Vec<_>>(),
+        ),
+        total_cost: records.iter().map(|r| r.cost).sum(),
+        mean_resource_frac: stats::mean(
+            &records.iter().map(|r| r.resource_frac).collect::<Vec<_>>(),
+        ),
+    }
+}
+
+/// A finished scenario: descriptor + digest.
+#[derive(Clone, Debug)]
+pub struct ScenarioOutcome {
+    pub scenario: Scenario,
+    pub summary: Summary,
+}
+
+fn run_scenario(sc: &Scenario, spec: &CampaignSpec, sys: &SystemConfig) -> Summary {
+    let mut backend = Backend::auto(&sys.artifacts_dir);
+    let records = match sc.env {
+        EnvKind::Batch(w) => {
+            let mut env = BatchEnvConfig::new(w, sc.setting, spec.batch_steps);
+            if sc.suite == Suite::BatchPrivate {
+                // Table 3's stress-ng co-tenant.
+                env.external_mem_frac = 0.30;
+            }
+            run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed)
+        }
+        EnvKind::Micro => {
+            let mut env = MicroEnvConfig::socialnet(sc.setting, spec.micro_steps as f64 * 60.0);
+            env.trace.base_rps = spec.micro_base_rps;
+            env.trace.amplitude_rps = spec.micro_amplitude_rps;
+            run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed)
+        }
+    };
+    summarize(&records)
+}
+
+// ---------------------------------------------------------------------------
+// The parallel runner
+// ---------------------------------------------------------------------------
+
+/// Cross-seed aggregate for one (suite, workload, policy) cell.
+#[derive(Clone, Debug)]
+pub struct AggregateRow {
+    pub suite: Suite,
+    pub workload: &'static str,
+    pub policy: String,
+    pub seeds: usize,
+    /// Mean / std of the per-seed post-warmup raw performance.
+    pub perf_mean: f64,
+    pub perf_std: f64,
+    pub cost_mean: f64,
+    pub resource_frac_mean: f64,
+    pub errors: u64,
+    pub halts: u64,
+    pub drop_rate: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct CampaignResult {
+    pub outcomes: Vec<ScenarioOutcome>,
+    pub aggregates: Vec<AggregateRow>,
+    /// The distinct seeds the campaign actually ran (spec order).
+    pub seeds: Vec<u64>,
+}
+
+/// Run every scenario of `spec` across `jobs` worker threads.
+///
+/// Workers pull scenario indices from a shared atomic counter and write
+/// results into per-scenario slots, so scheduling order cannot influence
+/// the output: `jobs = 1` and `jobs = N` produce identical results.
+pub fn run_campaign(spec: &CampaignSpec, sys: &SystemConfig, jobs: usize) -> CampaignResult {
+    let scenarios = enumerate(spec);
+    let jobs = jobs.clamp(1, scenarios.len().max(1));
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Summary>>> = scenarios.iter().map(|_| Mutex::new(None)).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= scenarios.len() {
+                    break;
+                }
+                let summary = run_scenario(&scenarios[i], spec, sys);
+                *slots[i].lock().unwrap() = Some(summary);
+            });
+        }
+    });
+
+    let outcomes: Vec<ScenarioOutcome> = scenarios
+        .into_iter()
+        .zip(slots)
+        .map(|(scenario, slot)| ScenarioOutcome {
+            scenario,
+            summary: slot.into_inner().unwrap().expect("worker filled every slot"),
+        })
+        .collect();
+    let aggregates = aggregate(&outcomes);
+    CampaignResult { outcomes, aggregates, seeds: spec.seeds.clone() }
+}
+
+/// Merge per-seed outcomes into (suite, workload, policy) rows, preserving
+/// first-seen (i.e. enumeration) order.
+pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<AggregateRow> {
+    let mut keys: Vec<(Suite, &'static str, String)> = vec![];
+    for o in outcomes {
+        let key = (o.scenario.suite, o.scenario.env.workload_name(), o.scenario.policy.clone());
+        if !keys.contains(&key) {
+            keys.push(key);
+        }
+    }
+    keys.into_iter()
+        .map(|(suite, workload, policy)| {
+            let group: Vec<&ScenarioOutcome> = outcomes
+                .iter()
+                .filter(|o| {
+                    o.scenario.suite == suite
+                        && o.scenario.env.workload_name() == workload
+                        && o.scenario.policy == policy
+                })
+                .collect();
+            // Halted-out scenarios carry NaN; rank on the measurable ones.
+            let perfs: Vec<f64> = group
+                .iter()
+                .map(|o| o.summary.post_perf_raw)
+                .filter(|v| v.is_finite())
+                .collect();
+            let costs: Vec<f64> = group.iter().map(|o| o.summary.total_cost).collect();
+            let fracs: Vec<f64> =
+                group.iter().map(|o| o.summary.mean_resource_frac).collect();
+            let offered: u64 = group.iter().map(|o| o.summary.offered).sum();
+            let dropped: u64 = group.iter().map(|o| o.summary.dropped).sum();
+            AggregateRow {
+                suite,
+                workload,
+                policy,
+                seeds: group.len(),
+                perf_mean: mean_or_nan(&perfs),
+                perf_std: if perfs.is_empty() { f64::NAN } else { stats::std_dev(&perfs) },
+                cost_mean: stats::mean(&costs),
+                resource_frac_mean: stats::mean(&fracs),
+                errors: group.iter().map(|o| o.summary.errors).sum(),
+                halts: group.iter().map(|o| o.summary.halts).sum(),
+                drop_rate: if offered == 0 {
+                    0.0
+                } else {
+                    dropped as f64 / offered as f64
+                },
+            }
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Outputs: stdout tables, campaign.csv, campaign.json
+// ---------------------------------------------------------------------------
+
+impl CampaignResult {
+    /// Print one aggregate table per suite (the paper-style view).
+    pub fn print_tables(&self) {
+        for &suite in ALL_SUITES {
+            let rows: Vec<&AggregateRow> =
+                self.aggregates.iter().filter(|a| a.suite == suite).collect();
+            if rows.is_empty() {
+                continue;
+            }
+            let perf_unit = match suite {
+                Suite::BatchPublic | Suite::BatchPrivate => "elapsed s",
+                Suite::MicroPublic | Suite::MicroPrivate => "P90 ms",
+            };
+            let mut tab = Table::new(
+                &format!("campaign — {} ({} seeds/cell)", suite.name(), rows[0].seeds),
+                &[
+                    "workload", "policy", perf_unit, "cost $", "mem frac", "errors", "halts",
+                    "drop %",
+                ],
+            );
+            for a in rows {
+                let perf_cell = if a.perf_mean.is_finite() {
+                    pm(a.perf_mean, a.perf_std)
+                } else {
+                    "halted".to_string()
+                };
+                tab.row(&[
+                    a.workload.into(),
+                    a.policy.clone(),
+                    perf_cell,
+                    format!("{:.3}", a.cost_mean),
+                    format!("{:.2}", a.resource_frac_mean),
+                    format!("{}", a.errors),
+                    format!("{}", a.halts),
+                    format!("{:.2}%", a.drop_rate * 100.0),
+                ]);
+            }
+            tab.print();
+            println!();
+        }
+    }
+
+    /// Machine-readable digest. Field order and float formatting are fixed,
+    /// and nothing time- or thread-dependent is included, so identical
+    /// campaigns render byte-identical JSON.
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(4096 + self.outcomes.len() * 256);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"drone-campaign/v1\",\n");
+        let seeds: Vec<String> = self.seeds.iter().map(|v| v.to_string()).collect();
+        s.push_str(&format!("  \"seeds\": [{}],\n", seeds.join(", ")));
+        s.push_str("  \"scenarios\": [\n");
+        for (i, o) in self.outcomes.iter().enumerate() {
+            let sc = &o.scenario;
+            let m = &o.summary;
+            s.push_str("    {");
+            s.push_str(&format!("\"id\": {}, ", sc.id));
+            s.push_str(&format!("\"name\": {}, ", json_str(&sc.name())));
+            s.push_str(&format!("\"suite\": {}, ", json_str(sc.suite.name())));
+            s.push_str(&format!("\"workload\": {}, ", json_str(sc.env.workload_name())));
+            s.push_str(&format!(
+                "\"setting\": {}, ",
+                json_str(match sc.setting {
+                    CloudSetting::Public => "public",
+                    CloudSetting::Private => "private",
+                })
+            ));
+            s.push_str(&format!("\"policy\": {}, ", json_str(&sc.policy)));
+            s.push_str(&format!("\"seed\": {}, ", sc.seed));
+            s.push_str(&format!("\"steps\": {}, ", m.steps));
+            s.push_str(&format!("\"halts\": {}, ", m.halts));
+            s.push_str(&format!("\"errors\": {}, ", m.errors));
+            s.push_str(&format!("\"offered\": {}, ", m.offered));
+            s.push_str(&format!("\"dropped\": {}, ", m.dropped));
+            s.push_str(&format!("\"mean_perf_raw\": {}, ", json_f64(m.mean_perf_raw)));
+            s.push_str(&format!("\"post_perf_raw\": {}, ", json_f64(m.post_perf_raw)));
+            s.push_str(&format!("\"mean_perf_score\": {}, ", json_f64(m.mean_perf_score)));
+            s.push_str(&format!("\"total_cost\": {}, ", json_f64(m.total_cost)));
+            s.push_str(&format!(
+                "\"mean_resource_frac\": {}",
+                json_f64(m.mean_resource_frac)
+            ));
+            s.push_str(if i + 1 < self.outcomes.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ],\n");
+        s.push_str("  \"aggregates\": [\n");
+        for (i, a) in self.aggregates.iter().enumerate() {
+            s.push_str("    {");
+            s.push_str(&format!("\"suite\": {}, ", json_str(a.suite.name())));
+            s.push_str(&format!("\"workload\": {}, ", json_str(a.workload)));
+            s.push_str(&format!("\"policy\": {}, ", json_str(&a.policy)));
+            s.push_str(&format!("\"seeds\": {}, ", a.seeds));
+            s.push_str(&format!("\"perf_mean\": {}, ", json_f64(a.perf_mean)));
+            s.push_str(&format!("\"perf_std\": {}, ", json_f64(a.perf_std)));
+            s.push_str(&format!("\"cost_mean\": {}, ", json_f64(a.cost_mean)));
+            s.push_str(&format!(
+                "\"resource_frac_mean\": {}, ",
+                json_f64(a.resource_frac_mean)
+            ));
+            s.push_str(&format!("\"errors\": {}, ", a.errors));
+            s.push_str(&format!("\"halts\": {}, ", a.halts));
+            s.push_str(&format!("\"drop_rate\": {}", json_f64(a.drop_rate)));
+            s.push_str(if i + 1 < self.aggregates.len() { "},\n" } else { "}\n" });
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+
+    /// Write `campaign.json` + `campaign.csv` under the results directory
+    /// (`DRONE_RESULTS_DIR` overrides, as for every experiment output).
+    pub fn write_outputs(&self) -> anyhow::Result<(PathBuf, PathBuf)> {
+        let dir = crate::util::csv::results_dir();
+        std::fs::create_dir_all(&dir)?;
+        let json_path = dir.join("campaign.json");
+        std::fs::write(&json_path, self.to_json())?;
+
+        let mut csv = CsvWriter::new(
+            dir.join("campaign.csv"),
+            &[
+                "suite", "workload", "setting", "policy", "seed", "steps", "post_perf_raw",
+                "mean_perf_score", "total_cost", "mean_resource_frac", "errors", "halts",
+                "offered", "dropped",
+            ],
+        );
+        for o in &self.outcomes {
+            let sc = &o.scenario;
+            let m = &o.summary;
+            // Empty cell (not "NaN") when every post-warmup step halted.
+            let post_perf = if m.post_perf_raw.is_finite() {
+                format!("{:.6}", m.post_perf_raw)
+            } else {
+                String::new()
+            };
+            csv.row(&[
+                sc.suite.name().into(),
+                sc.env.workload_name().into(),
+                format!("{:?}", sc.setting).to_lowercase(),
+                sc.policy.clone(),
+                format!("{}", sc.seed),
+                format!("{}", m.steps),
+                post_perf,
+                format!("{:.6}", m.mean_perf_score),
+                format!("{:.6}", m.total_cost),
+                format!("{:.6}", m.mean_resource_frac),
+                format!("{}", m.errors),
+                format!("{}", m.halts),
+                format!("{}", m.offered),
+                format!("{}", m.dropped),
+            ]);
+        }
+        let csv_path = csv.finish()?;
+        Ok((json_path, csv_path))
+    }
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON has no NaN/Infinity; map non-finite values to null.
+fn json_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_sys() -> SystemConfig {
+        let mut sys = SystemConfig::default();
+        sys.bandit.candidates = 32; // keep native GP calls fast
+        sys.artifacts_dir = "/nonexistent".into();
+        sys
+    }
+
+    fn small_spec() -> CampaignSpec {
+        CampaignSpec {
+            suites: vec![Suite::BatchPublic],
+            policies: Some(vec!["drone".into(), "k8s-hpa".into()]),
+            workloads: vec![BatchWorkload::SparkPi],
+            seeds: vec![0, 1],
+            batch_steps: 4,
+            micro_steps: 2,
+            micro_base_rps: 15.0,
+            micro_amplitude_rps: 20.0,
+        }
+    }
+
+    #[test]
+    fn seeds_parse_forms() {
+        assert_eq!(parse_seeds("3", 0).unwrap(), vec![0, 1, 2]);
+        assert_eq!(parse_seeds("2", 10).unwrap(), vec![10, 11]);
+        assert_eq!(parse_seeds("1..4", 0).unwrap(), vec![1, 2, 3]);
+        assert_eq!(parse_seeds("2..=4", 99).unwrap(), vec![2, 3, 4]);
+        assert_eq!(parse_seeds("5..5", 0).unwrap(), Vec::<u64>::new());
+        assert!(parse_seeds("x", 0).is_err());
+        assert!(parse_seeds("4..1", 0).is_err());
+        assert!(parse_seeds("", 0).is_err());
+    }
+
+    #[test]
+    fn suites_parse_forms() {
+        assert_eq!(parse_suites("all").unwrap().len(), 4);
+        let two = parse_suites("batch-public, micro-private").unwrap();
+        assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
+        assert!(parse_suites("nope").is_err());
+    }
+
+    #[test]
+    fn enumeration_order_and_ids_are_stable() {
+        let spec = CampaignSpec {
+            suites: vec![Suite::BatchPublic, Suite::MicroPublic],
+            policies: Some(vec!["drone".into()]),
+            workloads: vec![BatchWorkload::SparkPi, BatchWorkload::PageRank],
+            seeds: vec![7, 8],
+            ..Default::default()
+        };
+        let scenarios = enumerate(&spec);
+        // 2 workloads * 1 policy * 2 seeds + 1 micro * 1 policy * 2 seeds.
+        assert_eq!(scenarios.len(), 6);
+        for (i, sc) in scenarios.iter().enumerate() {
+            assert_eq!(sc.id, i);
+        }
+        assert_eq!(scenarios[0].name(), "batch-public/Spark-Pi/drone/s7");
+        assert_eq!(scenarios[1].name(), "batch-public/Spark-Pi/drone/s8");
+        assert_eq!(scenarios[4].name(), "micro-public/SocialNet/drone/s7");
+        assert_eq!(scenarios[5].seed, 8);
+        // Same spec enumerates identically.
+        let again = enumerate(&spec);
+        for (a, b) in scenarios.iter().zip(&again) {
+            assert_eq!(a.name(), b.name());
+        }
+    }
+
+    #[test]
+    fn default_policies_per_suite() {
+        let spec = CampaignSpec {
+            suites: vec![Suite::MicroPrivate],
+            workloads: vec![],
+            seeds: vec![0],
+            ..Default::default()
+        };
+        let scenarios = enumerate(&spec);
+        let policies: Vec<&str> = scenarios.iter().map(|s| s.policy.as_str()).collect();
+        assert_eq!(policies, vec!["k8s-hpa", "autopilot", "showar", "drone-safe"]);
+        assert!(scenarios.iter().all(|s| s.setting == CloudSetting::Private));
+    }
+
+    #[test]
+    fn summarize_excludes_halted_from_perf() {
+        let rec = |perf: f64, halted: bool, cost: f64| StepRecord {
+            perf_raw: perf,
+            halted,
+            cost,
+            perf_score: 0.5,
+            resource_frac: 0.4,
+            ..Default::default()
+        };
+        let records =
+            vec![rec(f64::NAN, true, 1.0), rec(10.0, false, 2.0), rec(20.0, false, 3.0)];
+        let s = summarize(&records);
+        assert_eq!(s.steps, 3);
+        assert_eq!(s.halts, 1);
+        assert!((s.mean_perf_raw - 15.0).abs() < 1e-9);
+        assert!((s.total_cost - 6.0).abs() < 1e-9);
+        // Post-warmup window (skip first third = 1 step).
+        assert!((s.post_perf_raw - 15.0).abs() < 1e-9);
+
+        // All-halted: "no measurable performance" must be NaN (-> JSON
+        // null), never 0.0 — 0 elapsed seconds would rank as best.
+        let dead = vec![rec(f64::NAN, true, 1.0), rec(f64::NAN, true, 1.0)];
+        let s2 = summarize(&dead);
+        assert!(s2.mean_perf_raw.is_nan());
+        assert!(s2.post_perf_raw.is_nan());
+        let halted_outcome = ScenarioOutcome {
+            scenario: Scenario {
+                id: 0,
+                suite: Suite::BatchPrivate,
+                env: EnvKind::Batch(BatchWorkload::PageRank),
+                setting: CloudSetting::Private,
+                policy: "drone-safe".into(),
+                seed: 0,
+            },
+            summary: s2,
+        };
+        let rows = aggregate(&[halted_outcome]);
+        assert!(rows[0].perf_mean.is_nan(), "halted cell must not rank as 0.0");
+    }
+
+    #[test]
+    fn campaign_deterministic_across_job_counts() {
+        let sys = small_sys();
+        let spec = small_spec();
+        let serial = run_campaign(&spec, &sys, 1);
+        let parallel = run_campaign(&spec, &sys, 4);
+        assert_eq!(serial.outcomes.len(), 4);
+        assert_eq!(serial.to_json(), parallel.to_json(), "jobs=1 vs jobs=4 must agree");
+    }
+
+    #[test]
+    fn aggregates_group_across_seeds() {
+        let sys = small_sys();
+        let spec = small_spec();
+        let result = run_campaign(&spec, &sys, 2);
+        // 2 policies * 1 workload -> 2 aggregate rows, each over 2 seeds.
+        assert_eq!(result.aggregates.len(), 2);
+        for a in &result.aggregates {
+            assert_eq!(a.seeds, 2);
+            assert!(a.perf_mean > 0.0);
+            assert!(a.cost_mean > 0.0);
+        }
+        assert_eq!(result.aggregates[0].policy, "drone");
+        assert_eq!(result.aggregates[1].policy, "k8s-hpa");
+    }
+
+    #[test]
+    fn json_is_wellformed_enough() {
+        let sys = small_sys();
+        let mut spec = small_spec();
+        spec.seeds = vec![0];
+        let result = run_campaign(&spec, &sys, 1);
+        let j = result.to_json();
+        assert!(j.starts_with("{\n"));
+        assert!(j.ends_with("}\n"));
+        assert!(j.contains("\"schema\": \"drone-campaign/v1\""));
+        assert!(j.contains("\"suite\": \"batch-public\""));
+        assert!(!j.contains("NaN"));
+        assert_eq!(j.matches("\"id\":").count(), 2);
+        // Balanced braces/brackets (cheap well-formedness proxy).
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn json_escape_and_float_edge_cases() {
+        assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
+        assert_eq!(json_f64(f64::NAN), "null");
+        assert_eq!(json_f64(1.5), "1.500000");
+    }
+}

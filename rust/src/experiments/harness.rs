@@ -316,7 +316,7 @@ pub fn run_micro_env(
     backend: &mut Backend,
     seed: u64,
 ) -> Vec<StepRecord> {
-    let mut root = Pcg64::new(seed ^ 0x51c0_u64 << 8);
+    let mut root = Pcg64::new(seed ^ (0x51c0_u64 << 8));
     let mut rng_policy = root.fork(1);
     let mut rng_des = root.fork(2);
     let mut rng_interf = root.fork(3);
@@ -415,15 +415,17 @@ pub fn run_micro_env(
         let errors = cluster.sweep_oom().len() as u32;
 
         // Run the window of traffic on the surviving pods.
-        let stats = microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
+        let stats =
+            microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
 
         if std::env::var("DRONE_DEBUG").is_ok() {
             let alive: Vec<usize> = (0..n_services)
                 .map(|sid| cluster.running_pod_count(&env.graph.app_name(sid)))
                 .collect();
             eprintln!(
-                "[micro step={step}] rate={rate:.0} action={:?} pending={pending} oom={errors} alive={alive:?} offered={} done={} drop={}",
-                action, stats.offered, stats.completed, stats.dropped
+                "[micro step={step}] rate={rate:.0} action={action:?} pending={pending} \
+                 oom={errors} alive={alive:?} offered={} done={} drop={}",
+                stats.offered, stats.completed, stats.dropped
             );
         }
 

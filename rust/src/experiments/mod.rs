@@ -2,12 +2,14 @@
 //! all built on the shared `harness` control loops. Each driver prints the
 //! paper's rows/series and writes results/<id>.csv.
 
+pub mod campaign;
 pub mod harness;
 
 pub mod figures;
 pub mod regret;
 pub mod tables;
 
+pub use campaign::{run_campaign, CampaignResult, CampaignSpec, Scenario, Suite};
 pub use harness::{
     run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
 };

@@ -62,8 +62,15 @@ fn run_regret(
     // A larger window + gentler exploration for the theorem check: the
     // synthetic optimum moves with the context, so the surrogate needs
     // enough support points to cover the context marginal.
-    let cfg = BanditConfig { candidates, window: 60, zeta_scale: 1.0, lengthscale: 0.9, ..Default::default() };
-    let mut core = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, use_context, seed);
+    let cfg = BanditConfig {
+        candidates,
+        window: 60,
+        zeta_scale: 1.0,
+        lengthscale: 0.9,
+        ..Default::default()
+    };
+    let mut core =
+        BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, use_context, seed);
     let mut rng = Pcg64::new(seed);
     let mut regrets = Vec::with_capacity(steps);
     for t in 0..steps {

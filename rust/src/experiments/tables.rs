@@ -59,13 +59,13 @@ pub fn table2(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
             // Spot: cheap but revocations force rework/migration overhead.
             let revoked = rng.chance(p_revoke);
             let spot_rate = on_demand_rate * spot_frac_of_od * price_mult;
-            c_spot += spot_rate * demand * dt_h * (1.0 + if revoked { rework_on_revoke } else { 0.0 });
+            let rework = if revoked { rework_on_revoke } else { 0.0 };
+            c_spot += spot_rate * demand * dt_h * (1.0 + rework);
             // Burstable spot: smaller baseline, bursts covered by credits
             // (free) as long as peaks are ephemeral; sustained peaks pay.
             let base = burstable_base;
             let sustained_peak = (demand - 1.0).max(0.0) * 0.25; // credits soak 75%
-            c_burst += spot_rate * (base + sustained_peak) * dt_h
-                * (1.0 + if revoked { rework_on_revoke } else { 0.0 });
+            c_burst += spot_rate * (base + sustained_peak) * dt_h * (1.0 + rework);
             let _ = i;
         }
         let s_spot = c_od / c_spot;

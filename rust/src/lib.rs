@@ -15,9 +15,15 @@
 //! - **L1 (python/compile/kernels/matern.py)**: the Pallas Matern-3/2
 //!   cross-covariance kernel inside that graph.
 //!
-//! Python never runs on the decision path: `runtime` loads the HLO
-//! artifacts through the PJRT C API (`xla` crate) and executes them from
-//! the 60 s decision loop.
+//! Python never runs on the decision path: with the `pjrt` cargo feature,
+//! `runtime` loads the HLO artifacts through the PJRT C API (`xla` crate)
+//! and executes them from the 60 s decision loop. The default build gates
+//! that dependency out and serves every posterior from the native f64 GP
+//! mirror, so the whole system builds and tests with zero exotic deps.
+//!
+//! `experiments::campaign` is the multi-seed entrypoint: a scenario
+//! registry (env × workload × policy × setting × seed) plus a
+//! deterministic parallel runner behind `drone campaign`.
 
 pub mod apps;
 pub mod bandit;

@@ -3,15 +3,14 @@
 //! Subcommands:
 //!   run         one policy through an environment (batch | micro)
 //!   experiment  regenerate a paper table/figure (see `drone list`)
+//!   campaign    fan the full scenario grid out across worker threads
 //!   list        list experiments, policies and artifact status
 //!   selfcheck   cross-validate the XLA artifact against the native GP
 
-use drone::bandit::gp::GpHyper;
 use drone::config::{Config, SystemConfig};
-use drone::experiments::{self, BatchEnvConfig, CloudSetting, MicroEnvConfig};
-use drone::runtime::{Backend, PosteriorRequest, XlaRuntime};
+use drone::experiments::{self, campaign, BatchEnvConfig, CloudSetting, MicroEnvConfig};
+use drone::runtime::Backend;
 use drone::util::cli::Args;
-use drone::util::rng::Pcg64;
 use drone::util::table::Table;
 
 fn main() {
@@ -28,6 +27,7 @@ fn main() {
     let code = match args.subcommand() {
         Some("run") => cmd_run(&args, &sys),
         Some("experiment") => cmd_experiment(&args, &sys),
+        Some("campaign") => cmd_campaign(&args, &sys),
         Some("list") => cmd_list(&sys),
         Some("selfcheck") => cmd_selfcheck(&sys),
         _ => {
@@ -46,13 +46,16 @@ USAGE:
   drone run --policy <name> --env <batch|micro> [--workload <w>] [--setting <public|private>]
             [--steps N] [--seed S] [--config file.toml]
   drone experiment <id|all> [--scale 0.2] [--seed S]
+  drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
+                 [--steps N] [--policies p1,p2] [--workloads w1,w2]
   drone list
   drone selfcheck
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
-             table2 table3 table4 regret ablation"
+             table2 table3 table4 regret ablation
+SUITES: batch-public batch-private micro-public micro-private"
     );
 }
 
@@ -96,9 +99,11 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
                 &["step", "elapsed_s", "cost_$", "mem_frac", "errors"],
             );
             for r in &recs {
+                let elapsed =
+                    if r.halted { "HALT".into() } else { format!("{:.1}", r.perf_raw) };
                 tab.row(&[
                     format!("{}", r.step),
-                    if r.halted { "HALT".into() } else { format!("{:.1}", r.perf_raw) },
+                    elapsed,
                     format!("{:.3}", r.cost),
                     format!("{:.2}", r.resource_frac),
                     format!("{}", r.errors),
@@ -151,10 +156,95 @@ fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
     0
 }
 
+/// `drone campaign`: enumerate the scenario grid and run it in parallel.
+fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
+    let mut spec = campaign::CampaignSpec::default();
+    match campaign::parse_suites(&args.get_str("experiments", "all")) {
+        Ok(suites) => spec.suites = suites,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    match campaign::parse_seeds(&args.get_str("seeds", "3"), sys.seed) {
+        Ok(seeds) => spec.seeds = seeds,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    }
+    if let Some(ps) = args.get("policies") {
+        let policies: Vec<String> = ps.split(',').map(|p| p.trim().to_string()).collect();
+        for p in &policies {
+            if !drone::orchestrators::ALL_POLICIES.contains(&p.as_str()) {
+                eprintln!(
+                    "unknown policy {p:?}; known: {}",
+                    drone::orchestrators::ALL_POLICIES.join(", ")
+                );
+                return 2;
+            }
+        }
+        spec.policies = Some(policies);
+    }
+    if let Some(ws) = args.get("workloads") {
+        let mut workloads = vec![];
+        for w in ws.split(',') {
+            match parse_workload(w.trim()) {
+                Some(w) => workloads.push(w),
+                None => {
+                    eprintln!("unknown workload {w:?}");
+                    return 2;
+                }
+            }
+        }
+        spec.workloads = workloads;
+    }
+    let steps = args.get_u64("steps", spec.batch_steps);
+    spec.batch_steps = steps;
+    spec.micro_steps = steps;
+
+    let default_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let jobs = args.get_usize("jobs", default_jobs);
+    let n_scenarios = campaign::enumerate(&spec).len();
+    if n_scenarios == 0 {
+        eprintln!("campaign selects zero scenarios (empty seeds or suites)");
+        return 2;
+    }
+    println!(
+        "# campaign: {n_scenarios} scenarios ({} suites x {} seeds), {} steps each, jobs={}",
+        spec.suites.len(),
+        spec.seeds.len(),
+        steps,
+        jobs.clamp(1, n_scenarios)
+    );
+
+    let started = std::time::Instant::now();
+    let result = campaign::run_campaign(&spec, sys, jobs);
+    let elapsed = started.elapsed().as_secs_f64();
+
+    result.print_tables();
+    match result.write_outputs() {
+        Ok((json_path, csv_path)) => {
+            println!("campaign -> {} , {}", json_path.display(), csv_path.display());
+        }
+        Err(e) => {
+            eprintln!("writing campaign outputs failed: {e}");
+            return 1;
+        }
+    }
+    println!("[{n_scenarios} scenarios in {elapsed:.1}s wall]");
+    0
+}
+
 fn cmd_list(sys: &SystemConfig) -> i32 {
     println!("policies:    {}", drone::orchestrators::ALL_POLICIES.join(" "));
     println!("experiments: {}", experiments::ALL_EXPERIMENTS.join(" "));
-    match XlaRuntime::open(&sys.artifacts_dir) {
+    println!(
+        "suites:      {}",
+        campaign::ALL_SUITES.iter().map(|s| s.name()).collect::<Vec<_>>().join(" ")
+    );
+    #[cfg(feature = "pjrt")]
+    match drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
         Ok(rt) => {
             println!("artifacts ({}, platform {}):", sys.artifacts_dir, rt.platform());
             for a in &rt.artifacts {
@@ -163,11 +253,21 @@ fn cmd_list(sys: &SystemConfig) -> i32 {
         }
         Err(e) => println!("artifacts: unavailable ({e}) — native fallback will be used"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!(
+        "artifacts: pjrt feature disabled — native GP backend serves {}",
+        sys.artifacts_dir
+    );
     0
 }
 
 /// Cross-validate the AOT artifact against the native GP on random windows.
+#[cfg(feature = "pjrt")]
 fn cmd_selfcheck(sys: &SystemConfig) -> i32 {
+    use drone::bandit::gp::GpHyper;
+    use drone::runtime::{PosteriorRequest, XlaRuntime};
+    use drone::util::rng::Pcg64;
+
     let rt = match XlaRuntime::open(&sys.artifacts_dir) {
         Ok(rt) => rt,
         Err(e) => {
@@ -220,4 +320,11 @@ fn cmd_selfcheck(sys: &SystemConfig) -> i32 {
         eprintln!("selfcheck FAILED (worst |delta| = {worst:.2e})");
         1
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selfcheck(_sys: &SystemConfig) -> i32 {
+    eprintln!("selfcheck compares the PJRT artifact against the native GP;");
+    eprintln!("rebuild with `cargo build --features pjrt` (real xla crate) to enable it");
+    1
 }

@@ -331,7 +331,8 @@ mod tests {
     #[test]
     fn recovery_escalates() {
         let mut c = core(Acquisition::Ucb, true);
-        let failed = Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 150.0 };
+        let failed =
+            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 150.0 };
         let r = c.recover(&failed);
         assert!(r.ram_mb > failed.ram_mb * 2.0);
         assert_eq!(c.incumbent, Some(r));

@@ -176,7 +176,10 @@ impl Orchestrator for DronePrivate {
             Some(i) => i,
             // Empty safe set: fall back to the most conservative candidate
             // (smallest certified resource usage).
-            None => acquisition::argmax(&ucb_r.iter().map(|&u| -u).collect::<Vec<_>>()).unwrap_or(0),
+            None => {
+                let neg_ucb_r: Vec<f64> = ucb_r.iter().map(|&u| -u).collect();
+                acquisition::argmax(&neg_ucb_r).unwrap_or(0)
+            }
         };
         // Hysteresis (part of the paper's latency-aware scheduling
         // enhancements): candidate slot 0 is the incumbent; a challenger
@@ -197,8 +200,16 @@ impl Orchestrator for DronePrivate {
         if std::env::var("DRONE_DEBUG").is_ok() {
             let n_safe = safe.iter().filter(|&&s| s).count();
             eprintln!(
-                "[drone-safe t={}] safe={}/{} idx={} ucb={:.3} mu_p={:.3} sig_p={:.3} ucb_r={:.3} action={:?}",
-                self.core.t, n_safe, safe.len(), idx, ucb_p[idx], mu_p[idx], sig_p[idx], ucb_r[idx],
+                "[drone-safe t={}] safe={}/{} idx={} ucb={:.3} mu_p={:.3} sig_p={:.3} \
+                 ucb_r={:.3} action={:?}",
+                self.core.t,
+                n_safe,
+                safe.len(),
+                idx,
+                ucb_p[idx],
+                mu_p[idx],
+                sig_p[idx],
+                ucb_r[idx],
                 actions[idx]
             );
         }
@@ -246,7 +257,8 @@ mod tests {
         );
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(2);
-        let failed = Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 120.0 };
+        let failed =
+            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 120.0 };
         let mut t = tel_with(Some(failed.clone()), Some(0.0), Some(0.1));
         t.failure = true;
         let a = d.decide(&t, &mut b, &mut rng);

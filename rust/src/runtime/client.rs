@@ -1,54 +1,18 @@
-//! PJRT runtime: load AOT artifacts (HLO text emitted by
+//! PJRT runtime (feature `pjrt`): load AOT artifacts (HLO text emitted by
 //! python/compile/aot.py), compile them once on the CPU PJRT client, and
 //! cache the loaded executables. Python never runs here — the rust binary
 //! is self-contained after `make artifacts`.
+//!
+//! Built against the in-repo `vendor/xla` stub this module type-checks but
+//! `XlaRuntime::open` fails at runtime (no PJRT plugin), so callers fall
+//! back to `Backend::Native`.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, Context, Result};
 
-/// Geometry parsed from artifacts/manifest.txt.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct ArtifactInfo {
-    pub name: String,
-    pub kind: String, // "single" | "dual"
-    pub n: usize,
-    pub m: usize,
-    pub d: usize,
-}
-
-pub fn parse_manifest(text: &str) -> Vec<ArtifactInfo> {
-    let mut out = vec![];
-    for line in text.lines() {
-        let line = line.trim();
-        if line.is_empty() {
-            continue;
-        }
-        let mut name = String::new();
-        let mut kind = String::new();
-        let (mut n, mut m, mut d) = (0usize, 0usize, 0usize);
-        for (i, tok) in line.split_whitespace().enumerate() {
-            if i == 0 {
-                name = tok.to_string();
-                continue;
-            }
-            if let Some((k, v)) = tok.split_once('=') {
-                match k {
-                    "kind" => kind = v.to_string(),
-                    "n" => n = v.parse().unwrap_or(0),
-                    "m" => m = v.parse().unwrap_or(0),
-                    "d" => d = v.parse().unwrap_or(0),
-                    _ => {}
-                }
-            }
-        }
-        if !name.is_empty() && n > 0 && m > 0 && d > 0 {
-            out.push(ArtifactInfo { name, kind, n, m, d });
-        }
-    }
-    out
-}
+use super::manifest::{parse_manifest, ArtifactInfo};
 
 /// PJRT CPU client + compiled-executable cache keyed by artifact name.
 pub struct XlaRuntime {
@@ -137,22 +101,6 @@ impl XlaRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn manifest_parser() {
-        let text = "\
-gp_posterior_n32_m256_d13 kind=single n=32 m=256 d=13
-gp_dual_n32_m256_d13 kind=dual n=32 m=256 d=13
-
-malformed line without fields
-";
-        let infos = parse_manifest(text);
-        assert_eq!(infos.len(), 2);
-        assert_eq!(infos[0].name, "gp_posterior_n32_m256_d13");
-        assert_eq!(infos[0].kind, "single");
-        assert_eq!((infos[0].n, infos[0].m, infos[0].d), (32, 256, 13));
-        assert_eq!(infos[1].kind, "dual");
-    }
 
     #[test]
     fn open_missing_dir_errors() {

@@ -1,10 +1,21 @@
-//! Runtime layer: wraps the `xla` crate (PJRT C API) to load and execute
-//! the AOT artifacts from the coordinator hot path, with a native fallback
-//! backend so every code path runs without artifacts too.
+//! Runtime layer: the typed posterior backend the coordinator hot path
+//! calls every decision period, with two implementations:
+//!
+//!   - `Backend::Native` — the in-repo f64 GP (`bandit::gp`), always
+//!     available; the default build's only backend.
+//!   - `Backend::Xla` (feature `pjrt`) — wraps the `xla` crate (PJRT C API)
+//!     to load and execute the AOT artifacts. Gated because the real PJRT
+//!     bindings and plugin are not available in every build environment;
+//!     the in-repo `vendor/xla` stub keeps `--features pjrt` compiling.
+//!
 //! Pattern adapted from /opt/xla-example/src/bin/load_hlo.rs.
 
+#[cfg(feature = "pjrt")]
 pub mod client;
+pub mod manifest;
 pub mod posterior;
 
-pub use client::{parse_manifest, ArtifactInfo, XlaRuntime};
+#[cfg(feature = "pjrt")]
+pub use client::XlaRuntime;
+pub use manifest::{parse_manifest, ArtifactInfo};
 pub use posterior::{Backend, PosteriorRequest};

@@ -1,17 +1,21 @@
 //! Typed posterior backend: the one call the coordinator hot path makes
 //! every decision period. Two interchangeable implementations:
 //!
-//!   - `Backend::Xla`    — the AOT'd L1/L2 artifact through PJRT (production
-//!                          path; Pallas Matern kernel + loop Cholesky).
+//!   - `Backend::Xla` (feature `pjrt`) — the AOT'd L1/L2 artifact through
+//!     PJRT (production path; Pallas Matern kernel + loop Cholesky).
 //!   - `Backend::Native` — the in-repo f64 GP (bandit::gp), used when
-//!                          artifacts are absent and to cross-validate the
-//!                          artifact numerics.
+//!     artifacts are absent (or the `pjrt` feature is off) and to
+//!     cross-validate the artifact numerics.
 //!
 //! Both take the padded window + candidate batch and return (mu, sigma) per
 //! candidate.
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
+use anyhow::anyhow;
+
+#[cfg(feature = "pjrt")]
 use super::client::XlaRuntime;
 use crate::bandit::gp::{self, GpHyper};
 
@@ -28,21 +32,26 @@ pub struct PosteriorRequest<'a> {
 
 pub enum Backend {
     Native,
+    #[cfg(feature = "pjrt")]
     Xla(XlaRuntime),
 }
 
 impl Backend {
-    /// Open the XLA backend if artifacts exist, else fall back to native.
+    /// Open the XLA backend if artifacts exist (and the `pjrt` feature is
+    /// compiled in), else fall back to native.
     pub fn auto(artifacts_dir: &str) -> Backend {
-        match XlaRuntime::open(artifacts_dir) {
-            Ok(rt) => Backend::Xla(rt),
-            Err(_) => Backend::Native,
+        #[cfg(feature = "pjrt")]
+        if let Ok(rt) = XlaRuntime::open(artifacts_dir) {
+            return Backend::Xla(rt);
         }
+        let _ = artifacts_dir;
+        Backend::Native
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            #[cfg(feature = "pjrt")]
             Backend::Xla(_) => "xla",
         }
     }
@@ -54,6 +63,7 @@ impl Backend {
                 let (mu, sigma) = gp::gp_posterior(req.z, req.y, req.mask, req.x, req.d, req.hyp);
                 Ok((mu, sigma))
             }
+            #[cfg(feature = "pjrt")]
             Backend::Xla(rt) => {
                 let n = req.y.len();
                 let m = req.x.len() / req.d;
@@ -111,9 +121,8 @@ mod tests {
         let mask = vec![1.0; n];
         let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
         let mut b = Backend::Native;
-        let (mu, sigma) = b
-            .posterior(&PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp: GpHyper::default() })
-            .unwrap();
+        let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp: GpHyper::default() };
+        let (mu, sigma) = b.posterior(&req).unwrap();
         assert_eq!(mu.len(), m);
         assert_eq!(sigma.len(), m);
         assert!(sigma.iter().all(|&s| s >= 0.0));

@@ -95,12 +95,7 @@ impl InterferenceModel {
             let k = (window_s / self.cfg.mean_duration_s).max(1.0).sqrt();
             (mean_each * (1.0 + rng.normal() / k)).clamp(0.0, 0.9)
         };
-        let r = Resources::new(
-            draw(&mut self.rng),
-            draw(&mut self.rng),
-            draw(&mut self.rng),
-        );
-        r
+        Resources::new(draw(&mut self.rng), draw(&mut self.rng), draw(&mut self.rng))
     }
 }
 

@@ -25,17 +25,49 @@ pub struct SpotConfig {
 impl SpotConfig {
     /// Presets loosely shaped like the three families in Fig. 5.
     pub fn m5_16xlarge() -> Self {
-        Self { mean_price: 1.33, reversion: 0.08, volatility: 0.05, jump_prob: 0.02, jump_scale: 0.25, floor_frac: 0.55, cap_frac: 1.9 }
+        Self {
+            mean_price: 1.33,
+            reversion: 0.08,
+            volatility: 0.05,
+            jump_prob: 0.02,
+            jump_scale: 0.25,
+            floor_frac: 0.55,
+            cap_frac: 1.9,
+        }
     }
     pub fn c5_18xlarge() -> Self {
-        Self { mean_price: 1.55, reversion: 0.05, volatility: 0.08, jump_prob: 0.04, jump_scale: 0.35, floor_frac: 0.5, cap_frac: 2.2 }
+        Self {
+            mean_price: 1.55,
+            reversion: 0.05,
+            volatility: 0.08,
+            jump_prob: 0.04,
+            jump_scale: 0.35,
+            floor_frac: 0.5,
+            cap_frac: 2.2,
+        }
     }
     pub fn r5_16xlarge() -> Self {
-        Self { mean_price: 1.12, reversion: 0.10, volatility: 0.04, jump_prob: 0.015, jump_scale: 0.2, floor_frac: 0.6, cap_frac: 1.8 }
+        Self {
+            mean_price: 1.12,
+            reversion: 0.10,
+            volatility: 0.04,
+            jump_prob: 0.015,
+            jump_scale: 0.2,
+            floor_frac: 0.6,
+            cap_frac: 1.8,
+        }
     }
     /// GCP E2-family preset used for the evaluation's cost model (Sec. 5.1).
     pub fn gcp_e2() -> Self {
-        Self { mean_price: 0.067, reversion: 0.12, volatility: 0.05, jump_prob: 0.02, jump_scale: 0.3, floor_frac: 0.5, cap_frac: 2.0 }
+        Self {
+            mean_price: 0.067,
+            reversion: 0.12,
+            volatility: 0.05,
+            jump_prob: 0.02,
+            jump_scale: 0.3,
+            floor_frac: 0.5,
+            cap_frac: 2.0,
+        }
     }
 }
 

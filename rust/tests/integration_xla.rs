@@ -5,6 +5,10 @@
 //!
 //! These tests skip cleanly when artifacts/ has not been built
 //! (`make artifacts`), so `cargo test` stays green in a bare checkout.
+//! The whole file is gated on the `pjrt` feature: the default build has no
+//! PJRT runtime at all (`runtime::Backend` falls back to the native GP).
+
+#![cfg(feature = "pjrt")]
 
 use drone::bandit::gp::{self, GpHyper};
 use drone::runtime::{Backend, PosteriorRequest, XlaRuntime};
@@ -43,7 +47,8 @@ fn xla_artifact_matches_native_gp() {
     let rt = XlaRuntime::open(&dir).expect("open runtime");
     let mut backend = Backend::Xla(rt);
     let mut rng = Pcg64::new(0xA11A);
-    for &(n, m, active) in &[(32usize, 256usize, 32usize), (32, 256, 7), (32, 64, 1), (64, 256, 50)] {
+    let cases = [(32usize, 256usize, 32usize), (32, 256, 7), (32, 64, 1), (64, 256, 50)];
+    for &(n, m, active) in &cases {
         let d = 13;
         let (z, y, mask, x) = rand_window(&mut rng, n, m, d, active);
         for hyp in [

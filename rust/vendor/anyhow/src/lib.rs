@@ -1,0 +1,150 @@
+//! In-repo, API-compatible subset of the `anyhow` crate.
+//!
+//! The build environment carries no crates.io registry, so the workspace
+//! vendors the tiny slice of anyhow the codebase actually uses:
+//!
+//!   - `anyhow::Error` — an opaque, `Display`able error value
+//!   - `anyhow::Result<T>` — `Result<T, Error>`
+//!   - `anyhow!(...)` / `bail!(...)` — format-string error construction
+//!   - `Context::context` / `Context::with_context` — error annotation
+//!   - blanket `From<E: std::error::Error>` so `?` converts any std error
+//!
+//! Semantics match upstream for these paths (including `Error` *not*
+//! implementing `std::error::Error`, which is what makes the blanket `From`
+//! coherent). If a real registry becomes available, deleting this crate and
+//! depending on crates.io `anyhow = "1"` is a drop-in swap.
+
+use std::fmt;
+
+/// Opaque error: a message plus an optional chain of annotated causes,
+/// rendered as `context: cause`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable (upstream `Error::msg`).
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { msg: m.to_string() }
+    }
+
+    fn wrap<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: deliberately no `impl std::error::Error for Error` — that would
+// conflict with the blanket conversion below (exactly as in upstream).
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with `anyhow::Error` as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to the error variant of a `Result`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error>;
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| Error::from(e).wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| Error::from(e).wrap(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x.txt")).unwrap_err();
+        assert_eq!(e.to_string(), "reading x.txt: gone");
+        let r2: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e2 = r2.context("opening").unwrap_err();
+        assert_eq!(e2.to_string(), "opening: gone");
+    }
+
+    #[test]
+    fn anyhow_macro_formats() {
+        let e = anyhow!("bad n={} m={}", 3, 4);
+        assert_eq!(format!("{e}"), "bad n=3 m=4");
+        assert_eq!(format!("{e:?}"), "bad n=3 m=4");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn inner(fail: bool) -> Result<u32> {
+            if fail {
+                bail!("nope {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(inner(false).unwrap(), 1);
+        assert_eq!(inner(true).unwrap_err().to_string(), "nope 7");
+    }
+}
