@@ -120,6 +120,56 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         }
     }
 
+    println!(
+        "\n== perf: incremental Cholesky cache vs full rebuild \
+         (one decision = push[+evict] + posterior, m=64 candidates) =="
+    );
+    {
+        use drone::bandit::gp_incremental::CachedGp;
+        use drone::bandit::window::{Observation, SlidingWindow};
+        let d = 13;
+        let m = 64;
+        let hyp = GpHyper::default();
+        for &n in &[32usize, 64, 128, 256] {
+            let mut rng = Pcg64::new(100 + n as u64);
+            let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let mut rand_obs = {
+                let mut r = rng.fork(1);
+                move || Observation {
+                    z: (0..d).map(|_| r.uniform(-1.0, 1.0)).collect(),
+                    y: r.normal(),
+                    y_resource: 0.0,
+                }
+            };
+            // Pre-fill to capacity so every timed push exercises the
+            // evict + append path (the steady state of a long campaign).
+            let mut window = SlidingWindow::new(n, d);
+            for _ in 0..n {
+                window.push(rand_obs());
+            }
+            let mut engine = CachedGp::new();
+            let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
+            let _ = engine.posterior(&window, &ys, &x, hyp); // factor once, untimed
+            let r = bench(&format!("cached  evict+append+query n={n}"), budget_s, || {
+                window.push(rand_obs());
+                let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
+                let _ = engine.posterior(&window, &ys, &x, hyp);
+            });
+            report(&r);
+            // The point of the cache: zero re-factorizations after warmup.
+            assert_eq!(engine.stats.rebuilds, 1, "cached path re-factorized");
+            assert_eq!(engine.stats.evictions, engine.stats.appends);
+
+            let r = bench(&format!("rebuild evict+append+query n={n}"), budget_s, || {
+                window.push(rand_obs());
+                let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
+                let (z, _, _, mask) = window.padded(n);
+                let _ = gp::gp_posterior(&z, &ys, &mask, &x, d, hyp);
+            });
+            report(&r);
+        }
+    }
+
     println!("\n== perf: end-to-end decision latency (candidates + posterior + argmax) ==");
     {
         use drone::bandit::encode::ActionSpace;

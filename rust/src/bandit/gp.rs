@@ -1,12 +1,21 @@
 //! Native-rust GP posterior — the f64 mirror of the L2 JAX graph
-//! (python/compile/model.py). Two jobs:
+//! (python/compile/model.py), and the repo's **stateless oracle**. Three
+//! jobs:
 //!   1. cross-validate the loaded HLO artifact (integration test asserts
-//!      |Δmu|,|Δsigma| < 1e-4 on random windows), and
-//!   2. serve as the runtime fallback backend when artifacts are absent
-//!      (tests, quick experiments), keeping every code path exercisable.
+//!      |Δmu|,|Δsigma| < 1e-4 on random windows),
+//!   2. cross-validate the incremental Cholesky engine
+//!      (`bandit::gp_incremental`, the default runtime backend): the
+//!      property sweep in tests/property_invariants.rs replays thousands
+//!      of push/evict sequences and holds the cached posterior to within
+//!      1e-8 of this full rebuild, and
+//!   3. serve as the `Backend::Native` fallback/reference path, keeping
+//!      every code path exercisable without artifacts or cache state.
 //!
 //! Identical masking construction, Matern-3/2 kernel, loop Cholesky and
-//! forward substitution as the AOT'd graph.
+//! forward substitution as the AOT'd graph. Being stateless, it pays the
+//! full O(n³) factorization on every call — which is exactly what makes it
+//! trustworthy as an oracle, and exactly why the hot path doesn't use it
+//! (see the bench `cached vs rebuild` series in benches/bench_main.rs).
 
 pub const JITTER: f64 = 1e-6;
 const SQRT3: f64 = 1.732_050_807_568_877_2;
@@ -54,15 +63,20 @@ pub fn cholesky(k: &[f64], n: usize) -> Vec<f64> {
     l
 }
 
-/// Forward substitution: solve L X = B for lower-triangular L; B is n x r
-/// row-major, overwritten in place.
-pub fn solve_lower_inplace(l: &[f64], n: usize, b: &mut [f64], r: usize) {
-    assert_eq!(b.len(), n * r);
+/// Forward substitution: solve L X = B for a lower-triangular L stored
+/// row-major with row stride `stride` >= n; B is n x r row-major,
+/// overwritten in place. This single implementation serves both the
+/// stateless oracle (`stride == n`) and the incremental engine's
+/// capacity-strided factor (`bandit::gp_incremental`) — sharing it keeps
+/// the two paths op-for-op identical, which the bit-exactness tests and
+/// the 1e-8 property sweep rely on.
+pub fn solve_lower_strided(l: &[f64], stride: usize, n: usize, b: &mut [f64], r: usize) {
+    debug_assert!(stride >= n && b.len() >= n * r);
     for i in 0..n {
         let (head, tail) = b.split_at_mut(i * r);
         let bi = &mut tail[..r];
         for t in 0..i {
-            let lit = l[i * n + t];
+            let lit = l[i * stride + t];
             if lit != 0.0 {
                 let bt = &head[t * r..(t + 1) * r];
                 for c in 0..r {
@@ -70,11 +84,17 @@ pub fn solve_lower_inplace(l: &[f64], n: usize, b: &mut [f64], r: usize) {
                 }
             }
         }
-        let d = l[i * n + i];
+        let d = l[i * stride + i];
         for c in 0..r {
             bi[c] /= d;
         }
     }
+}
+
+/// Forward substitution on a densely-stored (stride == n) factor.
+pub fn solve_lower_inplace(l: &[f64], n: usize, b: &mut [f64], r: usize) {
+    assert_eq!(b.len(), n * r);
+    solve_lower_strided(l, n, n, b, r);
 }
 
 #[derive(Clone, Copy, Debug)]

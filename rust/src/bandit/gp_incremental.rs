@@ -1,0 +1,458 @@
+//! Incremental Cholesky GP posterior — the stateful fast path for the
+//! decision hot loop.
+//!
+//! The stateless oracle (`bandit::gp::gp_posterior`) re-factorizes the full
+//! masked window kernel from scratch — an O(n³) Cholesky — on **every**
+//! decision. But the sliding window only ever mutates in two ways per
+//! decision period: one new observation is appended, and (once the window
+//! is full) the oldest one is evicted. [`CachedGp`] keeps the Cholesky
+//! factor of the active window kernel alive across decisions and maintains
+//! it under exactly those two mutations:
+//!
+//!   * **append** — O(n²): one Matern kernel row against the stored
+//!     inputs, one forward solve `L c = k` for the new factor row, and a
+//!     scalar diagonal update `l = sqrt(k(z,z) + noise - c·c)` (clamped at
+//!     the same `JITTER` floor as the full factorization);
+//!   * **evict oldest** — O(n²): deleting row/col 0 of the kernel leaves
+//!     `K₂₂ = L₂₂L₂₂ᵀ + w wᵀ` (`w` = first column of `L` below the
+//!     diagonal), so the factor of the shrunk window is the rank-1
+//!     **update** of the trailing block — applied in place with Givens-
+//!     style rotations (the numerically safe direction: updates, unlike
+//!     downdates, cannot lose positive-definiteness).
+//!
+//! Candidate scoring reuses the cached factor with one fused forward solve
+//! over the `[y | K_zx]` block per batch — identical op sequence to the
+//! oracle minus the factorization, so an append-only history is
+//! *bit-identical* to the stateless rebuild and an eviction-heavy one
+//! agrees to ~1e-12 (the property sweep in tests/property_invariants.rs
+//! locks both down at 1e-8 across thousands of random push/evict
+//! sequences).
+//!
+//! Synchronization uses the window's change journal (`SlidingWindow::id` /
+//! `epoch` / `tail`): the engine replays exactly the pushes it missed,
+//! evicting first whenever the window was already at capacity. Anything it
+//! cannot replay faithfully — a different window instance, changed
+//! hyperparameters, a journal gap of a full window — triggers one O(n³)
+//! rebuild (counted in [`CacheStats::rebuilds`], asserted rare in tests).
+
+use super::gp::{self, GpHyper};
+use super::window::SlidingWindow;
+
+/// Operation counters, exposed so tests and benches can prove the fast
+/// path really is incremental (no hidden re-factorizations).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Full O(n³) factorizations (first sync, or cache invalidation).
+    pub rebuilds: u64,
+    /// O(n²) factor extensions.
+    pub appends: u64,
+    /// O(n²) first-row downdates (rank-1 update of the trailing block).
+    pub evictions: u64,
+    /// Posterior evaluations served from the cached factor.
+    pub queries: u64,
+}
+
+/// The cached factor + the inputs it factors, synced to one window epoch.
+#[derive(Clone, Debug)]
+struct State {
+    hyp: GpHyper,
+    d: usize,
+    /// Physical stride of `l` and row capacity of `z` (= window capacity).
+    cap: usize,
+    /// Active rows (current window length).
+    n: usize,
+    /// Journal identity: which window, and through which push.
+    window_id: u64,
+    epoch: u64,
+    /// Window inputs, chronological, row-major [cap, d]; rows `..n` live.
+    z: Vec<f64>,
+    /// Lower-triangular Cholesky factor, row-major with stride `cap`;
+    /// the leading n x n block is live, everything above the diagonal 0.
+    l: Vec<f64>,
+}
+
+/// Stateful incremental posterior engine. Create once, hold it across
+/// decision periods (the runtime keeps one inside
+/// `runtime::Backend::NativeCached`), and call [`CachedGp::posterior`]
+/// with the live window each decision.
+#[derive(Clone, Debug, Default)]
+pub struct CachedGp {
+    state: Option<State>,
+    pub stats: CacheStats,
+}
+
+fn hyp_eq(a: &GpHyper, b: &GpHyper) -> bool {
+    a.noise_var.to_bits() == b.noise_var.to_bits()
+        && a.lengthscale.to_bits() == b.lengthscale.to_bits()
+        && a.signal_var.to_bits() == b.signal_var.to_bits()
+}
+
+impl State {
+    fn new(w: &SlidingWindow, hyp: GpHyper) -> Self {
+        let (cap, d) = (w.capacity(), w.dim());
+        Self {
+            hyp,
+            d,
+            cap,
+            n: 0,
+            window_id: w.id(),
+            epoch: w.epoch(),
+            z: vec![0.0; cap * d],
+            l: vec![0.0; cap * cap],
+        }
+    }
+
+    /// O(n²) factor extension with the new observation's features.
+    fn append(&mut self, z_new: &[f64]) {
+        let (n, d, cap) = (self.n, self.d, self.cap);
+        debug_assert_eq!(z_new.len(), d);
+        debug_assert!(n < cap, "append beyond capacity");
+        // New kernel column against the stored inputs, then the new factor
+        // row via one forward solve L c = k.
+        let mut c =
+            gp::matern32(&self.z[..n * d], z_new, d, self.hyp.lengthscale, self.hyp.signal_var);
+        gp::solve_lower_strided(&self.l, cap, n, &mut c, 1);
+        // Diagonal: k(z,z) + noise - c·c, with the oracle's JITTER floor.
+        // (Matern-3/2 at distance 0 is exactly signal_var.)
+        let mut s = self.hyp.signal_var + self.hyp.noise_var;
+        for t in 0..n {
+            s -= c[t] * c[t];
+        }
+        self.l[n * cap..n * cap + n].copy_from_slice(&c);
+        self.l[n * cap + n] = s.max(gp::JITTER).sqrt();
+        self.z[n * d..(n + 1) * d].copy_from_slice(z_new);
+        self.n += 1;
+    }
+
+    /// O(n²) removal of the oldest (first) window row from the factor.
+    fn evict_oldest(&mut self) {
+        let (n, cap, d) = (self.n, self.cap, self.d);
+        debug_assert!(n > 0, "evict from empty factor");
+        let m = n - 1;
+        if m > 0 {
+            // First column of L below the diagonal: the coupling of every
+            // surviving point to the evicted one.
+            let mut w: Vec<f64> = (1..n).map(|i| self.l[i * cap]).collect();
+            // Rank-1 Givens update of the trailing block in place:
+            // chol(L22 L22' + w w').
+            for k in 0..m {
+                let rk = k + 1; // position in the stored factor
+                let lkk = self.l[rk * cap + rk];
+                let r = (lkk * lkk + w[k] * w[k]).sqrt();
+                let cth = r / lkk;
+                let sth = w[k] / lkk;
+                self.l[rk * cap + rk] = r;
+                for i in (k + 1)..m {
+                    let ri = i + 1;
+                    let lv = (self.l[ri * cap + rk] + sth * w[i]) / cth;
+                    self.l[ri * cap + rk] = lv;
+                    w[i] = cth * w[i] - sth * lv;
+                }
+            }
+            // Slide the updated block (and the inputs) up-left by one.
+            for i in 0..m {
+                let src = (i + 1) * cap + 1;
+                self.l.copy_within(src..src + i + 1, i * cap);
+            }
+            self.z.copy_within(d..n * d, 0);
+        }
+        self.n = m;
+    }
+}
+
+impl CachedGp {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bring the cached factor up to date with `window` under `hyp`,
+    /// replaying the journal incrementally when possible and rebuilding
+    /// from scratch when not.
+    pub fn sync(&mut self, window: &SlidingWindow, hyp: GpHyper) {
+        let replayable = match &self.state {
+            None => false,
+            Some(s) => {
+                s.window_id == window.id()
+                    && s.d == window.dim()
+                    && s.cap == window.capacity()
+                    && hyp_eq(&s.hyp, &hyp)
+                    && window.epoch() >= s.epoch
+                    && (window.epoch() - s.epoch) as usize <= window.len()
+            }
+        };
+        if !replayable {
+            let mut st = State::new(window, hyp);
+            for o in window.iter() {
+                st.append(&o.z);
+            }
+            self.state = Some(st);
+            self.stats.rebuilds += 1;
+            return;
+        }
+        let s = self.state.as_mut().expect("replayable implies state");
+        let behind = (window.epoch() - s.epoch) as usize;
+        for o in window.tail(behind) {
+            if s.n == s.cap {
+                s.evict_oldest();
+                self.stats.evictions += 1;
+            }
+            s.append(&o.z);
+            self.stats.appends += 1;
+        }
+        s.epoch = window.epoch();
+    }
+
+    /// Posterior (mu, sigma) for candidates `x` from the cached factor.
+    /// `ys` are the (already normalized) targets aligned with the synced
+    /// window's chronological order; `x` is row-major [m, d].
+    pub fn query(&mut self, ys: &[f64], x: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        self.stats.queries += 1;
+        let s = self.state.as_ref().expect("query before sync");
+        let (n, d) = (s.n, s.d);
+        assert_eq!(ys.len(), n, "targets must align with the synced window");
+        assert_eq!(x.len() % d, 0);
+        let m = x.len() / d;
+        let mut mu = vec![0.0; m];
+        let mut var = vec![s.hyp.signal_var; m];
+        if n > 0 {
+            let kzx = gp::matern32(&s.z[..n * d], x, d, s.hyp.lengthscale, s.hyp.signal_var);
+            // Fused RHS [y | K_zx] -> one forward solve, as in the oracle.
+            let r = 1 + m;
+            let mut rhs = vec![0.0; n * r];
+            for i in 0..n {
+                rhs[i * r] = ys[i];
+                rhs[i * r + 1..(i + 1) * r].copy_from_slice(&kzx[i * m..(i + 1) * m]);
+            }
+            gp::solve_lower_strided(&s.l, s.cap, n, &mut rhs, r);
+            for i in 0..n {
+                let w = rhs[i * r];
+                let v_row = &rhs[i * r + 1..(i + 1) * r];
+                for c in 0..m {
+                    mu[c] += v_row[c] * w;
+                    var[c] -= v_row[c] * v_row[c];
+                }
+            }
+        }
+        let sigma: Vec<f64> = var.iter().map(|&v| v.max(0.0).sqrt()).collect();
+        (mu, sigma)
+    }
+
+    /// Sync + query in one call — the decision hot path's entry point.
+    pub fn posterior(
+        &mut self,
+        window: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        hyp: GpHyper,
+    ) -> (Vec<f64>, Vec<f64>) {
+        self.sync(window, hyp);
+        self.query(ys, x)
+    }
+
+    /// Current factor size (for tests/introspection).
+    pub fn len(&self) -> usize {
+        self.state.as_ref().map_or(0, |s| s.n)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bandit::window::Observation;
+    use crate::util::rng::Pcg64;
+
+    fn rand_obs(rng: &mut Pcg64, d: usize) -> Observation {
+        Observation {
+            z: (0..d).map(|_| rng.uniform(-1.5, 1.5)).collect(),
+            y: rng.normal(),
+            y_resource: rng.f64(),
+        }
+    }
+
+    /// Stateless oracle over the same chronological layout (optionally
+    /// padded with masked rows, which must contribute exact zeros).
+    fn oracle(
+        w: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        hyp: GpHyper,
+        pad: usize,
+    ) -> (Vec<f64>, Vec<f64>) {
+        let n_pad = w.len() + pad;
+        let (z, _, _, mask) = w.padded(n_pad);
+        let mut y = vec![0.0; n_pad];
+        y[..ys.len()].copy_from_slice(ys);
+        gp::gp_posterior(&z, &y, &mask, x, w.dim(), hyp)
+    }
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn empty_window_gives_prior() {
+        let w = SlidingWindow::new(5, 3);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper { signal_var: 4.0, ..Default::default() };
+        let x = vec![0.3; 2 * 3];
+        let (mu, sig) = eng.posterior(&w, &[], &x, hyp);
+        assert_eq!(mu, vec![0.0, 0.0]);
+        assert!((sig[0] - 2.0).abs() < 1e-12 && (sig[1] - 2.0).abs() < 1e-12);
+        assert_eq!(eng.stats.rebuilds, 1);
+        assert_eq!(eng.len(), 0);
+    }
+
+    /// Before any eviction the cached path performs the *same floating
+    /// point operations* as the stateless rebuild, so it should agree to
+    /// machine precision (the tolerance here is pure slack).
+    #[test]
+    fn append_only_matches_oracle_to_machine_precision() {
+        let mut rng = Pcg64::new(11);
+        let d = 4;
+        let mut w = SlidingWindow::new(16, d);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper::default();
+        let x: Vec<f64> = (0..6 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for _ in 0..16 {
+            w.push(rand_obs(&mut rng, d));
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+            let (mu_o, sig_o) = oracle(&w, &ys, &x, hyp, 0);
+            assert!(max_abs_diff(&mu_c, &mu_o) < 1e-13, "mu");
+            assert!(max_abs_diff(&sig_c, &sig_o) < 1e-13, "sigma");
+        }
+        assert_eq!(eng.stats.rebuilds, 1, "append-only stream must never rebuild");
+        assert_eq!(eng.stats.evictions, 0);
+    }
+
+    #[test]
+    fn eviction_heavy_stream_matches_oracle() {
+        let mut rng = Pcg64::new(12);
+        let d = 5;
+        let cap = 10;
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper::default();
+        let x: Vec<f64> = (0..8 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for step in 0..64 {
+            w.push(rand_obs(&mut rng, d));
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+            let (mu_o, sig_o) = oracle(&w, &ys, &x, hyp, 0);
+            assert!(max_abs_diff(&mu_c, &mu_o) < 1e-9, "step {step} mu");
+            assert!(max_abs_diff(&sig_c, &sig_o) < 1e-9, "step {step} sigma");
+        }
+        assert_eq!(eng.stats.rebuilds, 1);
+        assert_eq!(eng.stats.evictions, 64 - cap as u64);
+        assert_eq!(eng.stats.appends, 63, "all but the first push replayed incrementally");
+    }
+
+    /// After arbitrary push/evict traffic, L Lᵀ must still reconstruct the
+    /// exact masked window kernel (diag + noise).
+    #[test]
+    fn factor_reconstructs_kernel_after_evictions() {
+        let mut rng = Pcg64::new(13);
+        let d = 3;
+        let cap = 7;
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper::default();
+        for _ in 0..23 {
+            w.push(rand_obs(&mut rng, d));
+            eng.sync(&w, hyp);
+        }
+        let s = eng.state.as_ref().unwrap();
+        let n = s.n;
+        assert_eq!(n, cap);
+        let mut k = gp::matern32(&s.z[..n * d], &s.z[..n * d], d, hyp.lengthscale, hyp.signal_var);
+        for i in 0..n {
+            k[i * n + i] += hyp.noise_var;
+        }
+        for i in 0..n {
+            for j in 0..n {
+                let mut rec = 0.0;
+                for t in 0..n {
+                    rec += s.l[i * s.cap + t] * s.l[j * s.cap + t];
+                }
+                assert!((rec - k[i * n + j]).abs() < 1e-10, "({i},{j})");
+            }
+        }
+        // Strictly-upper entries of the live block stay exactly zero.
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(s.l[i * s.cap + j], 0.0, "upper ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn journal_gap_and_foreign_window_trigger_rebuild() {
+        let mut rng = Pcg64::new(14);
+        let d = 2;
+        let cap = 4;
+        let hyp = GpHyper::default();
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        w.push(rand_obs(&mut rng, d));
+        eng.sync(&w, hyp);
+        assert_eq!(eng.stats.rebuilds, 1);
+        // Push a full window's worth without syncing: the journal no longer
+        // covers the gap, so the engine must rebuild (exactly once).
+        for _ in 0..=cap {
+            w.push(rand_obs(&mut rng, d));
+        }
+        eng.sync(&w, hyp);
+        assert_eq!(eng.stats.rebuilds, 2);
+        assert_eq!(eng.len(), cap);
+        // A different window instance at the same epoch must not replay.
+        let mut other = SlidingWindow::new(cap, d);
+        for _ in 0..w.total_pushed() {
+            other.push(rand_obs(&mut rng, d));
+        }
+        eng.sync(&other, hyp);
+        assert_eq!(eng.stats.rebuilds, 3);
+        // Changed hyperparameters invalidate too.
+        let hot = GpHyper { lengthscale: 0.9, ..hyp };
+        eng.sync(&other, hot);
+        assert_eq!(eng.stats.rebuilds, 4);
+        // ... but a repeat sync at the same epoch is free.
+        let appends_before = eng.stats.appends;
+        eng.sync(&other, hot);
+        assert_eq!(eng.stats.rebuilds, 4);
+        assert_eq!(eng.stats.appends, appends_before);
+    }
+
+    /// One cached factor serves both GP targets (perf and resource): two
+    /// queries at the same epoch cost zero factor work.
+    #[test]
+    fn two_targets_share_one_factor() {
+        let mut rng = Pcg64::new(15);
+        let d = 4;
+        let mut w = SlidingWindow::new(6, d);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper::default();
+        let x: Vec<f64> = (0..5 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for _ in 0..9 {
+            w.push(rand_obs(&mut rng, d));
+            let y_perf: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let y_res: Vec<f64> = w.iter().map(|o| o.y_resource).collect();
+            let (mu_p, _) = eng.posterior(&w, &y_perf, &x, hyp);
+            let appends_mid = eng.stats.appends;
+            let evicts_mid = eng.stats.evictions;
+            let (mu_r, _) = eng.posterior(&w, &y_res, &x, hyp);
+            assert_eq!(eng.stats.appends, appends_mid, "second target re-synced");
+            assert_eq!(eng.stats.evictions, evicts_mid);
+            // Different targets, same kernel: means differ, oracle agrees.
+            let (or_p, _) = oracle(&w, &y_perf, &x, hyp, 0);
+            let (or_r, _) = oracle(&w, &y_res, &x, hyp, 0);
+            assert!(max_abs_diff(&mu_p, &or_p) < 1e-9);
+            assert!(max_abs_diff(&mu_r, &or_r) < 1e-9);
+        }
+        assert_eq!(eng.stats.rebuilds, 1);
+        assert_eq!(eng.stats.queries, 18);
+    }
+}

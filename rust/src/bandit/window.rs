@@ -2,6 +2,28 @@
 //! complexity"): only the most recent N data points feed the surrogate,
 //! keeping per-decision cost flat over time. Points are padded/masked to
 //! the artifact's fixed N so the AOT'd GP sees static shapes.
+//!
+//! The window doubles as the **change journal** for the incremental
+//! posterior engine (`bandit::gp_incremental`): pushes are the only
+//! mutation, every push bumps [`SlidingWindow::epoch`], and once the
+//! window is full each push implies exactly one eviction of the oldest
+//! point. An engine that remembers the epoch it last synced at can
+//! therefore reconstruct the precise op sequence — `epoch_delta` pushes,
+//! each preceded by an eviction when the window was already at capacity —
+//! and fetch the new points from [`SlidingWindow::tail`]. A per-instance
+//! [`SlidingWindow::id`] guards against replaying one window's journal
+//! onto a factor built from another.
+//!
+//! Iteration order ([`SlidingWindow::iter`] and [`SlidingWindow::padded`])
+//! is **chronological** (oldest first). The GP is permutation-invariant in
+//! slot order (tested in python/tests/test_masking.py and
+//! `prop_gp_masking_permutation_and_noise_monotonicity`), so any fixed
+//! order is mathematically fine; the chronological one lets the cached and
+//! stateless backends see bit-identical row layouts.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static NEXT_WINDOW_ID: AtomicU64 = AtomicU64::new(1);
 
 #[derive(Clone, Debug)]
 pub struct Observation {
@@ -13,27 +35,51 @@ pub struct Observation {
     pub y_resource: f64,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct SlidingWindow {
     dim: usize,
     capacity: usize,
     buf: Vec<Observation>,
+    /// Oldest element once the buffer is full (next overwrite target).
     head: usize,
-    len: usize,
     total_pushed: u64,
+    /// Cache-invalidation identity (fresh per instance, also per clone).
+    id: u64,
+}
+
+impl Clone for SlidingWindow {
+    /// Clones get a fresh [`SlidingWindow::id`]: a clone that diverges from
+    /// its original must not be mistaken for it by a posterior cache keyed
+    /// on (id, epoch).
+    fn clone(&self) -> Self {
+        Self {
+            dim: self.dim,
+            capacity: self.capacity,
+            buf: self.buf.clone(),
+            head: self.head,
+            total_pushed: self.total_pushed,
+            id: NEXT_WINDOW_ID.fetch_add(1, Ordering::Relaxed),
+        }
+    }
 }
 
 impl SlidingWindow {
     pub fn new(capacity: usize, dim: usize) -> Self {
         assert!(capacity > 0 && dim > 0);
-        Self { dim, capacity, buf: Vec::with_capacity(capacity), head: 0, len: 0, total_pushed: 0 }
+        Self {
+            dim,
+            capacity,
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            total_pushed: 0,
+            id: NEXT_WINDOW_ID.fetch_add(1, Ordering::Relaxed),
+        }
     }
 
     pub fn push(&mut self, obs: Observation) {
         assert_eq!(obs.z.len(), self.dim, "feature dim mismatch");
         if self.buf.len() < self.capacity {
             self.buf.push(obs);
-            self.len = self.buf.len();
         } else {
             self.buf[self.head] = obs;
             self.head = (self.head + 1) % self.capacity;
@@ -41,20 +87,51 @@ impl SlidingWindow {
         self.total_pushed += 1;
     }
 
+    /// Number of observations currently held — derived from the buffer
+    /// (there is deliberately no separate `len` field to keep in sync).
     pub fn len(&self) -> usize {
-        self.len.max(self.buf.len().min(self.capacity))
+        self.buf.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Stable per-instance identity for posterior caches.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
     pub fn total_pushed(&self) -> u64 {
         self.total_pushed
     }
 
+    /// The change-journal cursor: bumped by exactly one on every push.
+    /// `epoch() - len()` pushes have already been evicted.
+    pub fn epoch(&self) -> u64 {
+        self.total_pushed
+    }
+
+    /// Observations oldest-first (chronological).
     pub fn iter(&self) -> impl Iterator<Item = &Observation> {
-        self.buf.iter()
+        // Before the buffer fills, head stays 0 and the second half is
+        // empty; afterwards the oldest element sits at `head`.
+        self.buf[self.head..].iter().chain(self.buf[..self.head].iter())
+    }
+
+    /// The `k` most recent observations, oldest-first. Panics if `k`
+    /// exceeds the current length (the journal never needs more).
+    pub fn tail(&self, k: usize) -> impl Iterator<Item = &Observation> {
+        assert!(k <= self.len(), "tail({k}) of a window holding {}", self.len());
+        self.iter().skip(self.len() - k)
     }
 
     /// Best (max) primary reward currently in the window (for EI).
@@ -64,15 +141,14 @@ impl SlidingWindow {
 
     /// Pack into fixed-shape padded arrays for the artifact:
     /// (z [n_pad*dim], y [n_pad], y_resource [n_pad], mask [n_pad]).
-    /// Slot order is arbitrary (the GP is permutation-invariant; tested in
-    /// python/tests/test_masking.py).
+    /// Rows are chronological (oldest first), padding rows masked out.
     pub fn padded(&self, n_pad: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
         assert!(n_pad >= self.buf.len(), "window larger than artifact N");
         let mut z = vec![0.0; n_pad * self.dim];
         let mut y = vec![0.0; n_pad];
         let mut yr = vec![0.0; n_pad];
         let mut mask = vec![0.0; n_pad];
-        for (i, o) in self.buf.iter().enumerate() {
+        for (i, o) in self.iter().enumerate() {
             z[i * self.dim..(i + 1) * self.dim].copy_from_slice(&o.z);
             y[i] = o.y;
             yr[i] = o.y_resource;
@@ -105,9 +181,57 @@ mod tests {
         assert_eq!(w.len(), 3);
         assert_eq!(w.total_pushed(), 5);
         let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
-        let mut sorted = ys.clone();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(sorted, vec![2.0, 3.0, 4.0], "oldest evicted: {ys:?}");
+        assert_eq!(ys, vec![2.0, 3.0, 4.0], "chronological, oldest evicted");
+    }
+
+    /// Regression: the old implementation kept a separate `len` field that
+    /// was only written on the fill branch, leaving `len()` to a confusing
+    /// `max(...)` over two counters. Length is now derived from the buffer;
+    /// it must be exact at every step of fill and every overwrite after.
+    #[test]
+    fn len_exact_across_fill_and_overwrite() {
+        let cap = 4;
+        let mut w = SlidingWindow::new(cap, 2);
+        assert_eq!(w.len(), 0);
+        assert!(w.is_empty());
+        for i in 0..10 {
+            w.push(obs(i as f64));
+            assert_eq!(w.len(), (i + 1).min(cap), "after push {i}");
+            assert_eq!(w.epoch(), i as u64 + 1);
+        }
+        assert_eq!(w.capacity(), cap);
+        assert_eq!(w.dim(), 2);
+    }
+
+    #[test]
+    fn iter_and_tail_are_chronological() {
+        let mut w = SlidingWindow::new(4, 2);
+        for i in 0..7 {
+            w.push(obs(i as f64));
+        }
+        let all: Vec<f64> = w.iter().map(|o| o.y).collect();
+        assert_eq!(all, vec![3.0, 4.0, 5.0, 6.0]);
+        let t2: Vec<f64> = w.tail(2).map(|o| o.y).collect();
+        assert_eq!(t2, vec![5.0, 6.0]);
+        assert_eq!(w.tail(0).count(), 0);
+        // Partially filled window: insertion order is chronological.
+        let mut p = SlidingWindow::new(8, 2);
+        p.push(obs(10.0));
+        p.push(obs(11.0));
+        let part: Vec<f64> = p.iter().map(|o| o.y).collect();
+        assert_eq!(part, vec![10.0, 11.0]);
+        let t1: Vec<f64> = p.tail(1).map(|o| o.y).collect();
+        assert_eq!(t1, vec![11.0]);
+    }
+
+    #[test]
+    fn ids_are_unique_and_clones_get_fresh_ones() {
+        let a = SlidingWindow::new(2, 1);
+        let b = SlidingWindow::new(2, 1);
+        let c = a.clone();
+        assert_ne!(a.id(), b.id());
+        assert_ne!(a.id(), c.id());
+        assert_eq!(a.len(), c.len());
     }
 
     #[test]
@@ -123,6 +247,24 @@ mod tests {
         assert_eq!(yr[1], -2.0);
         assert_eq!(&z[2..4], &[2.0, 2.0]);
         assert_eq!(mask[2], 0.0);
+    }
+
+    /// `padded` rows must align with `iter()` order after wraparound —
+    /// the posterior callers zip the two.
+    #[test]
+    fn padded_matches_iter_order_after_wrap() {
+        let mut w = SlidingWindow::new(3, 2);
+        for i in 0..5 {
+            w.push(obs(i as f64));
+        }
+        let (z, y, yr, mask) = w.padded(4);
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        assert_eq!(&y[..3], &ys[..], "padded y rows follow iter() order");
+        for (i, o) in w.iter().enumerate() {
+            assert_eq!(&z[i * 2..(i + 1) * 2], &o.z[..]);
+            assert_eq!(yr[i], o.y_resource);
+        }
+        assert_eq!(mask, vec![1.0, 1.0, 1.0, 0.0]);
     }
 
     #[test]
@@ -145,5 +287,13 @@ mod tests {
     fn dim_mismatch_panics() {
         let mut w = SlidingWindow::new(2, 3);
         w.push(obs(1.0)); // dim 2 != 3
+    }
+
+    #[test]
+    #[should_panic]
+    fn tail_larger_than_len_panics() {
+        let mut w = SlidingWindow::new(3, 2);
+        w.push(obs(1.0));
+        let _ = w.tail(2).count();
     }
 }

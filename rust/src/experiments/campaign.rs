@@ -256,6 +256,10 @@ pub struct Summary {
     pub mean_perf_score: f64,
     pub total_cost: f64,
     pub mean_resource_frac: f64,
+    /// Host wall-clock spent running the scenario (set by the runner, not
+    /// by `summarize`). Inherently non-deterministic, so it is excluded
+    /// from the canonical JSON that the determinism contract diffs.
+    pub wall_clock_ms: f64,
 }
 
 /// Mean that distinguishes "no data" from "zero": an empty slice yields
@@ -289,6 +293,7 @@ pub fn summarize(records: &[StepRecord]) -> Summary {
         mean_resource_frac: stats::mean(
             &records.iter().map(|r| r.resource_frac).collect::<Vec<_>>(),
         ),
+        wall_clock_ms: 0.0,
     }
 }
 
@@ -300,6 +305,7 @@ pub struct ScenarioOutcome {
 }
 
 fn run_scenario(sc: &Scenario, spec: &CampaignSpec, sys: &SystemConfig) -> Summary {
+    let t0 = std::time::Instant::now();
     let mut backend = Backend::auto(&sys.artifacts_dir);
     let records = match sc.env {
         EnvKind::Batch(w) => {
@@ -317,7 +323,9 @@ fn run_scenario(sc: &Scenario, spec: &CampaignSpec, sys: &SystemConfig) -> Summa
             run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed)
         }
     };
-    summarize(&records)
+    let mut summary = summarize(&records);
+    summary.wall_clock_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    summary
 }
 
 // ---------------------------------------------------------------------------
@@ -483,10 +491,23 @@ impl CampaignResult {
         }
     }
 
-    /// Machine-readable digest. Field order and float formatting are fixed,
-    /// and nothing time- or thread-dependent is included, so identical
-    /// campaigns render byte-identical JSON.
+    /// Machine-readable digest, including per-scenario `wall_clock_ms`.
+    /// Everything *except* that timing field is deterministic; for the
+    /// byte-identical determinism contract use [`Self::to_json_canonical`]
+    /// (or strip the field, as the CI diff does).
     pub fn to_json(&self) -> String {
+        self.to_json_impl(true)
+    }
+
+    /// The canonical digest: field order and float formatting are fixed,
+    /// and nothing time- or thread-dependent is included, so identical
+    /// campaigns render byte-identical JSON regardless of `--jobs`, host
+    /// speed, or scheduling.
+    pub fn to_json_canonical(&self) -> String {
+        self.to_json_impl(false)
+    }
+
+    fn to_json_impl(&self, with_timing: bool) -> String {
         let mut s = String::with_capacity(4096 + self.outcomes.len() * 256);
         s.push_str("{\n");
         s.push_str("  \"schema\": \"drone-campaign/v1\",\n");
@@ -523,6 +544,9 @@ impl CampaignResult {
                 "\"mean_resource_frac\": {}",
                 json_f64(m.mean_resource_frac)
             ));
+            if with_timing {
+                s.push_str(&format!(", \"wall_clock_ms\": {}", json_f64(m.wall_clock_ms)));
+            }
             s.push_str(if i + 1 < self.outcomes.len() { "},\n" } else { "}\n" });
         }
         s.push_str("  ],\n");
@@ -562,7 +586,7 @@ impl CampaignResult {
             &[
                 "suite", "workload", "setting", "policy", "seed", "steps", "post_perf_raw",
                 "mean_perf_score", "total_cost", "mean_resource_frac", "errors", "halts",
-                "offered", "dropped",
+                "offered", "dropped", "wall_clock_ms",
             ],
         );
         for o in &self.outcomes {
@@ -589,6 +613,7 @@ impl CampaignResult {
                 format!("{}", m.halts),
                 format!("{}", m.offered),
                 format!("{}", m.dropped),
+                format!("{:.3}", m.wall_clock_ms),
             ]);
         }
         let csv_path = csv.finish()?;
@@ -755,7 +780,45 @@ mod tests {
         let serial = run_campaign(&spec, &sys, 1);
         let parallel = run_campaign(&spec, &sys, 4);
         assert_eq!(serial.outcomes.len(), 4);
-        assert_eq!(serial.to_json(), parallel.to_json(), "jobs=1 vs jobs=4 must agree");
+        assert_eq!(
+            serial.to_json_canonical(),
+            parallel.to_json_canonical(),
+            "canonical campaign.json must agree for jobs=1 vs jobs=4"
+        );
+    }
+
+    /// Per-scenario wall-clock lands in the full JSON and the CSV, but the
+    /// canonical (determinism-diffed) JSON excludes it — timing is the one
+    /// legitimately non-deterministic output.
+    #[test]
+    fn wall_clock_recorded_but_excluded_from_canonical_json() {
+        let sys = small_sys();
+        let mut spec = small_spec();
+        spec.seeds = vec![0];
+        let result = run_campaign(&spec, &sys, 1);
+        assert!(result.outcomes.iter().all(|o| o.summary.wall_clock_ms >= 0.0));
+        assert!(result.outcomes.iter().all(|o| o.summary.wall_clock_ms.is_finite()));
+        let full = result.to_json();
+        let canon = result.to_json_canonical();
+        assert_eq!(
+            full.matches("\"wall_clock_ms\":").count(),
+            result.outcomes.len(),
+            "one wall_clock_ms per scenario in the full JSON"
+        );
+        assert!(!canon.contains("wall_clock_ms"), "canonical JSON must omit timing");
+        // Stripping the timing field from the full JSON recovers the
+        // canonical bytes — the sed-based CI diff relies on exactly this.
+        let stripped: String = full
+            .lines()
+            .map(|l| match l.find(", \"wall_clock_ms\":") {
+                Some(i) => {
+                    let tail = if l.ends_with("},") { "}," } else { "}" };
+                    format!("{}{tail}\n", &l[..i])
+                }
+                None => format!("{l}\n"),
+            })
+            .collect();
+        assert_eq!(stripped, canon);
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::bandit::gp::GpHyper;
 use crate::bandit::window::{Observation, SlidingWindow};
 use crate::config::BanditConfig;
 use crate::monitor::context::ContextVector;
-use crate::runtime::{Backend, PosteriorRequest};
+use crate::runtime::Backend;
 use crate::util::rng::Pcg64;
 
 /// Pad the window to the artifact's fixed N: the next power of two in
@@ -106,6 +106,9 @@ impl BanditCore {
     /// into stored history), so targets stay mutually consistent while the
     /// unit-variance GP prior always matches the data scale — without this,
     /// a signal_var far above the reward range keeps UCB exploring forever.
+    /// (Rescaling only touches the solve's right-hand side, never the
+    /// kernel, which is what lets `Backend::NativeCached` reuse one factor
+    /// across steps *and* across targets.)
     pub fn posterior(
         &self,
         backend: &mut Backend,
@@ -113,16 +116,11 @@ impl BanditCore {
         encs: &[Vec<f64>],
         ys: &[f64],
     ) -> anyhow::Result<(Vec<f64>, Vec<f64>)> {
-        let n_pad = padded_n(self.cfg.window);
-        let (z, _y_stored, _yr, mask) = self.window.padded(n_pad);
         let y_mean = crate::util::stats::mean(ys);
         let y_std = crate::util::stats::std_dev(ys).max(0.05);
         // `ys` lets callers swap the target (e.g. the resource GP); it must
-        // align with window iteration order, padded with zeros.
-        let mut y = vec![0.0; n_pad];
-        for (i, &v) in ys.iter().enumerate() {
-            y[i] = (v - y_mean) / y_std;
-        }
+        // align with the window's chronological iteration order.
+        let y_scaled: Vec<f64> = ys.iter().map(|v| (v - y_mean) / y_std).collect();
         let c = if self.use_context { *ctx } else { ContextVector::default() };
         let ctx_arr = c.to_array();
         let d = JOINT_DIM;
@@ -131,8 +129,9 @@ impl BanditCore {
             x.extend_from_slice(e);
             x.extend_from_slice(&ctx_arr);
         }
-        let (mu, sigma) = backend
-            .posterior(&PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp: self.hyp })?;
+        let n_pad = padded_n(self.cfg.window);
+        let (mu, sigma) =
+            backend.posterior_window(&self.window, &y_scaled, &x, d, self.hyp, n_pad)?;
         Ok((
             mu.iter().map(|v| v * y_std + y_mean).collect(),
             sigma.iter().map(|v| v * y_std).collect(),
@@ -326,6 +325,48 @@ mod tests {
         assert_eq!(n.norm(20.0), 1.0);
         assert_eq!(n.norm(15.0), 0.5);
         assert_eq!(n.norm(99.0), 1.0);
+    }
+
+    /// The incremental-cache backend must be numerically interchangeable
+    /// with the stateless oracle through the full BanditCore path
+    /// (candidate encoding, z-scoring, un-scaling), including once the
+    /// window wraps and the cached factor is maintained by evictions.
+    #[test]
+    fn cached_backend_matches_oracle_through_core() {
+        let cfg = BanditConfig { candidates: 16, window: 8, ..Default::default() };
+        let mut c = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, true, 0);
+        let mut cached = Backend::native_cached();
+        let mut oracle = Backend::Native;
+        let mut rng = Pcg64::new(7);
+        let ctx = ContextVector { workload: 0.4, cpu_util: 0.3, ..Default::default() };
+        for step in 0..30 {
+            let a = c.candgen.decode(&[
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+                rng.f64(),
+            ]);
+            c.record(&a, &ctx, rng.normal(), rng.f64());
+            let (encs, _) = c.candidates(&mut rng);
+            let (mu_c, sig_c) = c.posterior_primary(&mut cached, &ctx, &encs).unwrap();
+            let (mu_o, sig_o) = c.posterior_primary(&mut oracle, &ctx, &encs).unwrap();
+            for i in 0..mu_c.len() {
+                assert!((mu_c[i] - mu_o[i]).abs() < 1e-8, "step {step} mu[{i}]");
+                assert!((sig_c[i] - sig_o[i]).abs() < 1e-8, "step {step} sigma[{i}]");
+            }
+            // The resource target reuses the same factor at the same epoch.
+            let (mu_rc, _) = c.posterior_resource(&mut cached, &ctx, &encs).unwrap();
+            let (mu_ro, _) = c.posterior_resource(&mut oracle, &ctx, &encs).unwrap();
+            for i in 0..mu_rc.len() {
+                assert!((mu_rc[i] - mu_ro[i]).abs() < 1e-8, "step {step} res mu[{i}]");
+            }
+        }
+        let stats = cached.cache_stats().unwrap();
+        assert_eq!(stats.rebuilds, 1, "cached path must never refactorize mid-stream");
+        assert_eq!(stats.evictions, 30 - 8);
     }
 
     #[test]

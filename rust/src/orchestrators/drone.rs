@@ -9,6 +9,16 @@
 //! a random-exploration warmup inside a guaranteed-safe initial set, then
 //! UCB on performance restricted to the safe set
 //! { x : LCB_P(x, w) <= P_max } expanded each step from the P GP.
+//!
+//! Neither policy repacks padded GP arrays per step anymore: the posterior
+//! goes through `Backend::posterior_window`, and the `Backend` handed into
+//! `decide` is held by the harness across decision periods — so with the
+//! default `Backend::NativeCached` the Cholesky factor of the window
+//! kernel survives from one decision to the next and is only patched for
+//! the append/evict the window saw in between (Sec. 4.5's complexity
+//! reduction, taken from O(n³) to O(n²) per decision). The two GPs of
+//! Algorithm 2 share that one factor: p and P differ only in the solve's
+//! right-hand side.
 
 use super::bandit_core::{Acquisition, BanditCore};
 use super::traits::{Orchestrator, Telemetry};
@@ -263,6 +273,42 @@ mod tests {
         t.failure = true;
         let a = d.decide(&t, &mut b, &mut rng);
         assert!(a.ram_mb > failed.ram_mb, "recovery escalates RAM");
+    }
+
+    /// With the incremental-cache backend, DronePublic must reproduce the
+    /// oracle backend's decision sequence exactly: while the window is
+    /// still filling (steps < window capacity) the cached factor performs
+    /// the same floating-point ops as the stateless rebuild, so UCB scores
+    /// — and therefore the chosen actions — are bit-identical.
+    #[test]
+    fn public_cached_backend_reproduces_oracle_decisions() {
+        let mk = || {
+            DronePublic::new(
+                ActionSpace::default(),
+                BanditConfig { candidates: 24, ..Default::default() },
+                ObjectiveConfig::default(),
+                0,
+            )
+        };
+        let (mut d_cached, mut d_oracle) = (mk(), mk());
+        let mut b_cached = Backend::native_cached();
+        let mut b_oracle = Backend::Native;
+        let mut rng_c = Pcg64::new(5);
+        let mut rng_o = Pcg64::new(5);
+        let mut tel_c = tel_with(None, None, None);
+        let mut tel_o = tel_with(None, None, None);
+        for step in 0..18 {
+            // 18 < default window (30): append-only, exact equality holds.
+            let a_c = d_cached.decide(&tel_c, &mut b_cached, &mut rng_c);
+            let a_o = d_oracle.decide(&tel_o, &mut b_oracle, &mut rng_o);
+            assert_eq!(a_c, a_o, "decision diverged at step {step}");
+            let perf = 0.2 + 0.5 * (a_c.ram_mb / 28_672.0).min(1.0);
+            tel_c = tel_with(Some(a_c), Some(perf), Some(0.3));
+            tel_o = tel_with(Some(a_o), Some(perf), Some(0.3));
+        }
+        let stats = b_cached.cache_stats().unwrap();
+        assert_eq!(stats.rebuilds, 1, "factor built once, then extended");
+        assert_eq!(stats.evictions, 0);
     }
 
     #[test]

@@ -1,8 +1,13 @@
 //! Runtime layer: the typed posterior backend the coordinator hot path
-//! calls every decision period, with two implementations:
+//! calls every decision period, with three implementations:
 //!
-//!   - `Backend::Native` — the in-repo f64 GP (`bandit::gp`), always
-//!     available; the default build's only backend.
+//!   - `Backend::NativeCached` — the incremental Cholesky engine
+//!     (`bandit::gp_incremental`); the default runtime path. Holds the
+//!     window kernel's factor across decisions and maintains it in O(n²)
+//!     per append/evict instead of refactorizing in O(n³) per call.
+//!   - `Backend::Native` — the stateless in-repo f64 GP (`bandit::gp`),
+//!     always available; the cross-validation oracle for both the cached
+//!     engine (property sweeps) and the XLA artifact (integration tests).
 //!   - `Backend::Xla` (feature `pjrt`) — wraps the `xla` crate (PJRT C API)
 //!     to load and execute the AOT artifacts. Gated because the real PJRT
 //!     bindings and plugin are not available in every build environment;

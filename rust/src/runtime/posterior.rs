@@ -1,14 +1,22 @@
 //! Typed posterior backend: the one call the coordinator hot path makes
-//! every decision period. Two interchangeable implementations:
+//! every decision period. Three interchangeable implementations:
 //!
+//!   - `Backend::NativeCached` — the incremental Cholesky engine
+//!     (`bandit::gp_incremental`): the factor of the window kernel is kept
+//!     alive across decisions and maintained under the window's
+//!     append/evict mutations in O(n²), instead of an O(n³) refactorization
+//!     per call. The default runtime path.
+//!   - `Backend::Native` — the stateless in-repo f64 GP (`bandit::gp`),
+//!     rebuilding from the padded arrays on every call. Kept as the
+//!     **cross-validation oracle**: property tests sweep it against the
+//!     cached engine (and the integration tests against the XLA artifact).
 //!   - `Backend::Xla` (feature `pjrt`) — the AOT'd L1/L2 artifact through
 //!     PJRT (production path; Pallas Matern kernel + loop Cholesky).
-//!   - `Backend::Native` — the in-repo f64 GP (bandit::gp), used when
-//!     artifacts are absent (or the `pjrt` feature is off) and to
-//!     cross-validate the artifact numerics.
 //!
-//! Both take the padded window + candidate batch and return (mu, sigma) per
-//! candidate.
+//! Stateless backends take the padded window + candidate batch
+//! ([`PosteriorRequest`]); the decision loop itself goes through
+//! [`Backend::posterior_window`], which lets the cached engine sync off the
+//! window's change journal instead of repacking padded arrays each step.
 
 use anyhow::Result;
 
@@ -18,6 +26,8 @@ use anyhow::anyhow;
 #[cfg(feature = "pjrt")]
 use super::client::XlaRuntime;
 use crate::bandit::gp::{self, GpHyper};
+use crate::bandit::gp_incremental::{CacheStats, CachedGp};
+use crate::bandit::window::SlidingWindow;
 
 pub struct PosteriorRequest<'a> {
     /// Padded window inputs [n_pad * d].
@@ -31,35 +41,57 @@ pub struct PosteriorRequest<'a> {
 }
 
 pub enum Backend {
+    /// Stateless native GP (full rebuild per call) — the oracle.
     Native,
+    /// Native GP with the incremental Cholesky cache — the fast path.
+    NativeCached(CachedGp),
     #[cfg(feature = "pjrt")]
     Xla(XlaRuntime),
 }
 
 impl Backend {
     /// Open the XLA backend if artifacts exist (and the `pjrt` feature is
-    /// compiled in), else fall back to native.
+    /// compiled in), else fall back to the cached native engine.
     pub fn auto(artifacts_dir: &str) -> Backend {
         #[cfg(feature = "pjrt")]
         if let Ok(rt) = XlaRuntime::open(artifacts_dir) {
             return Backend::Xla(rt);
         }
         let _ = artifacts_dir;
-        Backend::Native
+        Backend::native_cached()
+    }
+
+    /// A fresh incremental-cache backend (no artifacts involved).
+    pub fn native_cached() -> Backend {
+        Backend::NativeCached(CachedGp::new())
     }
 
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Native => "native",
+            Backend::NativeCached(_) => "native-cached",
             #[cfg(feature = "pjrt")]
             Backend::Xla(_) => "xla",
         }
     }
 
-    /// Posterior (mu, sigma) for each candidate.
+    /// Incremental-cache counters, when this backend keeps one.
+    pub fn cache_stats(&self) -> Option<CacheStats> {
+        match self {
+            Backend::NativeCached(c) => Some(c.stats),
+            _ => None,
+        }
+    }
+
+    /// Posterior (mu, sigma) for each candidate from padded arrays.
+    ///
+    /// This is the stateless entry point: `NativeCached` serves it with a
+    /// one-shot rebuild (a bare request carries no window identity to sync
+    /// a cache against) — the decision loop uses
+    /// [`Backend::posterior_window`] instead.
     pub fn posterior(&mut self, req: &PosteriorRequest) -> Result<(Vec<f64>, Vec<f64>)> {
         match self {
-            Backend::Native => {
+            Backend::Native | Backend::NativeCached(_) => {
                 let (mu, sigma) = gp::gp_posterior(req.z, req.y, req.mask, req.x, req.d, req.hyp);
                 Ok((mu, sigma))
             }
@@ -105,11 +137,42 @@ impl Backend {
             }
         }
     }
+
+    /// Posterior straight off the live window — the decision hot path.
+    ///
+    /// `ys` are the (already normalized) targets aligned with the window's
+    /// chronological iteration order; `x` is the candidate batch
+    /// [m * d]. `NativeCached` syncs its factor off the window journal
+    /// (O(n²) per decision); stateless backends pack the padded arrays
+    /// (`n_pad` rows, the artifact geometry) and take the O(n³) route.
+    pub fn posterior_window(
+        &mut self,
+        window: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        d: usize,
+        hyp: GpHyper,
+        n_pad: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        debug_assert_eq!(window.dim(), d);
+        debug_assert_eq!(ys.len(), window.len());
+        match self {
+            Backend::NativeCached(c) => Ok(c.posterior(window, ys, x, hyp)),
+            _ => {
+                let n_pad = n_pad.max(window.len());
+                let (z, _y_stored, _yr, mask) = window.padded(n_pad);
+                let mut y = vec![0.0; n_pad];
+                y[..ys.len()].copy_from_slice(ys);
+                self.posterior(&PosteriorRequest { z: &z, y: &y, mask: &mask, x, d, hyp })
+            }
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::window::Observation;
     use crate::util::rng::Pcg64;
 
     #[test]
@@ -129,8 +192,59 @@ mod tests {
     }
 
     #[test]
-    fn auto_falls_back_to_native() {
+    fn auto_falls_back_to_cached_native() {
         let b = Backend::auto("/nonexistent/artifacts");
-        assert_eq!(b.name(), "native");
+        assert_eq!(b.name(), "native-cached");
+        assert_eq!(b.cache_stats(), Some(CacheStats::default()));
+        assert_eq!(Backend::Native.cache_stats(), None);
+    }
+
+    /// The cached backend must agree with the stateless oracle through the
+    /// `posterior_window` entry point, across fills and evictions.
+    #[test]
+    fn cached_and_oracle_backends_agree_on_windows() {
+        let mut rng = Pcg64::new(2);
+        let (cap, d, m) = (6usize, 4usize, 7usize);
+        let mut window = SlidingWindow::new(cap, d);
+        let mut cached = Backend::native_cached();
+        let mut oracle = Backend::Native;
+        let hyp = GpHyper::default();
+        for step in 0..20 {
+            window.push(Observation {
+                z: (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                y: rng.normal(),
+                y_resource: 0.0,
+            });
+            let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
+            let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let (mu_c, sig_c) =
+                cached.posterior_window(&window, &ys, &x, d, hyp, 8).unwrap();
+            let (mu_o, sig_o) =
+                oracle.posterior_window(&window, &ys, &x, d, hyp, 8).unwrap();
+            for c in 0..m {
+                assert!((mu_c[c] - mu_o[c]).abs() < 1e-9, "step {step} mu[{c}]");
+                assert!((sig_c[c] - sig_o[c]).abs() < 1e-9, "step {step} sigma[{c}]");
+            }
+        }
+        let stats = cached.cache_stats().unwrap();
+        assert_eq!(stats.rebuilds, 1, "one initial factorization only");
+        assert_eq!(stats.evictions, 20 - cap as u64);
+    }
+
+    /// A padded `PosteriorRequest` through the cached backend is served
+    /// statelessly (no window to sync against) and matches the oracle.
+    #[test]
+    fn cached_backend_serves_padded_requests_statelessly() {
+        let mut rng = Pcg64::new(3);
+        let (n, m, d) = (6, 4, 3);
+        let z: Vec<f64> = (0..n * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mask = vec![1.0; n];
+        let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let req = PosteriorRequest { z: &z, y: &y, mask: &mask, x: &x, d, hyp: GpHyper::default() };
+        let (mu_c, sig_c) = Backend::native_cached().posterior(&req).unwrap();
+        let (mu_o, sig_o) = Backend::Native.posterior(&req).unwrap();
+        assert_eq!(mu_c, mu_o);
+        assert_eq!(sig_c, sig_o);
     }
 }

@@ -222,6 +222,101 @@ fn prop_gp_masking_permutation_and_noise_monotonicity() {
     }
 }
 
+/// Tentpole invariant (ISSUE 2): the incremental Cholesky engine
+/// (`bandit::gp_incremental`) must be numerically indistinguishable from
+/// the stateless `gp_posterior` rebuild — |Δmu|, |Δsigma| < 1e-8 at every
+/// step of thousands of seeded random push/evict sequences, across
+/// dimensions, capacities, hyperparameters, and masked/partial windows
+/// (the oracle is queried through padded arrays with a random number of
+/// masked padding rows). Sequences run well past window capacity, so the
+/// eviction (first-row downdate) path dominates the sweep.
+#[test]
+fn prop_incremental_gp_matches_stateless_rebuild() {
+    use drone::bandit::gp_incremental::CachedGp;
+    use drone::bandit::window::{Observation, SlidingWindow};
+    let mut rng = Pcg64::new(606);
+    let noise_grid = [1e-3, 0.01, 0.05, 0.1];
+    let mut total_checks = 0usize;
+    let mut case = 0usize;
+    // Dozens of independent sequences, thousands of per-step checks.
+    while case < 48 || total_checks < 3000 {
+        case += 1;
+        let d = 2 + rng.below(7); // 2..=8
+        let cap = 3 + rng.below(22); // 3..=24
+        let hyp = GpHyper {
+            noise_var: noise_grid[rng.below(noise_grid.len())],
+            lengthscale: rng.uniform(0.35, 1.6),
+            signal_var: rng.uniform(0.5, 3.0),
+        };
+        // Run 3-4x past capacity: most steps exercise evict + append.
+        let pushes = cap * 3 + rng.below(cap) + 4;
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        let mut pushed = 0usize;
+        let mut first_sync_len = 0usize;
+        while pushed < pushes {
+            // Occasionally push a burst before querying, so the engine
+            // replays multi-op journal gaps (evict+append, twice or thrice)
+            // in one sync — not just the steady one-push-per-decision case.
+            let burst = 1 + rng.below(3); // 1..=3, always <= capacity (>= 3)
+            for _ in 0..burst {
+                w.push(Observation {
+                    z: (0..d).map(|_| rng.uniform(-1.8, 1.8)).collect(),
+                    y: rng.normal(),
+                    y_resource: rng.f64(),
+                });
+                pushed += 1;
+            }
+            let m = 1 + rng.below(12);
+            let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.8, 1.8)).collect();
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            if first_sync_len == 0 {
+                first_sync_len = w.len(); // absorbed by the initial build
+            }
+            let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+
+            // Stateless rebuild over the same window, padded with a random
+            // number of masked rows (masked/partial window equivalence).
+            let n_pad = w.len() + rng.below(6);
+            let (z, _, _, mask) = w.padded(n_pad);
+            let mut y = vec![0.0; n_pad];
+            y[..ys.len()].copy_from_slice(&ys);
+            let (mu_o, sig_o) = gp_posterior(&z, &y, &mask, &x, d, hyp);
+
+            for c in 0..m {
+                assert!(
+                    (mu_c[c] - mu_o[c]).abs() < 1e-8,
+                    "case {case} push {pushed} mu[{c}]: {} vs {}",
+                    mu_c[c],
+                    mu_o[c]
+                );
+                assert!(
+                    (sig_c[c] - sig_o[c]).abs() < 1e-8,
+                    "case {case} push {pushed} sigma[{c}]: {} vs {}",
+                    sig_c[c],
+                    sig_o[c]
+                );
+                total_checks += 1;
+            }
+        }
+        // The whole sequence must have been served by ONE factorization,
+        // maintained incrementally ever after: every push after the first
+        // sync is an O(n²) append, every overflow an O(n²) eviction.
+        assert_eq!(eng.stats.rebuilds, 1, "case {case}: cached path refactorized");
+        assert_eq!(
+            eng.stats.appends,
+            (pushed - first_sync_len) as u64,
+            "case {case}: appends must account for every journaled push"
+        );
+        assert_eq!(
+            eng.stats.evictions,
+            pushed.saturating_sub(cap) as u64,
+            "case {case}: one eviction per push past capacity"
+        );
+        assert!(eng.stats.evictions > 0, "case {case}: sweep must hit evictions");
+    }
+}
+
 /// Failure injection: the batch environment must survive pathological
 /// actions (halt floor, OOM storms) without panicking, for every policy.
 #[test]
