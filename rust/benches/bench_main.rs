@@ -298,17 +298,28 @@ fn main() {
     let sys = SystemConfig::default();
     println!("drone bench harness (scale {scale}); filters: {filters:?}");
 
+    // The figure/table drivers read and persist the campaign store; point
+    // them at a scratch directory so benches stay hermetic (a warm
+    // results/campaign.json would make every experiment bench measure JSON
+    // parsing instead of environment execution) and never touch results/.
+    if std::env::var_os("DRONE_RESULTS_DIR").is_none() {
+        let dir = std::env::temp_dir().join(format!("drone-bench-{}", std::process::id()));
+        std::env::set_var("DRONE_RESULTS_DIR", &dir);
+        println!("results -> {}", dir.display());
+    }
+
     if wants("perf") {
         perf_benches(&sys, 1.0);
     }
 
+    let opts = experiments::RunOpts { scale, ..Default::default() };
     for id in experiments::ALL_EXPERIMENTS {
         if !wants(id) {
             continue;
         }
         println!("\n== experiment bench: {id} (scale {scale}) ==");
         let t0 = Instant::now();
-        if let Err(e) = experiments::run(id, &sys, scale) {
+        if let Err(e) = experiments::run(id, &sys, &opts) {
             eprintln!("{id} FAILED: {e}");
             std::process::exit(1);
         }

@@ -32,6 +32,19 @@ impl BatchWorkload {
             BatchWorkload::Sort => "Sort",
         }
     }
+
+    /// Inverse of [`Self::name`] — the campaign store uses it to rebuild
+    /// scenario descriptors from `campaign.json`.
+    pub fn from_name(s: &str) -> Option<BatchWorkload> {
+        [
+            BatchWorkload::SparkPi,
+            BatchWorkload::LogisticRegression,
+            BatchWorkload::PageRank,
+            BatchWorkload::Sort,
+        ]
+        .into_iter()
+        .find(|w| w.name() == s)
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -178,6 +178,19 @@ impl SystemConfig {
         c
     }
 
+    /// Stable digest of every config field that shapes simulated
+    /// environment output. The campaign store stamps its file with this so
+    /// scenario records produced under one `--config` are never served as
+    /// cache hits under another. `seed` is excluded: it enters each
+    /// scenario's cache key directly as the scenario seed.
+    pub fn fingerprint(&self) -> String {
+        let repr = format!(
+            "{:?}|{:?}|{:?}|{:?}|{}",
+            self.cluster, self.interference, self.bandit, self.objective, self.artifacts_dir
+        );
+        format!("{:016x}", crate::util::rng::hash_str(&repr))
+    }
+
     /// Total schedulable cluster capacity.
     pub fn cluster_cpu_millicores(&self) -> f64 {
         self.cluster.workers as f64 * self.cluster.node_cpu_millicores

@@ -8,37 +8,60 @@
 //!   - [`CampaignSpec`] selects suites, policies, seeds and run lengths;
 //!   - [`enumerate`] expands it into an ordered list of [`Scenario`]
 //!     descriptors (stable ids, stable names);
-//!   - [`run_campaign`] fans the scenarios out across `--jobs` OS threads.
-//!     Each scenario derives every random stream from its own seed, so the
-//!     result is **byte-identical regardless of the thread count** — the
-//!     workers only race for *which* scenario to run next, never for any
-//!     random state;
-//!   - the aggregator merges per-step [`StepRecord`]s into per-scenario
+//!   - [`run_scenarios`] fans any scenario list out across `--jobs` OS
+//!     threads. Each scenario derives every random stream from its own
+//!     identity, so the result is **byte-identical regardless of the
+//!     thread count** — the workers only race for *which* scenario to run
+//!     next, never for any random state;
+//!   - the aggregator merges per-step [`StepRow`]s into per-scenario
 //!     summaries, per-(suite, workload, policy) aggregates, the familiar
 //!     stdout tables, and machine-readable `campaign.json` / `campaign.csv`
 //!     under `results/`.
+//!
+//! Since PR 3 the registry covers every environment the figure/table
+//! drivers need — not just the four paper suites but also the fig1 RAM
+//! sweep, the fig2 Sort-variance sweep and the fig4 affinity variants —
+//! and `campaign.json` carries the per-step records (performance, cost,
+//! allocation, latency digests) those drivers aggregate. The drivers
+//! themselves are pure readers of [`super::store::CampaignStore`]; none of
+//! them runs a private environment loop anymore.
+//!
+//! `--timeout` arms a per-scenario wall-clock deadline (the per-scenario
+//! `wall_clock_ms` landed in PR 2 is its observability side): an
+//! over-budget scenario stops at the next step boundary, its truncated
+//! record vector is kept, and `timed_out` is set. Timeouts trade the
+//! byte-identical determinism contract for liveness, so leave the flag off
+//! (the default) when regenerating canonical artifacts.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
-use crate::apps::batch::BatchWorkload;
+use crate::apps::batch::{run_batch_job, BatchWorkload, DeployMode, Platform, RunSpec};
+use crate::apps::microservice::{self, ServiceGraph};
 use crate::config::SystemConfig;
 use crate::runtime::Backend;
+use crate::sim::cluster::Cluster;
+use crate::sim::interference::InterferenceModel;
+use crate::sim::resources::Resources;
+use crate::sim::scheduler::{apply_deployment, Deployment};
 use crate::util::csv::CsvWriter;
+use crate::util::rng::{hash_str, Pcg64};
 use crate::util::stats;
 use crate::util::table::{pm, Table};
 
 use super::harness::{
-    post_warmup, run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
-    StepRecord,
+    batch_perf_score, deadline_passed, micro_perf_score, note_env_execution, run_batch_env,
+    run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
 };
 
 // ---------------------------------------------------------------------------
 // Scenario descriptors
 // ---------------------------------------------------------------------------
 
-/// The four experiment families the paper's figures/tables draw from.
+/// The experiment families the paper's figures/tables draw from: the four
+/// policy-evaluation suites plus the three figure-specific sweeps.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Suite {
     /// Recurring batch jobs, pay-as-you-go cloud (Fig. 7a/7b).
@@ -49,10 +72,23 @@ pub enum Suite {
     MicroPublic,
     /// SocialNet under the private-cloud memory cap (Table 4).
     MicroPrivate,
+    /// Fig. 1: single Spark jobs across a total-RAM sweep, container vs VM.
+    Fig1Sweep,
+    /// Fig. 2: Sort runs under interference across data sizes, Spark vs
+    /// Flink.
+    Fig2Variance,
+    /// Fig. 4: one Sockshop traffic window per affinity variant.
+    Fig4Affinity,
 }
 
+/// The paper's four policy-evaluation families — what `--experiments all`
+/// expands to (the figure sweeps are requested by name or by the figure
+/// drivers themselves).
 pub const ALL_SUITES: &[Suite] =
     &[Suite::BatchPublic, Suite::BatchPrivate, Suite::MicroPublic, Suite::MicroPrivate];
+
+/// The figure-specific sweep suites (policy axis = deployment variant).
+pub const FIGURE_SUITES: &[Suite] = &[Suite::Fig1Sweep, Suite::Fig2Variance, Suite::Fig4Affinity];
 
 impl Suite {
     pub fn name(&self) -> &'static str {
@@ -61,43 +97,149 @@ impl Suite {
             Suite::BatchPrivate => "batch-private",
             Suite::MicroPublic => "micro-public",
             Suite::MicroPrivate => "micro-private",
+            Suite::Fig1Sweep => "fig1",
+            Suite::Fig2Variance => "fig2",
+            Suite::Fig4Affinity => "fig4",
         }
     }
 
     pub fn parse(s: &str) -> Option<Suite> {
-        ALL_SUITES.iter().copied().find(|x| x.name() == s)
+        ALL_SUITES.iter().chain(FIGURE_SUITES).copied().find(|x| x.name() == s)
     }
 
     pub fn setting(&self) -> CloudSetting {
         match self {
-            Suite::BatchPublic | Suite::MicroPublic => CloudSetting::Public,
             Suite::BatchPrivate | Suite::MicroPrivate => CloudSetting::Private,
+            _ => CloudSetting::Public,
         }
     }
 
-    /// The paper's baseline lineup for this family.
+    /// The paper's baseline lineup for this family. For the figure sweeps
+    /// the "policy" axis is the deployment variant being compared.
     pub fn default_policies(&self) -> &'static [&'static str] {
         match self {
             Suite::BatchPublic => &["k8s-hpa", "cherrypick", "accordia", "drone"],
             Suite::BatchPrivate => &["k8s-hpa", "cherrypick", "accordia", "drone-safe"],
             Suite::MicroPublic => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
+            Suite::Fig1Sweep => &["container", "vm"],
+            Suite::Fig2Variance => &["spark", "flink"],
+            Suite::Fig4Affinity => &["colocated", "isolated"],
         }
     }
 }
 
-/// Which simulated environment a scenario runs in.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Canonical grids for the figure sweeps, shared by [`enumerate`] and the
+/// figure drivers so both sides request identical scenario keys.
+pub const FIG1_WORKLOADS: &[BatchWorkload] =
+    &[BatchWorkload::PageRank, BatchWorkload::Sort, BatchWorkload::LogisticRegression];
+pub const FIG1_RAMS_GB: &[u32] = &[48, 96, 144, 192];
+pub const FIG2_SIZES_GB: &[u32] = &[30, 60, 90, 120, 150];
+/// Full-scale (scale = 1.0) fig4 traffic window.
+pub const FIG4_WINDOW_S: f64 = 120.0;
+
+/// The fig4 window at a given experiment scale — one shared formula so
+/// `drone campaign --experiments fig4 --scale S` prebuilds exactly the
+/// scenario keys `drone experiment fig4 --scale S` requests.
+pub fn fig4_window_s(scale: f64) -> f64 {
+    FIG4_WINDOW_S * scale.max(0.25)
+}
+
+/// Which simulated environment a scenario runs in, including every knob
+/// that shapes the run (so the scenario's identity fully determines its
+/// records, and a campaign store can match cached scenarios exactly).
+#[derive(Clone, Debug, PartialEq)]
 pub enum EnvKind {
-    Batch(BatchWorkload),
-    Micro,
+    /// Recurring-batch policy loop (`run_batch_env`).
+    Batch {
+        workload: BatchWorkload,
+        steps: u64,
+        /// Co-tenant memory stress fraction (Table 3: 0.30, Fig. 7c: 0.05).
+        stress: f64,
+    },
+    /// Trace-driven SocialNet policy loop (`run_micro_env`).
+    Micro { steps: u64, base_rps: f64, amplitude_rps: f64 },
+    /// One statically-provisioned Spark job at a total-RAM point (Fig. 1);
+    /// the policy axis selects container vs VM deployment.
+    SingleJob { workload: BatchWorkload, ram_gb: u32 },
+    /// One Sort run under sampled interference (Fig. 2); the policy axis
+    /// selects Spark vs Flink.
+    SortVariance { data_gb: u32 },
+    /// One Sockshop traffic window (Fig. 4); the policy axis selects the
+    /// colocated vs isolated affinity rule.
+    Affinity { window_s: f64 },
 }
 
 impl EnvKind {
-    pub fn workload_name(&self) -> &'static str {
+    pub fn workload_name(&self) -> String {
         match self {
-            EnvKind::Batch(w) => w.name(),
-            EnvKind::Micro => "SocialNet",
+            EnvKind::Batch { workload, .. } => workload.name().to_string(),
+            EnvKind::Micro { .. } => "SocialNet".to_string(),
+            EnvKind::SingleJob { workload, ram_gb } => {
+                format!("{}@{}GB", workload.name(), ram_gb)
+            }
+            EnvKind::SortVariance { data_gb } => format!("Sort@{}GB", data_gb),
+            EnvKind::Affinity { .. } => "Sockshop".to_string(),
+        }
+    }
+
+    /// Canonical JSON for the env descriptor. This string is part of the
+    /// scenario's cache identity, so field order and float formatting are
+    /// fixed (same `json_f64` as every other campaign float).
+    pub fn to_json(&self) -> String {
+        match self {
+            EnvKind::Batch { workload, steps, stress } => format!(
+                "{{\"kind\": \"batch\", \"workload\": {}, \"steps\": {}, \"stress\": {}}}",
+                json_str(workload.name()),
+                steps,
+                json_f64(*stress)
+            ),
+            EnvKind::Micro { steps, base_rps, amplitude_rps } => format!(
+                "{{\"kind\": \"micro\", \"steps\": {}, \"base_rps\": {}, \
+                 \"amplitude_rps\": {}}}",
+                steps,
+                json_f64(*base_rps),
+                json_f64(*amplitude_rps)
+            ),
+            EnvKind::SingleJob { workload, ram_gb } => format!(
+                "{{\"kind\": \"single-job\", \"workload\": {}, \"ram_gb\": {}}}",
+                json_str(workload.name()),
+                ram_gb
+            ),
+            EnvKind::SortVariance { data_gb } => {
+                format!("{{\"kind\": \"sort-variance\", \"data_gb\": {}}}", data_gb)
+            }
+            EnvKind::Affinity { window_s } => {
+                format!("{{\"kind\": \"affinity\", \"window_s\": {}}}", json_f64(*window_s))
+            }
+        }
+    }
+
+    /// Inverse of [`Self::to_json`] for the campaign store.
+    pub fn from_json(v: &crate::util::json::Json) -> Option<EnvKind> {
+        let workload = || BatchWorkload::from_name(v.get("workload")?.as_str()?);
+        match v.get("kind")?.as_str()? {
+            "batch" => Some(EnvKind::Batch {
+                workload: workload()?,
+                steps: v.get("steps")?.as_u64()?,
+                stress: v.get("stress")?.f64_or_nan()?,
+            }),
+            "micro" => Some(EnvKind::Micro {
+                steps: v.get("steps")?.as_u64()?,
+                base_rps: v.get("base_rps")?.f64_or_nan()?,
+                amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+            }),
+            "single-job" => Some(EnvKind::SingleJob {
+                workload: workload()?,
+                ram_gb: v.get("ram_gb")?.as_u64()? as u32,
+            }),
+            "sort-variance" => {
+                Some(EnvKind::SortVariance { data_gb: v.get("data_gb")?.as_u64()? as u32 })
+            }
+            "affinity" => {
+                Some(EnvKind::Affinity { window_s: v.get("window_s")?.f64_or_nan()? })
+            }
+            _ => None,
         }
     }
 }
@@ -120,6 +262,18 @@ impl Scenario {
         let (suite, workload) = (self.suite.name(), self.env.workload_name());
         format!("{suite}/{workload}/{}/s{}", self.policy, self.seed)
     }
+
+    /// Cache identity: everything that determines the records, nothing
+    /// that doesn't (ids are positional, so they are excluded).
+    pub fn key(&self) -> String {
+        format!("{}/{}/s{}|{}", self.suite.name(), self.policy, self.seed, self.env.to_json())
+    }
+
+    /// Build a campaign-store request (figure/table drivers): ids are
+    /// positional and assigned by the store on merge.
+    pub fn request(suite: Suite, env: EnvKind, policy: &str, seed: u64) -> Scenario {
+        Scenario { id: 0, suite, env, setting: suite.setting(), policy: policy.into(), seed }
+    }
 }
 
 /// What to run: the cross-product request the CLI builds from flags.
@@ -138,6 +292,14 @@ pub struct CampaignSpec {
     /// SocialNet trace shape (trough rps, peak-to-trough amplitude rps).
     pub micro_base_rps: f64,
     pub micro_amplitude_rps: f64,
+    /// Co-tenant memory stress for the batch-private suite (`--stress`;
+    /// Table 3's profile by default, Fig. 7c prebuilds use 0.05).
+    pub private_stress: f64,
+    /// Experiment scale for the figure-sweep grids (`--scale`; sizes the
+    /// fig4 window exactly like the figure driver's `--scale`).
+    pub figure_scale: f64,
+    /// Per-scenario wall-clock budget in seconds; 0 disables the guard.
+    pub timeout_s: f64,
 }
 
 impl Default for CampaignSpec {
@@ -155,9 +317,20 @@ impl Default for CampaignSpec {
             micro_steps: 12,
             micro_base_rps: 60.0,
             micro_amplitude_rps: 140.0,
+            private_stress: BATCH_PRIVATE_STRESS,
+            figure_scale: 0.3,
+            timeout_s: 0.0,
         }
     }
 }
+
+/// The co-tenant memory stress the batch-private suite runs under
+/// (Table 3's stress-ng profile).
+pub const BATCH_PRIVATE_STRESS: f64 = 0.30;
+
+/// The light co-tenant pressure Fig. 7c runs under; prebuild its grid with
+/// `drone campaign --experiments batch-private --stress 0.05`.
+pub const FIG7C_STRESS: f64 = 0.05;
 
 /// Expand the spec into the ordered scenario list. Order (and therefore
 /// scenario ids) is deterministic: suites, then workloads, then policies,
@@ -167,9 +340,32 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
     for &suite in &spec.suites {
         let envs: Vec<EnvKind> = match suite {
             Suite::BatchPublic | Suite::BatchPrivate => {
-                spec.workloads.iter().map(|&w| EnvKind::Batch(w)).collect()
+                let stress = if suite == Suite::BatchPrivate { spec.private_stress } else { 0.0 };
+                spec.workloads
+                    .iter()
+                    .map(|&w| EnvKind::Batch { workload: w, steps: spec.batch_steps, stress })
+                    .collect()
             }
-            Suite::MicroPublic | Suite::MicroPrivate => vec![EnvKind::Micro],
+            Suite::MicroPublic | Suite::MicroPrivate => vec![EnvKind::Micro {
+                steps: spec.micro_steps,
+                base_rps: spec.micro_base_rps,
+                amplitude_rps: spec.micro_amplitude_rps,
+            }],
+            Suite::Fig1Sweep => FIG1_WORKLOADS
+                .iter()
+                .flat_map(|&w| {
+                    FIG1_RAMS_GB
+                        .iter()
+                        .map(move |&ram_gb| EnvKind::SingleJob { workload: w, ram_gb })
+                })
+                .collect(),
+            Suite::Fig2Variance => FIG2_SIZES_GB
+                .iter()
+                .map(|&data_gb| EnvKind::SortVariance { data_gb })
+                .collect(),
+            Suite::Fig4Affinity => {
+                vec![EnvKind::Affinity { window_s: fig4_window_s(spec.figure_scale) }]
+            }
         };
         let defaults = suite.default_policies();
         let policies: Vec<String> = match &spec.policies {
@@ -182,7 +378,7 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
                     out.push(Scenario {
                         id: out.len(),
                         suite,
-                        env,
+                        env: env.clone(),
                         setting: suite.setting(),
                         policy: policy.clone(),
                         seed,
@@ -220,7 +416,8 @@ fn parse_u64(s: &str) -> anyhow::Result<u64> {
     s.trim().parse::<u64>().map_err(|_| anyhow::anyhow!("invalid seed value {s:?}"))
 }
 
-/// Parse a `--experiments` argument: `all` or a comma-separated suite list.
+/// Parse a `--experiments` argument: `all` (the four paper suites) or a
+/// comma-separated suite list (figure sweeps included, by name).
 pub fn parse_suites(s: &str) -> anyhow::Result<Vec<Suite>> {
     if s == "all" {
         return Ok(ALL_SUITES.to_vec());
@@ -230,7 +427,12 @@ pub fn parse_suites(s: &str) -> anyhow::Result<Vec<Suite>> {
             Suite::parse(p.trim()).ok_or_else(|| {
                 anyhow::anyhow!(
                     "unknown experiment suite {p:?}; known: all, {}",
-                    ALL_SUITES.iter().map(|x| x.name()).collect::<Vec<_>>().join(", ")
+                    ALL_SUITES
+                        .iter()
+                        .chain(FIGURE_SUITES)
+                        .map(|x| x.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
                 )
             })
         })
@@ -238,8 +440,95 @@ pub fn parse_suites(s: &str) -> anyhow::Result<Vec<Suite>> {
 }
 
 // ---------------------------------------------------------------------------
-// Per-scenario execution + summaries
+// Per-step records + per-scenario summaries
 // ---------------------------------------------------------------------------
+
+/// Number of quantile points a step's latency sample is compressed to in
+/// `campaign.json`. 64 points bound the worst-case CDF/percentile error at
+/// ~1.6% of rank while keeping a 6-hour micro scenario's records small.
+pub const LATENCY_DIGEST_POINTS: usize = 64;
+
+/// The serializable per-step record the figure/table drivers aggregate —
+/// [`StepRecord`] minus in-memory-only detail (action), with the raw
+/// latency vector compressed to a quantile digest. Floats are rounded to
+/// the JSON precision (6 decimals) at construction so a figure computes
+/// the same series whether its scenarios were just run or read back from
+/// `campaign.json`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepRow {
+    /// Raw performance: batch elapsed seconds (NaN when halted), or
+    /// microservice P90 ms.
+    pub perf_raw: f64,
+    pub perf_score: f64,
+    pub cost: f64,
+    pub ram_alloc_mb: f64,
+    pub resource_frac: f64,
+    pub errors: u32,
+    pub halted: bool,
+    pub dropped: u64,
+    pub offered: u64,
+    /// Completed-request count behind `lat_q` (weight of the digest).
+    pub lat_n: u64,
+    /// Sorted latency quantiles (empty for batch steps).
+    pub lat_q: Vec<f64>,
+}
+
+impl StepRow {
+    pub fn from_record(r: &StepRecord) -> Self {
+        Self {
+            perf_raw: round6(if r.halted { f64::NAN } else { r.perf_raw }),
+            perf_score: round6(r.perf_score),
+            cost: round6(r.cost),
+            ram_alloc_mb: round6(r.ram_alloc_mb),
+            resource_frac: round6(r.resource_frac),
+            errors: r.errors,
+            halted: r.halted,
+            dropped: r.dropped,
+            offered: r.offered,
+            lat_n: r.latencies_ms.len() as u64,
+            lat_q: latency_digest(&r.latencies_ms, LATENCY_DIGEST_POINTS)
+                .into_iter()
+                .map(round6)
+                .collect(),
+        }
+    }
+
+    /// Weighted samples for pooling digests across steps: each quantile
+    /// point stands for `lat_n / lat_q.len()` raw observations.
+    pub fn latency_samples(&self) -> Vec<(f64, f64)> {
+        if self.lat_q.is_empty() {
+            return vec![];
+        }
+        let w = self.lat_n as f64 / self.lat_q.len() as f64;
+        self.lat_q.iter().map(|&v| (v, w)).collect()
+    }
+}
+
+/// Compress a latency sample to at most `k` sorted quantile points
+/// (min and max always included; `n <= k` keeps the full sorted sample).
+pub fn latency_digest(lat: &[f64], k: usize) -> Vec<f64> {
+    let mut v: Vec<f64> = lat.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.len() <= k || k < 2 {
+        return v;
+    }
+    (0..k)
+        .map(|i| {
+            let pos = i as f64 / (k - 1) as f64 * (v.len() - 1) as f64;
+            v[pos.round() as usize]
+        })
+        .collect()
+}
+
+/// Round to the 6-decimal JSON precision, so in-memory records and
+/// records parsed back from `campaign.json` are bit-identical.
+fn round6(v: f64) -> f64 {
+    if v.is_finite() {
+        (v * 1e6).round() / 1e6
+    } else {
+        v
+    }
+}
 
 /// Deterministic digest of one scenario's step records.
 #[derive(Clone, Debug, Default)]
@@ -256,6 +545,9 @@ pub struct Summary {
     pub mean_perf_score: f64,
     pub total_cost: f64,
     pub mean_resource_frac: f64,
+    /// True when the `--timeout` guard stopped the scenario before it
+    /// completed its planned steps (set by the runner, not `summarize`).
+    pub timed_out: bool,
     /// Host wall-clock spent running the scenario (set by the runner, not
     /// by `summarize`). Inherently non-deterministic, so it is excluded
     /// from the canonical JSON that the determinism contract diffs.
@@ -273,59 +565,212 @@ fn mean_or_nan(xs: &[f64]) -> f64 {
     }
 }
 
-pub fn summarize(records: &[StepRecord]) -> Summary {
-    let live = |rs: &[StepRecord]| -> Vec<f64> {
+pub fn summarize(rows: &[StepRow]) -> Summary {
+    let live = |rs: &[StepRow]| -> Vec<f64> {
         rs.iter().filter(|r| !r.halted).map(|r| r.perf_raw).collect()
     };
-    let post = post_warmup(records, records.len() / 3);
+    let post = &rows[rows.len() / 3..];
+    // Floats are rounded to the JSON precision so a summary parsed back
+    // from campaign.json is bit-identical to the freshly computed one
+    // (which keeps store round-trips byte-stable).
     Summary {
-        steps: records.len(),
-        halts: records.iter().filter(|r| r.halted).count() as u64,
-        errors: records.iter().map(|r| r.errors as u64).sum(),
-        offered: records.iter().map(|r| r.offered).sum(),
-        dropped: records.iter().map(|r| r.dropped).sum(),
-        mean_perf_raw: mean_or_nan(&live(records)),
-        post_perf_raw: mean_or_nan(&live(post)),
-        mean_perf_score: stats::mean(
-            &records.iter().map(|r| r.perf_score).collect::<Vec<_>>(),
-        ),
-        total_cost: records.iter().map(|r| r.cost).sum(),
-        mean_resource_frac: stats::mean(
-            &records.iter().map(|r| r.resource_frac).collect::<Vec<_>>(),
-        ),
+        steps: rows.len(),
+        halts: rows.iter().filter(|r| r.halted).count() as u64,
+        errors: rows.iter().map(|r| r.errors as u64).sum(),
+        offered: rows.iter().map(|r| r.offered).sum(),
+        dropped: rows.iter().map(|r| r.dropped).sum(),
+        mean_perf_raw: round6(mean_or_nan(&live(rows))),
+        post_perf_raw: round6(mean_or_nan(&live(post))),
+        mean_perf_score: round6(stats::mean(
+            &rows.iter().map(|r| r.perf_score).collect::<Vec<_>>(),
+        )),
+        total_cost: round6(rows.iter().map(|r| r.cost).sum()),
+        mean_resource_frac: round6(stats::mean(
+            &rows.iter().map(|r| r.resource_frac).collect::<Vec<_>>(),
+        )),
+        timed_out: false,
         wall_clock_ms: 0.0,
     }
 }
 
-/// A finished scenario: descriptor + digest.
+/// A finished scenario: descriptor + digest + the per-step records the
+/// figure/table drivers aggregate.
 #[derive(Clone, Debug)]
 pub struct ScenarioOutcome {
     pub scenario: Scenario,
     pub summary: Summary,
+    pub records: Vec<StepRow>,
 }
 
-fn run_scenario(sc: &Scenario, spec: &CampaignSpec, sys: &SystemConfig) -> Summary {
-    let t0 = std::time::Instant::now();
-    let mut backend = Backend::auto(&sys.artifacts_dir);
-    let records = match sc.env {
-        EnvKind::Batch(w) => {
-            let mut env = BatchEnvConfig::new(w, sc.setting, spec.batch_steps);
-            if sc.suite == Suite::BatchPrivate {
-                // Table 3's stress-ng co-tenant.
-                env.external_mem_frac = 0.30;
-            }
-            run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed)
+// ---------------------------------------------------------------------------
+// Per-scenario execution
+// ---------------------------------------------------------------------------
+
+fn run_scenario(sc: &Scenario, sys: &SystemConfig, timeout_s: f64) -> (Summary, Vec<StepRow>) {
+    let t0 = Instant::now();
+    let deadline = (timeout_s > 0.0).then(|| t0 + Duration::from_secs_f64(timeout_s));
+    let (planned, rows): (u64, Vec<StepRow>) = match &sc.env {
+        EnvKind::Batch { workload, steps, stress } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let mut env = BatchEnvConfig::new(*workload, sc.setting, *steps);
+            env.external_mem_frac = *stress;
+            env.deadline = deadline;
+            let records = run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed);
+            (*steps, records.iter().map(StepRow::from_record).collect())
         }
-        EnvKind::Micro => {
-            let mut env = MicroEnvConfig::socialnet(sc.setting, spec.micro_steps as f64 * 60.0);
-            env.trace.base_rps = spec.micro_base_rps;
-            env.trace.amplitude_rps = spec.micro_amplitude_rps;
-            run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed)
+        EnvKind::Micro { steps, base_rps, amplitude_rps } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let mut env = MicroEnvConfig::socialnet(sc.setting, *steps as f64 * 60.0);
+            env.trace.base_rps = *base_rps;
+            env.trace.amplitude_rps = *amplitude_rps;
+            env.deadline = deadline;
+            let records = run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed);
+            (*steps, records.iter().map(StepRow::from_record).collect())
         }
+        EnvKind::SingleJob { workload, ram_gb } => {
+            (1, run_single_job(sc, sys, *workload, *ram_gb, deadline))
+        }
+        EnvKind::SortVariance { data_gb } => {
+            (1, run_sort_variance(sc, sys, *data_gb, deadline))
+        }
+        EnvKind::Affinity { window_s } => (1, run_affinity(sc, sys, *window_s, deadline)),
     };
-    let mut summary = summarize(&records);
+    let mut summary = summarize(&rows);
+    summary.timed_out = (rows.len() as u64) < planned;
     summary.wall_clock_ms = t0.elapsed().as_secs_f64() * 1000.0;
-    summary
+    (summary, rows)
+}
+
+/// One Fig. 1 cell: a statically-provisioned Spark job where total RAM
+/// grows by adding 12 GB executors (the paper's allocation knob); the
+/// scenario policy selects the container vs VM deployment.
+fn run_single_job(
+    sc: &Scenario,
+    sys: &SystemConfig,
+    workload: BatchWorkload,
+    ram_gb: u32,
+    deadline: Option<Instant>,
+) -> Vec<StepRow> {
+    if deadline_passed(deadline) {
+        return vec![];
+    }
+    note_env_execution();
+    let deploy = if sc.policy == "vm" { DeployMode::Vm } else { DeployMode::Container };
+    let per_pod_gb = 12.0f64;
+    let pods = (ram_gb as f64 / per_pod_gb).round() as usize;
+    let spec = RunSpec {
+        workload,
+        platform: Platform::Spark,
+        deploy,
+        pods,
+        per_pod: Resources::new(3000.0, per_pod_gb * 1024.0, 4000.0),
+        cross_zone_frac: 0.25,
+        contention: Resources::new(0.05, 0.05, 0.05),
+        data_gb: 150.0,
+        external_mem_frac: 0.0,
+        cluster_ram_mb: sys.cluster_ram_mb(),
+    };
+    let mut rng = Pcg64::new(hash_str(&sc.name()));
+    let result = run_batch_job(&spec, &mut rng);
+    let ram_alloc_mb = pods as f64 * per_pod_gb * 1024.0;
+    vec![job_row(&result, workload, ram_alloc_mb, sys.cluster_ram_mb())]
+}
+
+/// One Fig. 2 cell: a Sort run under a freshly sampled interference
+/// window; the scenario policy selects Spark vs Flink.
+fn run_sort_variance(
+    sc: &Scenario,
+    sys: &SystemConfig,
+    data_gb: u32,
+    deadline: Option<Instant>,
+) -> Vec<StepRow> {
+    if deadline_passed(deadline) {
+        return vec![];
+    }
+    note_env_execution();
+    let platform = if sc.policy == "flink" { Platform::Flink } else { Platform::Spark };
+    let mut rng = Pcg64::new(hash_str(&sc.name()));
+    let mut interf = InterferenceModel::new(sys.interference.clone(), rng.fork(77));
+    let contention = interf.sample_window_contention(sys.cluster.workers, 300.0);
+    let spec = RunSpec {
+        workload: BatchWorkload::Sort,
+        platform,
+        deploy: DeployMode::Container,
+        pods: 12,
+        per_pod: Resources::new(3000.0, 16_384.0, 4000.0),
+        cross_zone_frac: 0.25,
+        contention,
+        data_gb: data_gb as f64,
+        external_mem_frac: 0.0,
+        cluster_ram_mb: sys.cluster_ram_mb(),
+    };
+    let result = run_batch_job(&spec, &mut rng);
+    let ram_alloc_mb = 12.0 * 16_384.0;
+    vec![job_row(&result, BatchWorkload::Sort, ram_alloc_mb, sys.cluster_ram_mb())]
+}
+
+fn job_row(
+    result: &crate::apps::batch::JobResult,
+    workload: BatchWorkload,
+    ram_alloc_mb: f64,
+    cluster_ram_mb: f64,
+) -> StepRow {
+    let rec = StepRecord {
+        perf_raw: result.elapsed_s,
+        perf_score: if result.halted {
+            0.0
+        } else {
+            batch_perf_score(workload, result.elapsed_s)
+        },
+        ram_alloc_mb,
+        resource_frac: ram_alloc_mb / cluster_ram_mb,
+        errors: result.executor_errors,
+        halted: result.halted,
+        ..Default::default()
+    };
+    StepRow::from_record(&rec)
+}
+
+/// One Fig. 4 variant: a Sockshop traffic window with the Order hub either
+/// colocated with the rest of the graph or isolated in its own zone. The
+/// request stream is seeded from (window, seed) only — *not* the policy —
+/// so both variants replay identical traffic (a paired comparison).
+fn run_affinity(
+    sc: &Scenario,
+    sys: &SystemConfig,
+    window_s: f64,
+    deadline: Option<Instant>,
+) -> Vec<StepRow> {
+    if deadline_passed(deadline) {
+        return vec![];
+    }
+    note_env_execution();
+    let g = ServiceGraph::sockshop();
+    let lim = Resources::new(1200.0, 1536.0, 200.0);
+    let orders = g.service_id("orders").expect("sockshop has an orders service");
+    let isolate = sc.policy == "isolated";
+    let mut cluster = Cluster::new(&sys.cluster);
+    for sid in 0..g.services.len() {
+        let zone_pods = if isolate && sid == orders { vec![0, 0, 0, 2] } else { vec![2, 0, 0, 0] };
+        apply_deployment(
+            &mut cluster,
+            &Deployment { app: g.app_name(sid), zone_pods, limits: lim },
+            false,
+        );
+    }
+    let mut rng = Pcg64::new(hash_str(&format!("affinity/{}/s{}", json_f64(window_s), sc.seed)));
+    let s = microservice::run_window(&cluster, &g, 80.0, window_s, &mut rng);
+    let rec = StepRecord {
+        perf_raw: s.p90(),
+        perf_score: micro_perf_score(s.p90()),
+        ram_alloc_mb: cluster.total_ram_allocated(),
+        resource_frac: cluster.total_ram_allocated() / sys.cluster_ram_mb(),
+        dropped: s.dropped,
+        offered: s.offered,
+        latencies_ms: s.latencies_ms,
+        ..Default::default()
+    };
+    vec![StepRow::from_record(&rec)]
 }
 
 // ---------------------------------------------------------------------------
@@ -336,7 +781,7 @@ fn run_scenario(sc: &Scenario, spec: &CampaignSpec, sys: &SystemConfig) -> Summa
 #[derive(Clone, Debug)]
 pub struct AggregateRow {
     pub suite: Suite,
-    pub workload: &'static str,
+    pub workload: String,
     pub policy: String,
     pub seeds: usize,
     /// Mean / std of the per-seed post-warmup raw performance.
@@ -355,18 +800,28 @@ pub struct CampaignResult {
     pub aggregates: Vec<AggregateRow>,
     /// The distinct seeds the campaign actually ran (spec order).
     pub seeds: Vec<u64>,
+    /// [`SystemConfig::fingerprint`] of the config the scenarios ran
+    /// under; the campaign store refuses cross-config cache hits on it.
+    pub config_fingerprint: String,
 }
 
-/// Run every scenario of `spec` across `jobs` worker threads.
+/// Run an explicit scenario list across `jobs` worker threads.
 ///
 /// Workers pull scenario indices from a shared atomic counter and write
 /// results into per-scenario slots, so scheduling order cannot influence
-/// the output: `jobs = 1` and `jobs = N` produce identical results.
-pub fn run_campaign(spec: &CampaignSpec, sys: &SystemConfig, jobs: usize) -> CampaignResult {
-    let scenarios = enumerate(spec);
+/// the output: `jobs = 1` and `jobs = N` produce identical results. This
+/// is the single execution path behind `drone campaign` *and* every
+/// figure/table driver (via the campaign store).
+pub fn run_scenarios(
+    scenarios: &[Scenario],
+    sys: &SystemConfig,
+    jobs: usize,
+    timeout_s: f64,
+) -> Vec<ScenarioOutcome> {
     let jobs = jobs.clamp(1, scenarios.len().max(1));
     let next = AtomicUsize::new(0);
-    let slots: Vec<Mutex<Option<Summary>>> = scenarios.iter().map(|_| Mutex::new(None)).collect();
+    let slots: Vec<Mutex<Option<(Summary, Vec<StepRow>)>>> =
+        scenarios.iter().map(|_| Mutex::new(None)).collect();
 
     std::thread::scope(|scope| {
         for _ in 0..jobs {
@@ -375,28 +830,40 @@ pub fn run_campaign(spec: &CampaignSpec, sys: &SystemConfig, jobs: usize) -> Cam
                 if i >= scenarios.len() {
                     break;
                 }
-                let summary = run_scenario(&scenarios[i], spec, sys);
-                *slots[i].lock().unwrap() = Some(summary);
+                let out = run_scenario(&scenarios[i], sys, timeout_s);
+                *slots[i].lock().unwrap() = Some(out);
             });
         }
     });
 
-    let outcomes: Vec<ScenarioOutcome> = scenarios
-        .into_iter()
+    scenarios
+        .iter()
+        .cloned()
         .zip(slots)
-        .map(|(scenario, slot)| ScenarioOutcome {
-            scenario,
-            summary: slot.into_inner().unwrap().expect("worker filled every slot"),
+        .map(|(scenario, slot)| {
+            let (summary, records) = slot.into_inner().unwrap().expect("worker filled every slot");
+            ScenarioOutcome { scenario, summary, records }
         })
-        .collect();
+        .collect()
+}
+
+/// Run every scenario of `spec` across `jobs` worker threads.
+pub fn run_campaign(spec: &CampaignSpec, sys: &SystemConfig, jobs: usize) -> CampaignResult {
+    let scenarios = enumerate(spec);
+    let outcomes = run_scenarios(&scenarios, sys, jobs, spec.timeout_s);
     let aggregates = aggregate(&outcomes);
-    CampaignResult { outcomes, aggregates, seeds: spec.seeds.clone() }
+    CampaignResult {
+        outcomes,
+        aggregates,
+        seeds: spec.seeds.clone(),
+        config_fingerprint: sys.fingerprint(),
+    }
 }
 
 /// Merge per-seed outcomes into (suite, workload, policy) rows, preserving
 /// first-seen (i.e. enumeration) order.
 pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<AggregateRow> {
-    let mut keys: Vec<(Suite, &'static str, String)> = vec![];
+    let mut keys: Vec<(Suite, String, String)> = vec![];
     for o in outcomes {
         let key = (o.scenario.suite, o.scenario.env.workload_name(), o.scenario.policy.clone());
         if !keys.contains(&key) {
@@ -450,17 +917,21 @@ pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<AggregateRow> {
 // ---------------------------------------------------------------------------
 
 impl CampaignResult {
-    /// Print one aggregate table per suite (the paper-style view).
+    /// Print one aggregate table per suite (the paper-style view), in
+    /// first-seen aggregate order.
     pub fn print_tables(&self) {
-        for &suite in ALL_SUITES {
+        let mut suites: Vec<Suite> = vec![];
+        for a in &self.aggregates {
+            if !suites.contains(&a.suite) {
+                suites.push(a.suite);
+            }
+        }
+        for suite in suites {
             let rows: Vec<&AggregateRow> =
                 self.aggregates.iter().filter(|a| a.suite == suite).collect();
-            if rows.is_empty() {
-                continue;
-            }
             let perf_unit = match suite {
-                Suite::BatchPublic | Suite::BatchPrivate => "elapsed s",
-                Suite::MicroPublic | Suite::MicroPrivate => "P90 ms",
+                Suite::MicroPublic | Suite::MicroPrivate | Suite::Fig4Affinity => "P90 ms",
+                _ => "elapsed s",
             };
             let mut tab = Table::new(
                 &format!("campaign — {} ({} seeds/cell)", suite.name(), rows[0].seeds),
@@ -476,7 +947,7 @@ impl CampaignResult {
                     "halted".to_string()
                 };
                 tab.row(&[
-                    a.workload.into(),
+                    a.workload.clone(),
                     a.policy.clone(),
                     perf_cell,
                     format!("{:.3}", a.cost_mean),
@@ -502,15 +973,17 @@ impl CampaignResult {
     /// The canonical digest: field order and float formatting are fixed,
     /// and nothing time- or thread-dependent is included, so identical
     /// campaigns render byte-identical JSON regardless of `--jobs`, host
-    /// speed, or scheduling.
+    /// speed, or scheduling. (The exception is opt-in: a fired `--timeout`
+    /// truncates records, which is wall-clock dependent by design.)
     pub fn to_json_canonical(&self) -> String {
         self.to_json_impl(false)
     }
 
     fn to_json_impl(&self, with_timing: bool) -> String {
-        let mut s = String::with_capacity(4096 + self.outcomes.len() * 256);
+        let mut s = String::with_capacity(4096 + self.outcomes.len() * 1024);
         s.push_str("{\n");
-        s.push_str("  \"schema\": \"drone-campaign/v1\",\n");
+        s.push_str("  \"schema\": \"drone-campaign/v2\",\n");
+        s.push_str(&format!("  \"config\": {},\n", json_str(&self.config_fingerprint)));
         let seeds: Vec<String> = self.seeds.iter().map(|v| v.to_string()).collect();
         s.push_str(&format!("  \"seeds\": [{}],\n", seeds.join(", ")));
         s.push_str("  \"scenarios\": [\n");
@@ -521,7 +994,7 @@ impl CampaignResult {
             s.push_str(&format!("\"id\": {}, ", sc.id));
             s.push_str(&format!("\"name\": {}, ", json_str(&sc.name())));
             s.push_str(&format!("\"suite\": {}, ", json_str(sc.suite.name())));
-            s.push_str(&format!("\"workload\": {}, ", json_str(sc.env.workload_name())));
+            s.push_str(&format!("\"workload\": {}, ", json_str(&sc.env.workload_name())));
             s.push_str(&format!(
                 "\"setting\": {}, ",
                 json_str(match sc.setting {
@@ -531,6 +1004,7 @@ impl CampaignResult {
             ));
             s.push_str(&format!("\"policy\": {}, ", json_str(&sc.policy)));
             s.push_str(&format!("\"seed\": {}, ", sc.seed));
+            s.push_str(&format!("\"env\": {}, ", sc.env.to_json()));
             s.push_str(&format!("\"steps\": {}, ", m.steps));
             s.push_str(&format!("\"halts\": {}, ", m.halts));
             s.push_str(&format!("\"errors\": {}, ", m.errors));
@@ -541,9 +1015,11 @@ impl CampaignResult {
             s.push_str(&format!("\"mean_perf_score\": {}, ", json_f64(m.mean_perf_score)));
             s.push_str(&format!("\"total_cost\": {}, ", json_f64(m.total_cost)));
             s.push_str(&format!(
-                "\"mean_resource_frac\": {}",
+                "\"mean_resource_frac\": {}, ",
                 json_f64(m.mean_resource_frac)
             ));
+            s.push_str(&format!("\"records\": {}, ", records_json(&o.records)));
+            s.push_str(&format!("\"timed_out\": {}", m.timed_out));
             if with_timing {
                 s.push_str(&format!(", \"wall_clock_ms\": {}", json_f64(m.wall_clock_ms)));
             }
@@ -554,7 +1030,7 @@ impl CampaignResult {
         for (i, a) in self.aggregates.iter().enumerate() {
             s.push_str("    {");
             s.push_str(&format!("\"suite\": {}, ", json_str(a.suite.name())));
-            s.push_str(&format!("\"workload\": {}, ", json_str(a.workload)));
+            s.push_str(&format!("\"workload\": {}, ", json_str(&a.workload)));
             s.push_str(&format!("\"policy\": {}, ", json_str(&a.policy)));
             s.push_str(&format!("\"seeds\": {}, ", a.seeds));
             s.push_str(&format!("\"perf_mean\": {}, ", json_f64(a.perf_mean)));
@@ -573,20 +1049,20 @@ impl CampaignResult {
         s
     }
 
-    /// Write `campaign.json` + `campaign.csv` under the results directory
-    /// (`DRONE_RESULTS_DIR` overrides, as for every experiment output).
-    pub fn write_outputs(&self) -> anyhow::Result<(PathBuf, PathBuf)> {
+    /// Write this result's per-scenario rows as `campaign.csv` under the
+    /// results directory (`DRONE_RESULTS_DIR` overrides). The JSON side
+    /// lives in the campaign store (`super::store::CampaignStore::save`),
+    /// which *merges* scenarios across runs instead of clobbering the file
+    /// — `drone campaign` invocations with different grids accumulate.
+    pub fn write_csv(&self) -> anyhow::Result<PathBuf> {
         let dir = crate::util::csv::results_dir();
         std::fs::create_dir_all(&dir)?;
-        let json_path = dir.join("campaign.json");
-        std::fs::write(&json_path, self.to_json())?;
-
         let mut csv = CsvWriter::new(
             dir.join("campaign.csv"),
             &[
                 "suite", "workload", "setting", "policy", "seed", "steps", "post_perf_raw",
                 "mean_perf_score", "total_cost", "mean_resource_frac", "errors", "halts",
-                "offered", "dropped", "wall_clock_ms",
+                "offered", "dropped", "timed_out", "wall_clock_ms",
             ],
         );
         for o in &self.outcomes {
@@ -600,7 +1076,7 @@ impl CampaignResult {
             };
             csv.row(&[
                 sc.suite.name().into(),
-                sc.env.workload_name().into(),
+                sc.env.workload_name(),
                 format!("{:?}", sc.setting).to_lowercase(),
                 sc.policy.clone(),
                 format!("{}", sc.seed),
@@ -613,15 +1089,48 @@ impl CampaignResult {
                 format!("{}", m.halts),
                 format!("{}", m.offered),
                 format!("{}", m.dropped),
+                format!("{}", m.timed_out),
                 format!("{:.3}", m.wall_clock_ms),
             ]);
         }
         let csv_path = csv.finish()?;
-        Ok((json_path, csv_path))
+        Ok(csv_path)
     }
 }
 
-fn json_str(s: &str) -> String {
+/// Columnar per-step records for one scenario — compact to write, trivial
+/// to read back (`"halted"` uses 0/1 so every column is numeric).
+fn records_json(rows: &[StepRow]) -> String {
+    let col = |f: &dyn Fn(&StepRow) -> String| -> String {
+        let cells: Vec<String> = rows.iter().map(f).collect();
+        format!("[{}]", cells.join(", "))
+    };
+    let lat_q: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            let qs: Vec<String> = r.lat_q.iter().map(|&v| json_f64(v)).collect();
+            format!("[{}]", qs.join(", "))
+        })
+        .collect();
+    format!(
+        "{{\"perf_raw\": {}, \"perf_score\": {}, \"cost\": {}, \"ram_alloc_mb\": {}, \
+         \"resource_frac\": {}, \"errors\": {}, \"halted\": {}, \"dropped\": {}, \
+         \"offered\": {}, \"lat_n\": {}, \"lat_q\": [{}]}}",
+        col(&|r| json_f64(r.perf_raw)),
+        col(&|r| json_f64(r.perf_score)),
+        col(&|r| json_f64(r.cost)),
+        col(&|r| json_f64(r.ram_alloc_mb)),
+        col(&|r| json_f64(r.resource_frac)),
+        col(&|r| r.errors.to_string()),
+        col(&|r| if r.halted { "1".into() } else { "0".into() }),
+        col(&|r| r.dropped.to_string()),
+        col(&|r| r.offered.to_string()),
+        col(&|r| r.lat_n.to_string()),
+        lat_q.join(", ")
+    )
+}
+
+pub(crate) fn json_str(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     out.push('"');
     for c in s.chars() {
@@ -640,7 +1149,7 @@ fn json_str(s: &str) -> String {
 }
 
 /// JSON has no NaN/Infinity; map non-finite values to null.
-fn json_f64(v: f64) -> String {
+pub(crate) fn json_f64(v: f64) -> String {
     if v.is_finite() {
         format!("{v:.6}")
     } else {
@@ -669,6 +1178,7 @@ mod tests {
             micro_steps: 2,
             micro_base_rps: 15.0,
             micro_amplitude_rps: 20.0,
+            ..Default::default()
         }
     }
 
@@ -689,6 +1199,8 @@ mod tests {
         assert_eq!(parse_suites("all").unwrap().len(), 4);
         let two = parse_suites("batch-public, micro-private").unwrap();
         assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
+        let figs = parse_suites("fig1,fig2,fig4").unwrap();
+        assert_eq!(figs, FIGURE_SUITES.to_vec());
         assert!(parse_suites("nope").is_err());
     }
 
@@ -711,10 +1223,57 @@ mod tests {
         assert_eq!(scenarios[1].name(), "batch-public/Spark-Pi/drone/s8");
         assert_eq!(scenarios[4].name(), "micro-public/SocialNet/drone/s7");
         assert_eq!(scenarios[5].seed, 8);
-        // Same spec enumerates identically.
+        // Same spec enumerates identically (names *and* cache keys).
         let again = enumerate(&spec);
         for (a, b) in scenarios.iter().zip(&again) {
             assert_eq!(a.name(), b.name());
+            assert_eq!(a.key(), b.key());
+        }
+        // Cache keys are unique across the grid.
+        let mut keys: Vec<String> = scenarios.iter().map(|s| s.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), scenarios.len());
+    }
+
+    #[test]
+    fn figure_suites_enumerate_canonical_grids() {
+        let spec = CampaignSpec {
+            suites: vec![Suite::Fig1Sweep, Suite::Fig2Variance, Suite::Fig4Affinity],
+            workloads: vec![],
+            seeds: vec![0],
+            ..Default::default()
+        };
+        let scenarios = enumerate(&spec);
+        // fig1: 3 workloads * 4 RAM points * 2 deploys; fig2: 5 sizes * 2
+        // platforms; fig4: 1 env * 2 variants.
+        assert_eq!(scenarios.len(), 24 + 10 + 2);
+        assert_eq!(scenarios[0].name(), "fig1/PageRank@48GB/container/s0");
+        assert!(scenarios.iter().all(|s| s.setting == CloudSetting::Public));
+        let fig4: Vec<&Scenario> =
+            scenarios.iter().filter(|s| s.suite == Suite::Fig4Affinity).collect();
+        assert_eq!(fig4.len(), 2);
+        assert_eq!(fig4[0].policy, "colocated");
+        assert_eq!(fig4[1].policy, "isolated");
+    }
+
+    #[test]
+    fn env_json_roundtrips() {
+        use crate::util::json::Json;
+        let envs = [
+            EnvKind::Batch { workload: BatchWorkload::LogisticRegression, steps: 30, stress: 0.05 },
+            EnvKind::Micro { steps: 360, base_rps: 60.0, amplitude_rps: 140.0 },
+            EnvKind::SingleJob { workload: BatchWorkload::PageRank, ram_gb: 96 },
+            EnvKind::SortVariance { data_gb: 60 },
+            EnvKind::Affinity { window_s: 36.0 },
+        ];
+        for env in envs {
+            let j = Json::parse(&env.to_json()).unwrap();
+            let back = EnvKind::from_json(&j).expect("env parses back");
+            assert_eq!(back, env);
+            // The canonical env string is stable through a round trip —
+            // the campaign store's cache identity depends on this.
+            assert_eq!(back.to_json(), env.to_json());
         }
     }
 
@@ -733,8 +1292,27 @@ mod tests {
     }
 
     #[test]
+    fn latency_digest_compresses_and_preserves_extremes() {
+        assert!(latency_digest(&[], 64).is_empty());
+        // n <= k: the full sorted sample survives.
+        let small = latency_digest(&[3.0, 1.0, 2.0], 64);
+        assert_eq!(small, vec![1.0, 2.0, 3.0]);
+        // n > k: k sorted points, min and max preserved.
+        let big: Vec<f64> = (0..1000).map(|i| ((i * 37) % 1000) as f64).collect();
+        let d = latency_digest(&big, 64);
+        assert_eq!(d.len(), 64);
+        assert_eq!(d[0], 0.0);
+        assert_eq!(d[63], 999.0);
+        for w in d.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        // The digest's median tracks the sample's median.
+        assert!((d[31] - 500.0).abs() < 20.0, "median ~500, got {}", d[31]);
+    }
+
+    #[test]
     fn summarize_excludes_halted_from_perf() {
-        let rec = |perf: f64, halted: bool, cost: f64| StepRecord {
+        let rec = |perf: f64, halted: bool, cost: f64| StepRow {
             perf_raw: perf,
             halted,
             cost,
@@ -762,12 +1340,17 @@ mod tests {
             scenario: Scenario {
                 id: 0,
                 suite: Suite::BatchPrivate,
-                env: EnvKind::Batch(BatchWorkload::PageRank),
+                env: EnvKind::Batch {
+                    workload: BatchWorkload::PageRank,
+                    steps: 2,
+                    stress: BATCH_PRIVATE_STRESS,
+                },
                 setting: CloudSetting::Private,
                 policy: "drone-safe".into(),
                 seed: 0,
             },
             summary: s2,
+            records: dead,
         };
         let rows = aggregate(&[halted_outcome]);
         assert!(rows[0].perf_mean.is_nan(), "halted cell must not rank as 0.0");
@@ -785,6 +1368,57 @@ mod tests {
             parallel.to_json_canonical(),
             "canonical campaign.json must agree for jobs=1 vs jobs=4"
         );
+    }
+
+    #[test]
+    fn figure_cells_run_and_record_one_step() {
+        let sys = small_sys();
+        let spec = CampaignSpec {
+            suites: vec![Suite::Fig2Variance, Suite::Fig4Affinity],
+            seeds: vec![0],
+            workloads: vec![],
+            ..Default::default()
+        };
+        let result = run_campaign(&spec, &sys, 2);
+        assert_eq!(result.outcomes.len(), 12);
+        for o in &result.outcomes {
+            assert_eq!(o.records.len(), 1, "{}", o.scenario.name());
+            assert!(!o.summary.timed_out);
+            let r = &o.records[0];
+            assert!(r.halted || r.perf_raw > 0.0, "{}", o.scenario.name());
+            if o.scenario.suite == Suite::Fig4Affinity {
+                assert!(r.offered > 0);
+                assert!(r.lat_n > 0);
+                assert!(!r.lat_q.is_empty());
+                assert!(r.lat_q.len() <= LATENCY_DIGEST_POINTS);
+            }
+        }
+        // The fig4 variants replay the same traffic (paired comparison).
+        let fig4: Vec<&ScenarioOutcome> = result
+            .outcomes
+            .iter()
+            .filter(|o| o.scenario.suite == Suite::Fig4Affinity)
+            .collect();
+        assert_eq!(fig4[0].records[0].offered, fig4[1].records[0].offered);
+    }
+
+    #[test]
+    fn expired_timeout_truncates_every_scenario() {
+        let sys = small_sys();
+        let mut spec = small_spec();
+        spec.seeds = vec![0];
+        spec.timeout_s = 1e-9; // expires before the first step boundary
+        let result = run_campaign(&spec, &sys, 2);
+        for o in &result.outcomes {
+            assert_eq!(o.records.len(), 0, "{}", o.scenario.name());
+            assert!(o.summary.timed_out);
+            assert_eq!(o.summary.steps, 0);
+            assert!(o.summary.mean_perf_raw.is_nan());
+        }
+        // Truncated outcomes still serialize to well-formed JSON.
+        let j = result.to_json();
+        assert!(j.contains("\"timed_out\": true"));
+        assert!(!j.contains("NaN"));
     }
 
     /// Per-scenario wall-clock lands in the full JSON and the CSV, but the
@@ -806,6 +1440,8 @@ mod tests {
             "one wall_clock_ms per scenario in the full JSON"
         );
         assert!(!canon.contains("wall_clock_ms"), "canonical JSON must omit timing");
+        // `timed_out` is part of the result semantics and stays in both.
+        assert_eq!(canon.matches("\"timed_out\":").count(), result.outcomes.len());
         // Stripping the timing field from the full JSON recovers the
         // canonical bytes — the sed-based CI diff relies on exactly this.
         let stripped: String = full
@@ -846,13 +1482,17 @@ mod tests {
         let j = result.to_json();
         assert!(j.starts_with("{\n"));
         assert!(j.ends_with("}\n"));
-        assert!(j.contains("\"schema\": \"drone-campaign/v1\""));
+        assert!(j.contains("\"schema\": \"drone-campaign/v2\""));
         assert!(j.contains("\"suite\": \"batch-public\""));
+        assert!(j.contains("\"records\": {"));
         assert!(!j.contains("NaN"));
         assert_eq!(j.matches("\"id\":").count(), 2);
         // Balanced braces/brackets (cheap well-formedness proxy).
         assert_eq!(j.matches('{').count(), j.matches('}').count());
         assert_eq!(j.matches('[').count(), j.matches(']').count());
+        // And it parses with the in-repo JSON reader.
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("scenarios").unwrap().as_arr().unwrap().len(), 2);
     }
 
     #[test]
@@ -860,5 +1500,7 @@ mod tests {
         assert_eq!(json_str("a\"b\\c\n"), "\"a\\\"b\\\\c\\n\"");
         assert_eq!(json_f64(f64::NAN), "null");
         assert_eq!(json_f64(1.5), "1.500000");
+        assert_eq!(round6(1.000_000_4), 1.0);
+        assert!(round6(f64::NAN).is_nan());
     }
 }

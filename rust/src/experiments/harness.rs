@@ -19,6 +19,29 @@ use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
 use crate::trace::spot::{SpotConfig, SpotTrace};
 use crate::util::rng::Pcg64;
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of simulated environment executions (batch loops,
+/// micro loops and the campaign's single-shot figure cells). The figure
+/// pipeline's "no re-execution from a warm campaign store" contract is
+/// asserted against this counter in tests and CI.
+static ENV_EXECUTIONS: AtomicU64 = AtomicU64::new(0);
+
+pub fn env_execution_count() -> u64 {
+    ENV_EXECUTIONS.load(Ordering::Relaxed)
+}
+
+pub(crate) fn note_env_execution() {
+    ENV_EXECUTIONS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// True when the (optional) per-scenario deadline has passed. Checked at
+/// step boundaries: the guard truncates the record vector rather than
+/// preempting a step mid-flight, so partial output is still well-formed.
+pub(crate) fn deadline_passed(deadline: Option<std::time::Instant>) -> bool {
+    deadline.is_some_and(|d| std::time::Instant::now() >= d)
+}
+
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum CloudSetting {
     /// Unlimited resources; optimize alpha*perf - beta*cost (Alg. 1).
@@ -59,6 +82,9 @@ pub struct BatchEnvConfig {
     pub external_mem_frac: f64,
     pub data_gb: f64,
     pub interference: bool,
+    /// Optional wall-clock deadline (`--timeout`): the loop stops before
+    /// the next step once passed, returning the records produced so far.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl BatchEnvConfig {
@@ -71,6 +97,7 @@ impl BatchEnvConfig {
             external_mem_frac: 0.0,
             data_gb: 150.0,
             interference: true,
+            deadline: None,
         }
     }
 }
@@ -129,6 +156,7 @@ pub fn run_batch_env(
     backend: &mut Backend,
     seed: u64,
 ) -> Vec<StepRecord> {
+    note_env_execution();
     let mut root = Pcg64::new(seed ^ (0xba7c_u64 << 4));
     let mut rng_policy = root.fork(1);
     let mut rng_jobs = root.fork(2);
@@ -165,6 +193,9 @@ pub fn run_batch_env(
     let mut records = Vec::with_capacity(env.steps as usize);
 
     for step in 0..env.steps {
+        if deadline_passed(env.deadline) {
+            break;
+        }
         let now = step as f64 * dt;
         interference.step(&mut cluster, now, dt.min(60.0));
         let price = spot.step(dt / 3600.0);
@@ -287,6 +318,8 @@ pub struct MicroEnvConfig {
     pub graph: ServiceGraph,
     pub trace: DiurnalConfig,
     pub interference: bool,
+    /// Optional wall-clock deadline (`--timeout`), as for the batch loop.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl MicroEnvConfig {
@@ -298,6 +331,7 @@ impl MicroEnvConfig {
             graph: ServiceGraph::socialnet(),
             trace: DiurnalConfig::default(),
             interference: true,
+            deadline: None,
         }
     }
 }
@@ -316,6 +350,7 @@ pub fn run_micro_env(
     backend: &mut Backend,
     seed: u64,
 ) -> Vec<StepRecord> {
+    note_env_execution();
     let mut root = Pcg64::new(seed ^ (0x51c0_u64 << 8));
     let mut rng_policy = root.fork(1);
     let mut rng_des = root.fork(2);
@@ -355,6 +390,9 @@ pub fn run_micro_env(
     let mut records = Vec::with_capacity(steps as usize);
 
     for step in 0..steps {
+        if deadline_passed(env.deadline) {
+            break;
+        }
         let now = step as f64 * env.period_s;
         interference.step(&mut cluster, now, env.period_s);
         let rate = trace.sample_rate(now);
@@ -494,13 +532,8 @@ pub fn run_micro_env(
 }
 
 // ---------------------------------------------------------------------------
-// Aggregation helpers shared by the figure/table drivers
+// Aggregation helpers for direct harness users (examples, `drone run`)
 // ---------------------------------------------------------------------------
-
-pub fn mean_of(records: &[StepRecord], f: impl Fn(&StepRecord) -> f64) -> f64 {
-    let xs: Vec<f64> = records.iter().map(f).collect();
-    crate::util::stats::mean(&xs)
-}
 
 /// Skip the first `warmup` steps (exploration) then aggregate.
 pub fn post_warmup(records: &[StepRecord], warmup: usize) -> &[StepRecord] {
@@ -578,6 +611,29 @@ mod tests {
             let recs = run_micro_env(policy, &env, &sys, &mut backend, 13);
             assert_eq!(recs.len(), 4, "{policy}");
         }
+    }
+
+    #[test]
+    fn expired_deadline_truncates_batch_env() {
+        let sys = sys();
+        let mut env = BatchEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 6);
+        env.deadline = Some(std::time::Instant::now());
+        let mut backend = Backend::Native;
+        let before = env_execution_count();
+        let recs = run_batch_env("k8s-hpa", &env, &sys, &mut backend, 1);
+        assert!(recs.is_empty(), "an already-expired deadline must stop before step 0");
+        // >= because other tests in the same process also bump the counter.
+        assert!(env_execution_count() >= before + 1, "still counts as one execution");
+    }
+
+    #[test]
+    fn expired_deadline_truncates_micro_env() {
+        let sys = sys();
+        let mut env = MicroEnvConfig::socialnet(CloudSetting::Public, 180.0);
+        env.deadline = Some(std::time::Instant::now());
+        let mut backend = Backend::Native;
+        let recs = run_micro_env("k8s-hpa", &env, &sys, &mut backend, 1);
+        assert!(recs.is_empty());
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Experiment drivers: one module per paper table/figure (DESIGN.md §5),
-//! all built on the shared `harness` control loops. Each driver prints the
-//! paper's rows/series and writes results/<id>.csv.
+//! Experiment drivers: one module per paper table/figure (DESIGN.md §5).
+//! Environment-backed drivers are pure readers of the campaign store
+//! (`store::CampaignStore` over `campaign.json`); the campaign's scenario
+//! registry + parallel runner is the single execution path. Each driver
+//! prints the paper's rows/series and writes results/<id>.csv.
 
 pub mod campaign;
 pub mod harness;
+pub mod store;
 
 pub mod figures;
 pub mod regret;
@@ -13,28 +16,55 @@ pub use campaign::{run_campaign, CampaignResult, CampaignSpec, Scenario, Suite};
 pub use harness::{
     run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
 };
+pub use store::{CampaignStore, ExecPolicy};
 
 use crate::config::SystemConfig;
 
-/// Registry of experiment ids -> runner (scale ~0.2..1.0 shrinks runs for
-/// benches/smoke; 1.0 = paper scale).
-pub fn run(id: &str, sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
+/// How an experiment driver runs: series scale, plus the execution policy
+/// it hands the campaign store for scenarios not cached yet.
+#[derive(Clone, Debug)]
+pub struct RunOpts {
+    /// ~0.2..1.0 shrinks runs for benches/smoke; 1.0 = paper scale.
+    pub scale: f64,
+    /// Worker threads for scenarios the store has to execute.
+    pub jobs: usize,
+    /// Refuse to execute environments: fail if the store lacks a scenario
+    /// (CI uses this to prove figures are pure readers).
+    pub no_exec: bool,
+    /// Per-scenario wall-clock budget in seconds; 0 disables the guard.
+    pub timeout_s: f64,
+}
+
+impl Default for RunOpts {
+    fn default() -> Self {
+        Self { scale: 0.3, jobs: store::default_jobs(), no_exec: false, timeout_s: 0.0 }
+    }
+}
+
+impl RunOpts {
+    pub fn exec(&self) -> ExecPolicy {
+        ExecPolicy { jobs: self.jobs, no_exec: self.no_exec, timeout_s: self.timeout_s }
+    }
+}
+
+/// Registry of experiment ids -> runner.
+pub fn run(id: &str, sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
     match id {
-        "fig1" => figures::fig1(sys, scale),
-        "fig2" => figures::fig2(sys, scale),
-        "fig4" => figures::fig4(sys, scale),
-        "fig5" => figures::fig5(sys, scale),
-        "fig7a" => figures::fig7a(sys, scale),
-        "fig7b" => figures::fig7b(sys, scale),
-        "fig7c" => figures::fig7c(sys, scale),
-        "fig8a" => figures::fig8a(sys, scale),
-        "fig8b" => figures::fig8b(sys, scale),
-        "fig8c" => figures::fig8c(sys, scale),
-        "table2" => tables::table2(sys, scale),
-        "table3" => tables::table3(sys, scale),
-        "table4" => tables::table4(sys, scale),
-        "regret" => regret::regret(sys, scale),
-        "ablation" => regret::ablation(sys, scale),
+        "fig1" => figures::fig1(sys, opts),
+        "fig2" => figures::fig2(sys, opts),
+        "fig4" => figures::fig4(sys, opts),
+        "fig5" => figures::fig5(sys, opts),
+        "fig7a" => figures::fig7a(sys, opts),
+        "fig7b" => figures::fig7b(sys, opts),
+        "fig7c" => figures::fig7c(sys, opts),
+        "fig8a" => figures::fig8a(sys, opts),
+        "fig8b" => figures::fig8b(sys, opts),
+        "fig8c" => figures::fig8c(sys, opts),
+        "table2" => tables::table2(sys, opts.scale),
+        "table3" => tables::table3(sys, opts),
+        "table4" => tables::table4(sys, opts),
+        "regret" => regret::regret(sys, opts.scale),
+        "ablation" => regret::ablation(sys, opts.scale),
         _ => Err(anyhow::anyhow!(
             "unknown experiment {id}; known: {:?}",
             ALL_EXPERIMENTS

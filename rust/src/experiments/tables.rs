@@ -1,17 +1,19 @@
 //! Table drivers — Tables 2, 3 and 4 of the paper.
+//!
+//! Tables 3 and 4 are campaign-store readers (see `figures.rs` for the
+//! pattern); Table 2 is a pure pricing model with no environment to cache.
 
 use crate::apps::batch::BatchWorkload;
 use crate::config::SystemConfig;
-use crate::runtime::Backend;
 use crate::trace::spot::{SpotConfig, SpotTrace};
 use crate::util::csv::CsvWriter;
 use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::util::table::{pm, Table};
 
-use super::harness::{
-    post_warmup, run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
-};
+use super::campaign::{EnvKind, Scenario, Suite, BATCH_PRIVATE_STRESS};
+use super::store::CampaignStore;
+use super::RunOpts;
 
 // ---------------------------------------------------------------------------
 // Table 2 — normalized cost savings from cloud incentives
@@ -90,8 +92,8 @@ pub fn table2(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
 // Table 3 — elapsed time ± std and executor (OOM) errors under contention
 // ---------------------------------------------------------------------------
 
-pub fn table3(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
-    let steps = ((30.0 * scale) as u64).max(10);
+pub fn table3(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+    let steps = ((30.0 * opts.scale) as u64).max(10);
     let warmup = (steps / 3) as usize;
     let policies = ["k8s-hpa", "accordia", "cherrypick", "drone-safe"];
     let workloads = [
@@ -99,6 +101,21 @@ pub fn table3(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
         BatchWorkload::LogisticRegression,
         BatchWorkload::PageRank,
     ];
+    let mut requests = vec![];
+    for &policy in &policies {
+        for &w in &workloads {
+            requests.push(Scenario::request(
+                Suite::BatchPrivate,
+                EnvKind::Batch { workload: w, steps, stress: BATCH_PRIVATE_STRESS },
+                policy,
+                sys.seed,
+            ));
+        }
+    }
+    let mut store = CampaignStore::open_default();
+    let report = store.ensure(&requests, sys, &opts.exec())?;
+    println!("{}", report.describe());
+
     let mut tab = Table::new(
         "Table 3 — private cloud + 30% memory contention (time s, #errors)",
         &[
@@ -107,19 +124,31 @@ pub fn table3(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
     );
     let mut csv = CsvWriter::for_experiment(
         "table3",
-        &["policy", "workload", "mean_s", "std_s", "errors"],
+        &["policy", "workload", "mean_s", "std_s", "errors", "halts"],
     );
-    for &policy in &policies {
+    for (pi, &policy) in policies.iter().enumerate() {
         let mut cells = vec![policy.to_string()];
-        for &w in &workloads {
-            let mut env = BatchEnvConfig::new(w, CloudSetting::Private, steps);
-            env.external_mem_frac = 0.30; // the stress-ng co-tenant
-            let mut backend = Backend::auto(&sys.artifacts_dir);
-            let recs = run_batch_env(policy, &env, sys, &mut backend, sys.seed + 3);
-            let post = post_warmup(&recs, warmup);
-            let times: Vec<f64> =
-                post.iter().filter(|r| !r.halted).map(|r| r.perf_raw).collect();
-            let errors: u32 = post.iter().map(|r| r.errors).sum();
+        for (wi, &w) in workloads.iter().enumerate() {
+            let idx = report.indices[pi * workloads.len() + wi];
+            let recs = &store.outcomes[idx].records;
+            let post = &recs[warmup.min(recs.len())..];
+            let times: Vec<f64> = post.iter().filter(|r| !r.halted).map(|r| r.perf_raw).collect();
+            let errors: u64 = post.iter().map(|r| r.errors as u64).sum();
+            let halts = post.iter().filter(|r| r.halted).count();
+            // Surface an all-halted cell instead of a fake 0.0±0.0.
+            if times.is_empty() {
+                cells.push(format!("halted({halts})"));
+                cells.push(format!("{errors}"));
+                csv.row(&[
+                    policy.into(),
+                    w.name().into(),
+                    "NaN".into(),
+                    "NaN".into(),
+                    format!("{errors}"),
+                    format!("{halts}"),
+                ]);
+                continue;
+            }
             let (m, s) = (stats::mean(&times), stats::std_dev(&times));
             cells.push(pm(m, s));
             cells.push(format!("{errors}"));
@@ -129,6 +158,7 @@ pub fn table3(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
                 format!("{m:.1}"),
                 format!("{s:.1}"),
                 format!("{errors}"),
+                format!("{halts}"),
             ]);
         }
         tab.row(&cells);
@@ -145,19 +175,36 @@ pub fn table3(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
 // Table 4 — dropped requests (private-cloud microservices)
 // ---------------------------------------------------------------------------
 
-pub fn table4(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
-    let duration = 6.0 * 3600.0 * scale.clamp(0.05, 1.0);
+pub fn table4(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+    let steps = ((6.0 * 3600.0 * opts.scale.clamp(0.05, 1.0)) / 60.0).ceil() as u64;
+    let trace = crate::trace::diurnal::DiurnalConfig::default();
     let policies = ["k8s-hpa", "autopilot", "showar", "drone-safe"];
+    let requests: Vec<Scenario> = policies
+        .iter()
+        .map(|&policy| {
+            Scenario::request(
+                Suite::MicroPrivate,
+                EnvKind::Micro {
+                    steps,
+                    base_rps: trace.base_rps,
+                    amplitude_rps: trace.amplitude_rps,
+                },
+                policy,
+                sys.seed,
+            )
+        })
+        .collect();
+    let mut store = CampaignStore::open_default();
+    let report = store.ensure(&requests, sys, &opts.exec())?;
+    println!("{}", report.describe());
+
     let mut tab = Table::new(
         "Table 4 — dropped requests over the run (private cloud)",
         &["policy", "offered", "dropped", "drop rate"],
     );
     let mut csv = CsvWriter::for_experiment("table4", &["policy", "offered", "dropped"]);
-    let mut results = vec![];
-    for &policy in &policies {
-        let env = MicroEnvConfig::socialnet(CloudSetting::Private, duration);
-        let mut backend = Backend::auto(&sys.artifacts_dir);
-        let recs = run_micro_env(policy, &env, sys, &mut backend, sys.seed + 4);
+    for (&policy, &i) in policies.iter().zip(&report.indices) {
+        let recs = &store.outcomes[i].records;
         let offered: u64 = recs.iter().map(|r| r.offered).sum();
         let dropped: u64 = recs.iter().map(|r| r.dropped).sum();
         tab.row(&[
@@ -167,7 +214,6 @@ pub fn table4(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
             format!("{:.2}%", dropped as f64 / offered.max(1) as f64 * 100.0),
         ]);
         csv.row(&[policy.into(), format!("{offered}"), format!("{dropped}")]);
-        results.push((policy, dropped));
     }
     tab.print();
     println!("(paper shape: k8s-hpa most drops, drone least)");

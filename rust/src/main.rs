@@ -14,7 +14,7 @@ use drone::util::cli::Args;
 use drone::util::table::Table;
 
 fn main() {
-    let args = Args::from_env();
+    let args = Args::from_env_with_switches(&["no-exec"]);
     let file = args.get("config").and_then(|p| match Config::load(p) {
         Ok(c) => Some(c),
         Err(e) => {
@@ -45,17 +45,23 @@ fn print_usage() {
 USAGE:
   drone run --policy <name> --env <batch|micro> [--workload <w>] [--setting <public|private>]
             [--steps N] [--seed S] [--config file.toml]
-  drone experiment <id|all> [--scale 0.2] [--seed S]
+  drone experiment <id|all> [--scale 0.2] [--seed S] [--jobs N] [--timeout SECS] [--no-exec]
   drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
-                 [--steps N] [--policies p1,p2] [--workloads w1,w2]
+                 [--steps N] [--policies p1,p2] [--workloads w1,w2] [--timeout SECS]
+                 [--stress F] [--scale S]
   drone list
   drone selfcheck
+
+Environment-backed figures/tables read scenario records from the campaign
+store (results/campaign.json), executing only scenarios it does not hold;
+--no-exec turns missing scenarios into an error (pure-reader mode), and
+--timeout caps each scenario's wall clock (truncating its records).
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
              table2 table3 table4 regret ablation
-SUITES: batch-public batch-private micro-public micro-private"
+SUITES: batch-public batch-private micro-public micro-private fig1 fig2 fig4"
     );
 }
 
@@ -140,16 +146,21 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
 
 fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
     let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
-    let scale = args.get_f64("scale", 0.3);
+    let opts = experiments::RunOpts {
+        scale: args.get_f64("scale", 0.3),
+        jobs: args.get_usize("jobs", drone::experiments::store::default_jobs()),
+        no_exec: args.has_opt("no-exec"),
+        timeout_s: args.get_f64("timeout", 0.0),
+    };
     let ids: Vec<&str> = if id == "all" {
         experiments::ALL_EXPERIMENTS.to_vec()
     } else {
         vec![id]
     };
     for id in ids {
-        println!("\n##### experiment {id} (scale {scale}) #####");
-        if let Err(e) = experiments::run(id, sys, scale) {
-            eprintln!("experiment {id} failed: {e}");
+        println!("\n##### experiment {id} (scale {}) #####", opts.scale);
+        if let Err(e) = experiments::run(id, sys, &opts) {
+            eprintln!("experiment {id} failed: {e:#}");
             return 1;
         }
     }
@@ -202,10 +213,16 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     let steps = args.get_u64("steps", spec.batch_steps);
     spec.batch_steps = steps;
     spec.micro_steps = steps;
+    // Match the figure drivers' env knobs so `drone campaign` can prebuild
+    // any figure's scenario grid (e.g. `--stress 0.05` for fig7c, `--scale`
+    // to size the fig4 window like `drone experiment fig4 --scale`).
+    spec.private_stress = args.get_f64("stress", spec.private_stress);
+    spec.figure_scale = args.get_f64("scale", spec.figure_scale);
+    spec.timeout_s = args.get_f64("timeout", 0.0);
 
-    let default_jobs = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-    let jobs = args.get_usize("jobs", default_jobs);
-    let n_scenarios = campaign::enumerate(&spec).len();
+    let jobs = args.get_usize("jobs", drone::experiments::store::default_jobs());
+    let scenarios = campaign::enumerate(&spec);
+    let n_scenarios = scenarios.len();
     if n_scenarios == 0 {
         eprintln!("campaign selects zero scenarios (empty seeds or suites)");
         return 2;
@@ -218,14 +235,54 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
         jobs.clamp(1, n_scenarios)
     );
 
+    // Run through the campaign store so repeated/overlapping campaign
+    // invocations accumulate in results/campaign.json instead of each run
+    // clobbering the scenarios previous ones (or the figure drivers)
+    // cached. Scenarios already in the store are served from it — results
+    // are deterministic, so re-running them would reproduce the same rows.
     let started = std::time::Instant::now();
-    let result = campaign::run_campaign(&spec, sys, jobs);
+    let mut store = experiments::CampaignStore::open_default();
+    let exec = experiments::ExecPolicy { jobs, no_exec: false, timeout_s: spec.timeout_s };
+    let report = match store.ensure(&scenarios, sys, &exec) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("campaign failed: {e:#}");
+            return 1;
+        }
+    };
     let elapsed = started.elapsed().as_secs_f64();
 
+    // Tables/CSV show *this* grid (cached + fresh), not the whole store.
+    let outcomes: Vec<campaign::ScenarioOutcome> = report
+        .indices
+        .iter()
+        .enumerate()
+        .map(|(id, &i)| {
+            let mut o = store.outcomes[i].clone();
+            o.scenario.id = id;
+            o
+        })
+        .collect();
+    let aggregates = campaign::aggregate(&outcomes);
+    let result = campaign::CampaignResult {
+        outcomes,
+        aggregates,
+        seeds: spec.seeds.clone(),
+        config_fingerprint: sys.fingerprint(),
+    };
     result.print_tables();
-    match result.write_outputs() {
-        Ok((json_path, csv_path)) => {
-            println!("campaign -> {} , {}", json_path.display(), csv_path.display());
+    println!("{}", report.describe());
+    if report.executed == 0 {
+        // Nothing ran, so ensure() did not rewrite the store; save anyway
+        // so the file exists even for a fully cached grid.
+        if let Err(e) = store.save() {
+            eprintln!("writing campaign store failed: {e:#}");
+            return 1;
+        }
+    }
+    match result.write_csv() {
+        Ok(csv_path) => {
+            println!("campaign -> {} , {}", store.path().display(), csv_path.display());
         }
         Err(e) => {
             eprintln!("writing campaign outputs failed: {e}");

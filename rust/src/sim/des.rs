@@ -28,6 +28,8 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // Reverse for min-heap; tie-break on sequence for determinism.
+        // `schedule` guarantees finite times, so the Equal fallback is
+        // unreachable in practice and exists only to satisfy totality.
         other
             .time
             .partial_cmp(&self.time)
@@ -60,11 +62,19 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
-    /// Schedule `payload` at absolute time `t` (must be >= now).
+    /// Schedule `payload` at absolute time `t` (must be finite and >= now).
+    ///
+    /// Non-finite times would poison the heap: `Scheduled::cmp` falls back
+    /// to `Ordering::Equal` when `partial_cmp` fails, so a single NaN event
+    /// silently corrupts the ordering of everything it is compared against.
+    /// Debug builds assert; release builds clamp to `now` (run the event
+    /// immediately rather than corrupt every later pop).
     pub fn schedule(&mut self, t: f64, payload: E) {
+        debug_assert!(t.is_finite(), "non-finite event time {t}");
         debug_assert!(t >= self.now - 1e-9, "scheduling into the past: {t} < {}", self.now);
+        let t = if t.is_finite() { t.max(self.now) } else { self.now };
         self.seq += 1;
-        self.heap.push(Scheduled { time: t.max(self.now), seq: self.seq, payload });
+        self.heap.push(Scheduled { time: t, seq: self.seq, payload });
     }
 
     pub fn schedule_in(&mut self, dt: f64, payload: E) {
@@ -140,6 +150,34 @@ mod tests {
         q.advance_to(2.0);
         assert_eq!(q.now(), 2.0);
         assert!(q.next_before(5.0).is_some());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_nan_time() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::NAN, ());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite event time")]
+    fn rejects_infinite_time() {
+        let mut q = EventQueue::new();
+        q.schedule(f64::INFINITY, ());
+    }
+
+    /// `schedule_in` sanitizes a NaN delta to 0 before it can reach the
+    /// heap, so ordering survives even in release builds.
+    #[test]
+    fn nan_delta_runs_immediately() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "later");
+        q.schedule_in(f64::NAN, "now");
+        let (t, e) = q.next_before(10.0).unwrap();
+        assert_eq!((t, e), (0.0, "now"));
+        assert_eq!(q.next_before(10.0).unwrap(), (1.0, "later"));
     }
 
     #[test]

@@ -14,6 +14,14 @@ pub struct Args {
 
 impl Args {
     pub fn parse(argv: &[String]) -> Self {
+        Self::parse_with_switches(argv, &[])
+    }
+
+    /// Parse with a set of *known boolean switches*: `--name` for a listed
+    /// switch never consumes the following token as its value, so
+    /// `--no-exec fig7a` keeps `fig7a` positional instead of recording
+    /// `no-exec = "fig7a"` (the greedy default for `--key value` options).
+    pub fn parse_with_switches(argv: &[String], switches: &[&str]) -> Self {
         let mut out = Args::default();
         let mut i = 0;
         while i < argv.len() {
@@ -21,6 +29,8 @@ impl Args {
             if let Some(rest) = a.strip_prefix("--") {
                 if let Some((k, v)) = rest.split_once('=') {
                     out.options.insert(k.to_string(), v.to_string());
+                } else if switches.contains(&rest) {
+                    out.flags.push(rest.to_string());
                 } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
                     out.options.insert(rest.to_string(), argv[i + 1].clone());
                     i += 1;
@@ -40,12 +50,26 @@ impl Args {
         Self::parse(&argv)
     }
 
+    pub fn from_env_with_switches(switches: &[&str]) -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse_with_switches(&argv, switches)
+    }
+
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }
 
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
+    }
+
+    /// True if `--name` appeared at all — as a bare flag *or* with a value.
+    /// Boolean switches should use this: the parser greedily treats the
+    /// token after `--name` as its value, so `--no-exec fig7a` records
+    /// `no-exec = "fig7a"` rather than a flag, and `has_flag` alone would
+    /// silently report the switch as absent.
+    pub fn has_opt(&self, name: &str) -> bool {
+        self.has_flag(name) || self.options.contains_key(name)
     }
 
     pub fn get(&self, key: &str) -> Option<&str> {
@@ -110,6 +134,30 @@ mod tests {
         let a = parse(&["--dry-run", "--out", "x.csv"]);
         assert!(a.has_flag("dry-run"));
         assert_eq!(a.get("out"), Some("x.csv"));
+    }
+
+    #[test]
+    fn has_opt_sees_flag_and_option_forms() {
+        let a = parse(&["experiment", "--no-exec"]);
+        assert!(a.has_opt("no-exec"));
+        // Greedy value consumption: the switch still registers.
+        let b = parse(&["experiment", "--no-exec", "fig7a"]);
+        assert!(!b.has_flag("no-exec"));
+        assert!(b.has_opt("no-exec"));
+        assert!(!b.has_opt("missing"));
+    }
+
+    #[test]
+    fn known_switches_do_not_swallow_positionals() {
+        let argv: Vec<String> =
+            ["experiment", "--no-exec", "fig7a", "--scale", "0.2"].map(String::from).to_vec();
+        let a = Args::parse_with_switches(&argv, &["no-exec"]);
+        assert!(a.has_flag("no-exec"));
+        assert_eq!(a.positional, vec!["experiment", "fig7a"]);
+        assert!((a.get_f64("scale", 0.0) - 0.2).abs() < 1e-12);
+        // Unlisted keys keep the greedy `--key value` behavior.
+        let b = Args::parse_with_switches(&argv, &[]);
+        assert_eq!(b.get("no-exec"), Some("fig7a"));
     }
 
     #[test]

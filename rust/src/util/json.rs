@@ -1,0 +1,359 @@
+//! Minimal JSON reader for the campaign store (the offline vendor set has
+//! no serde). Parses exactly the dialect `campaign::CampaignResult` writes —
+//! objects, arrays, strings with the writer's escape set, finite numbers,
+//! booleans and null — into an owned tree with typed accessors.
+//!
+//! `null` is how the writer encodes non-finite floats (`json_f64`), so
+//! [`Json::f64_or_nan`] maps it back to NaN on the way in.
+
+use anyhow::{anyhow, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered (the writer's field order is part of the
+    /// determinism contract, so order is worth preserving on read).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn parse(s: &str) -> Result<Json> {
+        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.i != p.b.len() {
+            return Err(anyhow!("trailing bytes after JSON value at offset {}", p.i));
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup (None for non-objects / missing keys).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Number, with the writer's `null == NaN` convention applied.
+    pub fn f64_or_nan(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            Json::Null => Some(f64::NAN),
+            _ => None,
+        }
+    }
+
+    /// Integer accessor. Numbers travel through f64, which is exact only
+    /// below 2^53 — any larger written integer may have been silently
+    /// rounded at parse time (2^53 + 1 rounds to exactly 2^53, so even
+    /// that value is ambiguous), hence the exclusive bound.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(v) if *v >= 0.0 && v.fract() == 0.0 && *v < (1u64 << 53) as f64 => {
+                Some(*v as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s.as_str()),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items.as_slice()),
+            _ => None,
+        }
+    }
+
+    /// Array of numbers -> Vec<f64> (null elements become NaN).
+    pub fn num_vec(&self) -> Option<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.f64_or_nan()).collect()
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "expected {:?} at offset {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek().map(|b| b as char)
+            ))
+        }
+    }
+
+    fn literal(&mut self, lit: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(lit.as_bytes()) {
+            self.i += lit.len();
+            Ok(v)
+        } else {
+            Err(anyhow!("invalid literal at offset {}", self.i))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => Err(anyhow!("unexpected {:?} at offset {}", other.map(|b| b as char), self.i)),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut fields = vec![];
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let val = self.value()?;
+            fields.push((key, val));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(anyhow!("expected ',' or '}}' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = vec![];
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(anyhow!("expected ',' or ']' at offset {}", self.i)),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let c = self.peek().ok_or_else(|| anyhow!("unterminated string"))?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let esc = self.peek().ok_or_else(|| anyhow!("unterminated escape"))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                return Err(anyhow!("truncated \\u escape"));
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])
+                                .map_err(|_| anyhow!("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| anyhow!("bad \\u escape {hex:?}"))?;
+                            // The writer only emits \u for control chars; a
+                            // lone surrogate maps to the replacement char.
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                            self.i += 4;
+                        }
+                        other => return Err(anyhow!("unknown escape \\{}", other as char)),
+                    }
+                }
+                _ => {
+                    // Consume the full UTF-8 sequence starting at c.
+                    let start = self.i - 1;
+                    let width = utf8_width(c);
+                    let end = start + width;
+                    if end > self.b.len() {
+                        return Err(anyhow!("truncated UTF-8 sequence"));
+                    }
+                    let s = std::str::from_utf8(&self.b[start..end])
+                        .map_err(|_| anyhow!("invalid UTF-8 in string"))?;
+                    out.push_str(s);
+                    self.i = end;
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        if self.peek() == Some(b'-') {
+            self.i += 1;
+        }
+        while self
+            .peek()
+            .map(|c| c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+            .unwrap_or(false)
+        {
+            self.i += 1;
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).unwrap();
+        let v: f64 = s.parse().map_err(|_| anyhow!("invalid number {s:?} at offset {start}"))?;
+        Ok(Json::Num(v))
+    }
+}
+
+fn utf8_width(first: u8) -> usize {
+    match first {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        assert_eq!(Json::parse("null").unwrap(), Json::Null);
+        assert_eq!(Json::parse("true").unwrap(), Json::Bool(true));
+        assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
+        assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
+        assert_eq!(Json::parse("\"a\"").unwrap(), Json::Str("a".into()));
+    }
+
+    #[test]
+    fn parses_nested_structures() {
+        let j = Json::parse(r#"{"a": [1, 2.5, null], "b": {"c": "x", "d": false}}"#).unwrap();
+        let a = j.get("a").unwrap().num_vec().unwrap();
+        assert_eq!(a[0], 1.0);
+        assert_eq!(a[1], 2.5);
+        assert!(a[2].is_nan());
+        assert_eq!(j.get("b").unwrap().get("c").unwrap().as_str(), Some("x"));
+        assert_eq!(j.get("b").unwrap().get("d").unwrap().as_bool(), Some(false));
+        assert!(j.get("missing").is_none());
+    }
+
+    #[test]
+    fn string_escapes_roundtrip() {
+        let j = Json::parse(r#""a\"b\\c\n\t\r/""#).unwrap();
+        assert_eq!(j.as_str(), Some("a\"b\\c\n\t\r/"));
+        let j = Json::parse("\"\\u0041\\u0007\"").unwrap();
+        assert_eq!(j.as_str(), Some("A\u{0007}"));
+        let j = Json::parse("\"caf\u{e9} \u{2603}\"").unwrap();
+        assert_eq!(j.as_str(), Some("caf\u{e9} \u{2603}"));
+    }
+
+    #[test]
+    fn rejects_malformed_input() {
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+        assert!(Json::parse("nul").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_containers_and_ws() {
+        assert_eq!(Json::parse(" { } ").unwrap(), Json::Obj(vec![]));
+        assert_eq!(Json::parse("\n[\n]\n").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn u64_accessor_is_strict() {
+        assert_eq!(Json::parse("7").unwrap().as_u64(), Some(7));
+        assert_eq!(Json::parse("7.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        // From 2^53 up the f64 transport is lossy (2^53 + 1 parses to the
+        // same double as 2^53), so the accessor refuses the whole
+        // ambiguous range instead of returning a silently-wrong integer.
+        assert_eq!(Json::parse("9007199254740991").unwrap().as_u64(), Some((1 << 53) - 1));
+        assert_eq!(Json::parse("9007199254740992").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64(), None);
+    }
+
+    /// The exact shapes the campaign writer emits parse back faithfully.
+    #[test]
+    fn campaign_writer_dialect() {
+        let s = "{\n  \"schema\": \"drone-campaign/v2\",\n  \"seeds\": [0, 1],\n  \
+                 \"scenarios\": [\n    {\"id\": 0, \"mean_perf_raw\": null, \
+                 \"cost\": 1.500000}\n  ]\n}\n";
+        let j = Json::parse(s).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some("drone-campaign/v2"));
+        let sc = &j.get("scenarios").unwrap().as_arr().unwrap()[0];
+        assert!(sc.get("mean_perf_raw").unwrap().f64_or_nan().unwrap().is_nan());
+        assert_eq!(sc.get("cost").unwrap().as_f64(), Some(1.5));
+    }
+}

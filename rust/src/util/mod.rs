@@ -4,6 +4,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod json;
 pub mod rng;
 pub mod stats;
 pub mod table;

@@ -6,6 +6,20 @@
 //! Halton low-discrepancy sequence for candidate generation. Everything is
 //! seedable so experiments are exactly reproducible.
 
+/// FNV-1a 64-bit hash of a string — a stable, platform-independent way to
+/// derive an RNG seed from a name. `DefaultHasher` is explicitly not
+/// guaranteed stable across releases, and `name.len()` collides for
+/// same-length names (the Fig. 5 spot families were all 11 chars, which
+/// silently gave all three "independent" traces one RNG stream).
+pub fn hash_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// PCG-XSL-RR 128/64. Small, fast, statistically solid for simulation use.
 #[derive(Clone, Debug)]
 pub struct Pcg64 {
@@ -178,6 +192,19 @@ impl Halton {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn hash_str_stable_and_length_insensitive() {
+        // FNV-1a reference vectors.
+        assert_eq!(hash_str(""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(hash_str("a"), 0xaf63_dc4c_8601_ec8c);
+        // The Fig. 5 bug: equal-length names must hash apart.
+        let fams = ["m5.16xlarge", "c5.18xlarge", "r5.16xlarge"];
+        assert_eq!(fams.iter().map(|f| f.len()).collect::<Vec<_>>(), vec![11, 11, 11]);
+        assert_ne!(hash_str(fams[0]), hash_str(fams[1]));
+        assert_ne!(hash_str(fams[0]), hash_str(fams[2]));
+        assert_ne!(hash_str(fams[1]), hash_str(fams[2]));
+    }
 
     #[test]
     fn deterministic_and_seed_sensitive() {

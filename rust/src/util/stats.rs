@@ -78,11 +78,60 @@ pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let (lo, hi) = (v[0], v[v.len() - 1]);
     let n = v.len() as f64;
+    if points == 1 {
+        // Degenerate grid: the single support point carries the full mass,
+        // so the curve still reaches 1.0 (a 0..1 loop would stop at F(lo)).
+        return vec![(hi, 1.0)];
+    }
     (0..points)
         .map(|i| {
-            let x = lo + (hi - lo) * i as f64 / (points.max(2) - 1) as f64;
+            let x = lo + (hi - lo) * i as f64 / (points - 1) as f64;
             let cnt = v.partition_point(|&e| e <= x);
             (x, cnt as f64 / n)
+        })
+        .collect()
+}
+
+/// Percentile over weighted samples (value, weight), q in [0, 100]: the
+/// smallest value whose cumulative weight reaches q% of the total. Used to
+/// pool per-step latency digests, where each digest point stands for
+/// `count / digest_len` raw observations.
+pub fn weighted_percentile(samples: &[(f64, f64)], q: f64) -> f64 {
+    let mut v: Vec<(f64, f64)> = samples.iter().copied().filter(|(_, w)| *w > 0.0).collect();
+    if v.is_empty() {
+        return 0.0;
+    }
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let total: f64 = v.iter().map(|(_, w)| w).sum();
+    let target = q.clamp(0.0, 100.0) / 100.0 * total;
+    let mut cum = 0.0;
+    for &(x, w) in &v {
+        cum += w;
+        if cum >= target {
+            return x;
+        }
+    }
+    v[v.len() - 1].0
+}
+
+/// Weighted empirical CDF on a `points`-value support grid, mirroring
+/// [`cdf`] (including the single-point degenerate case).
+pub fn weighted_cdf(samples: &[(f64, f64)], points: usize) -> Vec<(f64, f64)> {
+    let mut v: Vec<(f64, f64)> = samples.iter().copied().filter(|(_, w)| *w > 0.0).collect();
+    if v.is_empty() || points == 0 {
+        return vec![];
+    }
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let (lo, hi) = (v[0].0, v[v.len() - 1].0);
+    let total: f64 = v.iter().map(|(_, w)| w).sum();
+    if points == 1 {
+        return vec![(hi, 1.0)];
+    }
+    (0..points)
+        .map(|i| {
+            let x = lo + (hi - lo) * i as f64 / (points - 1) as f64;
+            let mass: f64 = v.iter().take_while(|(e, _)| *e <= x).map(|(_, w)| w).sum();
+            (x, mass / total)
         })
         .collect()
 }
@@ -210,11 +259,69 @@ mod tests {
     #[test]
     fn cdf_monotone_and_bounded() {
         let xs: Vec<f64> = (0..100).map(|i| (i as f64 * 37.0) % 11.0).collect();
-        let c = cdf(&xs, 32);
-        for w in c.windows(2) {
-            assert!(w[1].1 >= w[0].1);
+        for points in [1, 2, 32] {
+            let c = cdf(&xs, points);
+            assert_eq!(c.len(), points);
+            for w in c.windows(2) {
+                assert!(w[1].1 >= w[0].1);
+            }
+            // Every grid size must reach full mass at its last support
+            // point — the points == 1 case used to stop at F(min).
+            assert!(
+                (c.last().unwrap().1 - 1.0).abs() < 1e-12,
+                "points={points}: {c:?}"
+            );
         }
-        assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
+        // points == 2 brackets the support: (min, F(min)) then (max, 1).
+        let c2 = cdf(&xs, 2);
+        assert_eq!(c2[0].0, min(&xs));
+        assert_eq!(c2[1].0, max(&xs));
+        // points == 1 reports the max, not (min, F(min)).
+        assert_eq!(cdf(&xs, 1), vec![(max(&xs), 1.0)]);
+        // Existing edge cases stay empty.
+        assert!(cdf(&[], 8).is_empty());
+        assert!(cdf(&xs, 0).is_empty());
+    }
+
+    #[test]
+    fn weighted_percentile_matches_unweighted_for_uniform_weights() {
+        let xs: Vec<f64> = (0..50).map(|i| ((i * 13) % 17) as f64).collect();
+        let pairs: Vec<(f64, f64)> = xs.iter().map(|&x| (x, 1.0)).collect();
+        for q in [10.0, 50.0, 90.0, 99.0] {
+            let w = weighted_percentile(&pairs, q);
+            let u = percentile(&xs, q);
+            // Nearest-rank vs interpolated: within one support step.
+            assert!((w - u).abs() <= 1.0 + 1e-9, "q={q}: {w} vs {u}");
+        }
+        assert_eq!(weighted_percentile(&[], 50.0), 0.0);
+        assert_eq!(weighted_percentile(&[(3.0, 0.0)], 50.0), 0.0);
+    }
+
+    #[test]
+    fn weighted_percentile_respects_weights() {
+        // 90% of the mass at 1.0, 10% at 100.0.
+        let pairs = [(1.0, 9.0), (100.0, 1.0)];
+        assert_eq!(weighted_percentile(&pairs, 50.0), 1.0);
+        assert_eq!(weighted_percentile(&pairs, 89.0), 1.0);
+        assert_eq!(weighted_percentile(&pairs, 95.0), 100.0);
+    }
+
+    #[test]
+    fn weighted_cdf_monotone_and_bounded() {
+        let pairs = [(2.0, 1.0), (4.0, 3.0), (8.0, 1.0)];
+        for points in [1, 2, 16] {
+            let c = weighted_cdf(&pairs, points);
+            assert_eq!(c.len(), points);
+            for w in c.windows(2) {
+                assert!(w[1].1 >= w[0].1);
+            }
+            assert!((c.last().unwrap().1 - 1.0).abs() < 1e-12);
+        }
+        // Mass fractions follow the weights: F(2) = 1/5, F(4) = 4/5.
+        let c = weighted_cdf(&pairs, 4);
+        assert!((c[0].1 - 0.2).abs() < 1e-12);
+        assert!((c[1].1 - 0.8).abs() < 1e-12, "{c:?}");
+        assert!(weighted_cdf(&[], 8).is_empty());
     }
 
     #[test]

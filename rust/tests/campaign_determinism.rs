@@ -28,6 +28,7 @@ fn mixed_spec() -> CampaignSpec {
         micro_steps: 3,
         micro_base_rps: 12.0,
         micro_amplitude_rps: 18.0,
+        ..Default::default()
     }
 }
 
@@ -49,6 +50,12 @@ fn campaign_json_identical_for_1_and_8_jobs() {
     let full = serial.to_json();
     assert_eq!(full.matches("\"wall_clock_ms\":").count(), serial.outcomes.len());
     assert!(!a.contains("wall_clock_ms"));
+
+    // Since v2 the canonical JSON also carries the per-step records the
+    // figure drivers aggregate, so record-level determinism is part of the
+    // same byte-identity contract.
+    assert_eq!(a.matches("\"records\":").count(), serial.outcomes.len());
+    assert!(serial.outcomes.iter().all(|o| o.records.len() == o.summary.steps));
 
     // And the digest is actually populated, not vacuously equal.
     assert_eq!(serial.outcomes.len(), 12);

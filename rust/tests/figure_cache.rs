@@ -1,0 +1,115 @@
+//! The figure pipeline's cache contract, end to end: regenerating figure
+//! series from a warm campaign store executes **zero** environments, and
+//! the records it serves are byte-identical to the ones a fresh run
+//! produces regardless of `--jobs`.
+//!
+//! This file deliberately holds a single `#[test]` — the env-execution
+//! counter is process-global, and any concurrently running test that spins
+//! an environment would race a strict equality assertion. Integration test
+//! binaries are separate processes, so isolation here is total.
+
+use drone::config::SystemConfig;
+use drone::experiments::campaign::{EnvKind, Scenario, Suite};
+use drone::experiments::harness::env_execution_count;
+use drone::experiments::store::{CampaignStore, ExecPolicy};
+
+fn test_sys() -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    sys.bandit.candidates = 32;
+    sys.artifacts_dir = "/nonexistent".into();
+    sys
+}
+
+/// A miniature fig7a request set (policy × seed learning curves) plus a
+/// fig8-style micro scenario — both figure families, one store.
+fn figure_requests(sys: &SystemConfig) -> Vec<Scenario> {
+    let mut requests = vec![];
+    for policy in ["drone", "k8s-hpa"] {
+        for seed in [sys.seed, sys.seed + 1] {
+            requests.push(Scenario {
+                id: 0,
+                suite: Suite::BatchPublic,
+                env: EnvKind::Batch {
+                    workload: drone::apps::batch::BatchWorkload::LogisticRegression,
+                    steps: 4,
+                    stress: 0.0,
+                },
+                setting: drone::experiments::CloudSetting::Public,
+                policy: policy.into(),
+                seed,
+            });
+        }
+    }
+    requests.push(Scenario {
+        id: 0,
+        suite: Suite::MicroPublic,
+        env: EnvKind::Micro { steps: 3, base_rps: 12.0, amplitude_rps: 18.0 },
+        setting: drone::experiments::CloudSetting::Public,
+        policy: "k8s-hpa".into(),
+        seed: sys.seed,
+    });
+    requests
+}
+
+#[test]
+fn warm_store_serves_figures_without_env_execution() {
+    let sys = test_sys();
+    let requests = figure_requests(&sys);
+    let dir = std::env::temp_dir().join(format!("drone-figcache-{}", std::process::id()));
+    let path = dir.join("campaign.json");
+
+    // Cold pass: everything executes, exactly once per scenario.
+    let exec = ExecPolicy { jobs: 4, no_exec: false, timeout_s: 0.0 };
+    let mut cold = CampaignStore::open(&path);
+    let before_cold = env_execution_count();
+    let first = cold.ensure(&requests, &sys, &exec).unwrap();
+    assert_eq!(first.executed, requests.len());
+    assert_eq!(
+        env_execution_count() - before_cold,
+        requests.len() as u64,
+        "cold pass runs each scenario exactly once"
+    );
+
+    // Warm pass from disk: zero executions, even in pure-reader mode.
+    let strict = ExecPolicy { jobs: 4, no_exec: true, timeout_s: 0.0 };
+    let mut warm = CampaignStore::open(&path);
+    let before_warm = env_execution_count();
+    let second = warm.ensure(&requests, &sys, &strict).unwrap();
+    assert_eq!((second.cached, second.executed), (requests.len(), 0));
+    assert_eq!(
+        env_execution_count(),
+        before_warm,
+        "a warm store must serve figure scenarios without running any environment"
+    );
+
+    // And the served records are byte-for-byte what the cold pass
+    // produced. Compare via canonical JSON, not `assert_eq!(a.records,
+    // b.records)`: halted steps carry NaN perf_raw, and NaN != NaN would
+    // fail derived equality even though the round trip is exact.
+    for (req, (&ci, &wi)) in
+        requests.iter().zip(first.indices.iter().zip(&second.indices))
+    {
+        let (a, b) = (&cold.outcomes[ci], &warm.outcomes[wi]);
+        assert_eq!(a.scenario.key(), req.key());
+        assert_eq!(b.scenario.key(), req.key());
+    }
+    assert_eq!(
+        cold.to_result().to_json_canonical(),
+        warm.to_result().to_json_canonical(),
+        "warm store content must be byte-identical to the cold pass"
+    );
+
+    // Different --jobs over the same requests produce identical stores.
+    let solo_dir = std::env::temp_dir().join(format!("drone-figcache-j1-{}", std::process::id()));
+    let mut solo = CampaignStore::open(solo_dir.join("campaign.json"));
+    solo.ensure(&requests, &sys, &ExecPolicy { jobs: 1, no_exec: false, timeout_s: 0.0 })
+        .unwrap();
+    assert_eq!(
+        solo.to_result().to_json_canonical(),
+        warm.to_result().to_json_canonical(),
+        "figure-backing records must be byte-identical for any job count"
+    );
+
+    let _ = std::fs::remove_dir_all(dir);
+    let _ = std::fs::remove_dir_all(solo_dir);
+}
