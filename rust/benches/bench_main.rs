@@ -319,7 +319,7 @@ fn main() {
         }
         println!("\n== experiment bench: {id} (scale {scale}) ==");
         let t0 = Instant::now();
-        if let Err(e) = experiments::run(id, &sys, &opts) {
+        if let Err(e) = experiments::run(std::slice::from_ref(id), &sys, &opts) {
             eprintln!("{id} FAILED: {e}");
             std::process::exit(1);
         }

@@ -34,9 +34,32 @@
 //! cannot replay faithfully — a different window instance, changed
 //! hyperparameters, a journal gap of a full window — triggers one O(n³)
 //! rebuild (counted in [`CacheStats::rebuilds`], asserted rare in tests).
+//!
+//! **Drift guard.** The rank-1 eviction update is stable for
+//! well-conditioned windows, but near-duplicate observations under tiny
+//! noise can drift the cached factor away from the JITTER-clamped oracle.
+//! After each incremental sync the engine forces a full (oracle-op-
+//! sequence) rebuild when either [`DRIFT_REBUILD_EVERY`] evictions have
+//! accumulated since the last factorization, or any live factor diagonal
+//! has fallen to the clamp floor (squared diagonal within 4x `JITTER` —
+//! the signature of a collapsing Schur complement). Both are counted in
+//! [`CacheStats::drift_rebuilds`]; the standard campaign grids never
+//! trigger either condition, so their results are unchanged.
 
 use super::gp::{self, GpHyper};
 use super::window::SlidingWindow;
+
+/// Evictions tolerated between full factor rebuilds: the numerical-drift
+/// budget of the rank-1 downdate path. Far above what any standard
+/// campaign scenario accumulates (their windows see at most a few hundred
+/// steps), so the guard only fires on genuinely long or ill-conditioned
+/// streams.
+pub const DRIFT_REBUILD_EVERY: u64 = 256;
+
+/// Squared-diagonal floor that marks a factor as "near the JITTER clamp":
+/// 4x the clamp value, i.e. a live diagonal within 2x of the absolute
+/// minimum the oracle's Cholesky would produce.
+const DRIFT_DIAG_FLOOR2: f64 = 4.0 * gp::JITTER;
 
 /// Operation counters, exposed so tests and benches can prove the fast
 /// path really is incremental (no hidden re-factorizations).
@@ -44,6 +67,9 @@ use super::window::SlidingWindow;
 pub struct CacheStats {
     /// Full O(n³) factorizations (first sync, or cache invalidation).
     pub rebuilds: u64,
+    /// The subset of `rebuilds` forced by the drift guard (eviction
+    /// budget exhausted, or a factor diagonal at the JITTER clamp).
+    pub drift_rebuilds: u64,
     /// O(n²) factor extensions.
     pub appends: u64,
     /// O(n²) first-row downdates (rank-1 update of the trailing block).
@@ -64,6 +90,9 @@ struct State {
     /// Journal identity: which window, and through which push.
     window_id: u64,
     epoch: u64,
+    /// Evictions applied since the factor was last built from scratch —
+    /// the drift guard's budget counter.
+    evictions_since_rebuild: u64,
     /// Window inputs, chronological, row-major [cap, d]; rows `..n` live.
     z: Vec<f64>,
     /// Lower-triangular Cholesky factor, row-major with stride `cap`;
@@ -97,6 +126,7 @@ impl State {
             n: 0,
             window_id: w.id(),
             epoch: w.epoch(),
+            evictions_since_rebuild: 0,
             z: vec![0.0; cap * d],
             l: vec![0.0; cap * cap],
         }
@@ -165,9 +195,23 @@ impl CachedGp {
         Self::default()
     }
 
+    /// Full O(n³) factorization from the window contents — the same op
+    /// sequence as the stateless oracle's sequential accumulation, so a
+    /// freshly rebuilt factor is bit-identical to it.
+    fn rebuild_from(&mut self, window: &SlidingWindow, hyp: GpHyper) {
+        let mut st = State::new(window, hyp);
+        for o in window.iter() {
+            st.append(&o.z);
+        }
+        self.state = Some(st);
+        self.stats.rebuilds += 1;
+    }
+
     /// Bring the cached factor up to date with `window` under `hyp`,
     /// replaying the journal incrementally when possible and rebuilding
-    /// from scratch when not.
+    /// from scratch when not. After an incremental replay the drift guard
+    /// may force a rebuild anyway: every [`DRIFT_REBUILD_EVERY`] evictions,
+    /// or as soon as a live factor diagonal nears the JITTER clamp.
     pub fn sync(&mut self, window: &SlidingWindow, hyp: GpHyper) {
         let replayable = match &self.state {
             None => false,
@@ -181,25 +225,41 @@ impl CachedGp {
             }
         };
         if !replayable {
-            let mut st = State::new(window, hyp);
-            for o in window.iter() {
-                st.append(&o.z);
-            }
-            self.state = Some(st);
-            self.stats.rebuilds += 1;
+            self.rebuild_from(window, hyp);
             return;
         }
-        let s = self.state.as_mut().expect("replayable implies state");
-        let behind = (window.epoch() - s.epoch) as usize;
-        for o in window.tail(behind) {
-            if s.n == s.cap {
-                s.evict_oldest();
-                self.stats.evictions += 1;
+        let drift = {
+            let s = self.state.as_mut().expect("replayable implies state");
+            let behind = (window.epoch() - s.epoch) as usize;
+            for o in window.tail(behind) {
+                if s.n == s.cap {
+                    s.evict_oldest();
+                    s.evictions_since_rebuild += 1;
+                    self.stats.evictions += 1;
+                }
+                s.append(&o.z);
+                self.stats.appends += 1;
             }
-            s.append(&o.z);
-            self.stats.appends += 1;
+            s.epoch = window.epoch();
+            // Drift monitor: only downdates (evictions) can drift the
+            // factor — appends replay the oracle's exact op sequence — so
+            // an eviction-free factor skips the check entirely (keeping
+            // the same-epoch repeat sync at zero factor work), and a
+            // clamped-but-freshly-rebuilt one must not rebuild in a loop.
+            if s.evictions_since_rebuild == 0 {
+                false
+            } else {
+                s.evictions_since_rebuild >= DRIFT_REBUILD_EVERY
+                    || (0..s.n).any(|i| {
+                        let diag = s.l[i * s.cap + i];
+                        diag * diag <= DRIFT_DIAG_FLOOR2
+                    })
+            }
+        };
+        if drift {
+            self.rebuild_from(window, hyp);
+            self.stats.drift_rebuilds += 1;
         }
-        s.epoch = window.epoch();
     }
 
     /// Posterior (mu, sigma) for candidates `x` from the cached factor.
@@ -424,6 +484,88 @@ mod tests {
         eng.sync(&other, hot);
         assert_eq!(eng.stats.rebuilds, 4);
         assert_eq!(eng.stats.appends, appends_before);
+    }
+
+    /// ROADMAP numerical-hardening item: the eviction budget forces a full
+    /// factor rebuild every [`DRIFT_REBUILD_EVERY`] downdates, bounding
+    /// how far the rank-1 update path can drift from the oracle on
+    /// arbitrarily long streams.
+    #[test]
+    fn drift_guard_rebuilds_after_eviction_budget() {
+        let mut rng = Pcg64::new(21);
+        let d = 2;
+        let cap = 4;
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        let hyp = GpHyper::default();
+        let x: Vec<f64> = (0..3 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let pushes = cap as u64 + DRIFT_REBUILD_EVERY + 8;
+        for _ in 0..pushes {
+            w.push(rand_obs(&mut rng, d));
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            eng.posterior(&w, &ys, &x, hyp);
+        }
+        assert!(
+            eng.stats.drift_rebuilds >= 1,
+            "eviction budget of {DRIFT_REBUILD_EVERY} must have been exhausted"
+        );
+        assert_eq!(
+            eng.stats.rebuilds,
+            1 + eng.stats.drift_rebuilds,
+            "every rebuild after the first must be drift-forced"
+        );
+        // Well-conditioned stream: the budget, not the diagonal floor,
+        // fires — exactly once per DRIFT_REBUILD_EVERY evictions.
+        assert_eq!(eng.stats.drift_rebuilds, eng.stats.evictions / DRIFT_REBUILD_EVERY);
+        // And the refreshed factor still matches the oracle.
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+        let (mu_o, sig_o) = oracle(&w, &ys, &x, hyp, 0);
+        assert!(max_abs_diff(&mu_c, &mu_o) < 1e-9);
+        assert!(max_abs_diff(&sig_c, &sig_o) < 1e-9);
+    }
+
+    /// ROADMAP numerical-hardening item, the other trigger: near-duplicate
+    /// observations under tiny noise collapse the Schur complement onto
+    /// the JITTER clamp — the regime where the rank-1 downdate could drift
+    /// the cached factor away from the clamped oracle. The diagonal
+    /// monitor must catch it and rebuild, after which the factor is the
+    /// oracle's exact op sequence again.
+    #[test]
+    fn near_duplicate_low_noise_triggers_diag_drift_rebuild() {
+        let mut rng = Pcg64::new(22);
+        let d = 3;
+        let cap = 8;
+        let hyp = GpHyper { noise_var: 1e-8, lengthscale: 0.8, signal_var: 1.0 };
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::new();
+        let base: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let x: Vec<f64> = (0..4 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let mut drift_syncs = 0u64;
+        for _ in 0..4 * cap {
+            // Near-duplicates: every point within 1e-9 of the same base.
+            let z: Vec<f64> = base.iter().map(|v| v + rng.uniform(-1e-9, 1e-9)).collect();
+            w.push(Observation { z, y: rng.normal(), y_resource: rng.f64() });
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let before = eng.stats.drift_rebuilds;
+            let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+            if eng.stats.drift_rebuilds > before {
+                drift_syncs += 1;
+                // A drift rebuild replays the oracle's exact op sequence,
+                // so the very next query agrees to machine precision.
+                let (mu_o, sig_o) = oracle(&w, &ys, &x, hyp, 0);
+                assert!(max_abs_diff(&mu_c, &mu_o) < 1e-10, "post-rebuild mu");
+                assert!(max_abs_diff(&sig_c, &sig_o) < 1e-10, "post-rebuild sigma");
+            }
+            // Pathological or not, the posterior must stay finite.
+            assert!(mu_c.iter().all(|v| v.is_finite()));
+            assert!(sig_c.iter().all(|v| v.is_finite() && *v >= 0.0));
+        }
+        assert!(
+            drift_syncs > 0,
+            "near-duplicate/low-noise stream must trip the diagonal drift guard"
+        );
+        assert!(eng.stats.evictions > 0, "the sweep must exercise the downdate path");
     }
 
     /// One cached factor serves both GP targets (perf and resource): two

@@ -51,6 +51,7 @@ use crate::util::rng::{hash_str, Pcg64};
 use crate::util::stats;
 use crate::util::table::{pm, Table};
 
+use super::env::{run_hybrid_env, HybridEnvConfig};
 use super::harness::{
     batch_perf_score, deadline_passed, micro_perf_score, note_env_execution, run_batch_env,
     run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
@@ -72,6 +73,10 @@ pub enum Suite {
     MicroPublic,
     /// SocialNet under the private-cloud memory cap (Table 4).
     MicroPrivate,
+    /// Heterogeneous co-location: SocialNet + a recurring batch tenant on
+    /// one shared cluster (`env::HybridEnv`) — the scenario-diversity
+    /// proof of the environment layer.
+    Hybrid,
     /// Fig. 1: single Spark jobs across a total-RAM sweep, container vs VM.
     Fig1Sweep,
     /// Fig. 2: Sort runs under interference across data sizes, Spark vs
@@ -81,11 +86,16 @@ pub enum Suite {
     Fig4Affinity,
 }
 
-/// The paper's four policy-evaluation families — what `--experiments all`
-/// expands to (the figure sweeps are requested by name or by the figure
-/// drivers themselves).
-pub const ALL_SUITES: &[Suite] =
-    &[Suite::BatchPublic, Suite::BatchPrivate, Suite::MicroPublic, Suite::MicroPrivate];
+/// The policy-evaluation families — what `--experiments all` expands to:
+/// the paper's four suites plus the hybrid co-location suite (the figure
+/// sweeps are requested by name or by the figure drivers themselves).
+pub const ALL_SUITES: &[Suite] = &[
+    Suite::BatchPublic,
+    Suite::BatchPrivate,
+    Suite::MicroPublic,
+    Suite::MicroPrivate,
+    Suite::Hybrid,
+];
 
 /// The figure-specific sweep suites (policy axis = deployment variant).
 pub const FIGURE_SUITES: &[Suite] = &[Suite::Fig1Sweep, Suite::Fig2Variance, Suite::Fig4Affinity];
@@ -97,6 +107,7 @@ impl Suite {
             Suite::BatchPrivate => "batch-private",
             Suite::MicroPublic => "micro-public",
             Suite::MicroPrivate => "micro-private",
+            Suite::Hybrid => "hybrid",
             Suite::Fig1Sweep => "fig1",
             Suite::Fig2Variance => "fig2",
             Suite::Fig4Affinity => "fig4",
@@ -122,6 +133,7 @@ impl Suite {
             Suite::BatchPrivate => &["k8s-hpa", "cherrypick", "accordia", "drone-safe"],
             Suite::MicroPublic => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
+            Suite::Hybrid => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::Fig1Sweep => &["container", "vm"],
             Suite::Fig2Variance => &["spark", "flink"],
             Suite::Fig4Affinity => &["colocated", "isolated"],
@@ -159,6 +171,9 @@ pub enum EnvKind {
     },
     /// Trace-driven SocialNet policy loop (`run_micro_env`).
     Micro { steps: u64, base_rps: f64, amplitude_rps: f64 },
+    /// Heterogeneous co-location loop (`env::HybridEnv`): SocialNet plus a
+    /// recurring batch tenant of `workload` on one shared cluster.
+    Hybrid { workload: BatchWorkload, steps: u64, base_rps: f64, amplitude_rps: f64 },
     /// One statically-provisioned Spark job at a total-RAM point (Fig. 1);
     /// the policy axis selects container vs VM deployment.
     SingleJob { workload: BatchWorkload, ram_gb: u32 },
@@ -175,6 +190,7 @@ impl EnvKind {
         match self {
             EnvKind::Batch { workload, .. } => workload.name().to_string(),
             EnvKind::Micro { .. } => "SocialNet".to_string(),
+            EnvKind::Hybrid { workload, .. } => format!("{}+SocialNet", workload.name()),
             EnvKind::SingleJob { workload, ram_gb } => {
                 format!("{}@{}GB", workload.name(), ram_gb)
             }
@@ -197,6 +213,14 @@ impl EnvKind {
             EnvKind::Micro { steps, base_rps, amplitude_rps } => format!(
                 "{{\"kind\": \"micro\", \"steps\": {}, \"base_rps\": {}, \
                  \"amplitude_rps\": {}}}",
+                steps,
+                json_f64(*base_rps),
+                json_f64(*amplitude_rps)
+            ),
+            EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps } => format!(
+                "{{\"kind\": \"hybrid\", \"workload\": {}, \"steps\": {}, \"base_rps\": {}, \
+                 \"amplitude_rps\": {}}}",
+                json_str(workload.name()),
                 steps,
                 json_f64(*base_rps),
                 json_f64(*amplitude_rps)
@@ -225,6 +249,12 @@ impl EnvKind {
                 stress: v.get("stress")?.f64_or_nan()?,
             }),
             "micro" => Some(EnvKind::Micro {
+                steps: v.get("steps")?.as_u64()?,
+                base_rps: v.get("base_rps")?.f64_or_nan()?,
+                amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+            }),
+            "hybrid" => Some(EnvKind::Hybrid {
+                workload: workload()?,
                 steps: v.get("steps")?.as_u64()?,
                 base_rps: v.get("base_rps")?.f64_or_nan()?,
                 amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
@@ -300,6 +330,9 @@ pub struct CampaignSpec {
     pub figure_scale: f64,
     /// Per-scenario wall-clock budget in seconds; 0 disables the guard.
     pub timeout_s: f64,
+    /// Latency-digest size (`--digest-points`): quantile points each step's
+    /// latency sample is compressed to in `campaign.json`.
+    pub digest_points: usize,
 }
 
 impl Default for CampaignSpec {
@@ -320,6 +353,7 @@ impl Default for CampaignSpec {
             private_stress: BATCH_PRIVATE_STRESS,
             figure_scale: 0.3,
             timeout_s: 0.0,
+            digest_points: LATENCY_DIGEST_POINTS,
         }
     }
 }
@@ -347,6 +381,14 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
                     .collect()
             }
             Suite::MicroPublic | Suite::MicroPrivate => vec![EnvKind::Micro {
+                steps: spec.micro_steps,
+                base_rps: spec.micro_base_rps,
+                amplitude_rps: spec.micro_amplitude_rps,
+            }],
+            // One co-location cell per campaign: the batch co-tenant is the
+            // first requested workload (SparkPi in the default lineup).
+            Suite::Hybrid => vec![EnvKind::Hybrid {
+                workload: spec.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi),
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
                 amplitude_rps: spec.micro_amplitude_rps,
@@ -443,9 +485,12 @@ pub fn parse_suites(s: &str) -> anyhow::Result<Vec<Suite>> {
 // Per-step records + per-scenario summaries
 // ---------------------------------------------------------------------------
 
-/// Number of quantile points a step's latency sample is compressed to in
-/// `campaign.json`. 64 points bound the worst-case CDF/percentile error at
-/// ~1.6% of rank while keeping a 6-hour micro scenario's records small.
+/// Default number of quantile points a step's latency sample is compressed
+/// to in `campaign.json`. 64 points bound the worst-case CDF/percentile
+/// error at ~1.6% of rank while keeping a 6-hour micro scenario's records
+/// small; `--digest-points` raises it when a figure needs exact deep-tail
+/// percentiles (p99.9). Stores missing the header field read back as 64
+/// (the pre-`--digest-points` format).
 pub const LATENCY_DIGEST_POINTS: usize = 64;
 
 /// The serializable per-step record the figure/table drivers aggregate —
@@ -474,7 +519,7 @@ pub struct StepRow {
 }
 
 impl StepRow {
-    pub fn from_record(r: &StepRecord) -> Self {
+    pub fn from_record(r: &StepRecord, digest_points: usize) -> Self {
         Self {
             perf_raw: round6(if r.halted { f64::NAN } else { r.perf_raw }),
             perf_score: round6(r.perf_score),
@@ -486,7 +531,7 @@ impl StepRow {
             dropped: r.dropped,
             offered: r.offered,
             lat_n: r.latencies_ms.len() as u64,
-            lat_q: latency_digest(&r.latencies_ms, LATENCY_DIGEST_POINTS)
+            lat_q: latency_digest(&r.latencies_ms, digest_points.max(2))
                 .into_iter()
                 .map(round6)
                 .collect(),
@@ -606,17 +651,24 @@ pub struct ScenarioOutcome {
 // Per-scenario execution
 // ---------------------------------------------------------------------------
 
-fn run_scenario(sc: &Scenario, sys: &SystemConfig, timeout_s: f64) -> (Summary, Vec<StepRow>) {
+fn run_scenario(
+    sc: &Scenario,
+    sys: &SystemConfig,
+    timeout_s: f64,
+    digest_points: usize,
+) -> (Summary, Vec<StepRow>) {
     let t0 = Instant::now();
     let deadline = (timeout_s > 0.0).then(|| t0 + Duration::from_secs_f64(timeout_s));
+    let rows_of = |records: Vec<StepRecord>| -> Vec<StepRow> {
+        records.iter().map(|r| StepRow::from_record(r, digest_points)).collect()
+    };
     let (planned, rows): (u64, Vec<StepRow>) = match &sc.env {
         EnvKind::Batch { workload, steps, stress } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
             let mut env = BatchEnvConfig::new(*workload, sc.setting, *steps);
             env.external_mem_frac = *stress;
             env.deadline = deadline;
-            let records = run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed);
-            (*steps, records.iter().map(StepRow::from_record).collect())
+            (*steps, rows_of(run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
         EnvKind::Micro { steps, base_rps, amplitude_rps } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
@@ -624,16 +676,25 @@ fn run_scenario(sc: &Scenario, sys: &SystemConfig, timeout_s: f64) -> (Summary, 
             env.trace.base_rps = *base_rps;
             env.trace.amplitude_rps = *amplitude_rps;
             env.deadline = deadline;
-            let records = run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed);
-            (*steps, records.iter().map(StepRow::from_record).collect())
+            (*steps, rows_of(run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
+        }
+        EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let mut env = HybridEnvConfig::new(*workload, sc.setting, *steps);
+            env.trace.base_rps = *base_rps;
+            env.trace.amplitude_rps = *amplitude_rps;
+            env.deadline = deadline;
+            (*steps, rows_of(run_hybrid_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
         EnvKind::SingleJob { workload, ram_gb } => {
-            (1, run_single_job(sc, sys, *workload, *ram_gb, deadline))
+            (1, run_single_job(sc, sys, *workload, *ram_gb, deadline, digest_points))
         }
         EnvKind::SortVariance { data_gb } => {
-            (1, run_sort_variance(sc, sys, *data_gb, deadline))
+            (1, run_sort_variance(sc, sys, *data_gb, deadline, digest_points))
         }
-        EnvKind::Affinity { window_s } => (1, run_affinity(sc, sys, *window_s, deadline)),
+        EnvKind::Affinity { window_s } => {
+            (1, run_affinity(sc, sys, *window_s, deadline, digest_points))
+        }
     };
     let mut summary = summarize(&rows);
     summary.timed_out = (rows.len() as u64) < planned;
@@ -650,6 +711,7 @@ fn run_single_job(
     workload: BatchWorkload,
     ram_gb: u32,
     deadline: Option<Instant>,
+    digest_points: usize,
 ) -> Vec<StepRow> {
     if deadline_passed(deadline) {
         return vec![];
@@ -673,7 +735,7 @@ fn run_single_job(
     let mut rng = Pcg64::new(hash_str(&sc.name()));
     let result = run_batch_job(&spec, &mut rng);
     let ram_alloc_mb = pods as f64 * per_pod_gb * 1024.0;
-    vec![job_row(&result, workload, ram_alloc_mb, sys.cluster_ram_mb())]
+    vec![job_row(&result, workload, ram_alloc_mb, sys.cluster_ram_mb(), digest_points)]
 }
 
 /// One Fig. 2 cell: a Sort run under a freshly sampled interference
@@ -683,6 +745,7 @@ fn run_sort_variance(
     sys: &SystemConfig,
     data_gb: u32,
     deadline: Option<Instant>,
+    digest_points: usize,
 ) -> Vec<StepRow> {
     if deadline_passed(deadline) {
         return vec![];
@@ -706,7 +769,7 @@ fn run_sort_variance(
     };
     let result = run_batch_job(&spec, &mut rng);
     let ram_alloc_mb = 12.0 * 16_384.0;
-    vec![job_row(&result, BatchWorkload::Sort, ram_alloc_mb, sys.cluster_ram_mb())]
+    vec![job_row(&result, BatchWorkload::Sort, ram_alloc_mb, sys.cluster_ram_mb(), digest_points)]
 }
 
 fn job_row(
@@ -714,6 +777,7 @@ fn job_row(
     workload: BatchWorkload,
     ram_alloc_mb: f64,
     cluster_ram_mb: f64,
+    digest_points: usize,
 ) -> StepRow {
     let rec = StepRecord {
         perf_raw: result.elapsed_s,
@@ -728,7 +792,7 @@ fn job_row(
         halted: result.halted,
         ..Default::default()
     };
-    StepRow::from_record(&rec)
+    StepRow::from_record(&rec, digest_points)
 }
 
 /// One Fig. 4 variant: a Sockshop traffic window with the Order hub either
@@ -740,6 +804,7 @@ fn run_affinity(
     sys: &SystemConfig,
     window_s: f64,
     deadline: Option<Instant>,
+    digest_points: usize,
 ) -> Vec<StepRow> {
     if deadline_passed(deadline) {
         return vec![];
@@ -770,7 +835,7 @@ fn run_affinity(
         latencies_ms: s.latencies_ms,
         ..Default::default()
     };
-    vec![StepRow::from_record(&rec)]
+    vec![StepRow::from_record(&rec, digest_points)]
 }
 
 // ---------------------------------------------------------------------------
@@ -803,6 +868,11 @@ pub struct CampaignResult {
     /// [`SystemConfig::fingerprint`] of the config the scenarios ran
     /// under; the campaign store refuses cross-config cache hits on it.
     pub config_fingerprint: String,
+    /// Latency-digest size the records were compressed with. Serialized
+    /// only when it differs from [`LATENCY_DIGEST_POINTS`], so default
+    /// stores keep the pre-`--digest-points` byte layout; files missing
+    /// the field read back as 64.
+    pub digest_points: usize,
 }
 
 /// Run an explicit scenario list across `jobs` worker threads.
@@ -817,6 +887,7 @@ pub fn run_scenarios(
     sys: &SystemConfig,
     jobs: usize,
     timeout_s: f64,
+    digest_points: usize,
 ) -> Vec<ScenarioOutcome> {
     let jobs = jobs.clamp(1, scenarios.len().max(1));
     let next = AtomicUsize::new(0);
@@ -830,7 +901,7 @@ pub fn run_scenarios(
                 if i >= scenarios.len() {
                     break;
                 }
-                let out = run_scenario(&scenarios[i], sys, timeout_s);
+                let out = run_scenario(&scenarios[i], sys, timeout_s, digest_points);
                 *slots[i].lock().unwrap() = Some(out);
             });
         }
@@ -850,13 +921,14 @@ pub fn run_scenarios(
 /// Run every scenario of `spec` across `jobs` worker threads.
 pub fn run_campaign(spec: &CampaignSpec, sys: &SystemConfig, jobs: usize) -> CampaignResult {
     let scenarios = enumerate(spec);
-    let outcomes = run_scenarios(&scenarios, sys, jobs, spec.timeout_s);
+    let outcomes = run_scenarios(&scenarios, sys, jobs, spec.timeout_s, spec.digest_points);
     let aggregates = aggregate(&outcomes);
     CampaignResult {
         outcomes,
         aggregates,
         seeds: spec.seeds.clone(),
         config_fingerprint: sys.fingerprint(),
+        digest_points: spec.digest_points,
     }
 }
 
@@ -929,8 +1001,11 @@ impl CampaignResult {
         for suite in suites {
             let rows: Vec<&AggregateRow> =
                 self.aggregates.iter().filter(|a| a.suite == suite).collect();
+            // Hybrid reports the microservice SLO (p90) as its raw perf.
             let perf_unit = match suite {
-                Suite::MicroPublic | Suite::MicroPrivate | Suite::Fig4Affinity => "P90 ms",
+                Suite::MicroPublic | Suite::MicroPrivate | Suite::Hybrid | Suite::Fig4Affinity => {
+                    "P90 ms"
+                }
                 _ => "elapsed s",
             };
             let mut tab = Table::new(
@@ -984,6 +1059,12 @@ impl CampaignResult {
         s.push_str("{\n");
         s.push_str("  \"schema\": \"drone-campaign/v2\",\n");
         s.push_str(&format!("  \"config\": {},\n", json_str(&self.config_fingerprint)));
+        if self.digest_points != LATENCY_DIGEST_POINTS {
+            // Back-compat: the default digest size is implicit, so default
+            // stores stay byte-identical to the pre-`--digest-points`
+            // format (and old files parse as 64-point stores).
+            s.push_str(&format!("  \"digest_points\": {},\n", self.digest_points));
+        }
         let seeds: Vec<String> = self.seeds.iter().map(|v| v.to_string()).collect();
         s.push_str(&format!("  \"seeds\": [{}],\n", seeds.join(", ")));
         s.push_str("  \"scenarios\": [\n");
@@ -1196,9 +1277,11 @@ mod tests {
 
     #[test]
     fn suites_parse_forms() {
-        assert_eq!(parse_suites("all").unwrap().len(), 4);
+        assert_eq!(parse_suites("all").unwrap().len(), 5);
+        assert!(parse_suites("all").unwrap().contains(&Suite::Hybrid));
         let two = parse_suites("batch-public, micro-private").unwrap();
         assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
+        assert_eq!(parse_suites("hybrid").unwrap(), vec![Suite::Hybrid]);
         let figs = parse_suites("fig1,fig2,fig4").unwrap();
         assert_eq!(figs, FIGURE_SUITES.to_vec());
         assert!(parse_suites("nope").is_err());
@@ -1263,6 +1346,12 @@ mod tests {
         let envs = [
             EnvKind::Batch { workload: BatchWorkload::LogisticRegression, steps: 30, stress: 0.05 },
             EnvKind::Micro { steps: 360, base_rps: 60.0, amplitude_rps: 140.0 },
+            EnvKind::Hybrid {
+                workload: BatchWorkload::SparkPi,
+                steps: 12,
+                base_rps: 60.0,
+                amplitude_rps: 140.0,
+            },
             EnvKind::SingleJob { workload: BatchWorkload::PageRank, ram_gb: 96 },
             EnvKind::SortVariance { data_gb: 60 },
             EnvKind::Affinity { window_s: 36.0 },
@@ -1275,6 +1364,32 @@ mod tests {
             // the campaign store's cache identity depends on this.
             assert_eq!(back.to_json(), env.to_json());
         }
+    }
+
+    #[test]
+    fn hybrid_suite_enumerates_one_colocation_cell() {
+        let spec = CampaignSpec {
+            suites: vec![Suite::Hybrid],
+            seeds: vec![0, 1],
+            ..Default::default()
+        };
+        let scenarios = enumerate(&spec);
+        // 1 env * 4 policies * 2 seeds.
+        assert_eq!(scenarios.len(), 8);
+        assert_eq!(scenarios[0].name(), "hybrid/Spark-Pi+SocialNet/k8s-hpa/s0");
+        assert!(scenarios.iter().all(|s| s.setting == CloudSetting::Public));
+        for sc in &scenarios {
+            match &sc.env {
+                EnvKind::Hybrid { workload, steps, .. } => {
+                    assert_eq!(*workload, BatchWorkload::SparkPi);
+                    assert_eq!(*steps, spec.micro_steps);
+                }
+                other => panic!("hybrid suite must enumerate hybrid envs, got {other:?}"),
+            }
+        }
+        // An empty workload list still yields the SparkPi co-tenant.
+        let bare = CampaignSpec { workloads: vec![], ..spec };
+        assert_eq!(enumerate(&bare).len(), 8);
     }
 
     #[test]
@@ -1400,6 +1515,52 @@ mod tests {
             .filter(|o| o.scenario.suite == Suite::Fig4Affinity)
             .collect();
         assert_eq!(fig4[0].records[0].offered, fig4[1].records[0].offered);
+    }
+
+    /// `--digest-points` satellite: the configured size bounds every
+    /// step's latency digest, lands in the JSON header when non-default,
+    /// and the default size keeps the pre-flag byte layout (no header
+    /// field at all).
+    #[test]
+    fn digest_points_bounds_latency_quantiles_and_headers() {
+        let sys = small_sys();
+        let fig4 = |digest_points: usize| CampaignSpec {
+            suites: vec![Suite::Fig4Affinity],
+            seeds: vec![0],
+            workloads: vec![],
+            digest_points,
+            ..Default::default()
+        };
+        let small = run_campaign(&fig4(8), &sys, 1);
+        for o in &small.outcomes {
+            for r in &o.records {
+                assert!(r.lat_q.len() <= 8, "{}", o.scenario.name());
+                if r.lat_n >= 8 {
+                    assert_eq!(r.lat_q.len(), 8);
+                }
+                // Sorted, extremes preserved.
+                for w in r.lat_q.windows(2) {
+                    assert!(w[1] >= w[0]);
+                }
+            }
+        }
+        assert!(small.to_json().contains("\"digest_points\": 8"));
+
+        let default = run_campaign(&fig4(LATENCY_DIGEST_POINTS), &sys, 1);
+        assert!(
+            !default.to_json().contains("digest_points"),
+            "default digest size must keep the pre-flag byte layout"
+        );
+        // Identical runs, different digest size: only lat_q granularity
+        // (and the derived weights) may differ.
+        for (a, b) in small.outcomes.iter().zip(&default.outcomes) {
+            for (ra, rb) in a.records.iter().zip(&b.records) {
+                assert_eq!(ra.lat_n, rb.lat_n);
+                assert_eq!(ra.offered, rb.offered);
+                assert_eq!(ra.perf_raw, rb.perf_raw);
+                assert!(ra.lat_q.len() <= rb.lat_q.len());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,1057 @@
+//! The environment layer: one [`Environment`] trait, one generic
+//! decision-loop driver.
+//!
+//! The paper's central claim is a *single* contextual-bandit control loop
+//! that spans heterogeneous workloads (recurring batch jobs and
+//! trace-driven microservices, Sec. 5). Before this module existed the
+//! reproduction implemented that loop twice — `run_batch_env` and
+//! `run_micro_env` each hand-rolled the same RNG forking, policy
+//! construction, deadline check, telemetry feedback and `StepRecord`
+//! assembly. Now the shared loop lives once in [`run_env`]:
+//!
+//!   * the **driver** owns everything workload-agnostic: the RNG stream
+//!     layout (root seeded from `seed ^ env.seed_tag()`, policy stream =
+//!     fork 1, env streams = forks 2..), policy construction from the
+//!     env's action-space/app-profile descriptors, the
+//!     decide → actuate → advance → feedback cycle, wall-clock deadline
+//!     truncation at step boundaries, and record emission;
+//!   * an **environment** owns only its workload physics: how exogenous
+//!     processes advance and produce the observed context
+//!     ([`Environment::observe`]), how an action is applied to the
+//!     simulated cluster ([`Environment::actuate`]), and how one decision
+//!     period plays out ([`Environment::advance`], which also writes the
+//!     feedback the next decision conditions on).
+//!
+//! [`BatchEnv`] and [`MicroEnv`] reproduce the pre-refactor loops
+//! *bit-for-bit* (same fork order, same floating-point op sequence —
+//! locked down by `tests/env_golden.rs` against verbatim copies of the old
+//! loops). [`HybridEnv`] is the proof the abstraction pays for scenario
+//! diversity: a batch tenant and the SocialNet graph co-located on one
+//! cluster, built purely from existing pieces.
+
+use std::time::Instant;
+
+use crate::apps::batch::{
+    cpu_demand_cores, run_batch_job, run_cost, BatchWorkload, DeployMode, Platform, RunSpec,
+};
+use crate::apps::microservice::{self, ServiceGraph, WindowStats};
+use crate::bandit::encode::{Action, ActionSpace};
+use crate::config::SystemConfig;
+use crate::monitor::context::ContextVector;
+use crate::monitor::store::MetricStore;
+use crate::orchestrators::{self, AppProfile, Telemetry};
+use crate::runtime::Backend;
+use crate::sim::cluster::Cluster;
+use crate::sim::interference::InterferenceModel;
+use crate::sim::resources::Resources;
+use crate::sim::scheduler::{apply_deployment, apply_deployments_fair, Deployment};
+use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
+use crate::trace::spot::{SpotConfig, SpotTrace};
+use crate::util::rng::Pcg64;
+
+use super::harness::{
+    batch_cost_scale, batch_perf_score, deadline_passed, micro_perf_score, note_env_execution,
+    placed_cross_zone_frac, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+};
+
+/// A simulated decision-loop environment: owns its simulation state and
+/// exposes context production, actuation and time advancement, plus the
+/// descriptors the driver needs to construct a policy for it.
+///
+/// Lifecycle: the driver calls [`Environment::init`] exactly once (the env
+/// forks its private RNG streams off the run's root, in a fixed order that
+/// is part of its determinism contract), then per step `observe` →
+/// (policy decides) → `actuate` → `advance`.
+pub trait Environment {
+    /// Seed-domain separation tag: the run's root RNG is
+    /// `Pcg64::new(seed ^ seed_tag())`, so envs with different tags derive
+    /// disjoint stream families from the same scenario seed.
+    fn seed_tag(&self) -> u64;
+
+    /// Planned decision periods (the driver may stop earlier on deadline).
+    fn steps(&self) -> u64;
+
+    /// Seconds of simulated time per decision period.
+    fn period_s(&self) -> f64;
+
+    /// Optional wall-clock deadline (`--timeout`): the driver stops before
+    /// the next step once passed, keeping the records produced so far.
+    fn deadline(&self) -> Option<Instant>;
+
+    /// Build simulation state, forking private RNG streams off `root`
+    /// (fork tags 2.. — the driver takes fork 1 for the policy stream).
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64);
+
+    /// Action-space descriptor for this env (valid after `init`).
+    fn action_space(&self) -> ActionSpace;
+
+    /// Application profile the policy is constructed for.
+    fn app_profile(&self) -> AppProfile;
+
+    /// Advance exogenous processes (interference, traces, prices) to
+    /// `now` and produce the observed context for this decision.
+    fn observe(&mut self, step: u64, now: f64) -> ContextVector;
+
+    /// Apply the decided action to the simulated cluster.
+    fn actuate(&mut self, action: &Action);
+
+    /// Play out one decision period under the actuated deployment: run
+    /// the workload, write the feedback fields of `tel` (what the *next*
+    /// decision conditions on) and return the step's outcome row.
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        action: &Action,
+        tel: &mut Telemetry,
+    ) -> StepRecord;
+}
+
+/// The single generic decision-loop driver: every environment-backed
+/// experiment (batch, microservice, hybrid — and any future env) runs
+/// through this function, so RNG stream layout, policy construction,
+/// deadline truncation and record emission exist exactly once.
+pub fn run_env(
+    policy_name: &str,
+    env: &mut dyn Environment,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    note_env_execution();
+    let mut root = Pcg64::new(seed ^ env.seed_tag());
+    let mut rng_policy = root.fork(1);
+    env.init(sys, &mut root);
+
+    let mut policy = orchestrators::make(
+        policy_name,
+        env.action_space(),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        env.app_profile(),
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let deadline = env.deadline();
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(env.steps() as usize);
+
+    for step in 0..env.steps() {
+        if deadline_passed(deadline) {
+            break;
+        }
+        let now = step as f64 * env.period_s();
+        tel.ctx = env.observe(step, now);
+        tel.t = now;
+        tel.step = step;
+
+        let action = policy.decide(&tel, backend, &mut rng_policy);
+        env.actuate(&action);
+        records.push(env.advance(step, now, &action, &mut tel));
+    }
+    records
+}
+
+// ---------------------------------------------------------------------------
+// Batch environment (recurring jobs, quasi-online)
+// ---------------------------------------------------------------------------
+
+/// One recurring run every ~5 simulated minutes.
+const BATCH_DT_S: f64 = 300.0;
+
+struct BatchState {
+    space: ActionSpace,
+    cluster: Cluster,
+    interference: InterferenceModel,
+    spot: SpotTrace,
+    spot_mean: f64,
+    store: MetricStore,
+    rng_jobs: Pcg64,
+    cluster_ram_mb: f64,
+    /// This step's spot price (set by `observe`, read by `advance`).
+    price: f64,
+    /// Actual placement of this step's deployment (set by `actuate`).
+    placed_pods: usize,
+    cross: f64,
+}
+
+/// The recurring-batch policy loop as an [`Environment`] — carries only
+/// the batch physics; the decision loop lives in [`run_env`].
+pub struct BatchEnv {
+    cfg: BatchEnvConfig,
+    st: Option<BatchState>,
+}
+
+impl BatchEnv {
+    pub fn new(cfg: BatchEnvConfig) -> Self {
+        Self { cfg, st: None }
+    }
+
+    fn st(&mut self) -> &mut BatchState {
+        self.st.as_mut().expect("BatchEnv used before init")
+    }
+}
+
+impl Environment for BatchEnv {
+    fn seed_tag(&self) -> u64 {
+        0xba7c_u64 << 4
+    }
+
+    fn steps(&self) -> u64 {
+        self.cfg.steps
+    }
+
+    fn period_s(&self) -> f64 {
+        BATCH_DT_S
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.cfg.deadline
+    }
+
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64) {
+        // Fork order is the determinism contract: 2 jobs, 3 interference,
+        // 4 spot (the driver already took 1 for the policy stream).
+        let rng_jobs = root.fork(2);
+        let mut rng_interf = root.fork(3);
+        let mut rng_spot = root.fork(4);
+        let interference = if self.cfg.interference && sys.interference.enabled {
+            InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+        } else {
+            InterferenceModel::disabled()
+        };
+        self.st = Some(BatchState {
+            space: ActionSpace { zones: sys.cluster.zones, ..Default::default() },
+            cluster: Cluster::new(&sys.cluster),
+            interference,
+            spot: SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0)),
+            spot_mean: SpotConfig::gcp_e2().mean_price,
+            store: MetricStore::new(3600.0 * 12.0),
+            rng_jobs,
+            cluster_ram_mb: sys.cluster_ram_mb(),
+            price: 0.0,
+            placed_pods: 0,
+            cross: 0.0,
+        });
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        self.st.as_ref().expect("BatchEnv used before init").space.clone()
+    }
+
+    fn app_profile(&self) -> AppProfile {
+        AppProfile::Batch
+    }
+
+    fn observe(&mut self, _step: u64, now: f64) -> ContextVector {
+        let external_mem_frac = self.cfg.external_mem_frac;
+        let data_gb = self.cfg.data_gb;
+        let setting = self.cfg.setting;
+        let st = self.st();
+        st.interference.step(&mut st.cluster, now, BATCH_DT_S.min(60.0));
+        st.price = st.spot.step(BATCH_DT_S / 3600.0);
+        st.store.push("spot_price", now, st.price);
+        st.store.push("workload", now, data_gb);
+
+        // Observe context (spot omitted in the private setting, Sec. 5.1).
+        let spot_for_ctx = match setting {
+            CloudSetting::Public => Some(st.spot_mean),
+            CloudSetting::Private => None,
+        };
+        let mut ctx = ContextVector::observe(&st.cluster, &st.store, now, 200.0, spot_for_ctx);
+        ctx.ram_util = (ctx.ram_util + external_mem_frac).min(1.0);
+        ctx
+    }
+
+    fn actuate(&mut self, action: &Action) {
+        let st = self.st();
+        // Actuate: rolling-update deploy of the executor pods.
+        let dep = Deployment {
+            app: "batch".into(),
+            zone_pods: action.zone_pods.clone(),
+            limits: action.per_pod(),
+        };
+        let placement = apply_deployment(&mut st.cluster, &dep, true);
+        st.placed_pods = placement.placed.len();
+        st.cross = placed_cross_zone_frac(&st.cluster, "batch");
+    }
+
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        action: &Action,
+        tel: &mut Telemetry,
+    ) -> StepRecord {
+        let cfg_workload = self.cfg.workload;
+        let cfg_platform = self.cfg.platform;
+        let cfg_setting = self.cfg.setting;
+        let cfg_data_gb = self.cfg.data_gb;
+        let cfg_stress = self.cfg.external_mem_frac;
+        let st = self.st();
+
+        // Run the job under window contention: a blend of the currently
+        // observed cluster contention (persistent regimes — the part the
+        // context vector can *predict*) and a fresh stochastic draw (the
+        // irreducible uncertainty).
+        let current = st.cluster.mean_contention();
+        let sampled = st.interference.sample_window_contention(st.cluster.nodes.len(), BATCH_DT_S);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let spec = RunSpec {
+            workload: cfg_workload,
+            platform: cfg_platform,
+            deploy: DeployMode::Container,
+            pods: st.placed_pods.max(1),
+            per_pod: action.per_pod(),
+            cross_zone_frac: st.cross,
+            contention,
+            data_gb: cfg_data_gb,
+            external_mem_frac: cfg_stress,
+            cluster_ram_mb: st.cluster_ram_mb,
+        };
+        let result = run_batch_job(&spec, &mut st.rng_jobs);
+
+        let spot_mult = st.price / st.spot_mean;
+        let elapsed_for_cost = if result.halted { BATCH_DT_S } else { result.elapsed_s };
+        let cost = run_cost(&spec, elapsed_for_cost, spot_mult, 0.2);
+        let perf_score = if result.halted {
+            0.0
+        } else {
+            batch_perf_score(cfg_workload, result.elapsed_s)
+        };
+        let ram_alloc = st.cluster.total_ram_allocated();
+        // The private-cloud constraint P(x, w) is on the *application's*
+        // allocation (the organization caps what this tenant may take);
+        // co-tenant pressure enters through the context (ram_util) and the
+        // OOM-collision model, not the cap itself.
+        let resource_frac = ram_alloc / st.cluster_ram_mb;
+
+        // Feedback for the next decision.
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        // Private clouds have no pay-as-you-go cost (hardware is paid
+        // upfront); the optimization objective is performance-only (Eq. 9).
+        tel.cost_norm = match cfg_setting {
+            CloudSetting::Public => Some((cost / batch_cost_scale(cfg_workload)).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        tel.failure = result.halted;
+        // Reactive-scaler signals: utilization = workload CPU demand over
+        // the allocated cores (saturates at 1 when under-provisioned).
+        let demand_cores = cpu_demand_cores(cfg_workload, cfg_data_gb);
+        tel.app_cpu_util = if st.placed_pods > 0 {
+            (demand_cores / spec.total_cpu_cores()).min(1.0)
+        } else {
+            0.0
+        };
+        tel.ram_usage_mb_per_pod = action.ram_mb * 0.8;
+        tel.p90_latency_ms = None;
+
+        StepRecord {
+            step,
+            t: now,
+            perf_raw: result.elapsed_s,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: result.executor_errors,
+            halted: result.halted,
+            dropped: 0,
+            offered: 0,
+            latencies_ms: vec![],
+            action: Some(action.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microservice mechanics shared by every env that hosts a service graph
+// (MicroEnv, HybridEnv) — one copy of the deployment-building, load/OOM
+// and pricing formulas, so the suites cannot silently diverge.
+// ---------------------------------------------------------------------------
+
+/// Per-service deployments for one action: the zone vector is shared (the
+/// paper's single scheduling sub-vector) and per-pod resources are scaled
+/// by the service weight — weights only upsize bottleneck services; the
+/// action's per-pod RAM is the floor for every service. Also returns the
+/// action's total *requested* RAM footprint (what the safe bandit's
+/// P(x, w) must observe, placed or not).
+fn ms_deployments(
+    graph: &ServiceGraph,
+    space: &ActionSpace,
+    action: &Action,
+) -> (Vec<Deployment>, f64) {
+    let mut requested_ram_mb = 0.0;
+    let deps = (0..graph.services.len())
+        .map(|sid| {
+            let w = graph.services[sid].weight;
+            let lim = Resources::new(
+                (action.cpu_m * w).min(space.cpu_m.1),
+                (action.ram_mb * w.max(1.0)).min(space.ram_mb.1),
+                action.net_mbps,
+            );
+            requested_ram_mb += action.total_pods() as f64 * lim.ram_mb;
+            Deployment {
+                app: graph.app_name(sid),
+                zone_pods: action.zone_pods.clone(),
+                limits: lim,
+            }
+        })
+        .collect();
+    (deps, requested_ram_mb)
+}
+
+/// RAM usage under this window's load drives OOM *before* traffic is
+/// served: an under-provisioned pod dies as load arrives and its capacity
+/// is lost for the window (drops/latency the policy must learn from), not
+/// silently refunded afterwards. Returns (running ms pods, rps per pod,
+/// OOM kills).
+fn ms_apply_load(cluster: &mut Cluster, graph: &ServiceGraph, rate: f64) -> (usize, f64, u32) {
+    let total_pods: usize = (0..graph.services.len())
+        .map(|sid| cluster.running_pod_count(&graph.app_name(sid)))
+        .sum();
+    let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
+    for p in cluster.pods.iter_mut() {
+        if p.app.starts_with("ms-") {
+            let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
+            p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
+        }
+    }
+    let ooms = cluster.sweep_oom().len() as u32;
+    (total_pods, rps_per_pod, ooms)
+}
+
+/// Completion ratio of a window (drops must hurt the score: a policy that
+/// sheds 98% of its load and serves the remainder quickly is NOT
+/// performing well — callers square this ratio into the perf score).
+fn ms_completion(stats: &WindowStats) -> f64 {
+    if stats.offered == 0 {
+        1.0
+    } else {
+        stats.completed as f64 / stats.offered as f64
+    }
+}
+
+/// Resource-based pricing of the microservice allocation for one period.
+fn ms_alloc_cost(cluster: &Cluster, period_s: f64, price: f64, spot_mean: f64) -> f64 {
+    let hours = period_s / 3600.0;
+    (cluster
+        .pods
+        .iter()
+        .filter(|p| p.app.starts_with("ms-"))
+        .map(|p| p.limits.cpu_m / 1000.0 * 0.0332 + p.limits.ram_mb / 1024.0 * 0.0045)
+        .sum::<f64>())
+        * hours
+        * (0.8 + 0.2 * price / spot_mean)
+}
+
+// ---------------------------------------------------------------------------
+// Microservice environment (trace-driven, fully online)
+// ---------------------------------------------------------------------------
+
+struct MicroState {
+    space: ActionSpace,
+    cluster: Cluster,
+    interference: InterferenceModel,
+    trace: DiurnalTrace,
+    spot: SpotTrace,
+    spot_mean: f64,
+    store: MetricStore,
+    rng_des: Pcg64,
+    cluster_ram_mb: f64,
+    workload_scale: f64,
+    graph: ServiceGraph,
+    /// This step's arrival rate and spot price (set by `observe`).
+    rate: f64,
+    price: f64,
+    /// Scheduler outcome of this step's deployment (set by `actuate`).
+    requested_ram_mb: f64,
+    pending: usize,
+}
+
+/// The trace-driven SocialNet policy loop as an [`Environment`].
+pub struct MicroEnv {
+    cfg: MicroEnvConfig,
+    st: Option<MicroState>,
+}
+
+impl MicroEnv {
+    pub fn new(cfg: MicroEnvConfig) -> Self {
+        Self { cfg, st: None }
+    }
+
+    fn st(&mut self) -> &mut MicroState {
+        self.st.as_mut().expect("MicroEnv used before init")
+    }
+}
+
+impl Environment for MicroEnv {
+    fn seed_tag(&self) -> u64 {
+        0x51c0_u64 << 8
+    }
+
+    fn steps(&self) -> u64 {
+        (self.cfg.duration_s / self.cfg.period_s).ceil() as u64
+    }
+
+    fn period_s(&self) -> f64 {
+        self.cfg.period_s
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.cfg.deadline
+    }
+
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64) {
+        // Fork order: 2 DES, 3 interference, 4 trace, 5 spot.
+        let rng_des = root.fork(2);
+        let mut rng_interf = root.fork(3);
+        let mut rng_trace = root.fork(4);
+        let mut rng_spot = root.fork(5);
+        let interference = if self.cfg.interference && sys.interference.enabled {
+            InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+        } else {
+            InterferenceModel::disabled()
+        };
+        self.st = Some(MicroState {
+            space: ActionSpace::microservices(sys.cluster.zones),
+            cluster: Cluster::new(&sys.cluster),
+            interference,
+            trace: DiurnalTrace::new(self.cfg.trace.clone(), rng_trace.fork(0)),
+            spot: SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0)),
+            spot_mean: SpotConfig::gcp_e2().mean_price,
+            store: MetricStore::new(3600.0 * 8.0),
+            rng_des,
+            cluster_ram_mb: sys.cluster_ram_mb(),
+            workload_scale: self.cfg.trace.base_rps + self.cfg.trace.amplitude_rps * 1.2,
+            graph: self.cfg.graph.clone(),
+            rate: 0.0,
+            price: 0.0,
+            requested_ram_mb: 0.0,
+            pending: 0,
+        });
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        self.st.as_ref().expect("MicroEnv used before init").space.clone()
+    }
+
+    fn app_profile(&self) -> AppProfile {
+        AppProfile::Microservices
+    }
+
+    fn observe(&mut self, _step: u64, now: f64) -> ContextVector {
+        let period_s = self.cfg.period_s;
+        let setting = self.cfg.setting;
+        let st = self.st();
+        st.interference.step(&mut st.cluster, now, period_s);
+        st.rate = st.trace.sample_rate(now);
+        st.store.push("workload", now, st.rate);
+        st.price = st.spot.step(period_s / 3600.0);
+        st.store.push("spot_price", now, st.price);
+
+        let spot_for_ctx = match setting {
+            CloudSetting::Public => Some(st.spot_mean),
+            CloudSetting::Private => None,
+        };
+        ContextVector::observe(&st.cluster, &st.store, now, st.workload_scale, spot_for_ctx)
+    }
+
+    fn actuate(&mut self, action: &Action) {
+        let st = self.st();
+        let (deps, requested_ram_mb) = ms_deployments(&st.graph, &st.space, action);
+        // Fair (interleaved) placement: capacity pressure degrades every
+        // service a little instead of zero-ing out the last ones deployed.
+        let results = apply_deployments_fair(&mut st.cluster, &deps, true);
+        st.pending = results.iter().map(|r| r.pending_total()).sum();
+        st.requested_ram_mb = requested_ram_mb;
+    }
+
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        action: &Action,
+        tel: &mut Telemetry,
+    ) -> StepRecord {
+        let period_s = self.cfg.period_s;
+        let setting = self.cfg.setting;
+        let st = self.st();
+        let rate = st.rate;
+
+        let (total_pods, rps_per_pod, errors) = ms_apply_load(&mut st.cluster, &st.graph, rate);
+
+        // Run the window of traffic on the surviving pods.
+        let stats =
+            microservice::run_window(&st.cluster, &st.graph, rate, period_s, &mut st.rng_des);
+
+        if std::env::var("DRONE_DEBUG").is_ok() {
+            let alive: Vec<usize> = (0..st.graph.services.len())
+                .map(|sid| st.cluster.running_pod_count(&st.graph.app_name(sid)))
+                .collect();
+            eprintln!(
+                "[micro step={step}] rate={rate:.0} action={action:?} pending={} \
+                 oom={errors} alive={alive:?} offered={} done={} drop={}",
+                st.pending, stats.offered, stats.completed, stats.dropped
+            );
+        }
+
+        let p90 = stats.p90();
+        let completion = ms_completion(&stats);
+        let perf_score = micro_perf_score(p90) * completion * completion;
+        let ram_alloc = st.cluster.total_ram_allocated();
+        // The safe bandit's P(x, w) observes the *requested* footprint:
+        // demands the scheduler could not even place are the most unsafe
+        // actions of all, and must not be laundered into a low "placed"
+        // number.
+        let resource_frac = st.requested_ram_mb.max(ram_alloc) / st.cluster_ram_mb;
+        let cost = ms_alloc_cost(&st.cluster, period_s, st.price, st.spot_mean);
+
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match setting {
+            CloudSetting::Public => Some((cost / 0.25).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        // Microservices always produce metrics (drop counts, allocation),
+        // so the batch-style "no metrics -> restart at midpoint-to-max"
+        // recovery never applies here: a zero-completion window is ordinary
+        // (terrible) feedback the bandit must learn from, not a halt.
+        // Escalating toward max on a capacity-infeasible action would loop.
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: errors + st.pending as u32,
+            halted: tel.failure,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(action.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hybrid environment (co-located heterogeneous tenants)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the hybrid co-location scenario: the SocialNet graph
+/// (policy-managed) shares one cluster with a fixed recurring-batch tenant.
+#[derive(Clone, Debug)]
+pub struct HybridEnvConfig {
+    pub setting: CloudSetting,
+    pub steps: u64,
+    /// The batch co-tenant's workload (runs once per decision period).
+    pub workload: BatchWorkload,
+    pub trace: DiurnalConfig,
+    pub interference: bool,
+    pub deadline: Option<std::time::Instant>,
+}
+
+impl HybridEnvConfig {
+    pub fn new(workload: BatchWorkload, setting: CloudSetting, steps: u64) -> Self {
+        Self {
+            setting,
+            steps,
+            workload,
+            trace: DiurnalConfig::default(),
+            interference: true,
+            deadline: None,
+        }
+    }
+}
+
+/// Decision period: microservice cadence (the faster tenant sets the pace).
+const HYBRID_PERIOD_S: f64 = 60.0;
+/// The batch tenant's fixed per-executor allocation.
+const HYBRID_BATCH_POD: Resources = Resources { cpu_m: 4000.0, ram_mb: 16_384.0, net_mbps: 2000.0 };
+/// CPU pressure a busy executor exerts on its node during the window —
+/// the co-location interference the policy has to learn around.
+const HYBRID_BATCH_CPU_PRESSURE: f64 = 0.25;
+/// Dataset the recurring batch job processes each period.
+const HYBRID_BATCH_DATA_GB: f64 = 60.0;
+/// Weight of the batch tenant in the blended performance score.
+const HYBRID_BATCH_SCORE_WEIGHT: f64 = 0.3;
+
+struct HybridState {
+    space: ActionSpace,
+    cluster: Cluster,
+    interference: InterferenceModel,
+    trace: DiurnalTrace,
+    spot: SpotTrace,
+    spot_mean: f64,
+    store: MetricStore,
+    rng_des: Pcg64,
+    rng_jobs: Pcg64,
+    cluster_ram_mb: f64,
+    workload_scale: f64,
+    graph: ServiceGraph,
+    rate: f64,
+    price: f64,
+    requested_ram_mb: f64,
+    pending: usize,
+}
+
+/// Heterogeneous co-location: one policy loop manages the SocialNet
+/// microservice graph while a fixed recurring-batch tenant shares the same
+/// [`Cluster`]. The tenants interfere through the shared substrate — the
+/// batch executors' allocation shrinks the capacity the microservice
+/// scheduler can place into, their CPU pressure slows co-located
+/// microservice pods, and the cluster-wide context both tenants raise is
+/// what the bandit observes. Built purely from existing pieces
+/// (`run_batch_job`, `run_window`, the shared scheduler) — the point of
+/// the environment layer is that this took no new physics.
+pub struct HybridEnv {
+    cfg: HybridEnvConfig,
+    st: Option<HybridState>,
+}
+
+impl HybridEnv {
+    pub fn new(cfg: HybridEnvConfig) -> Self {
+        Self { cfg, st: None }
+    }
+
+    fn st(&mut self) -> &mut HybridState {
+        self.st.as_mut().expect("HybridEnv used before init")
+    }
+}
+
+impl Environment for HybridEnv {
+    fn seed_tag(&self) -> u64 {
+        0x6b1d_u64 << 8
+    }
+
+    fn steps(&self) -> u64 {
+        self.cfg.steps
+    }
+
+    fn period_s(&self) -> f64 {
+        HYBRID_PERIOD_S
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.cfg.deadline
+    }
+
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64) {
+        // Fork order: 2 DES, 3 interference, 4 trace, 5 spot, 6 batch jobs.
+        let rng_des = root.fork(2);
+        let mut rng_interf = root.fork(3);
+        let mut rng_trace = root.fork(4);
+        let mut rng_spot = root.fork(5);
+        let rng_jobs = root.fork(6);
+        let interference = if self.cfg.interference && sys.interference.enabled {
+            InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+        } else {
+            InterferenceModel::disabled()
+        };
+        let mut cluster = Cluster::new(&sys.cluster);
+        // The batch tenant: one executor per zone, deployed once and left
+        // in place — the microservice rolling updates never touch it, so
+        // its allocation is a standing constraint on every decision.
+        apply_deployment(
+            &mut cluster,
+            &Deployment {
+                app: "batch".into(),
+                zone_pods: vec![1; sys.cluster.zones],
+                limits: HYBRID_BATCH_POD,
+            },
+            true,
+        );
+        self.st = Some(HybridState {
+            space: ActionSpace::microservices(sys.cluster.zones),
+            cluster,
+            interference,
+            trace: DiurnalTrace::new(self.cfg.trace.clone(), rng_trace.fork(0)),
+            spot: SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0)),
+            spot_mean: SpotConfig::gcp_e2().mean_price,
+            store: MetricStore::new(3600.0 * 8.0),
+            rng_des,
+            rng_jobs,
+            cluster_ram_mb: sys.cluster_ram_mb(),
+            workload_scale: self.cfg.trace.base_rps + self.cfg.trace.amplitude_rps * 1.2,
+            graph: ServiceGraph::socialnet(),
+            rate: 0.0,
+            price: 0.0,
+            requested_ram_mb: 0.0,
+            pending: 0,
+        });
+    }
+
+    fn action_space(&self) -> ActionSpace {
+        self.st.as_ref().expect("HybridEnv used before init").space.clone()
+    }
+
+    fn app_profile(&self) -> AppProfile {
+        AppProfile::Microservices
+    }
+
+    fn observe(&mut self, _step: u64, now: f64) -> ContextVector {
+        let setting = self.cfg.setting;
+        let st = self.st();
+        st.interference.step(&mut st.cluster, now, HYBRID_PERIOD_S);
+        st.rate = st.trace.sample_rate(now);
+        st.store.push("workload", now, st.rate);
+        st.price = st.spot.step(HYBRID_PERIOD_S / 3600.0);
+        st.store.push("spot_price", now, st.price);
+
+        let spot_for_ctx = match setting {
+            CloudSetting::Public => Some(st.spot_mean),
+            CloudSetting::Private => None,
+        };
+        // The context sees the *whole* cluster — including the batch
+        // tenant's allocation — which is exactly the co-tenant signal the
+        // contextual bandit is supposed to exploit.
+        ContextVector::observe(&st.cluster, &st.store, now, st.workload_scale, spot_for_ctx)
+    }
+
+    fn actuate(&mut self, action: &Action) {
+        let st = self.st();
+        let (deps, requested_ram_mb) = ms_deployments(&st.graph, &st.space, action);
+        // Fair placement into whatever the batch tenant left free.
+        let results = apply_deployments_fair(&mut st.cluster, &deps, true);
+        st.pending = results.iter().map(|r| r.pending_total()).sum();
+        st.requested_ram_mb = requested_ram_mb;
+    }
+
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        action: &Action,
+        tel: &mut Telemetry,
+    ) -> StepRecord {
+        let workload = self.cfg.workload;
+        let setting = self.cfg.setting;
+        let st = self.st();
+        let rate = st.rate;
+
+        // Microservice RAM usage + OOM sweep, as in the micro env.
+        let (total_pods, rps_per_pod, ooms) = ms_apply_load(&mut st.cluster, &st.graph, rate);
+
+        // Co-location pressure: the busy executors steal CPU on their
+        // nodes for this window (interference.step resets contention next
+        // period, so the pressure is re-applied per step while the tenant
+        // lives). Microservice pods landing on those nodes run slower.
+        let batch_nodes: Vec<usize> = st.cluster.pods_of("batch").map(|p| p.node).collect();
+        for &n in &batch_nodes {
+            let c = &mut st.cluster.nodes[n].contention;
+            c.cpu_m = (c.cpu_m + HYBRID_BATCH_CPU_PRESSURE).min(0.9);
+        }
+
+        // The microservice window runs under that pressure.
+        let stats = microservice::run_window(
+            &st.cluster,
+            &st.graph,
+            rate,
+            HYBRID_PERIOD_S,
+            &mut st.rng_des,
+        );
+
+        // The batch tenant's recurring job runs under the same (shared)
+        // contention — including whatever load the microservices raise.
+        let batch_pods = st.cluster.running_pod_count("batch");
+        let current = st.cluster.mean_contention();
+        let sampled =
+            st.interference.sample_window_contention(st.cluster.nodes.len(), HYBRID_PERIOD_S);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let bspec = RunSpec {
+            workload,
+            platform: Platform::Spark,
+            deploy: DeployMode::Container,
+            pods: batch_pods.max(1),
+            per_pod: HYBRID_BATCH_POD,
+            cross_zone_frac: placed_cross_zone_frac(&st.cluster, "batch"),
+            contention,
+            data_gb: HYBRID_BATCH_DATA_GB,
+            external_mem_frac: 0.0,
+            cluster_ram_mb: st.cluster_ram_mb,
+        };
+        let bres = run_batch_job(&bspec, &mut st.rng_jobs);
+
+        // Blended score: the microservice SLO dominates, the batch
+        // tenant's throughput keeps over-aggressive squeezes honest.
+        let p90 = stats.p90();
+        let completion = ms_completion(&stats);
+        let micro_score = micro_perf_score(p90) * completion * completion;
+        let batch_score = if bres.halted {
+            0.0
+        } else {
+            batch_perf_score(workload, bres.elapsed_s)
+        };
+        let perf_score = (1.0 - HYBRID_BATCH_SCORE_WEIGHT) * micro_score
+            + HYBRID_BATCH_SCORE_WEIGHT * batch_score;
+
+        let ram_alloc = st.cluster.total_ram_allocated();
+        let batch_ram = batch_pods as f64 * HYBRID_BATCH_POD.ram_mb;
+        let resource_frac = (st.requested_ram_mb + batch_ram).max(ram_alloc) / st.cluster_ram_mb;
+
+        // Cost: microservice allocation pricing + the batch run's cost.
+        let micro_cost = ms_alloc_cost(&st.cluster, HYBRID_PERIOD_S, st.price, st.spot_mean);
+        let spot_mult = st.price / st.spot_mean;
+        let elapsed_for_cost =
+            if bres.halted { HYBRID_PERIOD_S } else { bres.elapsed_s.min(HYBRID_PERIOD_S * 5.0) };
+        let cost = micro_cost + run_cost(&bspec, elapsed_for_cost, spot_mult, 0.2);
+
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match setting {
+            CloudSetting::Public => Some((cost / 0.3).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        // As for microservices: a bad window is ordinary feedback, not a
+        // halt (the batch tenant halting is ITS outcome, not the loop's).
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: ooms + st.pending as u32 + bres.executor_errors,
+            halted: false,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(action.clone()),
+        }
+    }
+}
+
+/// Run one policy through the hybrid co-location loop (wrapper mirroring
+/// `run_batch_env` / `run_micro_env`).
+pub fn run_hybrid_env(
+    policy_name: &str,
+    cfg: &HybridEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut env = HybridEnv::new(cfg.clone());
+    run_env(policy_name, &mut env, sys, backend, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sys() -> SystemConfig {
+        let mut s = SystemConfig::default();
+        s.bandit.candidates = 32;
+        s.artifacts_dir = "/nonexistent".into();
+        s
+    }
+
+    fn small_hybrid(steps: u64) -> HybridEnvConfig {
+        let mut cfg = HybridEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, steps);
+        cfg.trace.base_rps = 15.0;
+        cfg.trace.amplitude_rps = 20.0;
+        cfg
+    }
+
+    #[test]
+    fn hybrid_env_runs_all_policies() {
+        let sys = sys();
+        let cfg = small_hybrid(3);
+        for policy in ["drone", "k8s-hpa", "autopilot", "showar"] {
+            let mut backend = Backend::Native;
+            let recs = run_hybrid_env(policy, &cfg, &sys, &mut backend, 7);
+            assert_eq!(recs.len(), 3, "{policy}");
+            for r in &recs {
+                assert!(r.offered > 0, "{policy}: hybrid must serve traffic");
+                assert!(r.dropped <= r.offered);
+                assert!(r.cost > 0.0, "{policy}: both tenants cost money");
+                assert!((0.0..=1.0).contains(&r.perf_score));
+                assert!(r.action.is_some());
+            }
+            // The standing batch tenant keeps the allocation floor above
+            // what the microservices alone would hold.
+            let floor = sys.cluster.zones as f64 * HYBRID_BATCH_POD.ram_mb - 1e-6;
+            assert!(
+                recs.iter().all(|r| r.ram_alloc_mb >= floor),
+                "{policy}: batch tenant allocation missing from the shared cluster"
+            );
+        }
+    }
+
+    #[test]
+    fn hybrid_env_deterministic_per_seed() {
+        let sys = sys();
+        let cfg = small_hybrid(3);
+        let mut b1 = Backend::Native;
+        let mut b2 = Backend::Native;
+        let a = run_hybrid_env("drone", &cfg, &sys, &mut b1, 5);
+        let b = run_hybrid_env("drone", &cfg, &sys, &mut b2, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf_raw.to_bits(), y.perf_raw.to_bits());
+            assert_eq!(x.perf_score.to_bits(), y.perf_score.to_bits());
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.offered, y.offered);
+            assert_eq!(x.dropped, y.dropped);
+        }
+        // A different seed perturbs the run.
+        let mut b3 = Backend::Native;
+        let c = run_hybrid_env("drone", &cfg, &sys, &mut b3, 6);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.perf_raw != y.perf_raw));
+    }
+
+    #[test]
+    fn expired_deadline_truncates_hybrid_env() {
+        let sys = sys();
+        let mut cfg = small_hybrid(3);
+        cfg.deadline = Some(std::time::Instant::now());
+        let mut backend = Backend::Native;
+        let recs = run_hybrid_env("k8s-hpa", &cfg, &sys, &mut backend, 1);
+        assert!(recs.is_empty());
+    }
+
+    /// The co-location is real: the same microservice policy run against
+    /// the hybrid env sees different (worse or equal) placement headroom
+    /// than against the micro-only env, because the batch tenant holds
+    /// capacity. Cheap smoke that the tenants actually share the cluster.
+    #[test]
+    fn hybrid_batch_tenant_occupies_shared_capacity() {
+        let sys = sys();
+        let cfg = small_hybrid(2);
+        let mut backend = Backend::Native;
+        let recs = run_hybrid_env("k8s-hpa", &cfg, &sys, &mut backend, 3);
+        let batch_ram = sys.cluster.zones as f64 * HYBRID_BATCH_POD.ram_mb;
+        for r in &recs {
+            assert!(r.ram_alloc_mb >= batch_ram - 1e-6);
+            assert!(r.resource_frac > 0.0);
+        }
+    }
+}

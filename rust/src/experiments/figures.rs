@@ -1,11 +1,14 @@
 //! Figure drivers — each regenerates the series the corresponding paper
 //! figure plots, prints a summary table, and writes results/<id>.csv.
 //!
-//! Since PR 3 every environment-backed figure is a pure *reader* of the
-//! campaign store: the driver builds the explicit scenario list its series
-//! need, lets [`CampaignStore::ensure`] serve cached outcomes (running the
+//! Every environment-backed figure is a pure *reader* of the campaign
+//! store: the driver builds the explicit scenario list its series need,
+//! lets [`CampaignStore::ensure`] serve cached outcomes (running the
 //! shared deterministic parallel runner only for scenarios the store does
 //! not hold yet), and aggregates per-step records out of `campaign.json`.
+//! The store itself is opened once by `experiments::run` and threaded into
+//! every driver by `&mut` reference, so `drone experiment all` parses
+//! `campaign.json` exactly once.
 //! No figure runs a private `run_batch_env`/`run_micro_env` loop anymore,
 //! so regenerating figures from a warm store executes zero environments,
 //! shares scenarios across figures (fig7a/fig7b, fig8b/fig8c), and scales
@@ -55,7 +58,7 @@ pub(crate) fn mean_curve(curves: &[Vec<f64>]) -> Vec<f64> {
 // Fig. 1 — performance vs RAM allocation, container vs VM
 // ---------------------------------------------------------------------------
 
-pub fn fig1(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig1(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let reps = reps_for(opts.scale, 5).max(5);
     let seeds: Vec<u64> = (0..reps as u64).map(|s| sys.seed + s).collect();
     let deploys = ["container", "vm"];
@@ -74,7 +77,6 @@ pub fn fig1(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             }
         }
     }
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -140,7 +142,7 @@ pub fn fig1(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
 // Fig. 2 — Sort variance vs data size, Spark vs Flink
 // ---------------------------------------------------------------------------
 
-pub fn fig2(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig2(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let reps = reps_for(opts.scale, 60); // many reps to estimate CoV
     let seeds: Vec<u64> = (0..reps as u64).map(|s| sys.seed + s).collect();
     let platforms = ["spark", "flink"];
@@ -157,7 +159,6 @@ pub fn fig2(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             }
         }
     }
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -222,7 +223,7 @@ pub fn fig2(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
 // Fig. 4 — Sockshop latency CDF: isolate vs colocate the Order hub
 // ---------------------------------------------------------------------------
 
-pub fn fig4(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig4(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let window_s = fig4_window_s(opts.scale);
     let variants = ["colocated", "isolated"];
     let requests: Vec<Scenario> = variants
@@ -231,7 +232,6 @@ pub fn fig4(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             Scenario::request(Suite::Fig4Affinity, EnvKind::Affinity { window_s }, v, sys.seed)
         })
         .collect();
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -354,9 +354,8 @@ fn fig7a_requests(sys: &SystemConfig, scale: f64) -> (Vec<Scenario>, Vec<u64>) {
     (requests, seeds)
 }
 
-pub fn fig7a(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig7a(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let (requests, seeds) = fig7a_requests(sys, opts.scale);
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -408,7 +407,7 @@ pub fn fig7a(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
 // Fig. 7b — resource cost savings vs the Kubernetes native solution
 // ---------------------------------------------------------------------------
 
-pub fn fig7b(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig7b(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let steps = steps_for(opts.scale, 30);
     let seeds: Vec<u64> = (0..reps_for(opts.scale, 3) as u64).map(|s| sys.seed + s).collect();
     let workloads = [
@@ -429,7 +428,6 @@ pub fn fig7b(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             }
         }
     }
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -481,7 +479,7 @@ pub fn fig7b(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
 // Fig. 7c — private-cloud memory utilization vs the 65% cap
 // ---------------------------------------------------------------------------
 
-pub fn fig7c(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig7c(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let steps = steps_for(opts.scale, 40);
     let cap = sys.objective.mem_cap_frac;
     let policies = ["k8s-hpa", "cherrypick", "accordia", "drone-safe"];
@@ -501,7 +499,6 @@ pub fn fig7c(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -598,9 +595,8 @@ fn fig8_requests(sys: &SystemConfig, scale: f64) -> Vec<Scenario> {
         .collect()
 }
 
-pub fn fig8b(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig8b(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let requests = fig8_requests(sys, opts.scale);
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -632,9 +628,8 @@ pub fn fig8b(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
     Ok(())
 }
 
-pub fn fig8c(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn fig8c(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let requests = fig8_requests(sys, opts.scale);
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 

@@ -1,30 +1,35 @@
-//! Experiment harness: the closed control loops that evaluate a policy
-//! against the simulated cloud. Two environments mirror the paper's two
-//! application profiles (Sec. 4.5): recurring batch jobs (quasi-online) and
-//! a trace-driven microservice application (fully online, 60 s periods).
+//! Experiment harness: environment configurations, scoring helpers and the
+//! per-step record type shared by every decision-loop environment.
+//!
+//! The decision loops themselves live in `super::env`: one [`Environment`]
+//! trait plus a single generic driver (`run_env`) that owns RNG stream
+//! layout, policy construction, deadline truncation and record emission.
+//! [`run_batch_env`] and [`run_micro_env`] are thin wrappers that
+//! instantiate the matching environment and route through that driver —
+//! they reproduce the pre-refactor loops bit-for-bit (locked down by
+//! `tests/env_golden.rs`). The two environments mirror the paper's two
+//! application profiles (Sec. 4.5): recurring batch jobs (quasi-online)
+//! and a trace-driven microservice application (fully online, 60 s
+//! periods); `env::HybridEnv` co-locates both on one cluster.
+//!
+//! [`Environment`]: super::env::Environment
 
-use crate::apps::batch::{run_batch_job, run_cost, BatchWorkload, DeployMode, Platform, RunSpec};
-use crate::apps::microservice::{self, ServiceGraph};
-use crate::bandit::encode::{Action, ActionSpace};
+use crate::apps::batch::{BatchWorkload, Platform};
+use crate::apps::microservice::ServiceGraph;
+use crate::bandit::encode::Action;
 use crate::config::SystemConfig;
-use crate::monitor::context::ContextVector;
-use crate::monitor::store::MetricStore;
-use crate::orchestrators::{self, Telemetry};
 use crate::runtime::Backend;
 use crate::sim::cluster::Cluster;
-use crate::sim::interference::InterferenceModel;
-use crate::sim::resources::Resources;
-use crate::sim::scheduler::{apply_deployment, Deployment};
-use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
-use crate::trace::spot::{SpotConfig, SpotTrace};
-use crate::util::rng::Pcg64;
+use crate::trace::diurnal::DiurnalConfig;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-/// Process-wide count of simulated environment executions (batch loops,
-/// micro loops and the campaign's single-shot figure cells). The figure
-/// pipeline's "no re-execution from a warm campaign store" contract is
-/// asserted against this counter in tests and CI.
+use super::env::{run_env, BatchEnv, MicroEnv};
+
+/// Process-wide count of simulated environment executions (decision loops
+/// and the campaign's single-shot figure cells). The figure pipeline's
+/// "no re-execution from a warm campaign store" contract is asserted
+/// against this counter in tests and CI.
 static ENV_EXECUTIONS: AtomicU64 = AtomicU64::new(0);
 
 pub fn env_execution_count() -> u64 {
@@ -70,9 +75,10 @@ pub struct StepRecord {
 }
 
 // ---------------------------------------------------------------------------
-// Batch environment
+// Batch environment configuration
 // ---------------------------------------------------------------------------
 
+#[derive(Clone, Debug)]
 pub struct BatchEnvConfig {
     pub workload: BatchWorkload,
     pub platform: Platform,
@@ -149,6 +155,8 @@ pub fn placed_cross_zone_frac(cluster: &Cluster, app: &str) -> f64 {
 }
 
 /// Run one policy through the recurring-batch loop. Returns per-step rows.
+/// Since the environment-layer refactor this is a thin wrapper: the
+/// decision loop is the generic `env::run_env` driver.
 pub fn run_batch_env(
     policy_name: &str,
     env: &BatchEnvConfig,
@@ -156,160 +164,15 @@ pub fn run_batch_env(
     backend: &mut Backend,
     seed: u64,
 ) -> Vec<StepRecord> {
-    note_env_execution();
-    let mut root = Pcg64::new(seed ^ (0xba7c_u64 << 4));
-    let mut rng_policy = root.fork(1);
-    let mut rng_jobs = root.fork(2);
-    let mut rng_interf = root.fork(3);
-    let mut rng_spot = root.fork(4);
-
-    let space = ActionSpace { zones: sys.cluster.zones, ..Default::default() };
-    let mut policy = orchestrators::make(
-        policy_name,
-        space.clone(),
-        sys.bandit.clone(),
-        sys.objective.clone(),
-        sys.objective.mem_cap_frac,
-        seed,
-        orchestrators::AppProfile::Batch,
-    )
-    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
-
-    let mut cluster = Cluster::new(&sys.cluster);
-    let mut interference = if env.interference && sys.interference.enabled {
-        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
-    } else {
-        InterferenceModel::disabled()
-    };
-    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
-    let spot_mean = SpotConfig::gcp_e2().mean_price;
-    let mut store = MetricStore::new(3600.0 * 12.0);
-
-    let cluster_ram_mb = sys.cluster_ram_mb();
-    // External co-tenant stress occupies contention on every node's RAM.
-    let dt = 300.0; // one recurring run every ~5 simulated minutes
-
-    let mut tel = Telemetry::initial(ContextVector::default());
-    let mut records = Vec::with_capacity(env.steps as usize);
-
-    for step in 0..env.steps {
-        if deadline_passed(env.deadline) {
-            break;
-        }
-        let now = step as f64 * dt;
-        interference.step(&mut cluster, now, dt.min(60.0));
-        let price = spot.step(dt / 3600.0);
-        store.push("spot_price", now, price);
-        store.push("workload", now, env.data_gb);
-
-        // Observe context (spot omitted in the private setting, Sec. 5.1).
-        let spot_for_ctx = match env.setting {
-            CloudSetting::Public => Some(spot_mean),
-            CloudSetting::Private => None,
-        };
-        let mut ctx = ContextVector::observe(&cluster, &store, now, 200.0, spot_for_ctx);
-        ctx.ram_util = (ctx.ram_util + env.external_mem_frac).min(1.0);
-        tel.ctx = ctx;
-        tel.t = now;
-        tel.step = step;
-
-        let action = policy.decide(&tel, backend, &mut rng_policy);
-
-        // Actuate: rolling-update deploy of the executor pods.
-        let dep = Deployment {
-            app: "batch".into(),
-            zone_pods: action.zone_pods.clone(),
-            limits: action.per_pod(),
-        };
-        let placement = apply_deployment(&mut cluster, &dep, true);
-        let placed_pods = placement.placed.len();
-        let cross = placed_cross_zone_frac(&cluster, "batch");
-
-        // Run the job under window contention: a blend of the currently
-        // observed cluster contention (persistent regimes — the part the
-        // context vector can *predict*) and a fresh stochastic draw (the
-        // irreducible uncertainty).
-        let current = cluster.mean_contention();
-        let sampled = interference.sample_window_contention(cluster.nodes.len(), dt);
-        let contention = Resources::new(
-            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
-            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
-            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
-        );
-        let spec = RunSpec {
-            workload: env.workload,
-            platform: env.platform,
-            deploy: DeployMode::Container,
-            pods: placed_pods.max(1),
-            per_pod: action.per_pod(),
-            cross_zone_frac: cross,
-            contention,
-            data_gb: env.data_gb,
-            external_mem_frac: env.external_mem_frac,
-            cluster_ram_mb,
-        };
-        let result = run_batch_job(&spec, &mut rng_jobs);
-
-        let spot_mult = price / spot_mean;
-        let elapsed_for_cost = if result.halted { dt } else { result.elapsed_s };
-        let cost = run_cost(&spec, elapsed_for_cost, spot_mult, 0.2);
-        let perf_score = if result.halted {
-            0.0
-        } else {
-            batch_perf_score(env.workload, result.elapsed_s)
-        };
-        let ram_alloc = cluster.total_ram_allocated();
-        // The private-cloud constraint P(x, w) is on the *application's*
-        // allocation (the organization caps what this tenant may take);
-        // co-tenant pressure enters through the context (ram_util) and the
-        // OOM-collision model, not the cap itself.
-        let resource_frac = ram_alloc / cluster_ram_mb;
-
-        // Feedback for the next decision.
-        tel.last_action = Some(action.clone());
-        tel.perf_score = Some(perf_score);
-        // Private clouds have no pay-as-you-go cost (hardware is paid
-        // upfront); the optimization objective is performance-only (Eq. 9).
-        tel.cost_norm = match env.setting {
-            CloudSetting::Public => Some((cost / batch_cost_scale(env.workload)).min(1.5)),
-            CloudSetting::Private => Some(0.0),
-        };
-        tel.resource_frac = Some(resource_frac);
-        tel.failure = result.halted;
-        // Reactive-scaler signals: utilization = workload CPU demand over
-        // the allocated cores (saturates at 1 when under-provisioned).
-        let demand_cores = crate::apps::batch::cpu_demand_cores(env.workload, env.data_gb);
-        tel.app_cpu_util = if placed_pods > 0 {
-            (demand_cores / spec.total_cpu_cores()).min(1.0)
-        } else {
-            0.0
-        };
-        tel.ram_usage_mb_per_pod = action.ram_mb * 0.8;
-        tel.p90_latency_ms = None;
-
-        records.push(StepRecord {
-            step,
-            t: now,
-            perf_raw: result.elapsed_s,
-            perf_score,
-            cost,
-            ram_alloc_mb: ram_alloc,
-            resource_frac,
-            errors: result.executor_errors,
-            halted: result.halted,
-            dropped: 0,
-            offered: 0,
-            latencies_ms: vec![],
-            action: Some(action),
-        });
-    }
-    records
+    let mut e = BatchEnv::new(env.clone());
+    run_env(policy_name, &mut e, sys, backend, seed)
 }
 
 // ---------------------------------------------------------------------------
-// Microservice environment
+// Microservice environment configuration
 // ---------------------------------------------------------------------------
 
+#[derive(Clone, Debug)]
 pub struct MicroEnvConfig {
     pub setting: CloudSetting,
     /// Total simulated span and the decision period (paper: 60 s).
@@ -342,7 +205,8 @@ pub fn micro_perf_score(p90_ms: f64) -> f64 {
     ref_ms / (ref_ms + p90_ms.max(0.0))
 }
 
-/// Run one policy through the trace-driven microservice loop.
+/// Run one policy through the trace-driven microservice loop (thin wrapper
+/// over the generic `env::run_env` driver, like [`run_batch_env`]).
 pub fn run_micro_env(
     policy_name: &str,
     env: &MicroEnvConfig,
@@ -350,185 +214,8 @@ pub fn run_micro_env(
     backend: &mut Backend,
     seed: u64,
 ) -> Vec<StepRecord> {
-    note_env_execution();
-    let mut root = Pcg64::new(seed ^ (0x51c0_u64 << 8));
-    let mut rng_policy = root.fork(1);
-    let mut rng_des = root.fork(2);
-    let mut rng_interf = root.fork(3);
-    let mut rng_trace = root.fork(4);
-    let mut rng_spot = root.fork(5);
-
-    let space = ActionSpace::microservices(sys.cluster.zones);
-    let mut policy = orchestrators::make(
-        policy_name,
-        space.clone(),
-        sys.bandit.clone(),
-        sys.objective.clone(),
-        sys.objective.mem_cap_frac,
-        seed,
-        orchestrators::AppProfile::Microservices,
-    )
-    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
-
-    let mut cluster = Cluster::new(&sys.cluster);
-    let mut interference = if env.interference && sys.interference.enabled {
-        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
-    } else {
-        InterferenceModel::disabled()
-    };
-    let mut trace = DiurnalTrace::new(env.trace.clone(), rng_trace.fork(0));
-    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
-    let spot_mean = SpotConfig::gcp_e2().mean_price;
-    let mut store = MetricStore::new(3600.0 * 8.0);
-
-    let n_services = env.graph.services.len();
-    let cluster_ram_mb = sys.cluster_ram_mb();
-    let steps = (env.duration_s / env.period_s).ceil() as u64;
-    let workload_scale = env.trace.base_rps + env.trace.amplitude_rps * 1.2;
-
-    let mut tel = Telemetry::initial(ContextVector::default());
-    let mut records = Vec::with_capacity(steps as usize);
-
-    for step in 0..steps {
-        if deadline_passed(env.deadline) {
-            break;
-        }
-        let now = step as f64 * env.period_s;
-        interference.step(&mut cluster, now, env.period_s);
-        let rate = trace.sample_rate(now);
-        store.push("workload", now, rate);
-        let price = spot.step(env.period_s / 3600.0);
-        store.push("spot_price", now, price);
-
-        let spot_for_ctx = match env.setting {
-            CloudSetting::Public => Some(spot_mean),
-            CloudSetting::Private => None,
-        };
-        tel.ctx = ContextVector::observe(&cluster, &store, now, workload_scale, spot_for_ctx);
-        tel.t = now;
-        tel.step = step;
-
-        let action = policy.decide(&tel, backend, &mut rng_policy);
-
-        // Actuate: every service gets the per-service slice of the action.
-        // The zone vector is shared (the paper's single scheduling
-        // sub-vector); per-pod resources are scaled by the service weight.
-        let mut requested_ram_mb = 0.0;
-        let deps: Vec<Deployment> = (0..n_services)
-            .map(|sid| {
-                let w = env.graph.services[sid].weight;
-                // Weights only upsize bottleneck services; the action's
-                // per-pod RAM is the floor for every service.
-                let lim = Resources::new(
-                    (action.cpu_m * w).min(space.cpu_m.1),
-                    (action.ram_mb * w.max(1.0)).min(space.ram_mb.1),
-                    action.net_mbps,
-                );
-                requested_ram_mb += action.total_pods() as f64 * lim.ram_mb;
-                Deployment {
-                    app: env.graph.app_name(sid),
-                    zone_pods: action.zone_pods.clone(),
-                    limits: lim,
-                }
-            })
-            .collect();
-        // Fair (interleaved) placement: capacity pressure degrades every
-        // service a little instead of zero-ing out the last ones deployed.
-        let results = crate::sim::scheduler::apply_deployments_fair(&mut cluster, &deps, true);
-        let pending: usize = results.iter().map(|r| r.pending_total()).sum();
-
-        // RAM usage under this window's load drives OOM *before* traffic is
-        // served: an under-provisioned pod dies as load arrives and its
-        // capacity is lost for the window (drops/latency the policy must
-        // learn from), not silently refunded afterwards.
-        let total_pods: usize =
-            (0..n_services).map(|sid| cluster.running_pod_count(&env.graph.app_name(sid))).sum();
-        let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
-        for p in cluster.pods.iter_mut() {
-            if p.app.starts_with("ms-") {
-                let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
-                p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
-            }
-        }
-        let errors = cluster.sweep_oom().len() as u32;
-
-        // Run the window of traffic on the surviving pods.
-        let stats =
-            microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
-
-        if std::env::var("DRONE_DEBUG").is_ok() {
-            let alive: Vec<usize> = (0..n_services)
-                .map(|sid| cluster.running_pod_count(&env.graph.app_name(sid)))
-                .collect();
-            eprintln!(
-                "[micro step={step}] rate={rate:.0} action={action:?} pending={pending} \
-                 oom={errors} alive={alive:?} offered={} done={} drop={}",
-                stats.offered, stats.completed, stats.dropped
-            );
-        }
-
-        let p90 = stats.p90();
-        // Drops must hurt the score: a policy that sheds 98% of its load
-        // and serves the remainder quickly is NOT performing well. Squared
-        // completion ratio makes even moderate drop rates costly.
-        let completion = if stats.offered == 0 {
-            1.0
-        } else {
-            stats.completed as f64 / stats.offered as f64
-        };
-        let perf_score = micro_perf_score(p90) * completion * completion;
-        let ram_alloc = cluster.total_ram_allocated();
-        // The safe bandit's P(x, w) observes the *requested* footprint:
-        // demands the scheduler could not even place are the most unsafe
-        // actions of all, and must not be laundered into a low "placed"
-        // number.
-        let resource_frac = requested_ram_mb.max(ram_alloc) / cluster_ram_mb;
-        // Cost: resource-based pricing of the allocation for this period.
-        let hours = env.period_s / 3600.0;
-        let cost = (cluster
-            .pods
-            .iter()
-            .filter(|p| p.app.starts_with("ms-"))
-            .map(|p| p.limits.cpu_m / 1000.0 * 0.0332 + p.limits.ram_mb / 1024.0 * 0.0045)
-            .sum::<f64>())
-            * hours
-            * (0.8 + 0.2 * price / spot_mean);
-
-        tel.last_action = Some(action.clone());
-        tel.perf_score = Some(perf_score);
-        tel.cost_norm = match env.setting {
-            CloudSetting::Public => Some((cost / 0.25).min(1.5)),
-            CloudSetting::Private => Some(0.0),
-        };
-        tel.resource_frac = Some(resource_frac);
-        // Microservices always produce metrics (drop counts, allocation),
-        // so the batch-style "no metrics -> restart at midpoint-to-max"
-        // recovery never applies here: a zero-completion window is ordinary
-        // (terrible) feedback the bandit must learn from, not a halt.
-        // Escalating toward max on a capacity-infeasible action would loop.
-        tel.failure = false;
-        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
-            .min(1.0);
-        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
-        tel.p90_latency_ms = Some(p90);
-
-        records.push(StepRecord {
-            step,
-            t: now,
-            perf_raw: p90,
-            perf_score,
-            cost,
-            ram_alloc_mb: ram_alloc,
-            resource_frac,
-            errors: errors + pending as u32,
-            halted: tel.failure,
-            dropped: stats.dropped,
-            offered: stats.offered,
-            latencies_ms: stats.latencies_ms,
-            action: Some(action),
-        });
-    }
-    records
+    let mut e = MicroEnv::new(env.clone());
+    run_env(policy_name, &mut e, sys, backend, seed)
 }
 
 // ---------------------------------------------------------------------------

@@ -1,10 +1,21 @@
 //! Experiment drivers: one module per paper table/figure (DESIGN.md §5).
 //! Environment-backed drivers are pure readers of the campaign store
 //! (`store::CampaignStore` over `campaign.json`); the campaign's scenario
-//! registry + parallel runner is the single execution path. Each driver
-//! prints the paper's rows/series and writes results/<id>.csv.
+//! registry + parallel runner is the single execution path, and every
+//! environment it runs goes through the `env::Environment` trait + the
+//! generic `env::run_env` decision-loop driver. Each driver prints the
+//! paper's rows/series and writes results/<id>.csv.
+//!
+//! [`run`] opens the campaign store **at most once** (lazily, on the
+//! first store-backed driver) and threads `&mut CampaignStore` through
+//! every driver it dispatches, so `drone experiment all` parses
+//! `campaign.json` a single time instead of once per driver (the old
+//! `open_default()`-per-driver pattern paid the O(store) parse up to ~13
+//! times), and a trace-only invocation like `drone experiment fig5` never
+//! parses it at all.
 
 pub mod campaign;
+pub mod env;
 pub mod harness;
 pub mod store;
 
@@ -13,6 +24,7 @@ pub mod regret;
 pub mod tables;
 
 pub use campaign::{run_campaign, CampaignResult, CampaignSpec, Scenario, Suite};
+pub use env::{run_env, run_hybrid_env, Environment, HybridEnv, HybridEnvConfig};
 pub use harness::{
     run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
 };
@@ -33,42 +45,112 @@ pub struct RunOpts {
     pub no_exec: bool,
     /// Per-scenario wall-clock budget in seconds; 0 disables the guard.
     pub timeout_s: f64,
+    /// Force re-execution of matching cached scenarios (`--refresh`).
+    pub refresh: bool,
+    /// Latency-digest size for executed scenarios (`--digest-points`).
+    pub digest_points: usize,
 }
 
 impl Default for RunOpts {
     fn default() -> Self {
-        Self { scale: 0.3, jobs: store::default_jobs(), no_exec: false, timeout_s: 0.0 }
+        Self {
+            scale: 0.3,
+            jobs: store::default_jobs(),
+            no_exec: false,
+            timeout_s: 0.0,
+            refresh: false,
+            digest_points: campaign::LATENCY_DIGEST_POINTS,
+        }
     }
 }
 
 impl RunOpts {
     pub fn exec(&self) -> ExecPolicy {
-        ExecPolicy { jobs: self.jobs, no_exec: self.no_exec, timeout_s: self.timeout_s }
+        ExecPolicy {
+            jobs: self.jobs,
+            no_exec: self.no_exec,
+            timeout_s: self.timeout_s,
+            refresh: self.refresh,
+            digest_points: self.digest_points,
+        }
     }
 }
 
-/// Registry of experiment ids -> runner.
-pub fn run(id: &str, sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
-    match id {
-        "fig1" => figures::fig1(sys, opts),
-        "fig2" => figures::fig2(sys, opts),
-        "fig4" => figures::fig4(sys, opts),
-        "fig5" => figures::fig5(sys, opts),
-        "fig7a" => figures::fig7a(sys, opts),
-        "fig7b" => figures::fig7b(sys, opts),
-        "fig7c" => figures::fig7c(sys, opts),
-        "fig8a" => figures::fig8a(sys, opts),
-        "fig8b" => figures::fig8b(sys, opts),
-        "fig8c" => figures::fig8c(sys, opts),
-        "table2" => tables::table2(sys, opts.scale),
-        "table3" => tables::table3(sys, opts),
-        "table4" => tables::table4(sys, opts),
-        "regret" => regret::regret(sys, opts.scale),
-        "ablation" => regret::ablation(sys, opts.scale),
-        _ => Err(anyhow::anyhow!(
-            "unknown experiment {id}; known: {:?}",
-            ALL_EXPERIMENTS
-        )),
+/// One experiment driver: either a campaign-store reader or a standalone
+/// (trace-only/synthetic) runner. The single [`driver`] registry below is
+/// the sole source of truth for which ids exist and which kind each is —
+/// `run`, `run_with_store` and [`is_store_backed`] all dispatch through
+/// it, so the two kinds cannot silently drift apart.
+enum Driver {
+    Store(fn(&SystemConfig, &RunOpts, &mut CampaignStore) -> anyhow::Result<()>),
+    Standalone(fn(&SystemConfig, &RunOpts) -> anyhow::Result<()>),
+}
+
+fn driver(id: &str) -> Option<Driver> {
+    Some(match id {
+        "fig1" => Driver::Store(figures::fig1),
+        "fig2" => Driver::Store(figures::fig2),
+        "fig4" => Driver::Store(figures::fig4),
+        "fig5" => Driver::Standalone(figures::fig5),
+        "fig7a" => Driver::Store(figures::fig7a),
+        "fig7b" => Driver::Store(figures::fig7b),
+        "fig7c" => Driver::Store(figures::fig7c),
+        "fig8a" => Driver::Standalone(figures::fig8a),
+        "fig8b" => Driver::Store(figures::fig8b),
+        "fig8c" => Driver::Store(figures::fig8c),
+        "table2" => Driver::Standalone(|sys, opts| tables::table2(sys, opts.scale)),
+        "table3" => Driver::Store(tables::table3),
+        "table4" => Driver::Store(tables::table4),
+        "regret" => Driver::Standalone(|sys, opts| regret::regret(sys, opts.scale)),
+        "ablation" => Driver::Standalone(|sys, opts| regret::ablation(sys, opts.scale)),
+        _ => return None,
+    })
+}
+
+fn unknown_id(id: &str) -> anyhow::Error {
+    anyhow::anyhow!("unknown experiment {id}; known: {:?}", ALL_EXPERIMENTS)
+}
+
+/// True for the drivers that read scenario records from the campaign
+/// store; the trace-only/synthetic drivers (fig5, fig8a, table2, regret,
+/// ablation) have no environment to cache.
+pub fn is_store_backed(id: &str) -> bool {
+    matches!(driver(id), Some(Driver::Store(_)))
+}
+
+/// Run the requested experiments against one lazily-opened campaign
+/// store: `campaign.json` is parsed at most once per invocation however
+/// many drivers run (and not at all when every requested id is
+/// trace-only), and scenarios shared between drivers (fig7a/fig7b,
+/// fig8b/fig8c) are executed/refreshed at most once.
+pub fn run(ids: &[&str], sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+    let mut store: Option<CampaignStore> = None;
+    for id in ids {
+        println!("\n##### experiment {id} (scale {}) #####", opts.scale);
+        let result = match driver(id) {
+            Some(Driver::Store(f)) => {
+                f(sys, opts, store.get_or_insert_with(store::CampaignStore::open_default))
+            }
+            Some(Driver::Standalone(f)) => f(sys, opts),
+            None => Err(unknown_id(id)),
+        };
+        result.map_err(|e| e.context(format!("experiment {id} failed")))?;
+    }
+    Ok(())
+}
+
+/// Run one experiment id against an already-open store (which the
+/// trace-only drivers ignore).
+pub fn run_with_store(
+    id: &str,
+    sys: &SystemConfig,
+    opts: &RunOpts,
+    store: &mut CampaignStore,
+) -> anyhow::Result<()> {
+    match driver(id) {
+        Some(Driver::Store(f)) => f(sys, opts, store),
+        Some(Driver::Standalone(f)) => f(sys, opts),
+        None => Err(unknown_id(id)),
     }
 }
 

@@ -12,8 +12,9 @@
 //! asserts — and a cold store produces byte-identical records for any
 //! `--jobs` count.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -22,8 +23,17 @@ use crate::util::json::Json;
 
 use super::campaign::{
     aggregate, run_scenarios, CampaignResult, EnvKind, Scenario, ScenarioOutcome, StepRow,
-    Suite, Summary,
+    Suite, Summary, LATENCY_DIGEST_POINTS,
 };
+
+/// Process-wide count of `campaign.json` parses. `drone experiment all`
+/// must open (and therefore parse) the store exactly once — the one-pass
+/// threading contract asserted in tests/figure_cache.rs.
+static STORE_PARSES: AtomicU64 = AtomicU64::new(0);
+
+pub fn store_parse_count() -> u64 {
+    STORE_PARSES.load(Ordering::Relaxed)
+}
 
 /// How `ensure` may execute missing scenarios.
 #[derive(Clone, Debug)]
@@ -35,11 +45,26 @@ pub struct ExecPolicy {
     pub no_exec: bool,
     /// Per-scenario wall-clock budget in seconds; 0 disables the guard.
     pub timeout_s: f64,
+    /// Force re-execution of matching cached scenarios (`--refresh`):
+    /// hits are treated as stale and replaced in place through the
+    /// existing merge path. Each scenario refreshes at most once per
+    /// opened store, so drivers sharing scenarios (fig8b/fig8c) do not
+    /// re-run them twice in one `drone experiment all`.
+    pub refresh: bool,
+    /// Latency-digest size scenarios are executed with; a store built
+    /// with a different size is discarded rather than served.
+    pub digest_points: usize,
 }
 
 impl Default for ExecPolicy {
     fn default() -> Self {
-        Self { jobs: default_jobs(), no_exec: false, timeout_s: 0.0 }
+        Self {
+            jobs: default_jobs(),
+            no_exec: false,
+            timeout_s: 0.0,
+            refresh: false,
+            digest_points: LATENCY_DIGEST_POINTS,
+        }
     }
 }
 
@@ -81,6 +106,13 @@ pub struct CampaignStore {
     /// the file header; set by `ensure`). A mismatch invalidates the whole
     /// store — records from another config must never be cache hits.
     fingerprint: Option<String>,
+    /// Latency-digest size the stored records were compressed with
+    /// (absent header field = 64, the pre-`--digest-points` format).
+    digest_points: usize,
+    /// Scenario keys already re-executed under `--refresh` through this
+    /// opened store (not persisted): bounds a refresh to once per key per
+    /// process, however many drivers request the scenario.
+    refreshed: BTreeSet<String>,
 }
 
 impl CampaignStore {
@@ -94,20 +126,23 @@ impl CampaignStore {
     /// the next `ensure` that executes something).
     pub fn open(path: impl AsRef<Path>) -> Self {
         let path = path.as_ref().to_path_buf();
-        let (fingerprint, outcomes) = match std::fs::read_to_string(&path) {
-            Ok(text) => match parse_store(&text) {
-                Ok(parsed) => parsed,
-                Err(e) => {
-                    eprintln!(
-                        "warning: ignoring unreadable campaign store {}: {e:#}",
-                        path.display()
-                    );
-                    (None, vec![])
+        let (fingerprint, digest_points, outcomes) = match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                STORE_PARSES.fetch_add(1, Ordering::Relaxed);
+                match parse_store(&text) {
+                    Ok(parsed) => parsed,
+                    Err(e) => {
+                        eprintln!(
+                            "warning: ignoring unreadable campaign store {}: {e:#}",
+                            path.display()
+                        );
+                        (None, LATENCY_DIGEST_POINTS, vec![])
+                    }
                 }
-            },
-            Err(_) => (None, vec![]),
+            }
+            Err(_) => (None, LATENCY_DIGEST_POINTS, vec![]),
         };
-        Self { path, outcomes, fingerprint }
+        Self { path, outcomes, fingerprint, digest_points, refreshed: BTreeSet::new() }
     }
 
     pub fn path(&self) -> &Path {
@@ -131,14 +166,20 @@ impl CampaignStore {
     /// scenarios it does not hold yet. Duplicate requests collapse onto
     /// one execution, and a cached outcome whose records were truncated by
     /// a fired `--timeout` is treated as stale — it is re-executed and
-    /// replaced in place rather than served as if complete. Request order
-    /// is preserved in the report's indices.
+    /// replaced in place rather than served as if complete (`--refresh`
+    /// forces the same staleness on every matching hit, once per key per
+    /// opened store). Request order is preserved in the report's indices.
     pub fn ensure(
         &mut self,
         requests: &[Scenario],
         sys: &SystemConfig,
         exec: &ExecPolicy,
     ) -> Result<EnsureReport> {
+        if exec.refresh && exec.no_exec {
+            return Err(anyhow!(
+                "--refresh forces re-execution while --no-exec forbids it; drop one"
+            ));
+        }
         // Cross-config safety: records cached under a different
         // SystemConfig (cluster size, bandit, objective, interference)
         // describe a different system — discard them rather than serve
@@ -156,6 +197,23 @@ impl CampaignStore {
             }
             self.fingerprint = Some(fp);
         }
+        // Same story for the latency-digest size: 64-point records served
+        // to a `--digest-points 256` request would silently flatten the
+        // deep tail the caller asked for.
+        if self.digest_points != exec.digest_points {
+            if !self.outcomes.is_empty() {
+                eprintln!(
+                    "warning: campaign store {} holds {}-point latency digests but \
+                     {} were requested; discarding {} cached scenarios",
+                    self.path.display(),
+                    self.digest_points,
+                    exec.digest_points,
+                    self.outcomes.len()
+                );
+                self.outcomes.clear();
+            }
+            self.digest_points = exec.digest_points;
+        }
 
         let mut by_key: BTreeMap<String, usize> = BTreeMap::new();
         for (i, o) in self.outcomes.iter().enumerate() {
@@ -168,8 +226,8 @@ impl CampaignStore {
         }
         let mut slots: Vec<Slot> = Vec::with_capacity(requests.len());
         let mut missing: Vec<Scenario> = vec![];
-        // For each missing scenario: the store index of a stale (timed-out)
-        // entry it replaces, or None to append.
+        // For each missing scenario: the store index of a stale (timed-out
+        // or refreshed) entry it replaces, or None to append.
         let mut replace_at: Vec<Option<usize>> = vec![];
         let mut pending: BTreeMap<String, usize> = BTreeMap::new();
         for req in requests {
@@ -178,8 +236,10 @@ impl CampaignStore {
                 // A timed-out outcome did not run its full grid; serving
                 // it as cached would silently build figures from partial
                 // records forever. Only the current call's own timeout
-                // regime may produce truncated data.
+                // regime may produce truncated data. `--refresh` marks
+                // every not-yet-refreshed hit stale the same way.
                 !self.outcomes[i].summary.timed_out
+                    && !(exec.refresh && !self.refreshed.contains(&key))
             });
             if let Some(i) = fresh_hit {
                 slots.push(Slot::Have(i));
@@ -207,7 +267,16 @@ impl CampaignStore {
                     missing[0].name()
                 ));
             }
-            let new = run_scenarios(&missing, sys, exec.jobs.max(1), exec.timeout_s);
+            let new = run_scenarios(
+                &missing,
+                sys,
+                exec.jobs.max(1),
+                exec.timeout_s,
+                exec.digest_points,
+            );
+            for m in &missing {
+                self.refreshed.insert(m.key());
+            }
             for (mut outcome, rep) in new.into_iter().zip(&replace_at) {
                 let idx = rep.unwrap_or(self.outcomes.len());
                 outcome.scenario.id = idx;
@@ -245,6 +314,7 @@ impl CampaignStore {
             aggregates: aggregate(&self.outcomes),
             seeds,
             config_fingerprint: self.fingerprint.clone().unwrap_or_default(),
+            digest_points: self.digest_points,
         }
     }
 
@@ -270,13 +340,20 @@ impl CampaignStore {
 // campaign.json -> outcomes
 // ---------------------------------------------------------------------------
 
-fn parse_store(text: &str) -> Result<(Option<String>, Vec<ScenarioOutcome>)> {
+fn parse_store(text: &str) -> Result<(Option<String>, usize, Vec<ScenarioOutcome>)> {
     let j = Json::parse(text)?;
     let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
     if schema != "drone-campaign/v2" {
         return Err(anyhow!("unsupported campaign schema {schema:?} (want drone-campaign/v2)"));
     }
     let fingerprint = j.get("config").and_then(Json::as_str).map(str::to_string);
+    // Back-compat: stores written before `--digest-points` (or with the
+    // default size) omit the header field and read back as 64-point.
+    let digest_points = j
+        .get("digest_points")
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .unwrap_or(LATENCY_DIGEST_POINTS);
     let scenarios = j
         .get("scenarios")
         .and_then(Json::as_arr)
@@ -286,7 +363,7 @@ fn parse_store(text: &str) -> Result<(Option<String>, Vec<ScenarioOutcome>)> {
         .enumerate()
         .map(|(i, sc)| parse_scenario(sc, i).with_context(|| format!("scenario #{i}")))
         .collect::<Result<Vec<_>>>()?;
-    Ok((fingerprint, outcomes))
+    Ok((fingerprint, digest_points, outcomes))
 }
 
 fn str_field<'a>(v: &'a Json, k: &str) -> Result<&'a str> {
@@ -455,7 +532,7 @@ mod tests {
         let spec = small_spec();
         let requests = enumerate(&spec);
         let path = tmp_store_path("warm");
-        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0, ..Default::default() };
 
         let mut store = CampaignStore::open(&path);
         let first = store.ensure(&requests, &sys, &exec).unwrap();
@@ -482,7 +559,7 @@ mod tests {
         let requests = enumerate(&spec);
         let (half, rest) = requests.split_at(2);
         let path = tmp_store_path("partial");
-        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0, ..Default::default() };
 
         let mut store = CampaignStore::open(&path);
         store.ensure(half, &sys, &exec).unwrap();
@@ -504,7 +581,7 @@ mod tests {
         let requests = enumerate(&small_spec());
         let path = tmp_store_path("noexec");
         let mut store = CampaignStore::open(&path);
-        let exec = ExecPolicy { jobs: 1, no_exec: true, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 1, no_exec: true, timeout_s: 0.0, ..Default::default() };
         let err = store.ensure(&requests, &sys, &exec).unwrap_err();
         assert!(err.to_string().contains("--no-exec"), "{err}");
         assert!(store.is_empty(), "no_exec must not execute or persist anything");
@@ -523,7 +600,7 @@ mod tests {
         let doubled = vec![one[0].clone(), one[0].clone()];
         let path = tmp_store_path("dup");
         let mut store = CampaignStore::open(&path);
-        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0, ..Default::default() };
         let report = store.ensure(&doubled, &sys, &exec).unwrap();
         // Both requests were served by execution (cached + executed covers
         // every request), but the store ran and kept only one scenario.
@@ -546,7 +623,8 @@ mod tests {
         let path = tmp_store_path("stale");
 
         let mut store = CampaignStore::open(&path);
-        let throttled = ExecPolicy { jobs: 1, no_exec: false, timeout_s: 1e-9 };
+        let throttled =
+            ExecPolicy { jobs: 1, no_exec: false, timeout_s: 1e-9, ..Default::default() };
         let first = store.ensure(&requests, &sys, &throttled).unwrap();
         assert_eq!(first.executed, 1);
         let o = &store.outcomes[first.indices[0]];
@@ -555,7 +633,7 @@ mod tests {
 
         // Without a timeout the truncated entry must not be served.
         let mut reopened = CampaignStore::open(&path);
-        let exec = ExecPolicy { jobs: 1, no_exec: false, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 1, no_exec: false, timeout_s: 0.0, ..Default::default() };
         let second = reopened.ensure(&requests, &sys, &exec).unwrap();
         assert_eq!((second.cached, second.executed), (0, 1));
         assert_eq!(reopened.len(), 1, "replaced in place, not appended");
@@ -576,7 +654,7 @@ mod tests {
         let sys = small_sys();
         let requests = enumerate(&small_spec());
         let path = tmp_store_path("config");
-        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0 };
+        let exec = ExecPolicy { jobs: 2, no_exec: false, timeout_s: 0.0, ..Default::default() };
         CampaignStore::open(&path).ensure(&requests, &sys, &exec).unwrap();
 
         // Same config: fully warm.
@@ -595,6 +673,46 @@ mod tests {
         assert_eq!(again.ensure(&requests, &other, &exec).unwrap().executed, 0);
         let mut back = CampaignStore::open(&path);
         assert_eq!(back.ensure(&requests, &sys, &exec).unwrap().cached, 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    /// `--digest-points` satellite, store side: a store built at one
+    /// digest size is discarded (not served) at another, while files
+    /// without the header field — every store written before the flag
+    /// existed, and every default-size store since — read back as
+    /// 64-point and stay warm for default requests.
+    #[test]
+    fn digest_points_mismatch_invalidates_but_default_is_back_compat() {
+        let sys = small_sys();
+        let mut spec = small_spec();
+        spec.policies = Some(vec!["k8s-hpa".into()]);
+        spec.seeds = vec![0];
+        let requests = enumerate(&spec);
+        let path = tmp_store_path("digest");
+
+        // Build at the default size: the file must omit the header field
+        // (pre-flag byte layout) and be warm for default requests.
+        let exec64 = ExecPolicy { jobs: 1, ..Default::default() };
+        CampaignStore::open(&path).ensure(&requests, &sys, &exec64).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(!text.contains("digest_points"), "default stores omit the header field");
+        let mut warm = CampaignStore::open(&path);
+        assert_eq!(warm.ensure(&requests, &sys, &exec64).unwrap().executed, 0);
+
+        // A different digest size invalidates the cache and stamps the
+        // rewritten store with its size.
+        let exec16 = ExecPolicy { jobs: 1, digest_points: 16, ..Default::default() };
+        let mut other = CampaignStore::open(&path);
+        let report = other.ensure(&requests, &sys, &exec16).unwrap();
+        assert_eq!((report.cached, report.executed), (0, requests.len()));
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"digest_points\": 16"));
+        // ... and is warm for 16-point requests after reopening.
+        let mut again = CampaignStore::open(&path);
+        assert_eq!(again.ensure(&requests, &sys, &exec16).unwrap().executed, 0);
+        // ... but cold again for default-size requests.
+        let mut back = CampaignStore::open(&path);
+        assert_eq!(back.ensure(&requests, &sys, &exec64).unwrap().cached, 0);
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 

@@ -92,7 +92,7 @@ pub fn table2(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
 // Table 3 — elapsed time ± std and executor (OOM) errors under contention
 // ---------------------------------------------------------------------------
 
-pub fn table3(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn table3(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let steps = ((30.0 * opts.scale) as u64).max(10);
     let warmup = (steps / 3) as usize;
     let policies = ["k8s-hpa", "accordia", "cherrypick", "drone-safe"];
@@ -112,7 +112,6 @@ pub fn table3(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             ));
         }
     }
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 
@@ -175,7 +174,7 @@ pub fn table3(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
 // Table 4 — dropped requests (private-cloud microservices)
 // ---------------------------------------------------------------------------
 
-pub fn table4(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
+pub fn table4(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let steps = ((6.0 * 3600.0 * opts.scale.clamp(0.05, 1.0)) / 60.0).ceil() as u64;
     let trace = crate::trace::diurnal::DiurnalConfig::default();
     let policies = ["k8s-hpa", "autopilot", "showar", "drone-safe"];
@@ -194,7 +193,6 @@ pub fn table4(sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
             )
         })
         .collect();
-    let mut store = CampaignStore::open_default();
     let report = store.ensure(&requests, sys, &opts.exec())?;
     println!("{}", report.describe());
 

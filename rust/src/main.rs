@@ -14,7 +14,7 @@ use drone::util::cli::Args;
 use drone::util::table::Table;
 
 fn main() {
-    let args = Args::from_env_with_switches(&["no-exec"]);
+    let args = Args::from_env_with_switches(&["no-exec", "refresh"]);
     let file = args.get("config").and_then(|p| match Config::load(p) {
         Ok(c) => Some(c),
         Err(e) => {
@@ -43,25 +43,30 @@ fn print_usage() {
         "drone — dynamic resource orchestration for the containerized cloud
 
 USAGE:
-  drone run --policy <name> --env <batch|micro> [--workload <w>] [--setting <public|private>]
-            [--steps N] [--seed S] [--config file.toml]
+  drone run --policy <name> --env <batch|micro|hybrid> [--workload <w>]
+            [--setting <public|private>] [--steps N] [--seed S] [--config file.toml]
   drone experiment <id|all> [--scale 0.2] [--seed S] [--jobs N] [--timeout SECS] [--no-exec]
+                   [--refresh] [--digest-points K]
   drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
                  [--steps N] [--policies p1,p2] [--workloads w1,w2] [--timeout SECS]
-                 [--stress F] [--scale S]
+                 [--stress F] [--scale S] [--refresh] [--digest-points K]
   drone list
   drone selfcheck
 
 Environment-backed figures/tables read scenario records from the campaign
-store (results/campaign.json), executing only scenarios it does not hold;
---no-exec turns missing scenarios into an error (pure-reader mode), and
---timeout caps each scenario's wall clock (truncating its records).
+store (results/campaign.json, opened once per invocation), executing only
+scenarios it does not hold; --no-exec turns missing scenarios into an
+error (pure-reader mode), --refresh forces re-execution of matching cached
+scenarios (replaced in place), --timeout caps each scenario's wall clock
+(truncating its records) and --digest-points sizes the latency quantile
+digest (default 64; a store built at another size is rebuilt).
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
              table2 table3 table4 regret ablation
-SUITES: batch-public batch-private micro-public micro-private fig1 fig2 fig4"
+SUITES: batch-public batch-private micro-public micro-private hybrid
+        fig1 fig2 fig4"
     );
 }
 
@@ -136,6 +141,33 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
             }
             tab.print();
         }
+        "hybrid" => {
+            let w = match parse_workload(&args.get_str("workload", "sparkpi")) {
+                Some(w) => w,
+                None => {
+                    eprintln!("unknown workload");
+                    return 2;
+                }
+            };
+            let env = experiments::HybridEnvConfig::new(w, setting, steps);
+            let recs = experiments::run_hybrid_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mut tab = Table::new(
+                &format!("{policy} on {}+SocialNet ({setting:?})", w.name()),
+                &["step", "p90_ms", "score", "drops", "offered", "errors", "ram_gb"],
+            );
+            for r in &recs {
+                tab.row(&[
+                    format!("{}", r.step),
+                    format!("{:.1}", r.perf_raw),
+                    format!("{:.3}", r.perf_score),
+                    format!("{}", r.dropped),
+                    format!("{}", r.offered),
+                    format!("{}", r.errors),
+                    format!("{:.1}", r.ram_alloc_mb / 1024.0),
+                ]);
+            }
+            tab.print();
+        }
         other => {
             eprintln!("unknown env {other}");
             return 2;
@@ -151,18 +183,22 @@ fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
         jobs: args.get_usize("jobs", drone::experiments::store::default_jobs()),
         no_exec: args.has_opt("no-exec"),
         timeout_s: args.get_f64("timeout", 0.0),
+        refresh: args.has_opt("refresh"),
+        digest_points: args
+            .get_usize("digest-points", drone::experiments::campaign::LATENCY_DIGEST_POINTS)
+            .max(2),
     };
     let ids: Vec<&str> = if id == "all" {
         experiments::ALL_EXPERIMENTS.to_vec()
     } else {
         vec![id]
     };
-    for id in ids {
-        println!("\n##### experiment {id} (scale {}) #####", opts.scale);
-        if let Err(e) = experiments::run(id, sys, &opts) {
-            eprintln!("experiment {id} failed: {e:#}");
-            return 1;
-        }
+    // `experiments::run` opens the campaign store once and threads it
+    // through every driver — `drone experiment all` is one-pass over
+    // campaign.json.
+    if let Err(e) = experiments::run(&ids, sys, &opts) {
+        eprintln!("{e:#}");
+        return 1;
     }
     0
 }
@@ -219,6 +255,7 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     spec.private_stress = args.get_f64("stress", spec.private_stress);
     spec.figure_scale = args.get_f64("scale", spec.figure_scale);
     spec.timeout_s = args.get_f64("timeout", 0.0);
+    spec.digest_points = args.get_usize("digest-points", spec.digest_points).max(2);
 
     let jobs = args.get_usize("jobs", drone::experiments::store::default_jobs());
     let scenarios = campaign::enumerate(&spec);
@@ -242,7 +279,13 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     // are deterministic, so re-running them would reproduce the same rows.
     let started = std::time::Instant::now();
     let mut store = experiments::CampaignStore::open_default();
-    let exec = experiments::ExecPolicy { jobs, no_exec: false, timeout_s: spec.timeout_s };
+    let exec = experiments::ExecPolicy {
+        jobs,
+        no_exec: false,
+        timeout_s: spec.timeout_s,
+        refresh: args.has_opt("refresh"),
+        digest_points: spec.digest_points,
+    };
     let report = match store.ensure(&scenarios, sys, &exec) {
         Ok(r) => r,
         Err(e) => {
@@ -269,6 +312,7 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
         aggregates,
         seeds: spec.seeds.clone(),
         config_fingerprint: sys.fingerprint(),
+        digest_points: spec.digest_points,
     };
     result.print_tables();
     println!("{}", report.describe());

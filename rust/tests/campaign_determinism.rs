@@ -69,6 +69,51 @@ fn campaign_json_identical_for_1_and_8_jobs() {
     assert!(micro_offered > 0, "micro scenarios must serve traffic");
 }
 
+/// The new hybrid co-location suite obeys the same contract as the four
+/// paper suites: byte-identical canonical `campaign.json` for any
+/// `--jobs`, and it is part of what `--experiments all` expands to.
+#[test]
+fn hybrid_suite_deterministic_for_any_job_count() {
+    use drone::experiments::campaign::{parse_suites, EnvKind};
+
+    assert!(
+        parse_suites("all").unwrap().contains(&Suite::Hybrid),
+        "hybrid must be part of `drone campaign --experiments all`"
+    );
+
+    let sys = test_sys();
+    let spec = CampaignSpec {
+        suites: vec![Suite::Hybrid],
+        policies: Some(vec!["drone".into(), "k8s-hpa".into()]),
+        workloads: vec![BatchWorkload::SparkPi],
+        seeds: vec![0, 1],
+        micro_steps: 3,
+        micro_base_rps: 12.0,
+        micro_amplitude_rps: 18.0,
+        ..Default::default()
+    };
+    assert_eq!(enumerate(&spec).len(), 4);
+
+    let serial = run_campaign(&spec, &sys, 1);
+    let parallel = run_campaign(&spec, &sys, 4);
+    assert_eq!(
+        serial.to_json_canonical(),
+        parallel.to_json_canonical(),
+        "hybrid campaign.json must not depend on the job count"
+    );
+    for o in &serial.outcomes {
+        assert!(matches!(o.scenario.env, EnvKind::Hybrid { .. }));
+        assert_eq!(o.records.len(), 3, "{}", o.scenario.name());
+        assert!(o.summary.offered > 0, "hybrid scenarios must serve traffic");
+        assert_eq!(o.summary.steps, 3);
+    }
+    // The env descriptor round-trips through the store's JSON (cache
+    // identity of the new suite).
+    let j = serial.to_json();
+    assert!(j.contains("\"suite\": \"hybrid\""));
+    assert!(j.contains("\"kind\": \"hybrid\""));
+}
+
 #[test]
 fn repeated_runs_are_reproducible() {
     let sys = test_sys();

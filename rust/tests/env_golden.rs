@@ -1,0 +1,430 @@
+//! Golden-equivalence contract of the environment-layer refactor: the
+//! generic `env::run_env` driver must reproduce the **pre-refactor**
+//! per-step records *bit-for-bit* across a suite × policy × seed matrix.
+//!
+//! The golden reference is not a data file — it is the pre-refactor code
+//! itself: `golden_run_batch_env` and `golden_run_micro_env` below are
+//! verbatim copies of the decision loops `run_batch_env`/`run_micro_env`
+//! contained before they were split into the `Environment` trait + driver
+//! (same RNG fork order, same floating-point op sequence, same telemetry
+//! feedback). If the refactored path diverges by a single ULP anywhere —
+//! an RNG stream re-ordered, a feedback field computed off the wrong
+//! intermediate — these comparisons fail.
+
+use drone::apps::batch::{
+    cpu_demand_cores, run_batch_job, run_cost, BatchWorkload, DeployMode, RunSpec,
+};
+use drone::apps::microservice;
+use drone::bandit::encode::ActionSpace;
+use drone::config::SystemConfig;
+use drone::experiments::harness::{
+    batch_cost_scale, batch_perf_score, micro_perf_score, placed_cross_zone_frac,
+};
+use drone::experiments::{
+    run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+};
+use drone::monitor::context::ContextVector;
+use drone::monitor::store::MetricStore;
+use drone::orchestrators::{self, Telemetry};
+use drone::runtime::Backend;
+use drone::sim::cluster::Cluster;
+use drone::sim::interference::InterferenceModel;
+use drone::sim::resources::Resources;
+use drone::sim::scheduler::{apply_deployment, apply_deployments_fair, Deployment};
+use drone::trace::diurnal::DiurnalTrace;
+use drone::trace::spot::{SpotConfig, SpotTrace};
+use drone::util::rng::Pcg64;
+
+fn test_sys() -> SystemConfig {
+    let mut sys = SystemConfig::default();
+    sys.bandit.candidates = 32;
+    sys.artifacts_dir = "/nonexistent".into();
+    sys
+}
+
+// ---------------------------------------------------------------------------
+// The pre-refactor loops, verbatim (minus the env-execution counter, which
+// is crate-private observability, and the deadline guard, inlined).
+// ---------------------------------------------------------------------------
+
+fn golden_run_batch_env(
+    policy_name: &str,
+    env: &BatchEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut root = Pcg64::new(seed ^ (0xba7c_u64 << 4));
+    let mut rng_policy = root.fork(1);
+    let mut rng_jobs = root.fork(2);
+    let mut rng_interf = root.fork(3);
+    let mut rng_spot = root.fork(4);
+
+    let space = ActionSpace { zones: sys.cluster.zones, ..Default::default() };
+    let mut policy = orchestrators::make(
+        policy_name,
+        space.clone(),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        orchestrators::AppProfile::Batch,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let mut cluster = Cluster::new(&sys.cluster);
+    let mut interference = if env.interference && sys.interference.enabled {
+        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+    } else {
+        InterferenceModel::disabled()
+    };
+    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
+    let spot_mean = SpotConfig::gcp_e2().mean_price;
+    let mut store = MetricStore::new(3600.0 * 12.0);
+
+    let cluster_ram_mb = sys.cluster_ram_mb();
+    let dt = 300.0; // one recurring run every ~5 simulated minutes
+
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(env.steps as usize);
+
+    for step in 0..env.steps {
+        if env.deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        let now = step as f64 * dt;
+        interference.step(&mut cluster, now, dt.min(60.0));
+        let price = spot.step(dt / 3600.0);
+        store.push("spot_price", now, price);
+        store.push("workload", now, env.data_gb);
+
+        let spot_for_ctx = match env.setting {
+            CloudSetting::Public => Some(spot_mean),
+            CloudSetting::Private => None,
+        };
+        let mut ctx = ContextVector::observe(&cluster, &store, now, 200.0, spot_for_ctx);
+        ctx.ram_util = (ctx.ram_util + env.external_mem_frac).min(1.0);
+        tel.ctx = ctx;
+        tel.t = now;
+        tel.step = step;
+
+        let action = policy.decide(&tel, backend, &mut rng_policy);
+
+        let dep = Deployment {
+            app: "batch".into(),
+            zone_pods: action.zone_pods.clone(),
+            limits: action.per_pod(),
+        };
+        let placement = apply_deployment(&mut cluster, &dep, true);
+        let placed_pods = placement.placed.len();
+        let cross = placed_cross_zone_frac(&cluster, "batch");
+
+        let current = cluster.mean_contention();
+        let sampled = interference.sample_window_contention(cluster.nodes.len(), dt);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let spec = RunSpec {
+            workload: env.workload,
+            platform: env.platform,
+            deploy: DeployMode::Container,
+            pods: placed_pods.max(1),
+            per_pod: action.per_pod(),
+            cross_zone_frac: cross,
+            contention,
+            data_gb: env.data_gb,
+            external_mem_frac: env.external_mem_frac,
+            cluster_ram_mb,
+        };
+        let result = run_batch_job(&spec, &mut rng_jobs);
+
+        let spot_mult = price / spot_mean;
+        let elapsed_for_cost = if result.halted { dt } else { result.elapsed_s };
+        let cost = run_cost(&spec, elapsed_for_cost, spot_mult, 0.2);
+        let perf_score = if result.halted {
+            0.0
+        } else {
+            batch_perf_score(env.workload, result.elapsed_s)
+        };
+        let ram_alloc = cluster.total_ram_allocated();
+        let resource_frac = ram_alloc / cluster_ram_mb;
+
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match env.setting {
+            CloudSetting::Public => Some((cost / batch_cost_scale(env.workload)).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        tel.failure = result.halted;
+        let demand_cores = cpu_demand_cores(env.workload, env.data_gb);
+        tel.app_cpu_util = if placed_pods > 0 {
+            (demand_cores / spec.total_cpu_cores()).min(1.0)
+        } else {
+            0.0
+        };
+        tel.ram_usage_mb_per_pod = action.ram_mb * 0.8;
+        tel.p90_latency_ms = None;
+
+        records.push(StepRecord {
+            step,
+            t: now,
+            perf_raw: result.elapsed_s,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: result.executor_errors,
+            halted: result.halted,
+            dropped: 0,
+            offered: 0,
+            latencies_ms: vec![],
+            action: Some(action),
+        });
+    }
+    records
+}
+
+fn golden_run_micro_env(
+    policy_name: &str,
+    env: &MicroEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut root = Pcg64::new(seed ^ (0x51c0_u64 << 8));
+    let mut rng_policy = root.fork(1);
+    let mut rng_des = root.fork(2);
+    let mut rng_interf = root.fork(3);
+    let mut rng_trace = root.fork(4);
+    let mut rng_spot = root.fork(5);
+
+    let space = ActionSpace::microservices(sys.cluster.zones);
+    let mut policy = orchestrators::make(
+        policy_name,
+        space.clone(),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        orchestrators::AppProfile::Microservices,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let mut cluster = Cluster::new(&sys.cluster);
+    let mut interference = if env.interference && sys.interference.enabled {
+        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+    } else {
+        InterferenceModel::disabled()
+    };
+    let mut trace = DiurnalTrace::new(env.trace.clone(), rng_trace.fork(0));
+    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
+    let spot_mean = SpotConfig::gcp_e2().mean_price;
+    let mut store = MetricStore::new(3600.0 * 8.0);
+
+    let n_services = env.graph.services.len();
+    let cluster_ram_mb = sys.cluster_ram_mb();
+    let steps = (env.duration_s / env.period_s).ceil() as u64;
+    let workload_scale = env.trace.base_rps + env.trace.amplitude_rps * 1.2;
+
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(steps as usize);
+
+    for step in 0..steps {
+        if env.deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        let now = step as f64 * env.period_s;
+        interference.step(&mut cluster, now, env.period_s);
+        let rate = trace.sample_rate(now);
+        store.push("workload", now, rate);
+        let price = spot.step(env.period_s / 3600.0);
+        store.push("spot_price", now, price);
+
+        let spot_for_ctx = match env.setting {
+            CloudSetting::Public => Some(spot_mean),
+            CloudSetting::Private => None,
+        };
+        tel.ctx = ContextVector::observe(&cluster, &store, now, workload_scale, spot_for_ctx);
+        tel.t = now;
+        tel.step = step;
+
+        let action = policy.decide(&tel, backend, &mut rng_policy);
+
+        let mut requested_ram_mb = 0.0;
+        let deps: Vec<Deployment> = (0..n_services)
+            .map(|sid| {
+                let w = env.graph.services[sid].weight;
+                let lim = Resources::new(
+                    (action.cpu_m * w).min(space.cpu_m.1),
+                    (action.ram_mb * w.max(1.0)).min(space.ram_mb.1),
+                    action.net_mbps,
+                );
+                requested_ram_mb += action.total_pods() as f64 * lim.ram_mb;
+                Deployment {
+                    app: env.graph.app_name(sid),
+                    zone_pods: action.zone_pods.clone(),
+                    limits: lim,
+                }
+            })
+            .collect();
+        let results = apply_deployments_fair(&mut cluster, &deps, true);
+        let pending: usize = results.iter().map(|r| r.pending_total()).sum();
+
+        let total_pods: usize =
+            (0..n_services).map(|sid| cluster.running_pod_count(&env.graph.app_name(sid))).sum();
+        let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
+        for p in cluster.pods.iter_mut() {
+            if p.app.starts_with("ms-") {
+                let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
+                p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
+            }
+        }
+        let errors = cluster.sweep_oom().len() as u32;
+
+        let stats =
+            microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
+
+        let p90 = stats.p90();
+        let completion = if stats.offered == 0 {
+            1.0
+        } else {
+            stats.completed as f64 / stats.offered as f64
+        };
+        let perf_score = micro_perf_score(p90) * completion * completion;
+        let ram_alloc = cluster.total_ram_allocated();
+        let resource_frac = requested_ram_mb.max(ram_alloc) / cluster_ram_mb;
+        let hours = env.period_s / 3600.0;
+        let cost = (cluster
+            .pods
+            .iter()
+            .filter(|p| p.app.starts_with("ms-"))
+            .map(|p| p.limits.cpu_m / 1000.0 * 0.0332 + p.limits.ram_mb / 1024.0 * 0.0045)
+            .sum::<f64>())
+            * hours
+            * (0.8 + 0.2 * price / spot_mean);
+
+        tel.last_action = Some(action.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match env.setting {
+            CloudSetting::Public => Some((cost / 0.25).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        records.push(StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: errors + pending as u32,
+            halted: tel.failure,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(action),
+        });
+    }
+    records
+}
+
+// ---------------------------------------------------------------------------
+// Bit-for-bit comparison
+// ---------------------------------------------------------------------------
+
+/// NaN-safe bitwise float equality (halted batch steps carry NaN
+/// perf_raw, which `==` would reject even when the round trip is exact).
+fn bits_eq(a: f64, b: f64) -> bool {
+    a.to_bits() == b.to_bits()
+}
+
+fn assert_records_identical(new: &[StepRecord], golden: &[StepRecord], tag: &str) {
+    assert_eq!(new.len(), golden.len(), "{tag}: step count");
+    for (i, (n, g)) in new.iter().zip(golden).enumerate() {
+        let t = format!("{tag} step {i}");
+        assert_eq!(n.step, g.step, "{t}: step");
+        assert!(bits_eq(n.t, g.t), "{t}: t {} vs {}", n.t, g.t);
+        assert!(bits_eq(n.perf_raw, g.perf_raw), "{t}: perf_raw {} vs {}", n.perf_raw, g.perf_raw);
+        assert!(
+            bits_eq(n.perf_score, g.perf_score),
+            "{t}: perf_score {} vs {}",
+            n.perf_score,
+            g.perf_score
+        );
+        assert!(bits_eq(n.cost, g.cost), "{t}: cost {} vs {}", n.cost, g.cost);
+        assert!(bits_eq(n.ram_alloc_mb, g.ram_alloc_mb), "{t}: ram_alloc_mb");
+        assert!(bits_eq(n.resource_frac, g.resource_frac), "{t}: resource_frac");
+        assert_eq!(n.errors, g.errors, "{t}: errors");
+        assert_eq!(n.halted, g.halted, "{t}: halted");
+        assert_eq!(n.dropped, g.dropped, "{t}: dropped");
+        assert_eq!(n.offered, g.offered, "{t}: offered");
+        assert_eq!(n.latencies_ms.len(), g.latencies_ms.len(), "{t}: latency count");
+        for (j, (a, b)) in n.latencies_ms.iter().zip(&g.latencies_ms).enumerate() {
+            assert!(bits_eq(*a, *b), "{t}: latency[{j}] {a} vs {b}");
+        }
+        assert_eq!(n.action, g.action, "{t}: action");
+    }
+}
+
+#[test]
+fn run_env_matches_pre_refactor_batch_loops_bit_for_bit() {
+    let sys = test_sys();
+    // Public cloud: learning and heuristic policies across seeds.
+    for policy in ["drone", "k8s-hpa", "accordia"] {
+        for seed in [0, 1] {
+            let env = BatchEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 5);
+            let mut b_new = Backend::Native;
+            let mut b_old = Backend::Native;
+            let new = run_batch_env(policy, &env, &sys, &mut b_new, seed);
+            let golden = golden_run_batch_env(policy, &env, &sys, &mut b_old, seed);
+            assert_records_identical(&new, &golden, &format!("batch-public/{policy}/s{seed}"));
+        }
+    }
+    // Private cloud under Table 3's co-tenant stress (exercises the safe
+    // bandit, the ram_util context adjustment and the halt/OOM paths).
+    for policy in ["drone-safe", "cherrypick"] {
+        let mut env = BatchEnvConfig::new(BatchWorkload::PageRank, CloudSetting::Private, 4);
+        env.external_mem_frac = 0.30;
+        let mut b_new = Backend::Native;
+        let mut b_old = Backend::Native;
+        let new = run_batch_env(policy, &env, &sys, &mut b_new, 3);
+        let golden = golden_run_batch_env(policy, &env, &sys, &mut b_old, 3);
+        assert_records_identical(&new, &golden, &format!("batch-private/{policy}/s3"));
+    }
+}
+
+#[test]
+fn run_env_matches_pre_refactor_micro_loops_bit_for_bit() {
+    let sys = test_sys();
+    for policy in ["drone", "k8s-hpa"] {
+        for seed in [0, 1] {
+            let mut env = MicroEnvConfig::socialnet(CloudSetting::Public, 180.0);
+            env.trace.base_rps = 15.0;
+            env.trace.amplitude_rps = 20.0;
+            let mut b_new = Backend::Native;
+            let mut b_old = Backend::Native;
+            let new = run_micro_env(policy, &env, &sys, &mut b_new, seed);
+            let golden = golden_run_micro_env(policy, &env, &sys, &mut b_old, seed);
+            assert_records_identical(&new, &golden, &format!("micro-public/{policy}/s{seed}"));
+        }
+    }
+    // Private setting (no spot in context, performance-only objective).
+    let mut env = MicroEnvConfig::socialnet(CloudSetting::Private, 180.0);
+    env.trace.base_rps = 12.0;
+    env.trace.amplitude_rps = 18.0;
+    let mut b_new = Backend::Native;
+    let mut b_old = Backend::Native;
+    let new = run_micro_env("showar", &env, &sys, &mut b_new, 2);
+    let golden = golden_run_micro_env("showar", &env, &sys, &mut b_old, 2);
+    assert_records_identical(&new, &golden, "micro-private/showar/s2");
+}

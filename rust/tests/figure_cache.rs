@@ -1,17 +1,21 @@
 //! The figure pipeline's cache contract, end to end: regenerating figure
-//! series from a warm campaign store executes **zero** environments, and
-//! the records it serves are byte-identical to the ones a fresh run
-//! produces regardless of `--jobs`.
+//! series from a warm campaign store executes **zero** environments, the
+//! records it serves are byte-identical to the ones a fresh run produces
+//! regardless of `--jobs`, one opened store serves any number of driver
+//! request batches with exactly **one** `campaign.json` parse (the
+//! one-pass threading `experiments::run` relies on), and `--refresh`
+//! re-executes each cached scenario exactly once per opened store.
 //!
 //! This file deliberately holds a single `#[test]` — the env-execution
-//! counter is process-global, and any concurrently running test that spins
-//! an environment would race a strict equality assertion. Integration test
-//! binaries are separate processes, so isolation here is total.
+//! and store-parse counters are process-global, and any concurrently
+//! running test that spins an environment would race a strict equality
+//! assertion. Integration test binaries are separate processes, so
+//! isolation here is total.
 
 use drone::config::SystemConfig;
 use drone::experiments::campaign::{EnvKind, Scenario, Suite};
 use drone::experiments::harness::env_execution_count;
-use drone::experiments::store::{CampaignStore, ExecPolicy};
+use drone::experiments::store::{store_parse_count, CampaignStore, ExecPolicy};
 
 fn test_sys() -> SystemConfig {
     let mut sys = SystemConfig::default();
@@ -59,7 +63,7 @@ fn warm_store_serves_figures_without_env_execution() {
     let path = dir.join("campaign.json");
 
     // Cold pass: everything executes, exactly once per scenario.
-    let exec = ExecPolicy { jobs: 4, no_exec: false, timeout_s: 0.0 };
+    let exec = ExecPolicy { jobs: 4, no_exec: false, timeout_s: 0.0, ..Default::default() };
     let mut cold = CampaignStore::open(&path);
     let before_cold = env_execution_count();
     let first = cold.ensure(&requests, &sys, &exec).unwrap();
@@ -71,7 +75,7 @@ fn warm_store_serves_figures_without_env_execution() {
     );
 
     // Warm pass from disk: zero executions, even in pure-reader mode.
-    let strict = ExecPolicy { jobs: 4, no_exec: true, timeout_s: 0.0 };
+    let strict = ExecPolicy { jobs: 4, no_exec: true, timeout_s: 0.0, ..Default::default() };
     let mut warm = CampaignStore::open(&path);
     let before_warm = env_execution_count();
     let second = warm.ensure(&requests, &sys, &strict).unwrap();
@@ -102,13 +106,51 @@ fn warm_store_serves_figures_without_env_execution() {
     // Different --jobs over the same requests produce identical stores.
     let solo_dir = std::env::temp_dir().join(format!("drone-figcache-j1-{}", std::process::id()));
     let mut solo = CampaignStore::open(solo_dir.join("campaign.json"));
-    solo.ensure(&requests, &sys, &ExecPolicy { jobs: 1, no_exec: false, timeout_s: 0.0 })
-        .unwrap();
+    let solo_exec = ExecPolicy { jobs: 1, no_exec: false, timeout_s: 0.0, ..Default::default() };
+    solo.ensure(&requests, &sys, &solo_exec).unwrap();
     assert_eq!(
         solo.to_result().to_json_canonical(),
         warm.to_result().to_json_canonical(),
         "figure-backing records must be byte-identical for any job count"
     );
+
+    // One-pass threading: `drone experiment all` opens the store once and
+    // hands every driver the same `&mut CampaignStore`, so however many
+    // driver request batches run, campaign.json is parsed exactly once.
+    let parses_before = store_parse_count();
+    let mut threaded = CampaignStore::open(&path); // the one open in experiments::run
+    assert_eq!(store_parse_count(), parses_before + 1, "open parses the file once");
+    for batch in [&requests[..2], &requests[2..4], &requests[..]] {
+        let report = threaded.ensure(batch, &sys, &strict).unwrap();
+        assert_eq!(report.executed, 0);
+    }
+    assert_eq!(
+        store_parse_count(),
+        parses_before + 1,
+        "serving every driver from the threaded store must not re-parse campaign.json"
+    );
+
+    // --refresh: cached hits are re-executed and replaced in place — but
+    // only once per scenario per opened store, so drivers that share
+    // scenarios (fig8b/fig8c) don't re-run them twice in one invocation.
+    let refresh = ExecPolicy { jobs: 2, refresh: true, ..Default::default() };
+    let before_refresh = env_execution_count();
+    let r1 = threaded.ensure(&requests, &sys, &refresh).unwrap();
+    assert_eq!((r1.cached, r1.executed), (0, requests.len()), "refresh re-executes hits");
+    assert_eq!(env_execution_count() - before_refresh, requests.len() as u64);
+    assert_eq!(threaded.len(), requests.len(), "replaced in place, not appended");
+    let r2 = threaded.ensure(&requests, &sys, &refresh).unwrap();
+    assert_eq!((r2.cached, r2.executed), (requests.len(), 0), "one refresh per key per store");
+    assert_eq!(env_execution_count() - before_refresh, requests.len() as u64);
+    // Deterministic scenarios: the refreshed records are byte-identical.
+    assert_eq!(
+        threaded.to_result().to_json_canonical(),
+        solo.to_result().to_json_canonical(),
+        "refreshed records must reproduce the originals byte-for-byte"
+    );
+    // refresh + no_exec is a contradiction, not a silent no-op.
+    let conflict = ExecPolicy { refresh: true, no_exec: true, ..Default::default() };
+    assert!(threaded.ensure(&requests, &sys, &conflict).is_err());
 
     let _ = std::fs::remove_dir_all(dir);
     let _ = std::fs::remove_dir_all(solo_dir);

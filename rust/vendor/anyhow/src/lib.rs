@@ -28,6 +28,11 @@ impl Error {
         Self { msg: m.to_string() }
     }
 
+    /// Attach context to an existing error (upstream `Error::context`).
+    pub fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Self {
+        self.wrap(context)
+    }
+
     fn wrap<C: fmt::Display>(self, context: C) -> Self {
         Self { msg: format!("{context}: {}", self.msg) }
     }
@@ -85,6 +90,24 @@ where
     }
 }
 
+// The already-`anyhow` case, as upstream supports: annotating a
+// `Result<T, anyhow::Error>` keeps wrapping the same error value. This
+// impl is coherent with the blanket one above precisely because `Error`
+// does not implement `std::error::Error` (again exactly as in upstream).
+impl<T> Context<T, Error> for Result<T, Error> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.wrap(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.wrap(f()))
+    }
+}
+
 /// Construct an [`Error`] from a format string.
 #[macro_export]
 macro_rules! anyhow {
@@ -127,6 +150,20 @@ mod tests {
         let r2: std::result::Result<(), std::io::Error> = Err(io_err());
         let e2 = r2.context("opening").unwrap_err();
         assert_eq!(e2.to_string(), "opening: gone");
+    }
+
+    #[test]
+    fn context_on_anyhow_results_and_errors() {
+        // `.context` chains on a Result that is already anyhow-typed.
+        let r: Result<()> = Err(anyhow!("inner"));
+        let e = r.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let r2: Result<()> = Err(anyhow!("inner"));
+        let e2 = r2.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(e2.to_string(), "step 2: inner");
+        // ... and on a bare Error value (upstream `Error::context`).
+        let e3 = anyhow!("cause").context("what was happening");
+        assert_eq!(e3.to_string(), "what was happening: cause");
     }
 
     #[test]
