@@ -36,7 +36,7 @@ fn main() {
         let halts = post.iter().filter(|r| r.halted).count();
         let cross: Vec<f64> = post
             .iter()
-            .filter_map(|r| r.action.as_ref().map(|a| a.cross_zone_frac()))
+            .filter_map(|r| r.action.as_ref().map(|a| a.primary().cross_zone_frac()))
             .collect();
         tab.row(&[
             policy.into(),

@@ -120,6 +120,29 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         }
     }
 
+    {
+        // The factored hybrid-joint space widens the GP input: the batch
+        // executor factor (7) + the micro factor (7) + context (6) = 20
+        // dims. Tracks the decision-latency cost of the wider joint
+        // space against the single-tenant d=13 series above.
+        use drone::bandit::encode::{ActionSpace, JointSpace};
+        let js = JointSpace::new(vec![
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+        ]);
+        let d = js.joint_dim();
+        println!("\n== perf: GP posterior at the hybrid-joint dimension, n=32 d={d} ==");
+        for &m in &[64usize, 256] {
+            let (z, y, mask, x) = rand_inputs(&mut rng, 32, m, d);
+            let hyp = GpHyper::default();
+            let mut r = bench(&format!("native gp_posterior d={d} m={m}"), budget_s, || {
+                let _ = gp::gp_posterior(&z, &y, &mask, &x, d, hyp);
+            });
+            r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
+            report(&r);
+        }
+    }
+
     println!(
         "\n== perf: incremental Cholesky cache vs full rebuild \
          (one decision = push[+evict] + posterior, m=64 candidates) =="
@@ -172,7 +195,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
 
     println!("\n== perf: end-to-end decision latency (candidates + posterior + argmax) ==");
     {
-        use drone::bandit::encode::ActionSpace;
+        use drone::bandit::encode::{ActionSpace, JointSpace};
         use drone::config::BanditConfig;
         use drone::monitor::context::ContextVector;
         use drone::orchestrators::bandit_core::{Acquisition, BanditCore};
@@ -185,7 +208,13 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         let backends = vec![("native", Backend::Native)];
         for (backend_kind, mut backend) in backends {
             let cfg = BanditConfig::default();
-            let mut core = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, true, 0);
+            let mut core = BanditCore::new(
+                JointSpace::single(ActionSpace::default()),
+                cfg,
+                Acquisition::Ucb,
+                true,
+                0,
+            );
             let mut rng2 = Pcg64::new(2);
             let ctx = ContextVector { workload: 0.5, ..Default::default() };
             for i in 0..30 {
@@ -200,6 +229,29 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                     let _ = core.select(&mut backend, &ctx, &mut rng2);
                 },
             );
+            report(&r);
+        }
+        // The same decision loop over the two-factor hybrid-joint space:
+        // the per-decision cost of the wider action space, end to end.
+        {
+            let js = JointSpace::new(vec![
+                ActionSpace::hybrid_batch(4),
+                ActionSpace::microservices(4),
+            ]);
+            let dim = js.dim();
+            let mut core =
+                BanditCore::new(js, BanditConfig::default(), Acquisition::Ucb, true, 0);
+            let mut backend = Backend::native_cached();
+            let mut rng2 = Pcg64::new(3);
+            let ctx = ContextVector { workload: 0.5, ..Default::default() };
+            for i in 0..30 {
+                let a = core.candgen.decode(&vec![0.5; dim]);
+                core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
+            }
+            let _ = core.select(&mut backend, &ctx, &mut rng2);
+            let r = bench("decide joint(batch+micro) m=256 window=30", budget_s, || {
+                let _ = core.select(&mut backend, &ctx, &mut rng2);
+            });
             report(&r);
         }
     }

@@ -5,13 +5,19 @@
 //! perturbations of the incumbent best action, and (c) the incumbent itself
 //! (so the argmax can always stand pat). The batch size matches the
 //! artifact's M.
+//!
+//! The generator operates on the *factored* [`JointSpace`]: Halton points
+//! and perturbations span the concatenated encoding of every tenant
+//! factor, so a joint batch+micro space is searched exactly like the
+//! single-tenant spaces were — one normalized vector, per-factor
+//! decode/clamp on the way out.
 
-use super::encode::{Action, ActionSpace};
+use super::encode::{Action, ActionSpace, JointAction, JointSpace};
 use crate::util::rng::{Halton, Pcg64};
 
 #[derive(Clone, Debug)]
 pub struct CandidateGen {
-    space: ActionSpace,
+    space: JointSpace,
     halton: Halton,
     /// Local-perturbation scale in normalized units.
     pub local_sigma: f64,
@@ -20,7 +26,7 @@ pub struct CandidateGen {
 }
 
 impl CandidateGen {
-    pub fn new(space: ActionSpace, seed_offset: u64) -> Self {
+    pub fn new(space: JointSpace, seed_offset: u64) -> Self {
         let dims = space.dim();
         Self {
             space,
@@ -30,20 +36,27 @@ impl CandidateGen {
         }
     }
 
-    pub fn space(&self) -> &ActionSpace {
+    pub fn space(&self) -> &JointSpace {
         &self.space
     }
 
-    /// Generate `m` candidates (normalized encodings). The incumbent (if
-    /// any) occupies slot 0 exactly.
+    /// Generate exactly `m` candidates (normalized encodings). The
+    /// incumbent (if any) occupies slot 0 exactly — but only when `m > 0`:
+    /// no candidates requested means none, incumbent or not (the original
+    /// bug pushed the incumbent before consulting `m`). For `m >= 1` the
+    /// local target `1 + min(floor(m * local_frac), m - 1)` is <= m by
+    /// construction and both fill loops stop at `m`.
     pub fn generate(
         &mut self,
         m: usize,
-        incumbent: Option<&Action>,
+        incumbent: Option<&JointAction>,
         rng: &mut Pcg64,
     ) -> Vec<Vec<f64>> {
         let dim = self.space.dim();
         let mut out: Vec<Vec<f64>> = Vec::with_capacity(m);
+        if m == 0 {
+            return out;
+        }
         let inc_enc = incumbent.map(|a| self.space.encode(a));
         if let Some(enc) = &inc_enc {
             out.push(enc.clone());
@@ -64,19 +77,20 @@ impl CandidateGen {
         while out.len() < m {
             out.push(self.halton.next_point());
         }
+        debug_assert_eq!(out.len(), m);
         debug_assert!(out.iter().all(|p| p.len() == dim));
         out
     }
 
-    /// Decode candidate `i` into a concrete (clamped) action.
-    pub fn decode(&self, enc: &[f64]) -> Action {
+    /// Decode candidate `i` into concrete (per-factor clamped) actions.
+    pub fn decode(&self, enc: &[f64]) -> JointAction {
         self.space.clamp(self.space.decode(enc))
     }
 }
 
-/// The paper's initial-point heuristic (Sec. 4.5): start from *half of the
-/// currently available resources* — minimum configurations can stall
-/// (PageRank under 12 GB), maximums waste money.
+/// The paper's initial-point heuristic (Sec. 4.5) for one tenant factor:
+/// start from *half of the currently available resources* — minimum
+/// configurations can stall (PageRank under 12 GB), maximums waste money.
 pub fn initial_action(space: &ActionSpace, free_frac: f64) -> Action {
     let f = 0.5 * free_frac.clamp(0.0, 1.0);
     let mid = |(lo, hi): (f64, f64)| lo + f * (hi - lo);
@@ -89,8 +103,13 @@ pub fn initial_action(space: &ActionSpace, free_frac: f64) -> Action {
     })
 }
 
-/// Failure-recovery escalation (Sec. 4.5): midpoint between the failed
-/// action and the maximum configuration.
+/// The initial heuristic across every factor of a joint space.
+pub fn initial_joint(space: &JointSpace, free_frac: f64) -> JointAction {
+    JointAction::new(space.factors().iter().map(|f| initial_action(f, free_frac)).collect())
+}
+
+/// Failure-recovery escalation (Sec. 4.5) for one tenant factor: midpoint
+/// between the failed action and the maximum configuration.
 pub fn recovery_action(space: &ActionSpace, failed: &Action) -> Action {
     let mid = |v: f64, (_, hi): (f64, f64)| 0.5 * (v + hi);
     let pods: Vec<usize> = failed
@@ -106,15 +125,31 @@ pub fn recovery_action(space: &ActionSpace, failed: &Action) -> Action {
     })
 }
 
+/// Recovery escalation across every factor of a joint space.
+pub fn recovery_joint(space: &JointSpace, failed: &JointAction) -> JointAction {
+    JointAction::new(
+        space
+            .factors()
+            .iter()
+            .zip(&failed.parts)
+            .map(|(f, a)| recovery_action(f, a))
+            .collect(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn single_default() -> JointSpace {
+        JointSpace::single(ActionSpace::default())
+    }
+
     #[test]
     fn batch_size_and_bounds() {
-        let mut g = CandidateGen::new(ActionSpace::default(), 0);
+        let mut g = CandidateGen::new(single_default(), 0);
         let mut rng = Pcg64::new(1);
-        let inc = initial_action(g.space(), 1.0);
+        let inc = initial_joint(g.space(), 1.0);
         let c = g.generate(64, Some(&inc), &mut rng);
         assert_eq!(c.len(), 64);
         for p in &c {
@@ -127,9 +162,9 @@ mod tests {
 
     #[test]
     fn local_candidates_cluster_near_incumbent() {
-        let mut g = CandidateGen::new(ActionSpace::default(), 0);
+        let mut g = CandidateGen::new(single_default(), 0);
         let mut rng = Pcg64::new(2);
-        let inc = initial_action(g.space(), 1.0);
+        let inc = initial_joint(g.space(), 1.0);
         let enc = g.space().encode(&inc);
         let c = g.generate(128, Some(&inc), &mut rng);
         let dist = |p: &[f64]| -> f64 {
@@ -145,10 +180,58 @@ mod tests {
 
     #[test]
     fn no_incumbent_is_all_global() {
-        let mut g = CandidateGen::new(ActionSpace::default(), 7);
+        let mut g = CandidateGen::new(single_default(), 7);
         let mut rng = Pcg64::new(3);
         let c = g.generate(16, None, &mut rng);
         assert_eq!(c.len(), 16);
+    }
+
+    /// Regression (issue 5 satellite): `generate` must honour `m` exactly.
+    /// Before the clamp, an incumbent with `m == 0` still returned one
+    /// candidate (the incumbent slot was pushed before `m` was consulted),
+    /// and a pathological `local_frac` could aim the local target past `m`.
+    #[test]
+    fn generate_returns_exactly_m_candidates_always() {
+        let mut rng = Pcg64::new(4);
+        let inc = initial_joint(&single_default(), 1.0);
+        for local_frac in [0.0, 0.6, 1.0, 2.5] {
+            for m in [0usize, 1, 2, 3, 7, 64] {
+                let mut g = CandidateGen::new(single_default(), 0);
+                g.local_frac = local_frac;
+                let with_inc = g.generate(m, Some(&inc), &mut rng);
+                assert_eq!(
+                    with_inc.len(),
+                    m,
+                    "m={m} local_frac={local_frac} with incumbent"
+                );
+                let mut g2 = CandidateGen::new(single_default(), 0);
+                g2.local_frac = local_frac;
+                let without = g2.generate(m, None, &mut rng);
+                assert_eq!(without.len(), m, "m={m} local_frac={local_frac} no incumbent");
+                if m > 0 {
+                    assert_eq!(with_inc[0], g.space().encode(&inc), "incumbent keeps slot 0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn two_factor_candidates_span_the_concatenated_space() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let dim = js.dim();
+        let mut g = CandidateGen::new(js.clone(), 0);
+        let mut rng = Pcg64::new(9);
+        let inc = initial_joint(&js, 1.0);
+        let c = g.generate(32, Some(&inc), &mut rng);
+        assert_eq!(c.len(), 32);
+        for p in &c {
+            assert_eq!(p.len(), dim);
+            assert!(p.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let a = g.decode(p);
+            assert_eq!(a.parts.len(), 2);
+            // Per-factor clamp guarantees every tenant keeps >= 1 pod.
+            assert!(a.parts.iter().all(|part| part.total_pods() >= 1));
+        }
     }
 
     #[test]
@@ -162,6 +245,11 @@ mod tests {
         assert!(b.total_pods() < a.total_pods());
         assert!(b.cpu_m < a.cpu_m);
         assert!(b.total_pods() >= 1);
+        // The joint version distributes the heuristic per factor.
+        let js = JointSpace::new(vec![space.clone(), ActionSpace::microservices(4)]);
+        let ja = initial_joint(&js, 1.0);
+        assert_eq!(ja.parts.len(), 2);
+        assert_eq!(ja.parts[0], a);
     }
 
     #[test]
@@ -174,5 +262,15 @@ mod tests {
         assert!(r.cpu_m > failed.cpu_m);
         assert!(r.total_pods() > failed.total_pods());
         assert!(r.ram_mb <= space.ram_mb.1);
+        // Joint recovery escalates every factor independently.
+        let js = JointSpace::new(vec![space.clone(), ActionSpace::microservices(4)]);
+        let jf = JointAction::new(vec![
+            failed.clone(),
+            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 200.0, ram_mb: 512.0, net_mbps: 100.0 },
+        ]);
+        let jr = recovery_joint(&js, &jf);
+        assert!(jr.parts[0].ram_mb > jf.parts[0].ram_mb);
+        assert!(jr.parts[1].ram_mb > jf.parts[1].ram_mb);
+        assert!(jr.parts[1].ram_mb <= ActionSpace::microservices(4).ram_mb.1);
     }
 }

@@ -1,13 +1,25 @@
-//! Action encoding (Sec. 4.5): the 7-dimensional action space — a per-zone
-//! scheduling sub-vector (4 zones) plus per-pod CPU, RAM and network
-//! bandwidth — scalarized and min-max normalized into [0,1]^7 for the GP's
-//! stationary kernel. Joint GP inputs are [action || context] = 13 dims,
-//! matching the AOT artifact geometry (python/compile/model.py).
+//! Action encoding (Sec. 4.5): per-tenant action spaces — a per-zone
+//! scheduling sub-vector plus per-pod CPU, RAM and network bandwidth —
+//! scalarized and min-max normalized into [0,1]^(zones+3) for the GP's
+//! stationary kernel.
+//!
+//! Since the factored-action-space refactor a single-tenant [`ActionSpace`]
+//! is one *factor* inside a [`JointSpace`]: an ordered list of tenant
+//! factors whose normalized encodings are concatenated into one GP input
+//! vector, with per-factor decode/clamp and `dim()` summed across factors.
+//! Every consumer (window geometry, candidate generation, zeta schedules,
+//! artifact shapes) takes its dimensions from the space it was constructed
+//! with — [`ACTION_DIM`]/[`JOINT_DIM`] below describe only the *default
+//! single-tenant* geometry (4 zones + 3 sizing dims + 6 context dims = 13,
+//! matching the AOT artifact emitted by python/compile/model.py); they are
+//! not compile-time truths of the runtime path.
 
 use crate::monitor::context::{ContextVector, CTX_DIM};
 use crate::sim::resources::Resources;
 
+/// Action dims of the *default* single-tenant space (4 zones + 3 sizing).
 pub const ACTION_DIM: usize = 7;
+/// Joint GP input dims of the default single-tenant space + context.
 pub const JOINT_DIM: usize = ACTION_DIM + CTX_DIM; // 13
 
 /// A concrete resource-orchestration decision.
@@ -86,6 +98,30 @@ impl ActionSpace {
             net_mbps: (50.0, 2_000.0),
         }
     }
+
+    /// The batch-executor factor of the joint hybrid space: a small number
+    /// of executor-sized pods per zone (the co-tenant never needs the
+    /// full 8-per-zone batch grid when it shares the cluster with a
+    /// serving tenant), with a RAM floor high enough that a one-executor
+    /// configuration can still make progress.
+    ///
+    /// Bounds are chosen so the paper's initial heuristic at full
+    /// availability (`initial_action(f, 1.0)`: half of max pods, midpoint
+    /// resources) reproduces the fixed `hybrid` suite's co-tenant
+    /// *exactly* — one executor per zone at (4000 cpu_m, 16384 ram_mb,
+    /// 2000 net_mbps). The reactive heuristics pin their co-tenant factor
+    /// at that point, which makes the `hybrid` vs `hybrid-joint` rows of
+    /// Table 5 a paired control: for them only the suite changes, never
+    /// the batch deployment.
+    pub fn hybrid_batch(zones: usize) -> Self {
+        Self {
+            zones,
+            max_pods_per_zone: 2,
+            cpu_m: (500.0, 7_500.0),
+            ram_mb: (4_096.0, 28_672.0),
+            net_mbps: (400.0, 3_600.0),
+        }
+    }
 }
 
 fn norm(v: f64, (lo, hi): (f64, f64)) -> f64 {
@@ -145,8 +181,152 @@ impl ActionSpace {
     }
 }
 
-/// Joint [action || context] feature vector fed to the GP.
-pub fn joint_features(space: &ActionSpace, a: &Action, ctx: &ContextVector) -> Vec<f64> {
+// ---------------------------------------------------------------------------
+// Factored multi-tenant action space
+// ---------------------------------------------------------------------------
+
+/// One joint decision across every tenant factor of a [`JointSpace`]:
+/// `parts[i]` is the concrete action for factor `i`, in factor order.
+///
+/// Single-tenant policies are the degenerate one-part case —
+/// [`JointAction::single`] / [`JointAction::primary`] — and encode to
+/// exactly the bytes [`ActionSpace::encode`] produced before the factored
+/// refactor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct JointAction {
+    pub parts: Vec<Action>,
+}
+
+impl JointAction {
+    pub fn single(a: Action) -> Self {
+        Self { parts: vec![a] }
+    }
+
+    pub fn new(parts: Vec<Action>) -> Self {
+        assert!(!parts.is_empty(), "a joint action needs at least one factor");
+        Self { parts }
+    }
+
+    /// The first factor's action — *the* action of a single-tenant space.
+    pub fn primary(&self) -> &Action {
+        &self.parts[0]
+    }
+
+    /// The last factor's action. By convention the serving tenant the
+    /// reactive heuristics manage sits last (see `JointSpace` docs).
+    pub fn serving(&self) -> &Action {
+        self.parts.last().expect("non-empty by construction")
+    }
+
+    /// Total requested RAM footprint across every factor (the safe
+    /// bandit's P(x, w) numerator for joint spaces).
+    pub fn total_ram_mb(&self) -> f64 {
+        self.parts.iter().map(Action::total_ram_mb).sum()
+    }
+
+    pub fn total_pods(&self) -> usize {
+        self.parts.iter().map(Action::total_pods).sum()
+    }
+}
+
+/// The factored action space: an ordered list of tenant factors.
+///
+/// Encoding is the concatenation of each factor's min-max normalized
+/// encoding, so `dim()` is the sum of factor dims and the GP's joint
+/// input is `[factor 0 enc || factor 1 enc || ... || context]`. Decode
+/// and clamp distribute per factor. Factor order is part of a space's
+/// identity (it fixes the encoding layout); by convention co-tenant
+/// factors come first and the latency-critical serving tenant last —
+/// `HybridEnv`'s joint space is `[batch executors, micro services]`.
+#[derive(Clone, Debug)]
+pub struct JointSpace {
+    factors: Vec<ActionSpace>,
+}
+
+impl JointSpace {
+    pub fn new(factors: Vec<ActionSpace>) -> Self {
+        assert!(!factors.is_empty(), "a joint space needs at least one factor");
+        Self { factors }
+    }
+
+    /// The degenerate single-tenant space (every pre-factored env).
+    pub fn single(space: ActionSpace) -> Self {
+        Self { factors: vec![space] }
+    }
+
+    pub fn factors(&self) -> &[ActionSpace] {
+        &self.factors
+    }
+
+    pub fn n_factors(&self) -> usize {
+        self.factors.len()
+    }
+
+    /// The first factor — *the* space of a single-tenant policy.
+    pub fn primary(&self) -> &ActionSpace {
+        &self.factors[0]
+    }
+
+    /// The last factor (the serving tenant; see the type docs).
+    pub fn serving(&self) -> &ActionSpace {
+        self.factors.last().expect("non-empty by construction")
+    }
+
+    /// Concatenated action dims across factors.
+    pub fn dim(&self) -> usize {
+        self.factors.iter().map(ActionSpace::dim).sum()
+    }
+
+    /// GP joint-input dims: concatenated action dims + context dims.
+    pub fn joint_dim(&self) -> usize {
+        self.dim() + CTX_DIM
+    }
+
+    /// Encode a joint action into [0,1]^dim() — factor encodings
+    /// concatenated in factor order. A single factor reproduces
+    /// [`ActionSpace::encode`] byte-for-byte.
+    pub fn encode(&self, a: &JointAction) -> Vec<f64> {
+        assert_eq!(a.parts.len(), self.factors.len(), "factor count mismatch");
+        let mut v = Vec::with_capacity(self.dim());
+        for (space, part) in self.factors.iter().zip(&a.parts) {
+            v.extend_from_slice(&space.encode(part));
+        }
+        v
+    }
+
+    /// Decode a normalized point back into per-factor concrete actions.
+    pub fn decode(&self, v: &[f64]) -> JointAction {
+        assert!(v.len() >= self.dim());
+        let mut off = 0;
+        let parts = self
+            .factors
+            .iter()
+            .map(|space| {
+                let part = space.decode(&v[off..off + space.dim()]);
+                off += space.dim();
+                part
+            })
+            .collect();
+        JointAction { parts }
+    }
+
+    /// Clamp every factor's action into its bounds (each factor keeps at
+    /// least one pod, as in the single-tenant clamp).
+    pub fn clamp(&self, a: JointAction) -> JointAction {
+        assert_eq!(a.parts.len(), self.factors.len(), "factor count mismatch");
+        JointAction {
+            parts: self
+                .factors
+                .iter()
+                .zip(a.parts)
+                .map(|(space, part)| space.clamp(part))
+                .collect(),
+        }
+    }
+}
+
+/// Joint [action factors || context] feature vector fed to the GP.
+pub fn joint_features(space: &JointSpace, a: &JointAction, ctx: &ContextVector) -> Vec<f64> {
     let mut v = space.encode(a);
     v.extend_from_slice(&ctx.to_array());
     v
@@ -210,12 +390,67 @@ mod tests {
 
     #[test]
     fn joint_features_layout() {
-        let s = ActionSpace::default();
-        let a =
-            Action { zone_pods: vec![1, 1, 1, 1], cpu_m: 1000.0, ram_mb: 1024.0, net_mbps: 500.0 };
+        let s = JointSpace::single(ActionSpace::default());
+        let a = JointAction::single(Action {
+            zone_pods: vec![1, 1, 1, 1],
+            cpu_m: 1000.0,
+            ram_mb: 1024.0,
+            net_mbps: 500.0,
+        });
         let ctx = ContextVector { workload: 0.9, ..Default::default() };
         let f = joint_features(&s, &a, &ctx);
         assert_eq!(f.len(), JOINT_DIM);
+        assert_eq!(s.joint_dim(), JOINT_DIM);
         assert!((f[ACTION_DIM] - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_factor_joint_space_is_byte_identical_to_action_space() {
+        let s = ActionSpace::default();
+        let js = JointSpace::single(s.clone());
+        let a =
+            Action { zone_pods: vec![2, 0, 5, 1], cpu_m: 4000.0, ram_mb: 8192.0, net_mbps: 2500.0 };
+        let ja = JointAction::single(a.clone());
+        let flat = s.encode(&a);
+        let joint = js.encode(&ja);
+        assert_eq!(flat.len(), joint.len());
+        for (x, y) in flat.iter().zip(&joint) {
+            assert_eq!(x.to_bits(), y.to_bits(), "single-factor encoding must be byte-identical");
+        }
+        assert_eq!(js.dim(), s.dim());
+        assert_eq!(js.decode(&joint).parts[0], s.decode(&flat));
+    }
+
+    #[test]
+    fn two_factor_joint_space_concatenates_and_round_trips() {
+        let batch = ActionSpace::default();
+        let micro = ActionSpace::microservices(4);
+        let js = JointSpace::new(vec![batch.clone(), micro.clone()]);
+        assert_eq!(js.dim(), batch.dim() + micro.dim());
+        assert_eq!(js.n_factors(), 2);
+        let ja = JointAction::new(vec![
+            Action {
+                zone_pods: vec![1, 0, 2, 0],
+                cpu_m: 4000.0,
+                ram_mb: 16_384.0,
+                net_mbps: 2000.0,
+            },
+            Action { zone_pods: vec![2, 2, 1, 1], cpu_m: 900.0, ram_mb: 1024.0, net_mbps: 300.0 },
+        ]);
+        let v = js.encode(&ja);
+        assert_eq!(v.len(), js.dim());
+        // The factor layout is [batch || micro]: the batch encoding is a
+        // strict prefix, bit-for-bit.
+        let prefix = batch.encode(&ja.parts[0]);
+        for (i, x) in prefix.iter().enumerate() {
+            assert_eq!(x.to_bits(), v[i].to_bits());
+        }
+        let back = js.clamp(js.decode(&v));
+        assert_eq!(back.parts[0].zone_pods, ja.parts[0].zone_pods);
+        assert_eq!(back.parts[1].zone_pods, ja.parts[1].zone_pods);
+        assert!((back.parts[1].cpu_m - ja.parts[1].cpu_m).abs() < 1.0);
+        assert_eq!(ja.total_pods(), 3 + 6);
+        assert!((ja.total_ram_mb() - (3.0 * 16_384.0 + 6.0 * 1024.0)).abs() < 1e-9);
+        assert_eq!(js.serving().max_pods_per_zone, micro.max_pods_per_zone);
     }
 }

@@ -10,8 +10,12 @@ pub mod gp_incremental;
 pub mod window;
 
 pub use acquisition::{argmax, argmax_filtered, expected_improvement, lcb, ucb, zeta_schedule};
-pub use candidates::{initial_action, recovery_action, CandidateGen};
-pub use encode::{joint_features, Action, ActionSpace, ACTION_DIM, JOINT_DIM};
+pub use candidates::{
+    initial_action, initial_joint, recovery_action, recovery_joint, CandidateGen,
+};
+pub use encode::{
+    joint_features, Action, ActionSpace, JointAction, JointSpace, ACTION_DIM, JOINT_DIM,
+};
 pub use gp::{gp_posterior, GpHyper};
 pub use gp_incremental::{CacheStats, CachedGp};
 pub use window::{Observation, SlidingWindow};

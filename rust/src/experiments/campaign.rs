@@ -77,6 +77,11 @@ pub enum Suite {
     /// one shared cluster (`env::HybridEnv`) — the scenario-diversity
     /// proof of the environment layer.
     Hybrid,
+    /// The joint-rightsizing variant of the co-location scenario: the
+    /// policy's factored action space spans both tenants (batch executor
+    /// factor + micro service factor), so its gain over the fixed
+    /// co-tenant `hybrid` suite is directly measurable (Table 5).
+    HybridJoint,
     /// Fig. 1: single Spark jobs across a total-RAM sweep, container vs VM.
     Fig1Sweep,
     /// Fig. 2: Sort runs under interference across data sizes, Spark vs
@@ -95,6 +100,7 @@ pub const ALL_SUITES: &[Suite] = &[
     Suite::MicroPublic,
     Suite::MicroPrivate,
     Suite::Hybrid,
+    Suite::HybridJoint,
 ];
 
 /// The figure-specific sweep suites (policy axis = deployment variant).
@@ -108,6 +114,7 @@ impl Suite {
             Suite::MicroPublic => "micro-public",
             Suite::MicroPrivate => "micro-private",
             Suite::Hybrid => "hybrid",
+            Suite::HybridJoint => "hybrid-joint",
             Suite::Fig1Sweep => "fig1",
             Suite::Fig2Variance => "fig2",
             Suite::Fig4Affinity => "fig4",
@@ -125,6 +132,23 @@ impl Suite {
         }
     }
 
+    /// True when `env` is the environment family this suite registers —
+    /// the pairing a well-formed scenario key must satisfy. Store
+    /// compaction drops entries that violate it (e.g. hand-edited or
+    /// stale-schema stores).
+    pub fn matches_env(&self, env: &EnvKind) -> bool {
+        matches!(
+            (self, env),
+            (Suite::BatchPublic | Suite::BatchPrivate, EnvKind::Batch { .. })
+                | (Suite::MicroPublic | Suite::MicroPrivate, EnvKind::Micro { .. })
+                | (Suite::Hybrid, EnvKind::Hybrid { .. })
+                | (Suite::HybridJoint, EnvKind::HybridJoint { .. })
+                | (Suite::Fig1Sweep, EnvKind::SingleJob { .. })
+                | (Suite::Fig2Variance, EnvKind::SortVariance { .. })
+                | (Suite::Fig4Affinity, EnvKind::Affinity { .. })
+        )
+    }
+
     /// The paper's baseline lineup for this family. For the figure sweeps
     /// the "policy" axis is the deployment variant being compared.
     pub fn default_policies(&self) -> &'static [&'static str] {
@@ -134,6 +158,7 @@ impl Suite {
             Suite::MicroPublic => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
             Suite::Hybrid => &["k8s-hpa", "autopilot", "showar", "drone"],
+            Suite::HybridJoint => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::Fig1Sweep => &["container", "vm"],
             Suite::Fig2Variance => &["spark", "flink"],
             Suite::Fig4Affinity => &["colocated", "isolated"],
@@ -174,6 +199,10 @@ pub enum EnvKind {
     /// Heterogeneous co-location loop (`env::HybridEnv`): SocialNet plus a
     /// recurring batch tenant of `workload` on one shared cluster.
     Hybrid { workload: BatchWorkload, steps: u64, base_rps: f64, amplitude_rps: f64 },
+    /// Joint-rightsizing co-location (`env::HybridEnv` with
+    /// `HybridEnvConfig::joint`): the two-factor action space spans both
+    /// tenants.
+    HybridJoint { workload: BatchWorkload, steps: u64, base_rps: f64, amplitude_rps: f64 },
     /// One statically-provisioned Spark job at a total-RAM point (Fig. 1);
     /// the policy axis selects container vs VM deployment.
     SingleJob { workload: BatchWorkload, ram_gb: u32 },
@@ -191,6 +220,7 @@ impl EnvKind {
             EnvKind::Batch { workload, .. } => workload.name().to_string(),
             EnvKind::Micro { .. } => "SocialNet".to_string(),
             EnvKind::Hybrid { workload, .. } => format!("{}+SocialNet", workload.name()),
+            EnvKind::HybridJoint { workload, .. } => format!("{}+SocialNet", workload.name()),
             EnvKind::SingleJob { workload, ram_gb } => {
                 format!("{}@{}GB", workload.name(), ram_gb)
             }
@@ -225,6 +255,14 @@ impl EnvKind {
                 json_f64(*base_rps),
                 json_f64(*amplitude_rps)
             ),
+            EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps } => format!(
+                "{{\"kind\": \"hybrid-joint\", \"workload\": {}, \"steps\": {}, \
+                 \"base_rps\": {}, \"amplitude_rps\": {}}}",
+                json_str(workload.name()),
+                steps,
+                json_f64(*base_rps),
+                json_f64(*amplitude_rps)
+            ),
             EnvKind::SingleJob { workload, ram_gb } => format!(
                 "{{\"kind\": \"single-job\", \"workload\": {}, \"ram_gb\": {}}}",
                 json_str(workload.name()),
@@ -254,6 +292,12 @@ impl EnvKind {
                 amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
             }),
             "hybrid" => Some(EnvKind::Hybrid {
+                workload: workload()?,
+                steps: v.get("steps")?.as_u64()?,
+                base_rps: v.get("base_rps")?.f64_or_nan()?,
+                amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+            }),
+            "hybrid-joint" => Some(EnvKind::HybridJoint {
                 workload: workload()?,
                 steps: v.get("steps")?.as_u64()?,
                 base_rps: v.get("base_rps")?.f64_or_nan()?,
@@ -388,6 +432,12 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
             // One co-location cell per campaign: the batch co-tenant is the
             // first requested workload (SparkPi in the default lineup).
             Suite::Hybrid => vec![EnvKind::Hybrid {
+                workload: spec.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi),
+                steps: spec.micro_steps,
+                base_rps: spec.micro_base_rps,
+                amplitude_rps: spec.micro_amplitude_rps,
+            }],
+            Suite::HybridJoint => vec![EnvKind::HybridJoint {
                 workload: spec.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi),
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
@@ -681,6 +731,14 @@ fn run_scenario(
         EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
             let mut env = HybridEnvConfig::new(*workload, sc.setting, *steps);
+            env.trace.base_rps = *base_rps;
+            env.trace.amplitude_rps = *amplitude_rps;
+            env.deadline = deadline;
+            (*steps, rows_of(run_hybrid_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
+        }
+        EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let mut env = HybridEnvConfig::joint(*workload, sc.setting, *steps);
             env.trace.base_rps = *base_rps;
             env.trace.amplitude_rps = *amplitude_rps;
             env.deadline = deadline;
@@ -1003,9 +1061,11 @@ impl CampaignResult {
                 self.aggregates.iter().filter(|a| a.suite == suite).collect();
             // Hybrid reports the microservice SLO (p90) as its raw perf.
             let perf_unit = match suite {
-                Suite::MicroPublic | Suite::MicroPrivate | Suite::Hybrid | Suite::Fig4Affinity => {
-                    "P90 ms"
-                }
+                Suite::MicroPublic
+                | Suite::MicroPrivate
+                | Suite::Hybrid
+                | Suite::HybridJoint
+                | Suite::Fig4Affinity => "P90 ms",
                 _ => "elapsed s",
             };
             let mut tab = Table::new(
@@ -1277,8 +1337,10 @@ mod tests {
 
     #[test]
     fn suites_parse_forms() {
-        assert_eq!(parse_suites("all").unwrap().len(), 5);
+        assert_eq!(parse_suites("all").unwrap().len(), 6);
         assert!(parse_suites("all").unwrap().contains(&Suite::Hybrid));
+        assert!(parse_suites("all").unwrap().contains(&Suite::HybridJoint));
+        assert_eq!(parse_suites("hybrid-joint").unwrap(), vec![Suite::HybridJoint]);
         let two = parse_suites("batch-public, micro-private").unwrap();
         assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
         assert_eq!(parse_suites("hybrid").unwrap(), vec![Suite::Hybrid]);
@@ -1347,6 +1409,12 @@ mod tests {
             EnvKind::Batch { workload: BatchWorkload::LogisticRegression, steps: 30, stress: 0.05 },
             EnvKind::Micro { steps: 360, base_rps: 60.0, amplitude_rps: 140.0 },
             EnvKind::Hybrid {
+                workload: BatchWorkload::SparkPi,
+                steps: 12,
+                base_rps: 60.0,
+                amplitude_rps: 140.0,
+            },
+            EnvKind::HybridJoint {
                 workload: BatchWorkload::SparkPi,
                 steps: 12,
                 base_rps: 60.0,

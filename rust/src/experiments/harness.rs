@@ -16,7 +16,7 @@
 
 use crate::apps::batch::{BatchWorkload, Platform};
 use crate::apps::microservice::ServiceGraph;
-use crate::bandit::encode::Action;
+use crate::bandit::encode::JointAction;
 use crate::config::SystemConfig;
 use crate::runtime::Backend;
 use crate::sim::cluster::Cluster;
@@ -71,7 +71,10 @@ pub struct StepRecord {
     pub dropped: u64,
     pub offered: u64,
     pub latencies_ms: Vec<f64>,
-    pub action: Option<Action>,
+    /// The joint action the policy decided (one part per tenant factor;
+    /// single-tenant envs carry a one-part action). In-memory only — not
+    /// serialized into campaign records.
+    pub action: Option<JointAction>,
 }
 
 // ---------------------------------------------------------------------------

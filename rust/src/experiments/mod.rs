@@ -101,6 +101,7 @@ fn driver(id: &str) -> Option<Driver> {
         "table2" => Driver::Standalone(|sys, opts| tables::table2(sys, opts.scale)),
         "table3" => Driver::Store(tables::table3),
         "table4" => Driver::Store(tables::table4),
+        "table5" => Driver::Store(tables::table5),
         "regret" => Driver::Standalone(|sys, opts| regret::regret(sys, opts.scale)),
         "ablation" => Driver::Standalone(|sys, opts| regret::ablation(sys, opts.scale)),
         _ => return None,
@@ -156,5 +157,5 @@ pub fn run_with_store(
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig8c",
-    "table2", "table3", "table4", "regret", "ablation",
+    "table2", "table3", "table4", "table5", "regret", "ablation",
 ];

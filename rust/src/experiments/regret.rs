@@ -6,7 +6,7 @@
 //! the theorems guarantee.
 
 use crate::bandit::acquisition;
-use crate::bandit::encode::{ActionSpace, JOINT_DIM};
+use crate::bandit::encode::{ActionSpace, JointSpace};
 use crate::config::{BanditConfig, SystemConfig};
 use crate::monitor::context::ContextVector;
 use crate::orchestrators::bandit_core::{Acquisition, BanditCore};
@@ -18,10 +18,11 @@ use crate::util::table::Table;
 
 /// Smooth synthetic objective over the normalized joint space: a mixture of
 /// Gaussian bumps whose optimum location *shifts with the context*, so
-/// context-blind policies pay a persistent regret.
+/// context-blind policies pay a persistent regret. Written against the
+/// default single-factor space's layout (z[..7] action, z[7..13] context);
+/// the runs below construct exactly that space.
 fn synthetic_f(z: &[f64]) -> f64 {
-    // z[..7] action, z[7..13] context; optimum action depends on workload
-    // context z[7] and spot z[12].
+    // Optimum action depends on workload context z[7] and spot z[12].
     let target_ram = 0.35 + 0.5 * z[7]; // heavier workload wants more ram
     let target_pods = 0.3 + 0.4 * z[7];
     let target_cpu = 0.5 - 0.25 * z[12]; // pricey spot wants smaller cpu
@@ -69,8 +70,14 @@ fn run_regret(
         lengthscale: 0.9,
         ..Default::default()
     };
-    let mut core =
-        BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, use_context, seed);
+    let mut core = BanditCore::new(
+        JointSpace::single(ActionSpace::default()),
+        cfg,
+        Acquisition::Ucb,
+        use_context,
+        seed,
+    );
+    let joint_dim = core.space.joint_dim();
     let mut rng = Pcg64::new(seed);
     let mut regrets = Vec::with_capacity(steps);
     for t in 0..steps {
@@ -92,7 +99,7 @@ fn run_regret(
         } else {
             match core.posterior_primary(backend, &ctx, &encs) {
                 Ok((mu, sigma)) => {
-                    let zeta = acquisition::zeta_schedule(t as u64 + 1, JOINT_DIM, 1.0);
+                    let zeta = acquisition::zeta_schedule(t as u64 + 1, joint_dim, 1.0);
                     acquisition::argmax(&acquisition::ucb(&mu, &sigma, zeta)).unwrap_or(0)
                 }
                 Err(_) => 0,
@@ -165,8 +172,14 @@ pub fn ablation(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
     let mut run_variant = |name: String, window: usize, m: usize, use_ctx: bool| {
         let mut backend = Backend::auto(&sys.artifacts_dir);
         let cfg = BanditConfig { window, candidates: m, ..Default::default() };
-        let mut core =
-            BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, use_ctx, sys.seed);
+        let mut core = BanditCore::new(
+            JointSpace::single(ActionSpace::default()),
+            cfg,
+            Acquisition::Ucb,
+            use_ctx,
+            sys.seed,
+        );
+        let joint_dim = core.space.joint_dim();
         let mut rng = Pcg64::new(sys.seed + 7);
         let mut cum = 0.0;
         let mut decide_ms = vec![];
@@ -188,7 +201,7 @@ pub fn ablation(sys: &SystemConfig, scale: f64) -> anyhow::Result<()> {
             } else {
                 match core.posterior_primary(&mut backend, &ctx, &encs) {
                     Ok((mu, sigma)) => {
-                        let zeta = acquisition::zeta_schedule(t as u64 + 1, JOINT_DIM, 1.0);
+                        let zeta = acquisition::zeta_schedule(t as u64 + 1, joint_dim, 1.0);
                         acquisition::argmax(&acquisition::ucb(&mu, &sigma, zeta)).unwrap_or(0)
                     }
                     Err(_) => 0,

@@ -300,6 +300,49 @@ impl CampaignStore {
         Ok(EnsureReport { cached, executed, indices })
     }
 
+    /// Compaction (`drone campaign --compact`): drop every cached
+    /// scenario whose key can no longer be produced by the current
+    /// registry and config —
+    ///
+    ///   * the whole store, when its config fingerprint differs from the
+    ///     current `SystemConfig` (those records describe another system
+    ///     and can never be cache hits again);
+    ///   * entries whose suite/env pairing is inconsistent (a suite can
+    ///     only register its own environment family — hand-edited or
+    ///     stale-schema leftovers);
+    ///   * entries whose policy is neither a registered orchestrator nor
+    ///     a variant of the suite's own axis (e.g. a policy renamed away);
+    ///   * truncated (`timed_out`) outcomes, which `ensure` already
+    ///     treats as stale and would re-execute anyway;
+    ///   * duplicate keys (first occurrence wins).
+    ///
+    /// Returns the number of scenarios dropped; the caller persists via
+    /// the (atomic) [`CampaignStore::save`].
+    pub fn compact(&mut self, sys: &SystemConfig) -> usize {
+        let before = self.outcomes.len();
+        let fp = sys.fingerprint();
+        if self.fingerprint.as_deref() != Some(fp.as_str()) {
+            self.outcomes.clear();
+            self.fingerprint = Some(fp);
+            return before;
+        }
+        let mut seen: BTreeSet<String> = BTreeSet::new();
+        self.outcomes.retain(|o| {
+            let sc = &o.scenario;
+            let policy_known = sc.suite.default_policies().contains(&sc.policy.as_str())
+                || crate::orchestrators::ALL_POLICIES.contains(&sc.policy.as_str());
+            sc.suite.matches_env(&sc.env)
+                && policy_known
+                && !o.summary.timed_out
+                && seen.insert(sc.key())
+        });
+        // Re-number the surviving scenarios (ids are positional).
+        for (i, o) in self.outcomes.iter_mut().enumerate() {
+            o.scenario.id = i;
+        }
+        before - self.outcomes.len()
+    }
+
     /// The store's content as a `CampaignResult` (aggregates recomputed
     /// over everything it holds, seeds in first-seen order).
     pub fn to_result(&self) -> CampaignResult {
@@ -714,6 +757,87 @@ mod tests {
         let mut back = CampaignStore::open(&path);
         assert_eq!(back.ensure(&requests, &sys, &exec64).unwrap().cached, 0);
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    /// `--compact` satellite: entries that no registered suite/config can
+    /// produce any more are dropped — timed-out leftovers, unknown
+    /// policies, suite/env mismatches, duplicates — and the compacted
+    /// store is persisted atomically (no temp file survives, and the
+    /// rewritten file parses clean).
+    #[test]
+    fn compact_drops_stale_entries_and_saves_atomically() {
+        use crate::experiments::campaign::summarize;
+
+        let sys = small_sys();
+        let mut spec = small_spec();
+        spec.policies = Some(vec!["k8s-hpa".into(), "drone".into()]);
+        spec.seeds = vec![0];
+        let requests = enumerate(&spec);
+        let path = tmp_store_path("compact");
+        let exec = ExecPolicy { jobs: 2, ..Default::default() };
+
+        let mut store = CampaignStore::open(&path);
+        store.ensure(&requests, &sys, &exec).unwrap();
+        let live = store.len();
+        assert_eq!(live, 2);
+
+        // Inject stale entries of every kind compaction must catch.
+        let mk = |suite: Suite, env: EnvKind, policy: &str, timed_out: bool| {
+            let mut summary = summarize(&[]);
+            summary.timed_out = timed_out;
+            crate::experiments::campaign::ScenarioOutcome {
+                scenario: Scenario {
+                    id: 0,
+                    suite,
+                    env,
+                    setting: suite.setting(),
+                    policy: policy.into(),
+                    seed: 99,
+                },
+                summary,
+                records: vec![],
+            }
+        };
+        let batch_env =
+            EnvKind::Batch { workload: BatchWorkload::SparkPi, steps: 4, stress: 0.0 };
+        // (a) policy that no registry knows.
+        store.outcomes.push(mk(Suite::BatchPublic, batch_env.clone(), "renamed-away", false));
+        // (b) suite/env mismatch (a micro suite cannot hold a batch env).
+        store.outcomes.push(mk(Suite::MicroPublic, batch_env.clone(), "drone", false));
+        // (c) timed-out truncated leftover.
+        store.outcomes.push(mk(Suite::BatchPublic, batch_env.clone(), "accordia", true));
+        // (d) duplicate key of a live entry.
+        let dup = store.outcomes[0].clone();
+        store.outcomes.push(dup);
+
+        let dropped = store.compact(&sys);
+        assert_eq!(dropped, 4, "all four stale entries dropped");
+        assert_eq!(store.len(), live, "live entries survive");
+        for (i, o) in store.outcomes.iter().enumerate() {
+            assert_eq!(o.scenario.id, i, "ids re-numbered positionally");
+        }
+        store.save().unwrap();
+        // Atomic save: no temp file left behind, and reopening yields the
+        // compacted content (which is warm for the original requests).
+        let dir = path.parent().unwrap();
+        let stray: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
+            .collect();
+        assert!(stray.is_empty(), "temp files must not survive a save");
+        let mut reopened = CampaignStore::open(&path);
+        assert_eq!(reopened.len(), live);
+        let warm = reopened.ensure(&requests, &sys, &exec).unwrap();
+        assert_eq!((warm.cached, warm.executed), (requests.len(), 0));
+
+        // A config change compacts to empty (fingerprint mismatch).
+        let mut other = small_sys();
+        other.cluster.workers = 9;
+        let mut cold = CampaignStore::open(&path);
+        assert_eq!(cold.compact(&other), live);
+        assert!(cold.is_empty());
+        let _ = std::fs::remove_dir_all(dir);
     }
 
     #[test]

@@ -1,6 +1,8 @@
-//! Table drivers — Tables 2, 3 and 4 of the paper.
+//! Table drivers — Tables 2, 3 and 4 of the paper, plus Table 5 (the
+//! factored action space's joint vs fixed-co-tenant hybrid comparison,
+//! beyond the paper).
 //!
-//! Tables 3 and 4 are campaign-store readers (see `figures.rs` for the
+//! Tables 3, 4 and 5 are campaign-store readers (see `figures.rs` for the
 //! pattern); Table 2 is a pure pricing model with no environment to cache.
 
 use crate::apps::batch::BatchWorkload;
@@ -11,7 +13,7 @@ use crate::util::rng::Pcg64;
 use crate::util::stats;
 use crate::util::table::{pm, Table};
 
-use super::campaign::{EnvKind, Scenario, Suite, BATCH_PRIVATE_STRESS};
+use super::campaign::{CampaignSpec, EnvKind, Scenario, Suite, BATCH_PRIVATE_STRESS};
 use super::store::CampaignStore;
 use super::RunOpts;
 
@@ -215,6 +217,104 @@ pub fn table4(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
     }
     tab.print();
     println!("(paper shape: k8s-hpa most drops, drone least)");
+    let p = csv.finish()?;
+    println!("rows -> {}\n", p.display());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Table 5 — joint batch+micro rightsizing vs the fixed co-tenant hybrid
+// ---------------------------------------------------------------------------
+
+/// Decision periods table 5 runs per scenario at a given `--scale`
+/// (shared with CI's prebuild grid: `drone campaign --experiments
+/// hybrid,hybrid-joint --steps <this>`).
+pub fn table5_steps(scale: f64) -> u64 {
+    ((120.0 * scale) as u64).max(6)
+}
+
+/// The factored action space's headline measurement: the same policy
+/// lineup run through the co-location scenario with (a) the fixed
+/// one-executor-per-zone batch tenant (`hybrid`) and (b) the joint
+/// two-factor action space (`hybrid-joint`) — one table, so the gain of
+/// searching the *joint* configuration space is read off directly.
+pub fn table5(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
+    let steps = table5_steps(opts.scale);
+    let defaults = CampaignSpec::default();
+    let policies = ["k8s-hpa", "autopilot", "showar", "drone"];
+    let env_for = |suite: Suite| -> EnvKind {
+        let workload = defaults.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi);
+        let (base_rps, amplitude_rps) = (defaults.micro_base_rps, defaults.micro_amplitude_rps);
+        match suite {
+            Suite::HybridJoint => {
+                EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps }
+            }
+            _ => EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps },
+        }
+    };
+    let mut requests = vec![];
+    for &policy in &policies {
+        for suite in [Suite::Hybrid, Suite::HybridJoint] {
+            requests.push(Scenario::request(suite, env_for(suite), policy, sys.seed));
+        }
+    }
+    let report = store.ensure(&requests, sys, &opts.exec())?;
+    println!("{}", report.describe());
+
+    let warmup = (steps / 3) as usize;
+    let mut tab = Table::new(
+        "Table 5 — joint batch+micro rightsizing vs fixed co-tenant (post-warmup)",
+        &[
+            "policy", "fixed P90 ms", "joint P90 ms", "fixed cost $", "joint cost $",
+            "P90 delta",
+        ],
+    );
+    let mut csv = CsvWriter::for_experiment(
+        "table5",
+        &["policy", "mode", "post_p90_ms", "total_cost", "drop_rate", "errors"],
+    );
+    for (pi, &policy) in policies.iter().enumerate() {
+        let mut cells = vec![policy.to_string()];
+        let mut p90s = vec![];
+        let mut costs = vec![];
+        for (mi, mode) in ["fixed", "joint"].iter().enumerate() {
+            let idx = report.indices[pi * 2 + mi];
+            let o = &store.outcomes[idx];
+            let post = &o.records[warmup.min(o.records.len())..];
+            let raw: Vec<f64> =
+                post.iter().filter(|r| r.perf_raw.is_finite()).map(|r| r.perf_raw).collect();
+            let p90 = if raw.is_empty() { f64::NAN } else { stats::mean(&raw) };
+            let cost: f64 = o.records.iter().map(|r| r.cost).sum();
+            let offered: u64 = o.records.iter().map(|r| r.offered).sum();
+            let dropped: u64 = o.records.iter().map(|r| r.dropped).sum();
+            let errors: u64 = o.records.iter().map(|r| r.errors as u64).sum();
+            p90s.push(p90);
+            costs.push(cost);
+            csv.row(&[
+                policy.into(),
+                (*mode).into(),
+                format!("{p90:.2}"),
+                format!("{cost:.4}"),
+                format!("{:.4}", dropped as f64 / offered.max(1) as f64),
+                format!("{errors}"),
+            ]);
+        }
+        for &p90 in &p90s {
+            cells.push(if p90.is_finite() { format!("{p90:.1}") } else { "halted".into() });
+        }
+        for &c in &costs {
+            cells.push(format!("{c:.3}"));
+        }
+        cells.push(if p90s.iter().all(|v| v.is_finite()) && p90s[0] > 0.0 {
+            format!("{:+.1}%", (p90s[1] - p90s[0]) / p90s[0] * 100.0)
+        } else {
+            "n/a".into()
+        });
+        tab.row(&cells);
+    }
+    tab.print();
+    println!("(the bandits can exploit the joint space; the reactive heuristics cannot —");
+    println!(" their batch factor stays pinned, so their delta isolates the wider search)");
     let p = csv.finish()?;
     println!("rows -> {}\n", p.display());
     Ok(())

@@ -14,7 +14,7 @@ use drone::util::cli::Args;
 use drone::util::table::Table;
 
 fn main() {
-    let args = Args::from_env_with_switches(&["no-exec", "refresh"]);
+    let args = Args::from_env_with_switches(&["no-exec", "refresh", "compact"]);
     let file = args.get("config").and_then(|p| match Config::load(p) {
         Ok(c) => Some(c),
         Err(e) => {
@@ -43,13 +43,14 @@ fn print_usage() {
         "drone — dynamic resource orchestration for the containerized cloud
 
 USAGE:
-  drone run --policy <name> --env <batch|micro|hybrid> [--workload <w>]
+  drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint> [--workload <w>]
             [--setting <public|private>] [--steps N] [--seed S] [--config file.toml]
   drone experiment <id|all> [--scale 0.2] [--seed S] [--jobs N] [--timeout SECS] [--no-exec]
                    [--refresh] [--digest-points K]
   drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
                  [--steps N] [--policies p1,p2] [--workloads w1,w2] [--timeout SECS]
                  [--stress F] [--scale S] [--refresh] [--digest-points K]
+  drone campaign --compact
   drone list
   drone selfcheck
 
@@ -60,13 +61,16 @@ error (pure-reader mode), --refresh forces re-execution of matching cached
 scenarios (replaced in place), --timeout caps each scenario's wall clock
 (truncating its records) and --digest-points sizes the latency quantile
 digest (default 64; a store built at another size is rebuilt).
+`campaign --compact` drops stored scenarios whose key no longer matches
+any registered suite or the current config fingerprint (plus timed-out
+leftovers and duplicates), reporting compacted(n).
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
-             table2 table3 table4 regret ablation
+             table2 table3 table4 table5 regret ablation
 SUITES: batch-public batch-private micro-public micro-private hybrid
-        fig1 fig2 fig4"
+        hybrid-joint fig1 fig2 fig4"
     );
 }
 
@@ -141,7 +145,7 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
             }
             tab.print();
         }
-        "hybrid" => {
+        "hybrid" | "hybrid-joint" => {
             let w = match parse_workload(&args.get_str("workload", "sparkpi")) {
                 Some(w) => w,
                 None => {
@@ -149,13 +153,25 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
                     return 2;
                 }
             };
-            let env = experiments::HybridEnvConfig::new(w, setting, steps);
+            let joint = envname == "hybrid-joint";
+            let env = if joint {
+                experiments::HybridEnvConfig::joint(w, setting, steps)
+            } else {
+                experiments::HybridEnvConfig::new(w, setting, steps)
+            };
             let recs = experiments::run_hybrid_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mode = if joint { "joint" } else { "fixed co-tenant" };
             let mut tab = Table::new(
-                &format!("{policy} on {}+SocialNet ({setting:?})", w.name()),
-                &["step", "p90_ms", "score", "drops", "offered", "errors", "ram_gb"],
+                &format!("{policy} on {}+SocialNet ({setting:?}, {mode})", w.name()),
+                &["step", "p90_ms", "score", "drops", "offered", "errors", "ram_gb", "batch pods"],
             );
             for r in &recs {
+                let batch_pods = r
+                    .action
+                    .as_ref()
+                    .filter(|_| joint)
+                    .map(|a| format!("{}", a.parts[0].total_pods()))
+                    .unwrap_or_else(|| "fixed".into());
                 tab.row(&[
                     format!("{}", r.step),
                     format!("{:.1}", r.perf_raw),
@@ -164,6 +180,7 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
                     format!("{}", r.offered),
                     format!("{}", r.errors),
                     format!("{:.1}", r.ram_alloc_mb / 1024.0),
+                    batch_pods,
                 ]);
             }
             tab.print();
@@ -205,6 +222,23 @@ fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
 
 /// `drone campaign`: enumerate the scenario grid and run it in parallel.
 fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
+    if args.has_opt("compact") {
+        // Store maintenance only: drop unmatchable/stale scenarios, save
+        // atomically, report. No scenarios are executed.
+        let mut store = experiments::CampaignStore::open_default();
+        let before = store.len();
+        let n = store.compact(sys);
+        if let Err(e) = store.save() {
+            eprintln!("writing compacted campaign store failed: {e:#}");
+            return 1;
+        }
+        println!(
+            "campaign store: compacted({n}) — {} of {before} scenarios kept at {}",
+            store.len(),
+            store.path().display()
+        );
+        return 0;
+    }
     let mut spec = campaign::CampaignSpec::default();
     match campaign::parse_suites(&args.get_str("experiments", "all")) {
         Ok(suites) => spec.suites = suites,

@@ -3,10 +3,16 @@
 //! acquisition argmax. Policies differ only in (a) which features they
 //! condition on (context-aware or not), (b) the acquisition function, and
 //! (c) the reward definition — exactly the deltas Table 1 catalogues.
+//!
+//! The core is built over a factored [`JointSpace`]: every dimension it
+//! touches — the window geometry, the GP input width, the zeta schedule —
+//! comes from the space the core was constructed with, so a two-factor
+//! joint batch+micro space and the classic single-tenant spaces run the
+//! exact same code with different `space.joint_dim()`.
 
 use crate::bandit::acquisition;
-use crate::bandit::candidates::{initial_action, recovery_action, CandidateGen};
-use crate::bandit::encode::{joint_features, Action, ActionSpace, JOINT_DIM};
+use crate::bandit::candidates::{initial_joint, recovery_joint, CandidateGen};
+use crate::bandit::encode::{joint_features, JointAction, JointSpace};
 use crate::bandit::gp::GpHyper;
 use crate::bandit::window::{Observation, SlidingWindow};
 use crate::config::BanditConfig;
@@ -31,7 +37,7 @@ pub enum Acquisition {
 }
 
 pub struct BanditCore {
-    pub space: ActionSpace,
+    pub space: JointSpace,
     pub window: SlidingWindow,
     pub candgen: CandidateGen,
     pub hyp: GpHyper,
@@ -45,19 +51,19 @@ pub struct BanditCore {
     /// by this much before a serving deployment is disturbed. None = pure
     /// UCB argmax (the Cherrypick/Accordia baselines).
     pub stickiness: Option<f64>,
-    pub incumbent: Option<Action>,
+    pub incumbent: Option<JointAction>,
     pub t: u64,
 }
 
 impl BanditCore {
     pub fn new(
-        space: ActionSpace,
+        space: JointSpace,
         cfg: BanditConfig,
         acquisition: Acquisition,
         use_context: bool,
         seed_offset: u64,
     ) -> Self {
-        let window = SlidingWindow::new(cfg.window, JOINT_DIM);
+        let window = SlidingWindow::new(cfg.window, space.joint_dim());
         let candgen = CandidateGen::new(space.clone(), seed_offset);
         let hyp = GpHyper {
             noise_var: cfg.noise_var,
@@ -78,23 +84,23 @@ impl BanditCore {
         }
     }
 
-    pub fn features(&self, a: &Action, ctx: &ContextVector) -> Vec<f64> {
+    pub fn features(&self, a: &JointAction, ctx: &ContextVector) -> Vec<f64> {
         let c = if self.use_context { *ctx } else { ContextVector::default() };
         joint_features(&self.space, a, &c)
     }
 
     /// Record the outcome of the previous action.
-    pub fn record(&mut self, a: &Action, ctx: &ContextVector, reward: f64, resource: f64) {
+    pub fn record(&mut self, a: &JointAction, ctx: &ContextVector, reward: f64, resource: f64) {
         let z = self.features(a, ctx);
         self.window.push(Observation { z, y: reward, y_resource: resource });
     }
 
     /// Candidate batch (encoded) + decoded actions, padded to the artifact M.
-    pub fn candidates(&mut self, rng: &mut Pcg64) -> (Vec<Vec<f64>>, Vec<Action>) {
+    pub fn candidates(&mut self, rng: &mut Pcg64) -> (Vec<Vec<f64>>, Vec<JointAction>) {
         let m = self.cfg.candidates;
         let inc = self.incumbent.clone();
         let encs = self.candgen.generate(m, inc.as_ref(), rng);
-        let actions: Vec<Action> = encs.iter().map(|e| self.candgen.decode(e)).collect();
+        let actions: Vec<JointAction> = encs.iter().map(|e| self.candgen.decode(e)).collect();
         (encs, actions)
     }
 
@@ -123,7 +129,7 @@ impl BanditCore {
         let y_scaled: Vec<f64> = ys.iter().map(|v| (v - y_mean) / y_std).collect();
         let c = if self.use_context { *ctx } else { ContextVector::default() };
         let ctx_arr = c.to_array();
-        let d = JOINT_DIM;
+        let d = self.space.joint_dim();
         let mut x = Vec::with_capacity(encs.len() * d);
         for e in encs {
             x.extend_from_slice(e);
@@ -166,24 +172,34 @@ impl BanditCore {
         backend: &mut Backend,
         ctx: &ContextVector,
         rng: &mut Pcg64,
-    ) -> Action {
+    ) -> JointAction {
         self.t += 1;
         if self.window.is_empty() {
-            let a = initial_action(&self.space, 1.0 - ctx.ram_util);
+            let a = initial_joint(&self.space, 1.0 - ctx.ram_util);
             self.incumbent = Some(a.clone());
             return a;
         }
         let (encs, actions) = self.candidates(rng);
+        if actions.is_empty() {
+            // cfg.candidates == 0: nothing to score — stand pat (the
+            // generator honours m exactly, so the incumbent slot is NOT
+            // implicitly present any more).
+            return self.incumbent.clone().unwrap_or_else(|| initial_joint(&self.space, 0.5));
+        }
         let (mu, sigma) = match self.posterior_primary(backend, ctx, &encs) {
             Ok(r) => r,
             Err(_) => {
                 // Backend failure: stand pat (never crash the control loop).
-                return self.incumbent.clone().unwrap_or_else(|| initial_action(&self.space, 0.5));
+                return self
+                    .incumbent
+                    .clone()
+                    .unwrap_or_else(|| initial_joint(&self.space, 0.5));
             }
         };
         let scores = match self.acquisition {
             Acquisition::Ucb => {
-                let zeta = acquisition::zeta_schedule(self.t, JOINT_DIM, self.cfg.zeta_scale);
+                let zeta =
+                    acquisition::zeta_schedule(self.t, self.space.joint_dim(), self.cfg.zeta_scale);
                 acquisition::ucb(&mu, &sigma, zeta)
             }
             Acquisition::ExpectedImprovement => {
@@ -208,9 +224,10 @@ impl BanditCore {
         a
     }
 
-    /// Failure recovery (Sec. 4.5): escalate halfway toward max resources.
-    pub fn recover(&mut self, failed: &Action) -> Action {
-        let a = recovery_action(&self.space, failed);
+    /// Failure recovery (Sec. 4.5): escalate every factor halfway toward
+    /// its maximum resources.
+    pub fn recover(&mut self, failed: &JointAction) -> JointAction {
+        let a = recovery_joint(&self.space, failed);
         self.incumbent = Some(a.clone());
         a
     }
@@ -241,11 +258,12 @@ impl RewardNormalizer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::encode::{ActionSpace, JOINT_DIM};
     use crate::config::BanditConfig;
 
     fn core(acq: Acquisition, use_ctx: bool) -> BanditCore {
         let cfg = BanditConfig { candidates: 32, window: 10, ..Default::default() };
-        BanditCore::new(ActionSpace::default(), cfg, acq, use_ctx, 0)
+        BanditCore::new(JointSpace::single(ActionSpace::default()), cfg, acq, use_ctx, 0)
     }
 
     #[test]
@@ -258,6 +276,13 @@ mod tests {
     }
 
     #[test]
+    fn single_factor_core_keeps_artifact_geometry() {
+        let c = core(Acquisition::Ucb, true);
+        assert_eq!(c.space.joint_dim(), JOINT_DIM);
+        assert_eq!(c.window.dim(), JOINT_DIM);
+    }
+
+    #[test]
     fn first_decision_is_initial_heuristic() {
         let mut c = core(Acquisition::Ucb, true);
         let mut b = Backend::Native;
@@ -265,8 +290,8 @@ mod tests {
         let ctx = ContextVector { ram_util: 0.2, ..Default::default() };
         let a = c.select(&mut b, &ctx, &mut rng);
         // Half of 80% available.
-        assert!(a.total_pods() >= 4);
-        assert!(a.cpu_m > 2000.0);
+        assert!(a.primary().total_pods() >= 4);
+        assert!(a.primary().cpu_m > 2000.0);
     }
 
     #[test]
@@ -280,27 +305,70 @@ mod tests {
         let mut a = c.select(&mut b, &ctx, &mut rng);
         let mut best_seen: f64 = 0.0;
         for _ in 0..25 {
-            let reward = (a.ram_mb - 512.0) / (28_672.0 - 512.0);
+            let reward = (a.primary().ram_mb - 512.0) / (28_672.0 - 512.0);
             c.record(&a.clone(), &ctx, reward, 0.0);
             a = c.select(&mut b, &ctx, &mut rng);
-            best_seen = best_seen.max(a.ram_mb);
+            best_seen = best_seen.max(a.primary().ram_mb);
         }
         // UCB keeps exploring, so assert the trajectory reached the
         // high-ram region and the final point is well above the bottom.
         assert!(best_seen > 0.7 * 28_672.0, "best visited {best_seen}");
-        assert!(a.ram_mb > 0.35 * 28_672.0, "final point too low: {}", a.ram_mb);
+        assert!(a.primary().ram_mb > 0.35 * 28_672.0, "final too low: {}", a.primary().ram_mb);
     }
 
     #[test]
     fn context_blind_features_zero_context() {
         let c = core(Acquisition::Ucb, false);
         let ctx = ContextVector { workload: 0.9, cpu_util: 0.8, ..Default::default() };
-        let a = initial_action(&c.space, 1.0);
+        let a = initial_joint(&c.space, 1.0);
         let f = c.features(&a, &ctx);
         assert!(f[7..].iter().all(|&v| v == 0.0));
         let c2 = core(Acquisition::Ucb, true);
         let f2 = c2.features(&a, &ctx);
         assert!((f2[7] - 0.9).abs() < 1e-12);
+    }
+
+    /// A two-factor core is the same machine at a wider joint dimension:
+    /// the window, candidates and posterior all follow the space.
+    #[test]
+    fn two_factor_core_selects_joint_actions() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let cfg = BanditConfig { candidates: 16, window: 8, ..Default::default() };
+        let mut c = BanditCore::new(js.clone(), cfg, Acquisition::Ucb, true, 0);
+        assert_eq!(c.window.dim(), js.joint_dim());
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(11);
+        let ctx = ContextVector::default();
+        let mut a = c.select(&mut b, &ctx, &mut rng);
+        for _ in 0..6 {
+            assert_eq!(a.parts.len(), 2);
+            assert!(a.parts.iter().all(|p| p.total_pods() >= 1));
+            let reward = a.parts[1].ram_mb / 4096.0;
+            c.record(&a.clone(), &ctx, reward, 0.0);
+            a = c.select(&mut b, &ctx, &mut rng);
+        }
+    }
+
+    /// `candidates = 0` must stand pat, not panic: the generator honours
+    /// `m` exactly now, so the incumbent is no longer implicitly returned
+    /// as a candidate.
+    #[test]
+    fn zero_candidates_stands_pat() {
+        let cfg = BanditConfig { candidates: 0, window: 10, ..Default::default() };
+        let mut c = BanditCore::new(
+            JointSpace::single(ActionSpace::default()),
+            cfg,
+            Acquisition::Ucb,
+            true,
+            0,
+        );
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(4);
+        let ctx = ContextVector::default();
+        let first = c.select(&mut b, &ctx, &mut rng); // initial heuristic
+        c.record(&first.clone(), &ctx, 0.5, 0.0);
+        let second = c.select(&mut b, &ctx, &mut rng);
+        assert_eq!(second, first, "no candidates => stand pat on the incumbent");
     }
 
     #[test]
@@ -312,7 +380,7 @@ mod tests {
         let a0 = c.select(&mut b, &ctx, &mut rng);
         c.record(&a0, &ctx, 0.3, 0.0);
         let a1 = c.select(&mut b, &ctx, &mut rng);
-        assert!(a1.total_pods() >= 1);
+        assert!(a1.primary().total_pods() >= 1);
     }
 
     #[test]
@@ -334,7 +402,13 @@ mod tests {
     #[test]
     fn cached_backend_matches_oracle_through_core() {
         let cfg = BanditConfig { candidates: 16, window: 8, ..Default::default() };
-        let mut c = BanditCore::new(ActionSpace::default(), cfg, Acquisition::Ucb, true, 0);
+        let mut c = BanditCore::new(
+            JointSpace::single(ActionSpace::default()),
+            cfg,
+            Acquisition::Ucb,
+            true,
+            0,
+        );
         let mut cached = Backend::native_cached();
         let mut oracle = Backend::Native;
         let mut rng = Pcg64::new(7);
@@ -371,11 +445,16 @@ mod tests {
 
     #[test]
     fn recovery_escalates() {
+        use crate::bandit::encode::Action;
         let mut c = core(Acquisition::Ucb, true);
-        let failed =
-            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 150.0 };
+        let failed = JointAction::single(Action {
+            zone_pods: vec![1, 0, 0, 0],
+            cpu_m: 300.0,
+            ram_mb: 600.0,
+            net_mbps: 150.0,
+        });
         let r = c.recover(&failed);
-        assert!(r.ram_mb > failed.ram_mb * 2.0);
+        assert!(r.primary().ram_mb > failed.primary().ram_mb * 2.0);
         assert_eq!(c.incumbent, Some(r));
     }
 }

@@ -14,15 +14,19 @@
 
 use super::bandit_core::{Acquisition, BanditCore};
 use super::traits::{Orchestrator, Telemetry};
-use crate::bandit::encode::{Action, ActionSpace};
+use crate::bandit::encode::{JointAction, JointSpace};
 use crate::config::BanditConfig;
 use crate::runtime::Backend;
 use crate::sim::scheduler::spread_evenly;
 use crate::util::rng::Pcg64;
 
-fn even_spread(space: &ActionSpace, a: &mut Action) {
-    let total = a.total_pods();
-    a.zone_pods = spread_evenly(total, space.zones);
+/// Neither baseline has a scheduling sub-vector (they picked whole-VM
+/// configs), so each tenant factor's pods are spread evenly across zones.
+fn even_spread(space: &JointSpace, a: &mut JointAction) {
+    for (factor, part) in space.factors().iter().zip(a.parts.iter_mut()) {
+        let total = part.total_pods();
+        part.zone_pods = spread_evenly(total, factor.zones);
+    }
 }
 
 pub struct Cherrypick {
@@ -31,7 +35,7 @@ pub struct Cherrypick {
 }
 
 impl Cherrypick {
-    pub fn new(space: ActionSpace, bandit: BanditConfig, seed: u64) -> Self {
+    pub fn new(space: JointSpace, bandit: BanditConfig, seed: u64) -> Self {
         Self {
             core: BanditCore::new(space, bandit, Acquisition::ExpectedImprovement, false, seed),
             cost_weight: 0.5,
@@ -44,7 +48,7 @@ impl Orchestrator for Cherrypick {
         "cherrypick"
     }
 
-    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> JointAction {
         if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
             // Raw normalized signals (stationary targets; see drone.rs).
             let r = perf - self.cost_weight * tel.cost_norm.unwrap_or(0.0);
@@ -65,7 +69,7 @@ pub struct Accordia {
 }
 
 impl Accordia {
-    pub fn new(space: ActionSpace, bandit: BanditConfig, seed: u64) -> Self {
+    pub fn new(space: JointSpace, bandit: BanditConfig, seed: u64) -> Self {
         Self {
             core: BanditCore::new(space, bandit, Acquisition::Ucb, false, seed),
             cost_weight: 0.5,
@@ -78,7 +82,7 @@ impl Orchestrator for Accordia {
         "accordia"
     }
 
-    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> JointAction {
         if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
             // Raw normalized signals (stationary targets; see drone.rs).
             let r = perf - self.cost_weight * tel.cost_norm.unwrap_or(0.0);
@@ -94,9 +98,14 @@ impl Orchestrator for Accordia {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::encode::ActionSpace;
     use crate::monitor::context::ContextVector;
 
-    fn run_steps<O: Orchestrator>(o: &mut O, n: usize, seed: u64) -> Vec<Action> {
+    fn single_default() -> JointSpace {
+        JointSpace::single(ActionSpace::default())
+    }
+
+    fn run_steps<O: Orchestrator>(o: &mut O, n: usize, seed: u64) -> Vec<JointAction> {
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(seed);
         let mut tel = Telemetry::initial(ContextVector::default());
@@ -105,7 +114,7 @@ mod tests {
             let a = o.decide(&tel, &mut b, &mut rng);
             tel.last_action = Some(a.clone());
             // Synthetic feedback: prefer ~16 GB/pod, penalize pods.
-            let perf = 1.0 - ((a.ram_mb - 16_384.0) / 28_000.0).abs();
+            let perf = 1.0 - ((a.primary().ram_mb - 16_384.0) / 28_000.0).abs();
             tel.perf_score = Some(perf);
             tel.cost_norm = Some(a.total_pods() as f64 / 32.0);
             out.push(a);
@@ -116,19 +125,19 @@ mod tests {
     #[test]
     fn cherrypick_spreads_evenly_and_learns() {
         let cfg = BanditConfig { candidates: 32, ..Default::default() };
-        let mut cp = Cherrypick::new(ActionSpace::default(), cfg, 0);
+        let mut cp = Cherrypick::new(single_default(), cfg, 0);
         let actions = run_steps(&mut cp, 12, 1);
         for a in &actions {
-            let max = *a.zone_pods.iter().max().unwrap() as i64;
-            let min = *a.zone_pods.iter().min().unwrap() as i64;
-            assert!(max - min <= 1, "even spread: {:?}", a.zone_pods);
+            let max = *a.primary().zone_pods.iter().max().unwrap() as i64;
+            let min = *a.primary().zone_pods.iter().min().unwrap() as i64;
+            assert!(max - min <= 1, "even spread: {:?}", a.primary().zone_pods);
         }
     }
 
     #[test]
     fn accordia_context_blind() {
         let cfg = BanditConfig { candidates: 16, ..Default::default() };
-        let acc = Accordia::new(ActionSpace::default(), cfg, 0);
+        let acc = Accordia::new(single_default(), cfg, 0);
         assert!(!acc.core.use_context);
         assert_eq!(acc.name(), "accordia");
     }
@@ -136,10 +145,29 @@ mod tests {
     #[test]
     fn both_produce_valid_actions() {
         let cfg = BanditConfig { candidates: 16, ..Default::default() };
-        let mut acc = Accordia::new(ActionSpace::default(), cfg.clone(), 0);
+        let mut acc = Accordia::new(single_default(), cfg.clone(), 0);
         for a in run_steps(&mut acc, 8, 2) {
-            assert!(a.total_pods() >= 1);
-            assert!(a.ram_mb >= 512.0);
+            assert!(a.primary().total_pods() >= 1);
+            assert!(a.primary().ram_mb >= 512.0);
+        }
+    }
+
+    /// In a two-factor space both baselines spread *each* tenant factor
+    /// evenly across its own zones.
+    #[test]
+    fn even_spread_applies_per_factor() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let cfg = BanditConfig { candidates: 16, ..Default::default() };
+        let mut acc = Accordia::new(js, cfg, 0);
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(3);
+        let tel = Telemetry::initial(ContextVector::default());
+        let a = acc.decide(&tel, &mut b, &mut rng);
+        assert_eq!(a.parts.len(), 2);
+        for part in &a.parts {
+            let max = *part.zone_pods.iter().max().unwrap() as i64;
+            let min = *part.zone_pods.iter().min().unwrap() as i64;
+            assert!(max - min <= 1, "per-factor even spread: {:?}", part.zone_pods);
         }
     }
 }

@@ -11,11 +11,22 @@
 //!   rule (mean + k*sigma of usage), horizontal via a PI controller on the
 //!   latency SLO error, plus locality affinity (concentrate pods into few
 //!   zones to cut cross-zone hops).
+//!
+//! None of these systems can search a *joint* multi-tenant space — that is
+//! precisely the gap the factored bandit exploits. In a multi-factor
+//! [`JointSpace`] each heuristic therefore drives only the serving tenant
+//! (the last factor, whose telemetry — CPU utilization, per-pod RAM usage,
+//! P90 latency — is what its control law consumes) and holds every
+//! co-tenant factor at the paper's fixed initial heuristic (half of
+//! maximum, the same deployment a human operator would pin). For the
+//! single-factor spaces of all pre-existing environments this degenerates
+//! to exactly the old behaviour.
 
 use std::collections::VecDeque;
 
 use super::traits::{Orchestrator, Telemetry};
-use crate::bandit::encode::{Action, ActionSpace};
+use crate::bandit::candidates::initial_action;
+use crate::bandit::encode::{Action, ActionSpace, JointAction, JointSpace};
 use crate::runtime::Backend;
 use crate::sim::scheduler::spread_evenly;
 use crate::util::rng::Pcg64;
@@ -24,8 +35,29 @@ fn clamp_pods(space: &ActionSpace, n: f64) -> usize {
     (n.round() as usize).clamp(1, space.zones * space.max_pods_per_zone)
 }
 
+/// Split a joint space into (fixed co-tenant actions, the serving factor
+/// the heuristic controls).
+fn co_tenant_parts(space: &JointSpace) -> (Vec<Action>, ActionSpace) {
+    let factors = space.factors();
+    let fixed = factors[..factors.len() - 1]
+        .iter()
+        .map(|f| initial_action(f, 1.0))
+        .collect();
+    (fixed, space.serving().clone())
+}
+
+/// Assemble the joint action: fixed co-tenant parts + the reactive part.
+fn with_co_tenants(fixed: &[Action], reactive: Action) -> JointAction {
+    let mut parts = fixed.to_vec();
+    parts.push(reactive);
+    JointAction::new(parts)
+}
+
 pub struct KubeHpa {
+    /// The serving-tenant factor the reactive law controls.
     space: ActionSpace,
+    /// Fixed allocations for any co-tenant factors (empty = single-tenant).
+    co_parts: Vec<Action>,
     pub target_cpu_util: f64,
     /// Rule-based replica floor — deployment specs ship a generous
     /// `minReplicas` (the "default executor count" users configure).
@@ -37,16 +69,18 @@ pub struct KubeHpa {
 }
 
 impl KubeHpa {
-    pub fn new(space: ActionSpace) -> Self {
+    pub fn new(space: JointSpace) -> Self {
         Self::with_profile(space, super::AppProfile::Batch)
     }
 
-    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+    pub fn with_profile(space: JointSpace, profile: super::AppProfile) -> Self {
+        let (co_parts, tenant) = co_tenant_parts(&space);
         match profile {
             // Executor-sized pods with a generous minReplicas (typical
             // Spark-on-k8s deployment spec).
             super::AppProfile::Batch => Self {
-                space,
+                space: tenant,
+                co_parts,
                 target_cpu_util: 0.5,
                 min_pods: 8,
                 per_pod_cpu_m: 2000.0,
@@ -56,7 +90,8 @@ impl KubeHpa {
             },
             // Container-sized service pods.
             super::AppProfile::Microservices => Self {
-                space,
+                space: tenant,
+                co_parts,
                 target_cpu_util: 0.5,
                 min_pods: 2,
                 per_pod_cpu_m: 1000.0,
@@ -73,7 +108,7 @@ impl Orchestrator for KubeHpa {
         "k8s-hpa"
     }
 
-    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> JointAction {
         // desired = ceil(current * util / target), the HPA formula,
         // clamped to the rule-based minReplicas floor.
         if tel.app_cpu_util > 0.0 {
@@ -84,17 +119,21 @@ impl Orchestrator for KubeHpa {
                 self.pods = clamp_pods(&self.space, desired).max(self.min_pods);
             }
         }
-        Action {
-            zone_pods: spread_evenly(self.pods, self.space.zones),
-            cpu_m: self.per_pod_cpu_m,
-            ram_mb: self.per_pod_ram_mb,
-            net_mbps: self.per_pod_net_mbps,
-        }
+        with_co_tenants(
+            &self.co_parts,
+            Action {
+                zone_pods: spread_evenly(self.pods, self.space.zones),
+                cpu_m: self.per_pod_cpu_m,
+                ram_mb: self.per_pod_ram_mb,
+                net_mbps: self.per_pod_net_mbps,
+            },
+        )
     }
 }
 
 pub struct Autopilot {
     space: ActionSpace,
+    co_parts: Vec<Action>,
     /// Moving window of per-pod RAM usage samples (MB).
     ram_window: VecDeque<f64>,
     cpu_window: VecDeque<f64>,
@@ -106,17 +145,19 @@ pub struct Autopilot {
 }
 
 impl Autopilot {
-    pub fn new(space: ActionSpace) -> Self {
+    pub fn new(space: JointSpace) -> Self {
         Self::with_profile(space, super::AppProfile::Batch)
     }
 
-    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+    pub fn with_profile(space: JointSpace, profile: super::AppProfile) -> Self {
+        let (co_parts, tenant) = co_tenant_parts(&space);
         let (pods, cpu) = match profile {
             super::AppProfile::Batch => (4, 2000.0),
             super::AppProfile::Microservices => (3, 1000.0),
         };
         Self {
-            space,
+            space: tenant,
+            co_parts,
             ram_window: VecDeque::new(),
             cpu_window: VecDeque::new(),
             window_len: 12,
@@ -155,7 +196,7 @@ impl Orchestrator for Autopilot {
         "autopilot"
     }
 
-    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> JointAction {
         if tel.ram_usage_mb_per_pod > 0.0 {
             Self::push(&mut self.ram_window, tel.ram_usage_mb_per_pod, self.window_len);
         }
@@ -172,17 +213,21 @@ impl Orchestrator for Autopilot {
             let desired = self.pods as f64 * u / self.target_cpu_util;
             self.pods = clamp_pods(&self.space, desired);
         }
-        Action {
-            zone_pods: spread_evenly(self.pods, self.space.zones),
-            cpu_m: self.per_pod_cpu_m,
-            ram_mb,
-            net_mbps: 2000.0,
-        }
+        with_co_tenants(
+            &self.co_parts,
+            Action {
+                zone_pods: spread_evenly(self.pods, self.space.zones),
+                cpu_m: self.per_pod_cpu_m,
+                ram_mb,
+                net_mbps: 2000.0,
+            },
+        )
     }
 }
 
 pub struct Showar {
     space: ActionSpace,
+    co_parts: Vec<Action>,
     usage_samples: VecDeque<f64>,
     pub k_sigma: f64,
     /// PI controller on P90 latency vs SLO.
@@ -195,17 +240,19 @@ pub struct Showar {
 }
 
 impl Showar {
-    pub fn new(space: ActionSpace) -> Self {
+    pub fn new(space: JointSpace) -> Self {
         Self::with_profile(space, super::AppProfile::Batch)
     }
 
-    pub fn with_profile(space: ActionSpace, profile: super::AppProfile) -> Self {
+    pub fn with_profile(space: JointSpace, profile: super::AppProfile) -> Self {
+        let (co_parts, tenant) = co_tenant_parts(&space);
         let (pods, cpu) = match profile {
             super::AppProfile::Batch => (4.0, 2000.0),
             super::AppProfile::Microservices => (3.0, 1200.0),
         };
         Self {
-            space,
+            space: tenant,
+            co_parts,
             usage_samples: VecDeque::new(),
             k_sigma: 2.0,
             slo_p90_ms: 120.0,
@@ -223,7 +270,7 @@ impl Orchestrator for Showar {
         "showar"
     }
 
-    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> JointAction {
         if tel.ram_usage_mb_per_pod > 0.0 {
             self.usage_samples.push_back(tel.ram_usage_mb_per_pod);
             while self.usage_samples.len() > 30 {
@@ -258,7 +305,10 @@ impl Orchestrator for Showar {
                 break;
             }
         }
-        Action { zone_pods, cpu_m: self.per_pod_cpu_m, ram_mb, net_mbps: 2000.0 }
+        with_co_tenants(
+            &self.co_parts,
+            Action { zone_pods, cpu_m: self.per_pod_cpu_m, ram_mb, net_mbps: 2000.0 },
+        )
     }
 }
 
@@ -271,40 +321,44 @@ mod tests {
         Telemetry::initial(ContextVector::default())
     }
 
+    fn single_default() -> JointSpace {
+        JointSpace::single(ActionSpace::default())
+    }
+
     #[test]
     fn hpa_scales_with_utilization() {
-        let mut h = KubeHpa::new(ActionSpace::default());
+        let mut h = KubeHpa::new(single_default());
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(0);
         let mut t = tel();
         t.app_cpu_util = 1.0; // 2x over the 0.5 target
         let a1 = h.decide(&t, &mut b, &mut rng);
-        assert_eq!(a1.total_pods(), 24);
+        assert_eq!(a1.primary().total_pods(), 24);
         t.app_cpu_util = 0.0625; // scale down hits the minReplicas floor
         let a2 = h.decide(&t, &mut b, &mut rng);
-        assert_eq!(a2.total_pods(), 8);
+        assert_eq!(a2.primary().total_pods(), 8);
     }
 
     #[test]
     fn hpa_suspends_scaleup_under_memory_stress() {
-        let mut h = KubeHpa::new(ActionSpace::default());
+        let mut h = KubeHpa::new(single_default());
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(0);
         let mut t = tel();
         t.app_cpu_util = 1.0;
         t.ctx.ram_util = 0.9;
         let a = h.decide(&t, &mut b, &mut rng);
-        assert_eq!(a.total_pods(), 12, "no scale-up under RAM stress");
+        assert_eq!(a.primary().total_pods(), 12, "no scale-up under RAM stress");
         // Scale-down still allowed (to the floor).
         t.app_cpu_util = 0.05;
         t.ctx.ram_util = 0.9;
         let a2 = h.decide(&t, &mut b, &mut rng);
-        assert_eq!(a2.total_pods(), 8);
+        assert_eq!(a2.primary().total_pods(), 8);
     }
 
     #[test]
     fn autopilot_tracks_usage_peak() {
-        let mut ap = Autopilot::new(ActionSpace::default());
+        let mut ap = Autopilot::new(single_default());
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(0);
         let mut t = tel();
@@ -315,12 +369,13 @@ mod tests {
         t.ram_usage_mb_per_pod = 3200.0;
         let a = ap.decide(&t, &mut b, &mut rng);
         // Peak 4000 decayed by <= 1 step * margin 1.15.
-        assert!(a.ram_mb > 3200.0 * 1.15 && a.ram_mb < 4000.0 * 1.2, "{}", a.ram_mb);
+        let ram = a.primary().ram_mb;
+        assert!(ram > 3200.0 * 1.15 && ram < 4000.0 * 1.2, "{ram}");
     }
 
     #[test]
     fn showar_pi_reacts_to_slo_violation() {
-        let mut sh = Showar::new(ActionSpace::default());
+        let mut sh = Showar::new(single_default());
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(0);
         let mut t = tel();
@@ -329,13 +384,13 @@ mod tests {
         let a = sh.decide(&t, &mut b, &mut rng);
         assert!(sh.pods > before);
         // Affinity: pods concentrated, not spread.
-        let nonzero = a.zone_pods.iter().filter(|&&k| k > 0).count();
-        assert_eq!(nonzero, 1, "{:?}", a.zone_pods);
+        let nonzero = a.primary().zone_pods.iter().filter(|&&k| k > 0).count();
+        assert_eq!(nonzero, 1, "{:?}", a.primary().zone_pods);
     }
 
     #[test]
     fn showar_vertical_mean_plus_sigma() {
-        let mut sh = Showar::new(ActionSpace::default());
+        let mut sh = Showar::new(single_default());
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(0);
         let mut t = tel();
@@ -344,6 +399,27 @@ mod tests {
             sh.decide(&t, &mut b, &mut rng);
         }
         let a = sh.decide(&t, &mut b, &mut rng);
-        assert!(a.ram_mb > 1000.0 && a.ram_mb < 1600.0, "{}", a.ram_mb);
+        let ram = a.primary().ram_mb;
+        assert!(ram > 1000.0 && ram < 1600.0, "{ram}");
+    }
+
+    /// In a multi-factor space the heuristics drive only the serving
+    /// (last) factor; co-tenant factors stay pinned at the fixed initial
+    /// heuristic across every decision.
+    #[test]
+    fn heuristics_pin_co_tenant_factors() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let pinned = initial_action(&js.factors()[0], 1.0);
+        let mut h = KubeHpa::with_profile(js.clone(), super::super::AppProfile::Microservices);
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        for util in [0.2, 1.0, 0.6] {
+            t.app_cpu_util = util;
+            let a = h.decide(&t, &mut b, &mut rng);
+            assert_eq!(a.parts.len(), 2);
+            assert_eq!(a.parts[0], pinned, "co-tenant factor must stay fixed");
+            assert!(a.serving().total_pods() >= 1);
+        }
     }
 }

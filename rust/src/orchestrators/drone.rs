@@ -10,6 +10,12 @@
 //! UCB on performance restricted to the safe set
 //! { x : LCB_P(x, w) <= P_max } expanded each step from the P GP.
 //!
+//! Both operate on the factored [`JointSpace`]: a single-tenant space is
+//! the degenerate one-factor case, and a joint batch+micro space is simply
+//! a wider GP input — the safe bandit's P(x, w) then observes the *sum*
+//! of every tenant factor's footprint, which is exactly the multi-tenant
+//! cap semantics the private cloud wants.
+//!
 //! Neither policy repacks padded GP arrays per step anymore: the posterior
 //! goes through `Backend::posterior_window`, and the `Backend` handed into
 //! `decide` is held by the harness across decision periods — so with the
@@ -24,7 +30,7 @@ use super::bandit_core::{Acquisition, BanditCore};
 use super::traits::{Orchestrator, Telemetry};
 use crate::bandit::acquisition;
 use crate::bandit::candidates::initial_action;
-use crate::bandit::encode::{Action, ActionSpace, JOINT_DIM};
+use crate::bandit::encode::{Action, JointAction, JointSpace};
 use crate::config::{BanditConfig, ObjectiveConfig};
 use crate::runtime::Backend;
 use crate::util::rng::Pcg64;
@@ -35,7 +41,7 @@ pub struct DronePublic {
 }
 
 impl DronePublic {
-    pub fn new(space: ActionSpace, bandit: BanditConfig, obj: ObjectiveConfig, seed: u64) -> Self {
+    pub fn new(space: JointSpace, bandit: BanditConfig, obj: ObjectiveConfig, seed: u64) -> Self {
         let mut core = BanditCore::new(space, bandit, Acquisition::Ucb, true, seed);
         core.stickiness = Some(0.03);
         Self { core, obj }
@@ -55,7 +61,7 @@ impl Orchestrator for DronePublic {
         "drone"
     }
 
-    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> JointAction {
         if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
             let cost = tel.cost_norm.unwrap_or(0.0);
             let r = self.reward(perf, cost);
@@ -81,7 +87,7 @@ pub struct DronePrivate {
 
 impl DronePrivate {
     pub fn new(
-        space: ActionSpace,
+        space: JointSpace,
         bandit: BanditConfig,
         p_max: f64,
         seed: u64,
@@ -99,24 +105,34 @@ impl DronePrivate {
 
     /// The guaranteed-safe initial set: conservative configurations whose
     /// worst-case allocation stays well under the cap (Sec. 4.5 initial
-    /// point selection: half of currently-available within the cap).
-    fn safe_initial(&self, rng: &mut Pcg64, available_frac: f64) -> Action {
-        let space = &self.core.space;
+    /// point selection: half of currently-available within the cap). Each
+    /// tenant factor is jittered independently inside its own conservative
+    /// region.
+    fn safe_initial(&self, rng: &mut Pcg64, available_frac: f64) -> JointAction {
         let frac = (0.5 * self.p_max * available_frac).clamp(0.05, 0.5);
-        let base = initial_action(space, frac);
-        // Random jitter inside the conservative region for exploration.
-        let zone_pods: Vec<usize> = base
-            .zone_pods
+        let parts = self
+            .core
+            .space
+            .factors()
             .iter()
-            .map(|&k| {
-                let k = k.max(1);
-                (k as f64 * rng.uniform(0.5, 1.2)).round().max(0.0) as usize
+            .map(|space| {
+                let base = initial_action(space, frac);
+                // Random jitter inside the conservative region.
+                let zone_pods: Vec<usize> = base
+                    .zone_pods
+                    .iter()
+                    .map(|&k| {
+                        let k = k.max(1);
+                        (k as f64 * rng.uniform(0.5, 1.2)).round().max(0.0) as usize
+                    })
+                    .collect();
+                let cpu_m = (base.cpu_m * rng.uniform(0.6, 1.1)).max(space.cpu_m.0);
+                let ram_mb = (base.ram_mb * rng.uniform(0.6, 1.1)).max(space.ram_mb.0);
+                let net_mbps = (base.net_mbps * rng.uniform(0.6, 1.1)).max(space.net_mbps.0);
+                space.clamp(Action { zone_pods, cpu_m, ram_mb, net_mbps })
             })
             .collect();
-        let cpu_m = (base.cpu_m * rng.uniform(0.6, 1.1)).max(space.cpu_m.0);
-        let ram_mb = (base.ram_mb * rng.uniform(0.6, 1.1)).max(space.ram_mb.0);
-        let net_mbps = (base.net_mbps * rng.uniform(0.6, 1.1)).max(space.net_mbps.0);
-        space.clamp(Action { zone_pods, cpu_m, ram_mb, net_mbps })
+        JointAction::new(parts)
     }
 }
 
@@ -125,7 +141,7 @@ impl Orchestrator for DronePrivate {
         "drone-safe"
     }
 
-    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action {
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> JointAction {
         self.steps += 1;
         if let (Some(a), Some(perf)) = (&tel.last_action, tel.perf_score) {
             let resource = tel.resource_frac.unwrap_or(0.0);
@@ -134,13 +150,17 @@ impl Orchestrator for DronePrivate {
         if tel.failure {
             if let Some(a) = &tel.last_action {
                 // Recovery must still respect the cap: escalate, then shrink
-                // RAM back under the budget if needed.
+                // RAM back under the budget if needed — across every factor,
+                // since the cap binds the tenants' *combined* footprint.
                 let mut rec = self.core.recover(&a.clone());
                 let cap_mb = self.p_max * 0.9; // leave headroom
                 let total = rec.total_ram_mb();
                 let cluster_guess = total / tel.resource_frac.unwrap_or(0.5).max(0.05);
                 if total > cap_mb * cluster_guess {
-                    rec.ram_mb *= cap_mb * cluster_guess / total;
+                    let shrink = cap_mb * cluster_guess / total;
+                    for part in rec.parts.iter_mut() {
+                        part.ram_mb *= shrink;
+                    }
                     rec = self.core.space.clamp(rec);
                 }
                 self.core.incumbent = Some(rec.clone());
@@ -158,6 +178,13 @@ impl Orchestrator for DronePrivate {
         // Phase 2: UCB on perf restricted to { lcb_P <= P_max }.
         self.core.t += 1;
         let (encs, actions) = self.core.candidates(rng);
+        if actions.is_empty() {
+            // cfg.candidates == 0: nothing to certify — stay in the
+            // guaranteed-safe region instead of indexing an empty batch.
+            let a = self.safe_initial(rng, 1.0 - tel.ctx.ram_util);
+            self.core.incumbent = Some(a.clone());
+            return a;
+        }
         let perf_post = self.core.posterior_primary(backend, &tel.ctx, &encs);
         let res_post = self.core.posterior_resource(backend, &tel.ctx, &encs);
         let (mu_p, sig_p, mu_r, sig_r) = match (perf_post, res_post) {
@@ -180,7 +207,11 @@ impl Orchestrator for DronePrivate {
         let budget = self.p_max - 0.03; // headroom for context drift
         let ucb_r = acquisition::ucb(&mu_r, &sig_r, self.safety_beta);
         let safe: Vec<bool> = ucb_r.iter().map(|&u| u <= budget).collect();
-        let zeta = acquisition::zeta_schedule(self.core.t, JOINT_DIM, self.core.cfg.zeta_scale);
+        let zeta = acquisition::zeta_schedule(
+            self.core.t,
+            self.core.space.joint_dim(),
+            self.core.cfg.zeta_scale,
+        );
         let ucb_p = acquisition::ucb(&mu_p, &sig_p, zeta);
         let mut idx = match acquisition::argmax_filtered(&ucb_p, &safe) {
             Some(i) => i,
@@ -232,9 +263,10 @@ impl Orchestrator for DronePrivate {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::encode::{Action, ActionSpace};
     use crate::monitor::context::ContextVector;
 
-    fn tel_with(a: Option<Action>, perf: Option<f64>, resource: Option<f64>) -> Telemetry {
+    fn tel_with(a: Option<JointAction>, perf: Option<f64>, resource: Option<f64>) -> Telemetry {
         let mut t = Telemetry::initial(ContextVector::default());
         t.last_action = a;
         t.perf_score = perf;
@@ -243,10 +275,14 @@ mod tests {
         t
     }
 
+    fn single_default() -> JointSpace {
+        JointSpace::single(ActionSpace::default())
+    }
+
     #[test]
     fn public_first_action_reasonable() {
         let mut d = DronePublic::new(
-            ActionSpace::default(),
+            single_default(),
             BanditConfig { candidates: 32, ..Default::default() },
             ObjectiveConfig::default(),
             0,
@@ -254,25 +290,29 @@ mod tests {
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(1);
         let a = d.decide(&tel_with(None, None, None), &mut b, &mut rng);
-        assert!(a.total_pods() >= 1);
+        assert!(a.primary().total_pods() >= 1);
     }
 
     #[test]
     fn public_recovers_on_failure() {
         let mut d = DronePublic::new(
-            ActionSpace::default(),
+            single_default(),
             BanditConfig { candidates: 16, ..Default::default() },
             ObjectiveConfig::default(),
             0,
         );
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(2);
-        let failed =
-            Action { zone_pods: vec![1, 0, 0, 0], cpu_m: 300.0, ram_mb: 600.0, net_mbps: 120.0 };
+        let failed = JointAction::single(Action {
+            zone_pods: vec![1, 0, 0, 0],
+            cpu_m: 300.0,
+            ram_mb: 600.0,
+            net_mbps: 120.0,
+        });
         let mut t = tel_with(Some(failed.clone()), Some(0.0), Some(0.1));
         t.failure = true;
         let a = d.decide(&t, &mut b, &mut rng);
-        assert!(a.ram_mb > failed.ram_mb, "recovery escalates RAM");
+        assert!(a.primary().ram_mb > failed.primary().ram_mb, "recovery escalates RAM");
     }
 
     /// With the incremental-cache backend, DronePublic must reproduce the
@@ -284,7 +324,7 @@ mod tests {
     fn public_cached_backend_reproduces_oracle_decisions() {
         let mk = || {
             DronePublic::new(
-                ActionSpace::default(),
+                single_default(),
                 BanditConfig { candidates: 24, ..Default::default() },
                 ObjectiveConfig::default(),
                 0,
@@ -302,7 +342,7 @@ mod tests {
             let a_c = d_cached.decide(&tel_c, &mut b_cached, &mut rng_c);
             let a_o = d_oracle.decide(&tel_o, &mut b_oracle, &mut rng_o);
             assert_eq!(a_c, a_o, "decision diverged at step {step}");
-            let perf = 0.2 + 0.5 * (a_c.ram_mb / 28_672.0).min(1.0);
+            let perf = 0.2 + 0.5 * (a_c.primary().ram_mb / 28_672.0).min(1.0);
             tel_c = tel_with(Some(a_c), Some(perf), Some(0.3));
             tel_o = tel_with(Some(a_o), Some(perf), Some(0.3));
         }
@@ -313,7 +353,7 @@ mod tests {
 
     #[test]
     fn private_explores_safely_then_respects_cap() {
-        let space = ActionSpace::default();
+        let space = single_default();
         let cfg = BanditConfig { candidates: 64, explore_steps: 4, ..Default::default() };
         let cluster_ram_mb = 15.0 * 30_720.0;
         let p_max = 0.65;
@@ -321,7 +361,7 @@ mod tests {
         let mut b = Backend::Native;
         let mut rng = Pcg64::new(3);
         let mut tel = tel_with(None, None, None);
-        let mut last: Option<Action> = None;
+        let mut last: Option<JointAction> = None;
         for step in 0..25u64 {
             let a = d.decide(&tel, &mut b, &mut rng);
             let alloc_frac = a.total_ram_mb() / cluster_ram_mb;
@@ -336,5 +376,26 @@ mod tests {
         // After learning, allocation should track but not wildly exceed cap.
         let final_frac = last.unwrap().total_ram_mb() / cluster_ram_mb;
         assert!(final_frac < p_max * 1.3, "post-convergence near/below cap: {final_frac}");
+    }
+
+    /// The safe bandit over a two-factor space certifies the *combined*
+    /// footprint: warmup actions stay under the cap summed across tenants.
+    #[test]
+    fn private_two_factor_warmup_respects_combined_cap() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let cfg = BanditConfig { candidates: 32, explore_steps: 4, ..Default::default() };
+        let cluster_ram_mb = 15.0 * 30_720.0;
+        let p_max = 0.65;
+        let mut d = DronePrivate::new(js, cfg, p_max, 5);
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(6);
+        let mut tel = tel_with(None, None, None);
+        for _ in 0..4 {
+            let a = d.decide(&tel, &mut b, &mut rng);
+            assert_eq!(a.parts.len(), 2);
+            let frac = a.total_ram_mb() / cluster_ram_mb;
+            assert!(frac <= p_max, "joint warmup must stay safe: {frac}");
+            tel = tel_with(Some(a), Some(0.5), Some(frac));
+        }
     }
 }

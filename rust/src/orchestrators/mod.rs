@@ -13,23 +13,26 @@ pub use baselines_heuristic::{Autopilot, KubeHpa, Showar};
 pub use drone::{DronePrivate, DronePublic};
 pub use traits::{Orchestrator, Telemetry};
 
-use crate::bandit::encode::ActionSpace;
+use crate::bandit::encode::JointSpace;
 use crate::config::{BanditConfig, ObjectiveConfig};
 
 /// Which application profile a policy instance will manage — heuristic
 /// baselines ship different fixed per-pod requests for executor-sized
 /// batch pods vs container-sized microservice pods (Sec. 4.5
-/// "characterization of applications").
+/// "characterization of applications"). In a multi-factor joint space the
+/// profile describes the *serving* (last) factor; see
+/// `baselines_heuristic` for the co-tenant convention.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AppProfile {
     Batch,
     Microservices,
 }
 
-/// Factory used by the CLI/experiments: construct a policy by name.
+/// Factory used by the CLI/experiments: construct a policy by name over
+/// the (possibly multi-factor) joint action space of its environment.
 pub fn make(
     name: &str,
-    space: ActionSpace,
+    space: JointSpace,
     bandit: BanditConfig,
     obj: ObjectiveConfig,
     p_max: f64,
@@ -61,27 +64,34 @@ pub const ALL_POLICIES: &[&str] = &[
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::bandit::encode::ActionSpace;
 
     #[test]
     fn factory_constructs_every_policy() {
-        for profile in [AppProfile::Batch, AppProfile::Microservices] {
-            for name in ALL_POLICIES {
-                let o = make(
-                    name,
-                    ActionSpace::default(),
-                    BanditConfig::default(),
-                    ObjectiveConfig::default(),
-                    0.65,
-                    0,
-                    profile,
-                );
-                assert!(o.is_some(), "{name}");
-                assert!(!o.unwrap().name().is_empty());
+        let spaces = [
+            JointSpace::single(ActionSpace::default()),
+            JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]),
+        ];
+        for space in &spaces {
+            for profile in [AppProfile::Batch, AppProfile::Microservices] {
+                for name in ALL_POLICIES {
+                    let o = make(
+                        name,
+                        space.clone(),
+                        BanditConfig::default(),
+                        ObjectiveConfig::default(),
+                        0.65,
+                        0,
+                        profile,
+                    );
+                    assert!(o.is_some(), "{name}");
+                    assert!(!o.unwrap().name().is_empty());
+                }
             }
         }
         assert!(make(
             "nope",
-            ActionSpace::default(),
+            JointSpace::single(ActionSpace::default()),
             BanditConfig::default(),
             ObjectiveConfig::default(),
             0.65,

@@ -3,7 +3,7 @@
 //! previous period's outcome, packages it as `Telemetry`, and asks the
 //! policy for the next `Action`.
 
-use crate::bandit::encode::Action;
+use crate::bandit::encode::JointAction;
 use crate::monitor::context::ContextVector;
 use crate::runtime::Backend;
 use crate::util::rng::Pcg64;
@@ -16,8 +16,9 @@ pub struct Telemetry {
     pub step: u64,
     /// Current cloud-uncertainty context (Sec. 5.1's 6 dimensions).
     pub ctx: ContextVector,
-    /// The action that produced the feedback below (None on step 0).
-    pub last_action: Option<Action>,
+    /// The (joint, per-tenant-factor) action that produced the feedback
+    /// below (None on step 0).
+    pub last_action: Option<JointAction>,
     /// Normalized performance score in ~[0,1], higher = better
     /// (batch: inverse elapsed time; microservices: inverse P90).
     pub perf_score: Option<f64>,
@@ -55,8 +56,9 @@ impl Telemetry {
 pub trait Orchestrator {
     fn name(&self) -> &'static str;
 
-    /// Choose the next resource configuration. `backend` carries the GP
-    /// posterior engine (AOT artifact via PJRT, or the native mirror);
-    /// heuristic baselines ignore it.
-    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> Action;
+    /// Choose the next resource configuration — one concrete action per
+    /// tenant factor of the space the policy was constructed with.
+    /// `backend` carries the GP posterior engine (AOT artifact via PJRT,
+    /// or the native mirror); heuristic baselines ignore it.
+    fn decide(&mut self, tel: &Telemetry, backend: &mut Backend, rng: &mut Pcg64) -> JointAction;
 }

@@ -99,12 +99,29 @@ impl Backend {
             Backend::Xla(rt) => {
                 let n = req.y.len();
                 let m = req.x.len() / req.d;
-                let info = rt
-                    .find("single", n, m, req.d)
-                    .ok_or_else(|| {
-                        anyhow!("no artifact for kind=single n={n} m={m} d={}", req.d)
-                    })?
-                    .clone();
+                let info = match rt.find("single", n, m, req.d) {
+                    Some(info) => info.clone(),
+                    None => {
+                        // No artifact for this geometry — e.g. a factored
+                        // joint space wider than the AOT'd d=13, or an
+                        // unemitted (n, m) shape. Serve it from the native
+                        // GP instead of erroring: an Err here would make
+                        // every bandit stand pat forever (select swallows
+                        // backend failures by design), silently disabling
+                        // learning for the whole run.
+                        static WARNED: std::sync::Once = std::sync::Once::new();
+                        WARNED.call_once(|| {
+                            eprintln!(
+                                "warning: no XLA artifact for kind=single n={n} m={m} d={}; \
+                                 serving this geometry from the native GP",
+                                req.d
+                            );
+                        });
+                        let (mu, sigma) =
+                            gp::gp_posterior(req.z, req.y, req.mask, req.x, req.d, req.hyp);
+                        return Ok((mu, sigma));
+                    }
+                };
                 let z32: Vec<f32> = req.z.iter().map(|&v| v as f32).collect();
                 let y32: Vec<f32> = req.y.iter().map(|&v| v as f32).collect();
                 let mask32: Vec<f32> = req.mask.iter().map(|&v| v as f32).collect();
@@ -142,9 +159,13 @@ impl Backend {
     ///
     /// `ys` are the (already normalized) targets aligned with the window's
     /// chronological iteration order; `x` is the candidate batch
-    /// [m * d]. `NativeCached` syncs its factor off the window journal
-    /// (O(n²) per decision); stateless backends pack the padded arrays
-    /// (`n_pad` rows, the artifact geometry) and take the O(n³) route.
+    /// [m * d]. `d` is whatever joint dimension the caller's factored
+    /// action space produces (`JointSpace::joint_dim()` — 13 for the
+    /// default single-tenant space, wider for multi-tenant joint spaces);
+    /// nothing here assumes a compile-time geometry. `NativeCached` syncs
+    /// its factor off the window journal (O(n²) per decision); stateless
+    /// backends pack the padded arrays (`n_pad` rows, the artifact
+    /// geometry) and take the O(n³) route.
     pub fn posterior_window(
         &mut self,
         window: &SlidingWindow,

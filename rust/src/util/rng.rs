@@ -155,7 +155,9 @@ pub struct Halton {
     index: u64,
 }
 
-const PRIMES: [u64; 16] = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53];
+const PRIMES: [u64; 24] = [
+    2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
+];
 
 impl Halton {
     pub fn new(dims: usize) -> Self {

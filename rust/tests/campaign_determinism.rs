@@ -114,6 +114,58 @@ fn hybrid_suite_deterministic_for_any_job_count() {
     assert!(j.contains("\"kind\": \"hybrid\""));
 }
 
+/// The `hybrid-joint` suite (factored two-tenant action space) obeys the
+/// same contract: part of `--experiments all`, byte-identical canonical
+/// `campaign.json` for any `--jobs`, env descriptor round-trips.
+#[test]
+fn hybrid_joint_suite_deterministic_for_any_job_count() {
+    use drone::experiments::campaign::{parse_suites, EnvKind};
+
+    assert!(
+        parse_suites("all").unwrap().contains(&Suite::HybridJoint),
+        "hybrid-joint must be part of `drone campaign --experiments all`"
+    );
+
+    let sys = test_sys();
+    let spec = CampaignSpec {
+        suites: vec![Suite::HybridJoint],
+        policies: Some(vec!["drone".into(), "k8s-hpa".into()]),
+        workloads: vec![BatchWorkload::SparkPi],
+        seeds: vec![0, 1],
+        micro_steps: 3,
+        micro_base_rps: 12.0,
+        micro_amplitude_rps: 18.0,
+        ..Default::default()
+    };
+    assert_eq!(enumerate(&spec).len(), 4);
+
+    let serial = run_campaign(&spec, &sys, 1);
+    let parallel = run_campaign(&spec, &sys, 4);
+    assert_eq!(
+        serial.to_json_canonical(),
+        parallel.to_json_canonical(),
+        "hybrid-joint campaign.json must not depend on the job count"
+    );
+    for o in &serial.outcomes {
+        assert!(matches!(o.scenario.env, EnvKind::HybridJoint { .. }));
+        assert_eq!(o.records.len(), 3, "{}", o.scenario.name());
+        assert!(o.summary.offered > 0, "hybrid-joint scenarios must serve traffic");
+    }
+    let j = serial.to_json();
+    assert!(j.contains("\"suite\": \"hybrid-joint\""));
+    assert!(j.contains("\"kind\": \"hybrid-joint\""));
+
+    // The joint suite is a *different* scenario family from the fixed
+    // hybrid suite: same seeds, different records (disjoint seed tags).
+    let fixed_spec = CampaignSpec { suites: vec![Suite::Hybrid], ..spec };
+    let fixed = run_campaign(&fixed_spec, &sys, 1);
+    let joint_perf: Vec<f64> =
+        serial.outcomes.iter().map(|o| o.summary.mean_perf_raw).collect();
+    let fixed_perf: Vec<f64> =
+        fixed.outcomes.iter().map(|o| o.summary.mean_perf_raw).collect();
+    assert_ne!(joint_perf, fixed_perf, "joint and fixed hybrid must differ");
+}
+
 #[test]
 fn repeated_runs_are_reproducible() {
     let sys = test_sys();

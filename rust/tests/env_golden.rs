@@ -12,16 +12,17 @@
 //! intermediate — these comparisons fail.
 
 use drone::apps::batch::{
-    cpu_demand_cores, run_batch_job, run_cost, BatchWorkload, DeployMode, RunSpec,
+    cpu_demand_cores, run_batch_job, run_cost, BatchWorkload, DeployMode, Platform, RunSpec,
 };
-use drone::apps::microservice;
-use drone::bandit::encode::ActionSpace;
+use drone::apps::microservice::{self, ServiceGraph};
+use drone::bandit::encode::{ActionSpace, JointSpace};
 use drone::config::SystemConfig;
 use drone::experiments::harness::{
     batch_cost_scale, batch_perf_score, micro_perf_score, placed_cross_zone_frac,
 };
 use drone::experiments::{
-    run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+    run_batch_env, run_hybrid_env, run_micro_env, BatchEnvConfig, CloudSetting, HybridEnvConfig,
+    MicroEnvConfig, StepRecord,
 };
 use drone::monitor::context::ContextVector;
 use drone::monitor::store::MetricStore;
@@ -63,7 +64,7 @@ fn golden_run_batch_env(
     let space = ActionSpace { zones: sys.cluster.zones, ..Default::default() };
     let mut policy = orchestrators::make(
         policy_name,
-        space.clone(),
+        JointSpace::single(space.clone()),
         sys.bandit.clone(),
         sys.objective.clone(),
         sys.objective.mem_cap_frac,
@@ -108,7 +109,8 @@ fn golden_run_batch_env(
         tel.t = now;
         tel.step = step;
 
-        let action = policy.decide(&tel, backend, &mut rng_policy);
+        let joint = policy.decide(&tel, backend, &mut rng_policy);
+        let action = joint.primary().clone();
 
         let dep = Deployment {
             app: "batch".into(),
@@ -151,7 +153,7 @@ fn golden_run_batch_env(
         let ram_alloc = cluster.total_ram_allocated();
         let resource_frac = ram_alloc / cluster_ram_mb;
 
-        tel.last_action = Some(action.clone());
+        tel.last_action = Some(joint.clone());
         tel.perf_score = Some(perf_score);
         tel.cost_norm = match env.setting {
             CloudSetting::Public => Some((cost / batch_cost_scale(env.workload)).min(1.5)),
@@ -181,7 +183,7 @@ fn golden_run_batch_env(
             dropped: 0,
             offered: 0,
             latencies_ms: vec![],
-            action: Some(action),
+            action: Some(joint),
         });
     }
     records
@@ -204,7 +206,7 @@ fn golden_run_micro_env(
     let space = ActionSpace::microservices(sys.cluster.zones);
     let mut policy = orchestrators::make(
         policy_name,
-        space.clone(),
+        JointSpace::single(space.clone()),
         sys.bandit.clone(),
         sys.objective.clone(),
         sys.objective.mem_cap_frac,
@@ -251,7 +253,8 @@ fn golden_run_micro_env(
         tel.t = now;
         tel.step = step;
 
-        let action = policy.decide(&tel, backend, &mut rng_policy);
+        let joint = policy.decide(&tel, backend, &mut rng_policy);
+        let action = joint.primary().clone();
 
         let mut requested_ram_mb = 0.0;
         let deps: Vec<Deployment> = (0..n_services)
@@ -306,7 +309,7 @@ fn golden_run_micro_env(
             * hours
             * (0.8 + 0.2 * price / spot_mean);
 
-        tel.last_action = Some(action.clone());
+        tel.last_action = Some(joint.clone());
         tel.perf_score = Some(perf_score);
         tel.cost_norm = match env.setting {
             CloudSetting::Public => Some((cost / 0.25).min(1.5)),
@@ -332,7 +335,221 @@ fn golden_run_micro_env(
             dropped: stats.dropped,
             offered: stats.offered,
             latencies_ms: stats.latencies_ms,
-            action: Some(action),
+            action: Some(joint),
+        });
+    }
+    records
+}
+
+/// The PR-4 hybrid co-location loop, verbatim (fixed one-executor-per-zone
+/// batch tenant, single-factor micro action space): pins that the factored
+/// action path — single-factor `JointSpace`, `JointAction` telemetry,
+/// per-factor candidate generation — reproduces the pre-factored hybrid
+/// records bit-for-bit.
+fn golden_run_hybrid_env(
+    policy_name: &str,
+    env: &HybridEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    const PERIOD_S: f64 = 60.0;
+    const BATCH_POD: Resources =
+        Resources { cpu_m: 4000.0, ram_mb: 16_384.0, net_mbps: 2000.0 };
+    const BATCH_CPU_PRESSURE: f64 = 0.25;
+    const BATCH_DATA_GB: f64 = 60.0;
+    const BATCH_SCORE_WEIGHT: f64 = 0.3;
+
+    let mut root = Pcg64::new(seed ^ (0x6b1d_u64 << 8));
+    let mut rng_policy = root.fork(1);
+    let mut rng_des = root.fork(2);
+    let mut rng_interf = root.fork(3);
+    let mut rng_trace = root.fork(4);
+    let mut rng_spot = root.fork(5);
+    let mut rng_jobs = root.fork(6);
+
+    let space = ActionSpace::microservices(sys.cluster.zones);
+    let mut policy = orchestrators::make(
+        policy_name,
+        JointSpace::single(space.clone()),
+        sys.bandit.clone(),
+        sys.objective.clone(),
+        sys.objective.mem_cap_frac,
+        seed,
+        orchestrators::AppProfile::Microservices,
+    )
+    .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+
+    let mut interference = if env.interference && sys.interference.enabled {
+        InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+    } else {
+        InterferenceModel::disabled()
+    };
+    let mut cluster = Cluster::new(&sys.cluster);
+    apply_deployment(
+        &mut cluster,
+        &Deployment {
+            app: "batch".into(),
+            zone_pods: vec![1; sys.cluster.zones],
+            limits: BATCH_POD,
+        },
+        true,
+    );
+    let mut trace = DiurnalTrace::new(env.trace.clone(), rng_trace.fork(0));
+    let mut spot = SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0));
+    let spot_mean = SpotConfig::gcp_e2().mean_price;
+    let mut store = MetricStore::new(3600.0 * 8.0);
+    let graph = ServiceGraph::socialnet();
+    let n_services = graph.services.len();
+    let cluster_ram_mb = sys.cluster_ram_mb();
+    let workload_scale = env.trace.base_rps + env.trace.amplitude_rps * 1.2;
+
+    let mut tel = Telemetry::initial(ContextVector::default());
+    let mut records = Vec::with_capacity(env.steps as usize);
+
+    for step in 0..env.steps {
+        if env.deadline.is_some_and(|d| std::time::Instant::now() >= d) {
+            break;
+        }
+        let now = step as f64 * PERIOD_S;
+        interference.step(&mut cluster, now, PERIOD_S);
+        let rate = trace.sample_rate(now);
+        store.push("workload", now, rate);
+        let price = spot.step(PERIOD_S / 3600.0);
+        store.push("spot_price", now, price);
+
+        let spot_for_ctx = match env.setting {
+            CloudSetting::Public => Some(spot_mean),
+            CloudSetting::Private => None,
+        };
+        tel.ctx = ContextVector::observe(&cluster, &store, now, workload_scale, spot_for_ctx);
+        tel.t = now;
+        tel.step = step;
+
+        let joint = policy.decide(&tel, backend, &mut rng_policy);
+        let action = joint.primary().clone();
+
+        let mut requested_ram_mb = 0.0;
+        let deps: Vec<Deployment> = (0..n_services)
+            .map(|sid| {
+                let w = graph.services[sid].weight;
+                let lim = Resources::new(
+                    (action.cpu_m * w).min(space.cpu_m.1),
+                    (action.ram_mb * w.max(1.0)).min(space.ram_mb.1),
+                    action.net_mbps,
+                );
+                requested_ram_mb += action.total_pods() as f64 * lim.ram_mb;
+                Deployment {
+                    app: graph.app_name(sid),
+                    zone_pods: action.zone_pods.clone(),
+                    limits: lim,
+                }
+            })
+            .collect();
+        let results = apply_deployments_fair(&mut cluster, &deps, true);
+        let pending: usize = results.iter().map(|r| r.pending_total()).sum();
+
+        let total_pods: usize =
+            (0..n_services).map(|sid| cluster.running_pod_count(&graph.app_name(sid))).sum();
+        let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
+        for p in cluster.pods.iter_mut() {
+            if p.app.starts_with("ms-") {
+                let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
+                p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
+            }
+        }
+        let ooms = cluster.sweep_oom().len() as u32;
+
+        let batch_nodes: Vec<usize> = cluster.pods_of("batch").map(|p| p.node).collect();
+        for &n in &batch_nodes {
+            let c = &mut cluster.nodes[n].contention;
+            c.cpu_m = (c.cpu_m + BATCH_CPU_PRESSURE).min(0.9);
+        }
+
+        let stats = microservice::run_window(&cluster, &graph, rate, PERIOD_S, &mut rng_des);
+
+        let batch_pods = cluster.running_pod_count("batch");
+        let current = cluster.mean_contention();
+        let sampled = interference.sample_window_contention(cluster.nodes.len(), PERIOD_S);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let bspec = RunSpec {
+            workload: env.workload,
+            platform: Platform::Spark,
+            deploy: DeployMode::Container,
+            pods: batch_pods.max(1),
+            per_pod: BATCH_POD,
+            cross_zone_frac: placed_cross_zone_frac(&cluster, "batch"),
+            contention,
+            data_gb: BATCH_DATA_GB,
+            external_mem_frac: 0.0,
+            cluster_ram_mb,
+        };
+        let bres = run_batch_job(&bspec, &mut rng_jobs);
+
+        let p90 = stats.p90();
+        let completion = if stats.offered == 0 {
+            1.0
+        } else {
+            stats.completed as f64 / stats.offered as f64
+        };
+        let micro_score = micro_perf_score(p90) * completion * completion;
+        let batch_score = if bres.halted {
+            0.0
+        } else {
+            batch_perf_score(env.workload, bres.elapsed_s)
+        };
+        let perf_score =
+            (1.0 - BATCH_SCORE_WEIGHT) * micro_score + BATCH_SCORE_WEIGHT * batch_score;
+
+        let ram_alloc = cluster.total_ram_allocated();
+        let batch_ram = batch_pods as f64 * BATCH_POD.ram_mb;
+        let resource_frac = (requested_ram_mb + batch_ram).max(ram_alloc) / cluster_ram_mb;
+
+        let hours = PERIOD_S / 3600.0;
+        let micro_cost = (cluster
+            .pods
+            .iter()
+            .filter(|p| p.app.starts_with("ms-"))
+            .map(|p| p.limits.cpu_m / 1000.0 * 0.0332 + p.limits.ram_mb / 1024.0 * 0.0045)
+            .sum::<f64>())
+            * hours
+            * (0.8 + 0.2 * price / spot_mean);
+        let spot_mult = price / spot_mean;
+        let elapsed_for_cost =
+            if bres.halted { PERIOD_S } else { bres.elapsed_s.min(PERIOD_S * 5.0) };
+        let cost = micro_cost + run_cost(&bspec, elapsed_for_cost, spot_mult, 0.2);
+
+        tel.last_action = Some(joint.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match env.setting {
+            CloudSetting::Public => Some((cost / 0.3).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        records.push(StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: ooms + pending as u32 + bres.executor_errors,
+            halted: false,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(joint),
         });
     }
     records
@@ -427,4 +644,25 @@ fn run_env_matches_pre_refactor_micro_loops_bit_for_bit() {
     let new = run_micro_env("showar", &env, &sys, &mut b_new, 2);
     let golden = golden_run_micro_env("showar", &env, &sys, &mut b_old, 2);
     assert_records_identical(&new, &golden, "micro-private/showar/s2");
+}
+
+/// The PR-4 `hybrid` suite (fixed co-tenant) through the factored action
+/// path must reproduce the pre-factored loop bit-for-bit — same RNG fork
+/// order, same deployment sequence, same blended scoring.
+#[test]
+fn run_env_matches_pre_refactor_hybrid_loop_bit_for_bit() {
+    let sys = test_sys();
+    for policy in ["drone", "k8s-hpa", "showar"] {
+        for seed in [0, 1] {
+            let mut env =
+                HybridEnvConfig::new(BatchWorkload::SparkPi, CloudSetting::Public, 3);
+            env.trace.base_rps = 15.0;
+            env.trace.amplitude_rps = 20.0;
+            let mut b_new = Backend::Native;
+            let mut b_old = Backend::Native;
+            let new = run_hybrid_env(policy, &env, &sys, &mut b_new, seed);
+            let golden = golden_run_hybrid_env(policy, &env, &sys, &mut b_old, seed);
+            assert_records_identical(&new, &golden, &format!("hybrid/{policy}/s{seed}"));
+        }
+    }
 }

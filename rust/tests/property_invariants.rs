@@ -3,7 +3,7 @@
 //! asserting the invariants that every experiment silently relies on.
 
 use drone::apps::microservice::{run_window, ServiceGraph};
-use drone::bandit::encode::{Action, ActionSpace};
+use drone::bandit::encode::{Action, ActionSpace, JointAction, JointSpace};
 use drone::bandit::gp::{gp_posterior, GpHyper};
 use drone::config::ClusterConfig;
 use drone::sim::cluster::Cluster;
@@ -337,5 +337,93 @@ fn prop_batch_env_survives_failure_injection() {
         assert_eq!(recs.len(), 10, "{policy}");
         // Halted steps are allowed; crashes and NaN costs are not.
         assert!(recs.iter().all(|r| r.cost.is_finite()), "{policy}");
+    }
+}
+
+/// Factored-encoding invariant (issue 5 satellite): for 1–3 tenant
+/// factors, `JointSpace` encode → decode → clamp round-trips per factor —
+/// zone counts exactly, continuous dims within the min-max grid tolerance,
+/// and every encoded coordinate in [0,1]. The single-factor case must be
+/// *byte-identical* to `ActionSpace::encode` on the same actions.
+#[test]
+fn prop_joint_space_encode_decode_clamp_round_trips() {
+    let mut rng = Pcg64::new(404);
+    let factor_pool = [
+        ActionSpace::default(),
+        ActionSpace::microservices(4),
+        ActionSpace::hybrid_batch(4),
+        ActionSpace::microservices(3),
+    ];
+    for case in 0..120 {
+        let n_factors = 1 + rng.below(3); // 1..=3
+        let factors: Vec<ActionSpace> =
+            (0..n_factors).map(|_| factor_pool[rng.below(factor_pool.len())].clone()).collect();
+        let js = JointSpace::new(factors.clone());
+        assert_eq!(js.dim(), factors.iter().map(|f| f.dim()).sum::<usize>());
+
+        // A random in-bounds joint action (>= 1 pod per factor, as clamp
+        // guarantees).
+        let parts: Vec<Action> = factors
+            .iter()
+            .map(|f| {
+                let mut zone_pods: Vec<usize> =
+                    (0..f.zones).map(|_| rng.below(f.max_pods_per_zone + 1)).collect();
+                if zone_pods.iter().sum::<usize>() == 0 {
+                    zone_pods[0] = 1;
+                }
+                Action {
+                    zone_pods,
+                    cpu_m: rng.uniform(f.cpu_m.0, f.cpu_m.1),
+                    ram_mb: rng.uniform(f.ram_mb.0, f.ram_mb.1),
+                    net_mbps: rng.uniform(f.net_mbps.0, f.net_mbps.1),
+                }
+            })
+            .collect();
+        let ja = JointAction::new(parts);
+
+        let enc = js.encode(&ja);
+        assert_eq!(enc.len(), js.dim(), "case {case}");
+        assert!(enc.iter().all(|&v| (0.0..=1.0).contains(&v)), "case {case}: out of [0,1]");
+
+        let back = js.clamp(js.decode(&enc));
+        assert_eq!(back.parts.len(), ja.parts.len(), "case {case}");
+        for (fi, ((f, a), b)) in
+            factors.iter().zip(&ja.parts).zip(&back.parts).enumerate()
+        {
+            assert_eq!(a.zone_pods, b.zone_pods, "case {case} factor {fi}: zone counts");
+            // Continuous dims round-trip within one normalization step.
+            let tol = |(lo, hi): (f64, f64)| (hi - lo) * 1e-12 + 1e-9;
+            assert!((a.cpu_m - b.cpu_m).abs() <= tol(f.cpu_m), "case {case} factor {fi} cpu");
+            assert!((a.ram_mb - b.ram_mb).abs() <= tol(f.ram_mb), "case {case} factor {fi} ram");
+            assert!(
+                (a.net_mbps - b.net_mbps).abs() <= tol(f.net_mbps),
+                "case {case} factor {fi} net"
+            );
+            // Clamp is idempotent on an already-clamped action.
+            assert_eq!(f.clamp(b.clone()), *b, "case {case} factor {fi}: clamp idempotent");
+        }
+
+        // Single-factor spaces are byte-identical to the flat encoding.
+        if js.n_factors() == 1 {
+            let flat = factors[0].encode(&ja.parts[0]);
+            assert_eq!(flat.len(), enc.len());
+            for (x, y) in flat.iter().zip(&enc) {
+                assert_eq!(x.to_bits(), y.to_bits(), "case {case}: single-factor byte identity");
+            }
+        } else {
+            // Multi-factor: each factor's encoding is an exact slice.
+            let mut off = 0;
+            for (f, a) in factors.iter().zip(&ja.parts) {
+                let flat = f.encode(a);
+                for (j, x) in flat.iter().enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        enc[off + j].to_bits(),
+                        "case {case}: factor slice mismatch"
+                    );
+                }
+                off += f.dim();
+            }
+        }
     }
 }
