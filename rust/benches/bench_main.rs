@@ -10,10 +10,11 @@
 //!    regenerate the rows/series at a reduced scale and time the run.
 //!
 //! Usage:
-//!   cargo bench                    # everything (default scale 0.25)
-//!   cargo bench -- perf            # only the perf micro-benches
-//!   cargo bench -- fig7a table3    # selected experiments
-//!   cargo bench -- --scale 0.5     # bigger experiment scale
+//!   cargo bench                           # everything (default scale 0.25)
+//!   cargo bench -- perf                   # only the perf micro-benches
+//!   cargo bench -- fig7a table3           # selected experiments
+//!   cargo bench -- --scale 0.5            # bigger experiment scale
+//!   cargo bench -- perf --json BENCH.json # drone-bench/v1 export (CI artifact)
 
 use std::time::Instant;
 
@@ -23,6 +24,7 @@ use drone::experiments;
 use drone::runtime::Backend;
 #[cfg(feature = "pjrt")]
 use drone::runtime::PosteriorRequest;
+use drone::util::benchfmt;
 use drone::util::rng::Pcg64;
 use drone::util::stats;
 
@@ -79,6 +81,34 @@ fn report(r: &BenchResult) {
     );
 }
 
+/// Prints each result as it lands and keeps it, grouped, for the
+/// optional drone-bench/v1 JSON export (`--json PATH`).
+struct Collector {
+    groups: Vec<(&'static str, Vec<benchfmt::BenchRow>)>,
+}
+
+impl Collector {
+    fn new() -> Self {
+        Collector { groups: vec![] }
+    }
+
+    fn add(&mut self, group: &'static str, r: &BenchResult) {
+        report(r);
+        let row = benchfmt::BenchRow {
+            name: r.name.clone(),
+            iters: r.iters as u64,
+            mean_ms: r.mean_ms,
+            p50_ms: r.p50_ms,
+            p99_ms: r.p99_ms,
+            throughput: r.throughput.map(|(v, unit)| (unit.to_string(), v)),
+        };
+        match self.groups.iter_mut().find(|(g, _)| *g == group) {
+            Some((_, rows)) => rows.push(row),
+            None => self.groups.push((group, vec![row])),
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // perf micro-benches (§Perf)
 // ---------------------------------------------------------------------------
@@ -96,7 +126,7 @@ fn rand_inputs(
     (z, y, mask, x)
 }
 
-fn perf_benches(sys: &SystemConfig, budget_s: f64) {
+fn perf_benches(sys: &SystemConfig, budget_s: f64, col: &mut Collector) {
     println!("\n== perf: GP posterior (L1/L2 hot path), n=32 d=13 ==");
     let mut rng = Pcg64::new(1);
     for &m in &[64usize, 256, 1024] {
@@ -106,7 +136,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
             let _ = gp::gp_posterior(&z, &y, &mask, &x, 13, hyp);
         });
         r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
-        report(&r);
+        col.add("gp", &r);
         #[cfg(feature = "pjrt")]
         if let Ok(rt) = drone::runtime::XlaRuntime::open(&sys.artifacts_dir) {
             let mut backend = Backend::Xla(rt);
@@ -116,7 +146,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                 let _ = backend.posterior(&req).unwrap();
             });
             r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
-            report(&r);
+            col.add("gp", &r);
         }
     }
 
@@ -139,7 +169,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                 let _ = gp::gp_posterior(&z, &y, &mask, &x, d, hyp);
             });
             r.throughput = Some((m as f64 / (r.mean_ms / 1000.0), "cand/s"));
-            report(&r);
+            col.add("gp", &r);
         }
     }
 
@@ -178,7 +208,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                 let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
                 let _ = engine.posterior(&window, &ys, &x, hyp);
             });
-            report(&r);
+            col.add("gp", &r);
             // The point of the cache: zero re-factorizations after warmup.
             assert_eq!(engine.stats.rebuilds, 1, "cached path re-factorized");
             assert_eq!(engine.stats.evictions, engine.stats.appends);
@@ -189,8 +219,58 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                 let (z, _, _, mask) = window.padded(n);
                 let _ = gp::gp_posterior(&z, &ys, &mask, &x, d, hyp);
             });
-            report(&r);
+            col.add("gp", &r);
         }
+    }
+
+    println!("\n== perf: event queue (indexed 4-ary heap over an arena) ==");
+    {
+        use drone::sim::des::EventQueue;
+        let mut rng_q = Pcg64::new(7);
+        let times: Vec<f64> = (0..4096).map(|_| rng_q.f64() * 60.0).collect();
+        let mut r = bench("queue fill+pop n=4096", budget_s, || {
+            let mut q: EventQueue<u32> = EventQueue::with_capacity(4096);
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule(t, i as u32);
+            }
+            let mut acc = 0u64;
+            while let Some((_, p)) = q.pop() {
+                acc += p as u64;
+            }
+            assert!(acc > 0);
+        });
+        r.throughput = Some((2.0 * 4096.0 / (r.mean_ms / 1000.0), "ops/s"));
+        col.add("queue", &r);
+
+        let mut r = bench("queue drain_until horizon=60s n=4096", budget_s, || {
+            let mut q: EventQueue<u32> = EventQueue::with_capacity(4096);
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule(t, i as u32);
+            }
+            let mut seen = 0usize;
+            q.drain_until(60.0, |_, _, _| seen += 1);
+            assert_eq!(seen, 4096);
+        });
+        r.throughput = Some((2.0 * 4096.0 / (r.mean_ms / 1000.0), "ops/s"));
+        col.add("queue", &r);
+
+        // Steady-state churn: hold 1024 events in flight, each op is a
+        // pop + reschedule — the DES inner-loop shape (slot reuse, no
+        // allocation after warmup).
+        let mut rng_c = Pcg64::new(8);
+        let mut r = bench("queue churn hold=1024 ops=4096", budget_s, || {
+            let mut q: EventQueue<u32> = EventQueue::with_capacity(1024);
+            for i in 0..1024u32 {
+                q.schedule(rng_c.f64(), i);
+            }
+            for _ in 0..4096 {
+                let (t, p) = q.pop().unwrap();
+                q.schedule(t + rng_c.f64(), p);
+            }
+            while q.pop().is_some() {}
+        });
+        r.throughput = Some((2.0 * 4096.0 / (r.mean_ms / 1000.0), "ops/s"));
+        col.add("queue", &r);
     }
 
     println!("\n== perf: end-to-end decision latency (candidates + posterior + argmax) ==");
@@ -229,7 +309,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
                     let _ = core.select(&mut backend, &ctx, &mut rng2);
                 },
             );
-            report(&r);
+            col.add("decide", &r);
         }
         // The same decision loop over the two-factor hybrid-joint space:
         // the per-decision cost of the wider action space, end to end.
@@ -252,13 +332,59 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
             let r = bench("decide joint(batch+micro) m=256 window=30", budget_s, || {
                 let _ = core.select(&mut backend, &ctx, &mut rng2);
             });
-            report(&r);
+            col.add("decide", &r);
+        }
+
+        // End-to-end control step: one bandit decision followed by the
+        // 10 s microservice window it controls — the per-step cost a
+        // campaign actually pays.
+        {
+            use drone::apps::microservice::{ServiceGraph, WindowSim};
+            use drone::sim::cluster::Cluster;
+            use drone::sim::resources::Resources;
+            use drone::sim::scheduler::{apply_deployment, Deployment};
+            let mut cluster = Cluster::new(&sys.cluster);
+            let g = ServiceGraph::socialnet();
+            for sid in 0..g.services.len() {
+                apply_deployment(
+                    &mut cluster,
+                    &Deployment {
+                        app: g.app_name(sid),
+                        zone_pods: vec![1; 4],
+                        limits: Resources::new(1500.0, 1536.0, 300.0),
+                    },
+                    true,
+                );
+            }
+            let mut core = BanditCore::new(
+                JointSpace::single(ActionSpace::microservices(4)),
+                BanditConfig::default(),
+                Acquisition::Ucb,
+                true,
+                0,
+            );
+            let mut backend = Backend::native_cached();
+            let mut rng_sel = Pcg64::new(5);
+            let mut rng_des = Pcg64::new(6);
+            let ctx = ContextVector { workload: 0.5, ..Default::default() };
+            let dim = core.candgen.space().dim();
+            for i in 0..30 {
+                let a = core.candgen.decode(&vec![0.5; dim]);
+                core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
+            }
+            let _ = core.select(&mut backend, &ctx, &mut rng_sel);
+            let r = bench("decide+advance micro rate=120rps window=10s", budget_s, || {
+                let _ = core.select(&mut backend, &ctx, &mut rng_sel);
+                let out = WindowSim::new(&cluster, &g, 120.0, 10.0).run(&mut rng_des);
+                assert!(out.stats.offered > 0);
+            });
+            col.add("decide", &r);
         }
     }
 
-    println!("\n== perf: DES microservice window (60 s of traffic) ==");
+    println!("\n== perf: microservice window, 60 s of traffic (exact DES vs fluid) ==");
     {
-        use drone::apps::microservice::{run_window, ServiceGraph};
+        use drone::apps::microservice::{ServiceGraph, SimBackend, WindowSim};
         use drone::sim::cluster::Cluster;
         use drone::sim::resources::Resources;
         use drone::sim::scheduler::{apply_deployment, Deployment};
@@ -276,12 +402,24 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
             );
         }
         let mut rng3 = Pcg64::new(3);
-        let mut r = bench("DES run_window rate=150rps window=60s", budget_s, || {
-            let s = run_window(&cluster, &g, 150.0, 60.0, &mut rng3);
-            assert!(s.offered > 0);
-        });
-        r.throughput = Some((150.0 * 60.0 / (r.mean_ms / 1000.0), "req/s-sim"));
-        report(&r);
+        for &rate in &[40.0f64, 300.0] {
+            let mut r =
+                bench(&format!("window exact rate={rate}rps window=60s"), budget_s, || {
+                    let out = WindowSim::new(&cluster, &g, rate, 60.0).run(&mut rng3);
+                    assert!(out.stats.offered > 0);
+                });
+            r.throughput = Some((rate * 60.0 / (r.mean_ms / 1000.0), "req/s-sim"));
+            col.add("window", &r);
+            let mut r =
+                bench(&format!("window fluid rate={rate}rps window=60s"), budget_s, || {
+                    let out = WindowSim::new(&cluster, &g, rate, 60.0)
+                        .with_backend(SimBackend::Fluid { threshold_rps: 0.0 })
+                        .run(&mut rng3);
+                    assert!(out.stats.offered > 0);
+                });
+            r.throughput = Some((rate * 60.0 / (r.mean_ms / 1000.0), "req/s-sim"));
+            col.add("window", &r);
+        }
     }
 
     println!("\n== perf: scheduler (rolling update, 32 pods over 15 nodes) ==");
@@ -299,7 +437,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
             let pr = apply_deployment(&mut cluster, &dep, true);
             assert!(!pr.placed.is_empty());
         });
-        report(&r);
+        col.add("sched", &r);
     }
 
     println!("\n== perf: batch job model ==");
@@ -322,7 +460,7 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
         let r = bench("run_batch_job PageRank", budget_s.min(0.5), || {
             let _ = run_batch_job(&spec, &mut rng4);
         });
-        report(&r);
+        col.add("batch", &r);
     }
 }
 
@@ -333,11 +471,15 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64) {
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).filter(|a| a != "--bench").collect();
     let mut scale = 0.25;
+    let mut json_path: Option<String> = None;
     let mut filters: Vec<String> = vec![];
     let mut i = 0;
     while i < args.len() {
         if args[i] == "--scale" && i + 1 < args.len() {
             scale = args[i + 1].parse().unwrap_or(scale);
+            i += 2;
+        } else if args[i] == "--json" && i + 1 < args.len() {
+            json_path = Some(args[i + 1].clone());
             i += 2;
         } else {
             filters.push(args[i].clone());
@@ -360,8 +502,35 @@ fn main() {
         println!("results -> {}", dir.display());
     }
 
-    if wants("perf") {
-        perf_benches(&sys, 1.0);
+    // --json implies the perf micro-benches: the export's required groups
+    // (queue/window/decide) all live there.
+    let mut col = Collector::new();
+    if wants("perf") || json_path.is_some() {
+        perf_benches(&sys, 1.0, &mut col);
+    }
+    if let Some(path) = &json_path {
+        let meta = [
+            ("scale", format!("{scale}")),
+            ("budget_s", "1".to_string()),
+            ("pjrt", cfg!(feature = "pjrt").to_string()),
+        ];
+        let meta: Vec<(&str, String)> = meta.iter().map(|(k, v)| (*k, v.clone())).collect();
+        let text = benchfmt::render(&meta, &col.groups);
+        // Self-validate before writing so a schema regression fails the
+        // bench run itself, not just the later `drone bench-check` step.
+        match benchfmt::validate(&text) {
+            Ok(summary) => {
+                std::fs::write(path, &text).unwrap_or_else(|e| {
+                    eprintln!("cannot write {path}: {e}");
+                    std::process::exit(1);
+                });
+                println!("\nwrote {path} ({summary})");
+            }
+            Err(e) => {
+                eprintln!("bench export violates {}: {e}", benchfmt::SCHEMA);
+                std::process::exit(1);
+            }
+        }
     }
 
     let opts = experiments::RunOpts { scale, ..Default::default() };

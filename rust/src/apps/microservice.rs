@@ -1,11 +1,27 @@
-//! Microservice application model: a service call-graph executed as a
-//! discrete-event queueing simulation on the cluster substrate.
+//! Microservice application model: a service call-graph executed against
+//! the cluster substrate, through one of two backends behind `WindowSim`.
 //!
 //! Stand-in for the paper's Sockshop (Fig. 3/4) and DeathStarBench
 //! SocialNet (Sec. 5.3) deployments: per-request end-to-end latency emerges
 //! from per-pod queueing, CPU-dependent service times, interference, and
 //! inter-zone network hops — so placement (affinity) and rightsizing move
 //! the P90 exactly the way the paper's experiments need.
+//!
+//! # Backends
+//!
+//! * [`SimBackend::Exact`] — discrete-event simulation of every request
+//!   hop. Deterministic given the RNG; this is what every golden test and
+//!   campaign pins, and the default everywhere.
+//! * [`SimBackend::Fluid`] — mean-value approximation for the high-RPS
+//!   regime where per-request simulation is wasted work: each service is an
+//!   M/M/c/K station, per-hop acceptance is solved by a damped fixed point,
+//!   and end-to-end latency quantiles come from a two-moment gamma fit per
+//!   request type. O(services × K) per window, independent of RPS. Selected
+//!   per-window when `rate_rps >= threshold_rps`; windows below the
+//!   threshold still run exact (and consume the RNG identically to
+//!   `Exact`, so a threshold above the peak rate is bit-identical to
+//!   `Exact`). Cross-validated against the exact DES on an overlap grid in
+//!   `tests/sim_fidelity.rs`.
 
 use std::collections::VecDeque;
 
@@ -128,7 +144,10 @@ pub struct WindowStats {
     pub offered: u64,
     pub completed: u64,
     pub dropped: u64,
-    /// End-to-end latencies (ms) of completed requests.
+    /// End-to-end latencies (ms) of completed requests. Under the fluid
+    /// backend these are synthetic quantile-grid samples (~256) from the
+    /// per-type latency fits, so percentile/digest consumers work
+    /// identically across backends.
     pub latencies_ms: Vec<f64>,
     pub in_flight_at_end: u64,
 }
@@ -153,18 +172,99 @@ impl WindowStats {
 }
 
 // ---------------------------------------------------------------------------
-// DES internals
+// WindowSim: the one entry point for simulating a traffic window
 // ---------------------------------------------------------------------------
 
-#[derive(Clone, Debug)]
-enum Ev {
-    /// A new request of type `rt` enters the system.
-    Arrival { rt: usize },
-    /// Pod finished serving the head of its queue.
-    PodDone { pod: usize },
-    /// A request hop arrives at a service after a network delay.
-    HopArrive { req: usize, hop: usize },
+/// Which engine executes a window. See the module docs for the trade-off.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SimBackend {
+    /// Per-request discrete-event simulation (the default; bit-exact).
+    Exact,
+    /// Mean-value approximation for windows with `rate_rps >=
+    /// threshold_rps`; windows below the threshold run exact. A threshold
+    /// of 0 forces fluid everywhere; a threshold above the peak rate is
+    /// bit-identical to `Exact`.
+    Fluid { threshold_rps: f64 },
 }
+
+impl Default for SimBackend {
+    fn default() -> Self {
+        SimBackend::Exact
+    }
+}
+
+/// One window of request traffic against the current deployment:
+/// `rate_rps` requests/s Poisson arrivals for `window_s` seconds. Pods are
+/// read from the cluster (apps named by `graph.app_name`); their speed
+/// reflects CPU allocation and the node's current interference contention.
+///
+/// Replaces the old positional-arg `run_window` free function: construct,
+/// optionally set the backend, then [`WindowSim::run`].
+#[derive(Clone, Copy, Debug)]
+pub struct WindowSim<'a> {
+    pub cluster: &'a Cluster,
+    pub graph: &'a ServiceGraph,
+    pub rate_rps: f64,
+    pub window_s: f64,
+    pub backend: SimBackend,
+}
+
+/// What a window produced: the request-level stats plus per-service
+/// utilization and which backend actually ran.
+#[derive(Clone, Debug, Default)]
+pub struct WindowOutcome {
+    pub stats: WindowStats,
+    /// Busy fraction per service (busy-seconds / (pods × window)), 0 for
+    /// services with no pods.
+    pub service_util: Vec<f64>,
+    /// True when the fluid approximation produced this window.
+    pub fluid: bool,
+}
+
+impl WindowOutcome {
+    /// Utilization of the busiest service (the bottleneck signal).
+    pub fn max_util(&self) -> f64 {
+        self.service_util.iter().copied().fold(0.0, f64::max)
+    }
+}
+
+impl<'a> WindowSim<'a> {
+    pub fn new(
+        cluster: &'a Cluster,
+        graph: &'a ServiceGraph,
+        rate_rps: f64,
+        window_s: f64,
+    ) -> Self {
+        Self { cluster, graph, rate_rps, window_s, backend: SimBackend::Exact }
+    }
+
+    pub fn with_backend(mut self, backend: SimBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Simulate the window. The RNG is consumed only by the exact engine;
+    /// a window the fluid backend handles draws nothing (fluid is
+    /// deterministic), which is why fluid mode is not RNG-compatible with
+    /// exact mode — only `Exact` (or an unreached threshold) preserves the
+    /// golden streams.
+    pub fn run(&self, rng: &mut Pcg64) -> WindowOutcome {
+        match self.backend {
+            SimBackend::Exact => run_exact(self, rng),
+            SimBackend::Fluid { threshold_rps } => {
+                if self.rate_rps >= threshold_rps {
+                    run_fluid(self)
+                } else {
+                    run_exact(self, rng)
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared pod materialization
+// ---------------------------------------------------------------------------
 
 #[derive(Clone, Debug)]
 struct SimPod {
@@ -178,27 +278,11 @@ struct SimPod {
     alive: bool,
 }
 
-struct ReqState {
-    rt: usize,
-    start: f64,
-    dropped: bool,
-}
-
-/// Run one window of request traffic against the current deployment.
-///
-/// `rate_rps` requests/s Poisson arrivals for `window_s` seconds. Pods are
-/// read from the cluster (apps named by `graph.app_name`); their speed
-/// reflects CPU allocation and the node's current interference contention.
-pub fn run_window(
-    cluster: &Cluster,
-    graph: &ServiceGraph,
-    rate_rps: f64,
-    window_s: f64,
-    rng: &mut Pcg64,
-) -> WindowStats {
-    let mut stats = WindowStats::default();
-
-    // --- materialize pods ---------------------------------------------------
+/// Read the deployment out of the cluster: one `SimPod` per Running pod of
+/// each `ms-*` app, plus the per-service pod index. Iteration order (and
+/// therefore round-robin order) is services-then-cluster-pod-order, which
+/// the exact engine's bit-identity depends on.
+fn materialize(cluster: &Cluster, graph: &ServiceGraph) -> (Vec<SimPod>, Vec<Vec<usize>>) {
     let mut pods: Vec<SimPod> = vec![];
     let mut service_pods: Vec<Vec<usize>> = vec![vec![]; graph.services.len()];
     for (sid, svc) in graph.services.iter().enumerate() {
@@ -231,8 +315,39 @@ pub fn run_window(
             });
         }
     }
+    (pods, service_pods)
+}
+
+// ---------------------------------------------------------------------------
+// Exact backend: per-request DES
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+enum Ev {
+    /// A new request of type `rt` enters the system.
+    Arrival { rt: usize },
+    /// Pod finished serving the head of its queue.
+    PodDone { pod: usize },
+    /// A request hop arrives at a service after a network delay.
+    HopArrive { req: usize, hop: usize },
+}
+
+struct ReqState {
+    rt: usize,
+    start: f64,
+    dropped: bool,
+}
+
+fn run_exact(sim: &WindowSim, rng: &mut Pcg64) -> WindowOutcome {
+    let (cluster, graph) = (sim.cluster, sim.graph);
+    let (rate_rps, window_s) = (sim.rate_rps, sim.window_s);
+    let mut stats = WindowStats::default();
+
+    let (mut pods, service_pods) = materialize(cluster, graph);
     // A service with no pods drops everything routed to it.
     let mut rr: Vec<usize> = vec![0; graph.services.len()];
+    // Busy-seconds per service, for the utilization signal.
+    let mut busy_s: Vec<f64> = vec![0.0; graph.services.len()];
 
     let mut reqs: Vec<ReqState> = vec![];
     let mut q: EventQueue<Ev> = EventQueue::new();
@@ -240,23 +355,29 @@ pub fn run_window(
     // Request-type sampling CDF.
     let total_share: f64 = graph.request_types.iter().map(|r| r.share).sum();
 
-    // Schedule Poisson arrivals for the whole window up-front.
-    let mut t = 0.0;
-    loop {
-        t += rng.exponential(rate_rps.max(1e-9));
-        if t >= window_s {
-            break;
-        }
-        let mut u = rng.f64() * total_share;
-        let mut rt = 0;
-        for (i, r) in graph.request_types.iter().enumerate() {
-            if u < r.share {
-                rt = i;
+    // Schedule Poisson arrivals for the whole window up-front. A zero (or
+    // negative) rate generates no arrivals and draws nothing, so the RNG
+    // stream of surrounding nonzero-rate windows is undisturbed; positive
+    // rates keep the historical `.max(1e-9)` clamp so their draw sequence
+    // is bit-identical to earlier revisions.
+    if rate_rps > 0.0 {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(rate_rps.max(1e-9));
+            if t >= window_s {
                 break;
             }
-            u -= r.share;
+            let mut u = rng.f64() * total_share;
+            let mut rt = 0;
+            for (i, r) in graph.request_types.iter().enumerate() {
+                if u < r.share {
+                    rt = i;
+                    break;
+                }
+                u -= r.share;
+            }
+            q.schedule(t, Ev::Arrival { rt });
         }
-        q.schedule(t, Ev::Arrival { rt });
     }
 
     let net_ms = |cluster: &Cluster, a: Option<usize>, b: usize| -> f64 {
@@ -268,10 +389,12 @@ pub fn run_window(
 
     // Route (req, hop) to a pod of the hop's service; returns false -> drop.
     // Round-robin over alive pods, skipping full queues.
+    #[allow(clippy::too_many_arguments)]
     fn route(
         pods: &mut [SimPod],
         service_pods: &[Vec<usize>],
         rr: &mut [usize],
+        busy_s: &mut [f64],
         q: &mut EventQueue<Ev>,
         rng: &mut Pcg64,
         graph: &ServiceGraph,
@@ -295,6 +418,7 @@ pub fn run_window(
                 pod.busy = true;
                 let svc_ms = graph.services[sid].base_ms / pod.speed;
                 let dt = rng.exponential(1.0 / (svc_ms / 1000.0));
+                busy_s[sid] += dt;
                 q.schedule_in(dt, Ev::PodDone { pod: idx });
             }
             return true;
@@ -302,21 +426,45 @@ pub fn run_window(
         false
     }
 
-    while let Some((now, ev)) = q.next_before(window_s * 1.25) {
+    // Batched window processing: one drain pass over every event up to the
+    // horizon (events scheduled mid-drain included).
+    q.drain_until(window_s * 1.25, |q, now, ev| {
         match ev {
             Ev::Arrival { rt } => {
                 stats.offered += 1;
                 let req = reqs.len();
                 reqs.push(ReqState { rt, start: now, dropped: false });
                 let sid = graph.request_types[rt].path[0];
-                if !route(&mut pods, &service_pods, &mut rr, &mut q, rng, graph, req, 0, sid) {
+                if !route(
+                    &mut pods,
+                    &service_pods,
+                    &mut rr,
+                    &mut busy_s,
+                    q,
+                    rng,
+                    graph,
+                    req,
+                    0,
+                    sid,
+                ) {
                     reqs[req].dropped = true;
                     stats.dropped += 1;
                 }
             }
             Ev::HopArrive { req, hop } => {
                 let sid = graph.request_types[reqs[req].rt].path[hop];
-                if !route(&mut pods, &service_pods, &mut rr, &mut q, rng, graph, req, hop, sid) {
+                if !route(
+                    &mut pods,
+                    &service_pods,
+                    &mut rr,
+                    &mut busy_s,
+                    q,
+                    rng,
+                    graph,
+                    req,
+                    hop,
+                    sid,
+                ) {
                     reqs[req].dropped = true;
                     stats.dropped += 1;
                 }
@@ -348,7 +496,7 @@ pub fn run_window(
                     let r = &mut reqs[req];
                     if !r.dropped {
                         stats.completed += 1;
-                        stats.latencies_ms.push((q.now() - r.start) * 1000.0);
+                        stats.latencies_ms.push((now - r.start) * 1000.0);
                     }
                 }
                 // Serve next queued item.
@@ -356,16 +504,229 @@ pub fn run_window(
                 if let Some(&(_r2, _h2)) = pod.queue.front() {
                     let svc_ms = graph.services[pod.service].base_ms / pod.speed;
                     let dt = rng.exponential(1.0 / (svc_ms / 1000.0));
+                    busy_s[pod.service] += dt;
                     q.schedule_in(dt, Ev::PodDone { pod: idx });
                 } else {
                     pod.busy = false;
                 }
             }
         }
-    }
+    });
 
     stats.in_flight_at_end = stats.offered - stats.completed - stats.dropped;
-    stats
+    let service_util = busy_s
+        .iter()
+        .enumerate()
+        .map(|(s, &b)| {
+            let n = service_pods[s].len();
+            if n == 0 || window_s <= 0.0 {
+                0.0
+            } else {
+                (b / (n as f64 * window_s)).min(1.0)
+            }
+        })
+        .collect();
+    WindowOutcome { stats, service_util, fluid: false }
+}
+
+// ---------------------------------------------------------------------------
+// Fluid backend: per-service M/M/c/K mean-value approximation
+// ---------------------------------------------------------------------------
+
+/// Cap on queue states evaluated per station. Real deployments land far
+/// below it (K = pods × per-pod queue cap); when it binds, blocking is
+/// already dominated by the geometric tail so the truncation error is
+/// negligible.
+const FLUID_MAX_STATES: usize = 4096;
+
+/// M/M/c/K station moments: returns `(blocking p_K, E[Wq], E[Wq²], util)`.
+/// The birth-death chain is normalized in log space so heavy overload
+/// (λ ≫ cμ) cannot overflow; waiting moments use PASTA — an accepted
+/// arrival seeing `n >= c` in system waits Erlang(n−c+1, cμ).
+fn mmck_moments(lam: f64, mu: f64, c: usize, k: usize) -> (f64, f64, f64, f64) {
+    if lam <= 0.0 || c == 0 || mu <= 0.0 {
+        return (0.0, 0.0, 0.0, 0.0);
+    }
+    let k = k.max(c).min(c + FLUID_MAX_STATES);
+    // log p_n (unnormalized): log increments are ln(λ / (min(n,c) μ)),
+    // constant once n > c.
+    let mut logs = Vec::with_capacity(k + 1);
+    logs.push(0.0f64);
+    let tail_inc = (lam / (c as f64 * mu)).ln();
+    for n in 1..=k {
+        let inc = if n <= c { (lam / (n as f64 * mu)).ln() } else { tail_inc };
+        let last = *logs.last().expect("logs nonempty");
+        logs.push(last + inc);
+    }
+    let mx = logs.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let ws: Vec<f64> = logs.iter().map(|&x| (x - mx).exp()).collect();
+    let z: f64 = ws.iter().sum();
+    let pk = ws[k] / z;
+    let acc = 1.0 - pk;
+    if acc <= 1e-12 {
+        return (pk, 0.0, 0.0, 1.0);
+    }
+    let cmu = c as f64 * mu;
+    let (mut ew, mut ew2) = (0.0, 0.0);
+    for n in c..k {
+        let m = (n - c + 1) as f64;
+        let w = ws[n] / z / acc;
+        ew += w * m / cmu;
+        ew2 += w * m * (m + 1.0) / (cmu * cmu);
+    }
+    let util = (lam * acc / cmu).min(1.0);
+    (pk, ew, ew2, util)
+}
+
+fn run_fluid(sim: &WindowSim) -> WindowOutcome {
+    let (cluster, graph) = (sim.cluster, sim.graph);
+    let (rate_rps, window_s) = (sim.rate_rps.max(0.0), sim.window_s);
+    let nsvc = graph.services.len();
+    let (pods, service_pods) = materialize(cluster, graph);
+    let total_share: f64 = graph.request_types.iter().map(|r| r.share).sum();
+
+    // Per-service station parameters from the materialized deployment.
+    let c: Vec<usize> = service_pods.iter().map(|l| l.len()).collect();
+    let mut mu = vec![0.0f64; nsvc]; // per-server service rate (1/s)
+    let mut cap = vec![0usize; nsvc]; // total in-system capacity K
+    for s in 0..nsvc {
+        if c[s] == 0 {
+            continue;
+        }
+        let mean_s: f64 = service_pods[s]
+            .iter()
+            .map(|&i| graph.services[s].base_ms / pods[i].speed / 1000.0)
+            .sum::<f64>()
+            / c[s] as f64;
+        mu[s] = if mean_s > 0.0 { 1.0 / mean_s } else { 0.0 };
+        cap[s] = service_pods[s].iter().map(|&i| pods[i].queue_cap).sum();
+    }
+
+    // Damped fixed point on per-visit acceptance: offered load per service
+    // is the share-weighted flow that survived every upstream hop; each
+    // round recomputes blocking from that flow. Damping (0.5) keeps deep
+    // overload from oscillating; calibration shows convergence well within
+    // 32 rounds across 5x-overload grids.
+    let mut acc = vec![1.0f64; nsvc];
+    let mut lam = vec![0.0f64; nsvc];
+    for _ in 0..32 {
+        lam.iter_mut().for_each(|x| *x = 0.0);
+        for rt in &graph.request_types {
+            let mut p = rate_rps * rt.share / total_share;
+            for &sid in &rt.path {
+                if c[sid] == 0 {
+                    p = 0.0;
+                    break;
+                }
+                lam[sid] += p;
+                p *= acc[sid];
+            }
+        }
+        let mut delta = 0.0f64;
+        for s in 0..nsvc {
+            if c[s] == 0 {
+                continue;
+            }
+            let (pk, _, _, _) = mmck_moments(lam[s], mu[s], c[s], cap[s]);
+            let next = 0.5 * acc[s] + 0.5 * (1.0 - pk);
+            delta = delta.max((next - acc[s]).abs());
+            acc[s] = next;
+        }
+        if delta < 1e-9 {
+            break;
+        }
+    }
+
+    // Converged per-service waiting moments and utilization.
+    let mut ew = vec![0.0f64; nsvc];
+    let mut vw = vec![0.0f64; nsvc];
+    let mut service_util = vec![0.0f64; nsvc];
+    for s in 0..nsvc {
+        if c[s] == 0 {
+            continue;
+        }
+        let (_, e1, e2, ut) = mmck_moments(lam[s], mu[s], c[s], cap[s]);
+        ew[s] = e1;
+        vw[s] = (e2 - e1 * e1).max(0.0);
+        service_util[s] = ut;
+    }
+
+    // Expected network latency between consecutive services: the mean
+    // zone-pair latency over their pod placements (what round-robin
+    // routing averages to).
+    let net_between = |a: ServiceId, b: ServiceId| -> f64 {
+        let (la, lb) = (&service_pods[a], &service_pods[b]);
+        if la.is_empty() || lb.is_empty() {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for &i in la {
+            for &j in lb {
+                sum += cluster.zone_latency_ms[pods[i].zone][pods[j].zone];
+            }
+        }
+        sum / (la.len() * lb.len()) as f64 / 1000.0
+    };
+
+    // Per-type end-to-end latency: sum of per-visit sojourn moments along
+    // the path, fit to a gamma by moment matching, plus the deterministic
+    // network shift. Survival = product of per-hop acceptances.
+    let offered = (rate_rps * window_s).round() as u64;
+    let mut stats = WindowStats { offered, ..Default::default() };
+    let mut fits: Vec<(f64, f64, f64)> = vec![]; // (mean_q, var_q, net)
+    let mut weights: Vec<f64> = vec![];
+    for rt in &graph.request_types {
+        let mut survive = 1.0f64;
+        for &sid in &rt.path {
+            survive = if c[sid] == 0 { 0.0 } else { survive * acc[sid] };
+        }
+        let mean_q: f64 = rt
+            .path
+            .iter()
+            .filter(|&&s| c[s] > 0)
+            .map(|&s| ew[s] + 1.0 / mu[s])
+            .sum();
+        let var_q: f64 = rt
+            .path
+            .iter()
+            .filter(|&&s| c[s] > 0)
+            .map(|&s| vw[s] + 1.0 / (mu[s] * mu[s]))
+            .sum();
+        let net: f64 = (0..rt.path.len().saturating_sub(1))
+            .map(|i| net_between(rt.path[i], rt.path[i + 1]))
+            .sum();
+        weights.push(rt.share / total_share * survive);
+        fits.push((mean_q, var_q, net));
+    }
+
+    let wsum: f64 = weights.iter().sum();
+    stats.completed = ((offered as f64) * wsum).round() as u64;
+    stats.dropped = offered - stats.completed;
+    stats.in_flight_at_end = 0;
+
+    // Synthetic latency samples on a per-type quantile grid, so percentile
+    // and digest consumers see the fitted distribution.
+    const N_SAMPLES: f64 = 256.0;
+    if wsum > 0.0 && stats.completed > 0 {
+        for (&(mean_q, var_q, net), &w) in fits.iter().zip(&weights) {
+            if w <= 0.0 || mean_q <= 0.0 {
+                continue;
+            }
+            let n_r = ((N_SAMPLES * w / wsum).round() as usize).max(1);
+            let (shape, scale) = if var_q > 1e-18 {
+                (mean_q * mean_q / var_q, var_q / mean_q)
+            } else {
+                (1e6, mean_q / 1e6)
+            };
+            for i in 0..n_r {
+                let u = (i as f64 + 0.5) / n_r as f64;
+                let lat_s = net + crate::util::stats::gamma_quantile(u, shape, scale);
+                stats.latencies_ms.push(lat_s * 1000.0);
+            }
+        }
+    }
+
+    WindowOutcome { stats, service_util, fluid: true }
 }
 
 /// Approximate RAM *usage* of a microservice pod given recent load — used to
@@ -402,13 +763,23 @@ mod tests {
         Cluster::new(&ClusterConfig::default())
     }
 
+    fn run_exact_window(
+        c: &Cluster,
+        g: &ServiceGraph,
+        rate: f64,
+        window: f64,
+        rng: &mut Pcg64,
+    ) -> WindowStats {
+        WindowSim::new(c, g, rate, window).run(rng).stats
+    }
+
     #[test]
     fn conservation_of_requests() {
         let mut c = cluster();
         let g = ServiceGraph::sockshop();
         deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
         let mut rng = Pcg64::new(1);
-        let s = run_window(&c, &g, 50.0, 20.0, &mut rng);
+        let s = run_exact_window(&c, &g, 50.0, 20.0, &mut rng);
         assert!(s.offered > 500);
         assert_eq!(s.offered, s.completed + s.dropped + s.in_flight_at_end);
         assert!(s.drop_rate() < 0.05, "healthy system drops little: {}", s.drop_rate());
@@ -420,7 +791,7 @@ mod tests {
         let g = ServiceGraph::sockshop();
         deploy_uniform(&mut c, &g, 1, Resources::new(2000.0, 2048.0, 200.0));
         let mut rng = Pcg64::new(2);
-        let s = run_window(&c, &g, 30.0, 20.0, &mut rng);
+        let s = run_exact_window(&c, &g, 30.0, 20.0, &mut rng);
         assert!(s.p50() > 1.0, "p50={}ms", s.p50());
         assert!(s.p90() < 500.0, "p90={}ms", s.p90());
         assert!(s.p99() >= s.p90() && s.p90() >= s.p50());
@@ -434,7 +805,7 @@ mod tests {
         deploy_uniform(&mut c, &g, 1, Resources::new(150.0, 128.0, 50.0));
         // Concentrate into zone 0 only? keep uniform; drive way over capacity.
         let mut rng = Pcg64::new(3);
-        let s = run_window(&c, &g, 800.0, 10.0, &mut rng);
+        let s = run_exact_window(&c, &g, 800.0, 10.0, &mut rng);
         assert!(s.drop_rate() > 0.2, "overload must drop: {}", s.drop_rate());
     }
 
@@ -445,7 +816,7 @@ mod tests {
             let mut c = cluster();
             deploy_uniform(&mut c, &g, 1, Resources::new(cpu, 2048.0, 200.0));
             let mut rng = Pcg64::new(seed);
-            run_window(&c, &g, 60.0, 20.0, &mut rng).p90()
+            run_exact_window(&c, &g, 60.0, 20.0, &mut rng).p90()
         };
         let slow = run_with(300.0, 4);
         let fast = run_with(2000.0, 4);
@@ -479,8 +850,8 @@ mod tests {
         }
         let mut rng1 = Pcg64::new(5);
         let mut rng2 = Pcg64::new(5);
-        let p_co = run_window(&c1, &g, 80.0, 30.0, &mut rng1).p90();
-        let p_iso = run_window(&c2, &g, 80.0, 30.0, &mut rng2).p90();
+        let p_co = run_exact_window(&c1, &g, 80.0, 30.0, &mut rng1).p90();
+        let p_iso = run_exact_window(&c2, &g, 80.0, 30.0, &mut rng2).p90();
         assert!(
             p_iso > p_co * 1.1,
             "isolation should hurt the hub: colocated {p_co:.1}ms vs isolated {p_iso:.1}ms"
@@ -495,7 +866,7 @@ mod tests {
         // Remove the catalogue service entirely.
         c.remove_app(&g.app_name(g.service_id("catalogue").unwrap()));
         let mut rng = Pcg64::new(6);
-        let s = run_window(&c, &g, 50.0, 10.0, &mut rng);
+        let s = run_exact_window(&c, &g, 50.0, 10.0, &mut rng);
         assert!(s.drop_rate() > 0.3, "browse traffic must drop: {}", s.drop_rate());
         assert!(s.completed > 0, "non-catalogue traffic still completes");
     }
@@ -512,5 +883,105 @@ mod tests {
         }
         let share: f64 = g.request_types.iter().map(|r| r.share).sum();
         assert!((share - 1.0).abs() < 1e-9);
+    }
+
+    /// Regression (ISSUE 6): a zero-RPS window must generate no arrivals
+    /// AND leave the RNG stream untouched, so surrounding nonzero windows
+    /// draw exactly what they would have drawn.
+    #[test]
+    fn zero_rate_window_is_empty_and_rng_neutral() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
+
+        let mut rng = Pcg64::new(7);
+        let out = WindowSim::new(&c, &g, 0.0, 20.0).run(&mut rng);
+        assert_eq!(out.stats.offered, 0);
+        assert_eq!(out.stats.completed, 0);
+        assert_eq!(out.stats.dropped, 0);
+        assert!(out.stats.latencies_ms.is_empty());
+        assert!(!out.fluid);
+        // The stream is bit-for-bit where a fresh one starts.
+        let mut fresh = Pcg64::new(7);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+
+        // And a nonzero window after a zero one equals the window alone.
+        let mut rng_a = Pcg64::new(8);
+        let _ = WindowSim::new(&c, &g, 0.0, 20.0).run(&mut rng_a);
+        let a = WindowSim::new(&c, &g, 40.0, 10.0).run(&mut rng_a).stats;
+        let mut rng_b = Pcg64::new(8);
+        let b = WindowSim::new(&c, &g, 40.0, 10.0).run(&mut rng_b).stats;
+        assert_eq!(a.offered, b.offered);
+        assert_eq!(a.latencies_ms, b.latencies_ms);
+    }
+
+    /// Exact-path utilization: bounded, zero for missing services, and
+    /// monotone in offered load on the bottleneck.
+    #[test]
+    fn exact_service_util_tracks_load() {
+        let g = ServiceGraph::sockshop();
+        let util_at = |rate: f64| {
+            let mut c = cluster();
+            deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
+            let mut rng = Pcg64::new(9);
+            let out = WindowSim::new(&c, &g, rate, 20.0).run(&mut rng);
+            assert_eq!(out.service_util.len(), g.services.len());
+            assert!(out.service_util.iter().all(|&u| (0.0..=1.0).contains(&u)));
+            out.max_util()
+        };
+        let low = util_at(20.0);
+        let high = util_at(120.0);
+        assert!(high > low * 2.0, "util must grow with load: {low:.3} -> {high:.3}");
+    }
+
+    /// Fluid backend smoke: selected by threshold, deterministic, healthy
+    /// grid yields sane latencies/util and conservation.
+    #[test]
+    fn fluid_backend_selected_and_sane() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(1000.0, 1024.0, 200.0));
+
+        let sim = WindowSim::new(&c, &g, 80.0, 60.0)
+            .with_backend(SimBackend::Fluid { threshold_rps: 50.0 });
+        let mut rng = Pcg64::new(10);
+        let out = sim.run(&mut rng);
+        assert!(out.fluid, "80 rps >= 50 rps threshold must select fluid");
+        // Fluid draws nothing from the RNG.
+        let mut fresh = Pcg64::new(10);
+        assert_eq!(rng.next_u64(), fresh.next_u64());
+
+        assert_eq!(out.stats.offered, 4800);
+        assert_eq!(out.stats.offered, out.stats.completed + out.stats.dropped);
+        assert_eq!(out.stats.in_flight_at_end, 0);
+        assert!(out.stats.drop_rate() < 0.01, "healthy grid: {}", out.stats.drop_rate());
+        let (p50, p90, p99) = (out.stats.p50(), out.stats.p90(), out.stats.p99());
+        assert!(p50 > 5.0 && p50 < 60.0, "p50={p50}");
+        assert!(p99 >= p90 && p90 >= p50);
+        assert!(out.max_util() > 0.0 && out.max_util() <= 1.0);
+
+        // Below the threshold the same config runs exact.
+        let mut rng2 = Pcg64::new(11);
+        let below = WindowSim::new(&c, &g, 20.0, 10.0)
+            .with_backend(SimBackend::Fluid { threshold_rps: 50.0 })
+            .run(&mut rng2);
+        assert!(!below.fluid);
+        assert!(below.stats.offered > 0);
+    }
+
+    /// Deep overload: fluid's fixed point converges and agrees with the
+    /// saturation invariants (util pinned at 1, most traffic dropped).
+    #[test]
+    fn fluid_overload_saturates() {
+        let mut c = cluster();
+        let g = ServiceGraph::sockshop();
+        deploy_uniform(&mut c, &g, 1, Resources::new(150.0, 128.0, 50.0));
+        let mut rng = Pcg64::new(12);
+        let out = WindowSim::new(&c, &g, 800.0, 10.0)
+            .with_backend(SimBackend::Fluid { threshold_rps: 0.0 })
+            .run(&mut rng);
+        assert!(out.fluid);
+        assert!(out.stats.drop_rate() > 0.2, "overload must drop: {}", out.stats.drop_rate());
+        assert!(out.max_util() > 0.95, "bottleneck must saturate: {}", out.max_util());
     }
 }

@@ -7,4 +7,6 @@ pub mod microservice;
 pub use batch::{
     run_batch_job, run_cost, BatchWorkload, DeployMode, JobResult, Platform, RunSpec,
 };
-pub use microservice::{run_window, RequestType, Service, ServiceGraph, WindowStats};
+pub use microservice::{
+    RequestType, Service, ServiceGraph, SimBackend, WindowOutcome, WindowSim, WindowStats,
+};

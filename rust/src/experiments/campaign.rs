@@ -882,7 +882,7 @@ fn run_affinity(
         );
     }
     let mut rng = Pcg64::new(hash_str(&format!("affinity/{}/s{}", json_f64(window_s), sc.seed)));
-    let s = microservice::run_window(&cluster, &g, 80.0, window_s, &mut rng);
+    let s = microservice::WindowSim::new(&cluster, &g, 80.0, window_s).run(&mut rng).stats;
     let rec = StepRecord {
         perf_raw: s.p90(),
         perf_score: micro_perf_score(s.p90()),

@@ -34,7 +34,7 @@ use std::time::Instant;
 use crate::apps::batch::{
     cpu_demand_cores, run_batch_job, run_cost, BatchWorkload, DeployMode, Platform, RunSpec,
 };
-use crate::apps::microservice::{self, ServiceGraph, WindowStats};
+use crate::apps::microservice::{self, ServiceGraph, SimBackend, WindowStats};
 use crate::bandit::encode::{Action, ActionSpace, JointAction, JointSpace};
 use crate::config::SystemConfig;
 use crate::monitor::context::ContextVector;
@@ -593,14 +593,17 @@ impl Environment for MicroEnv {
         let action = joint.primary();
         let period_s = self.cfg.period_s;
         let setting = self.cfg.setting;
+        let sim_backend = self.cfg.sim_backend;
         let st = self.st();
         let rate = st.rate;
 
         let (total_pods, rps_per_pod, errors) = ms_apply_load(&mut st.cluster, &st.graph, rate);
 
         // Run the window of traffic on the surviving pods.
-        let stats =
-            microservice::run_window(&st.cluster, &st.graph, rate, period_s, &mut st.rng_des);
+        let stats = microservice::WindowSim::new(&st.cluster, &st.graph, rate, period_s)
+            .with_backend(sim_backend)
+            .run(&mut st.rng_des)
+            .stats;
 
         if std::env::var("DRONE_DEBUG").is_ok() {
             let alive: Vec<usize> = (0..st.graph.services.len())
@@ -679,6 +682,9 @@ pub struct HybridEnvConfig {
     pub workload: BatchWorkload,
     pub trace: DiurnalConfig,
     pub interference: bool,
+    /// Window-simulation backend for the microservice tenant (exact DES
+    /// by default, as everywhere goldens apply).
+    pub sim_backend: SimBackend,
     pub deadline: Option<std::time::Instant>,
     /// Joint batch+micro rightsizing: the action space gains a batch
     /// executor factor and the fixed co-tenant deployment is replaced by
@@ -694,6 +700,7 @@ impl HybridEnvConfig {
             workload,
             trace: DiurnalConfig::default(),
             interference: true,
+            sim_backend: SimBackend::Exact,
             deadline: None,
             joint: false,
         }
@@ -916,6 +923,7 @@ impl Environment for HybridEnv {
         let joint_mode = self.cfg.joint;
         let workload = self.cfg.workload;
         let setting = self.cfg.setting;
+        let sim_backend = self.cfg.sim_backend;
         let action = joint.serving().clone();
         let st = self.st();
         let rate = st.rate;
@@ -934,13 +942,10 @@ impl Environment for HybridEnv {
         }
 
         // The microservice window runs under that pressure.
-        let stats = microservice::run_window(
-            &st.cluster,
-            &st.graph,
-            rate,
-            HYBRID_PERIOD_S,
-            &mut st.rng_des,
-        );
+        let stats = microservice::WindowSim::new(&st.cluster, &st.graph, rate, HYBRID_PERIOD_S)
+            .with_backend(sim_backend)
+            .run(&mut st.rng_des)
+            .stats;
 
         // The batch tenant's recurring job runs under the same (shared)
         // contention — including whatever load the microservices raise.

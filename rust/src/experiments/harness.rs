@@ -15,7 +15,7 @@
 //! [`Environment`]: super::env::Environment
 
 use crate::apps::batch::{BatchWorkload, Platform};
-use crate::apps::microservice::ServiceGraph;
+use crate::apps::microservice::{ServiceGraph, SimBackend};
 use crate::bandit::encode::JointAction;
 use crate::config::SystemConfig;
 use crate::runtime::Backend;
@@ -184,6 +184,10 @@ pub struct MicroEnvConfig {
     pub graph: ServiceGraph,
     pub trace: DiurnalConfig,
     pub interference: bool,
+    /// Window-simulation backend (exact DES by default; `Fluid` switches
+    /// high-RPS windows to the mean-value approximation). Everything the
+    /// golden suites pin runs `Exact`.
+    pub sim_backend: SimBackend,
     /// Optional wall-clock deadline (`--timeout`), as for the batch loop.
     pub deadline: Option<std::time::Instant>,
 }
@@ -197,6 +201,7 @@ impl MicroEnvConfig {
             graph: ServiceGraph::socialnet(),
             trace: DiurnalConfig::default(),
             interference: true,
+            sim_backend: SimBackend::Exact,
             deadline: None,
         }
     }

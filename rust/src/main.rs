@@ -30,6 +30,7 @@ fn main() {
         Some("campaign") => cmd_campaign(&args, &sys),
         Some("list") => cmd_list(&sys),
         Some("selfcheck") => cmd_selfcheck(&sys),
+        Some("bench-check") => cmd_bench_check(&args),
         _ => {
             print_usage();
             0
@@ -45,6 +46,7 @@ fn print_usage() {
 USAGE:
   drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint> [--workload <w>]
             [--setting <public|private>] [--steps N] [--seed S] [--config file.toml]
+            [--sim-backend <exact|fluid>] [--fluid-threshold RPS]
   drone experiment <id|all> [--scale 0.2] [--seed S] [--jobs N] [--timeout SECS] [--no-exec]
                    [--refresh] [--digest-points K]
   drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
@@ -53,6 +55,7 @@ USAGE:
   drone campaign --compact
   drone list
   drone selfcheck
+  drone bench-check <BENCH_N.json>
 
 Environment-backed figures/tables read scenario records from the campaign
 store (results/campaign.json, opened once per invocation), executing only
@@ -64,6 +67,13 @@ digest (default 64; a store built at another size is rebuilt).
 `campaign --compact` drops stored scenarios whose key no longer matches
 any registered suite or the current config fingerprint (plus timed-out
 leftovers and duplicates), reporting compacted(n).
+
+--sim-backend selects the microservice window simulator for `drone run`
+(micro/hybrid envs): `exact` (default; per-request DES, what all goldens
+pin) or `fluid` (M/M/c mean-value approximation for windows at or above
+--fluid-threshold RPS, default 120; windows below it still run exact).
+`bench-check` validates a bench_main --json export against the
+drone-bench/v1 schema (used by CI to keep the perf trajectory parseable).
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
@@ -85,6 +95,18 @@ fn parse_workload(s: &str) -> Option<drone::apps::batch::BatchWorkload> {
     })
 }
 
+/// `--sim-backend exact|fluid [--fluid-threshold RPS]` for the envs that
+/// simulate microservice traffic windows.
+fn parse_sim_backend(args: &Args) -> Result<drone::apps::SimBackend, String> {
+    match args.get_str("sim-backend", "exact").as_str() {
+        "exact" => Ok(drone::apps::SimBackend::Exact),
+        "fluid" => Ok(drone::apps::SimBackend::Fluid {
+            threshold_rps: args.get_f64("fluid-threshold", 120.0),
+        }),
+        other => Err(format!("unknown sim backend {other:?} (expected exact|fluid)")),
+    }
+}
+
 fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
     let policy = args.get_str("policy", "drone");
     let envname = args.get_str("env", "batch");
@@ -93,6 +115,13 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
         _ => CloudSetting::Public,
     };
     let steps = args.get_u64("steps", 20);
+    let sim_backend = match parse_sim_backend(args) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("{e}");
+            return 2;
+        }
+    };
     let mut backend = Backend::auto(&sys.artifacts_dir);
     println!(
         "# policy={policy} env={envname} setting={setting:?} steps={steps} backend={}",
@@ -128,7 +157,8 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
         }
         "micro" => {
             let duration = steps as f64 * 60.0;
-            let env = MicroEnvConfig::socialnet(setting, duration);
+            let mut env = MicroEnvConfig::socialnet(setting, duration);
+            env.sim_backend = sim_backend;
             let recs = experiments::run_micro_env(&policy, &env, sys, &mut backend, sys.seed);
             let mut tab = Table::new(
                 &format!("{policy} on SocialNet ({setting:?})"),
@@ -154,11 +184,12 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
                 }
             };
             let joint = envname == "hybrid-joint";
-            let env = if joint {
+            let mut env = if joint {
                 experiments::HybridEnvConfig::joint(w, setting, steps)
             } else {
                 experiments::HybridEnvConfig::new(w, setting, steps)
             };
+            env.sim_backend = sim_backend;
             let recs = experiments::run_hybrid_env(&policy, &env, sys, &mut backend, sys.seed);
             let mode = if joint { "joint" } else { "fixed co-tenant" };
             let mut tab = Table::new(
@@ -462,4 +493,30 @@ fn cmd_selfcheck(_sys: &SystemConfig) -> i32 {
     eprintln!("selfcheck compares the PJRT artifact against the native GP;");
     eprintln!("rebuild with `cargo build --features pjrt` (real xla crate) to enable it");
     1
+}
+
+/// `drone bench-check <path>`: validate a `bench_main --json` export
+/// against the drone-bench/v1 schema, so the tracked perf trajectory
+/// (BENCH_*.json artifacts) cannot silently drift shape.
+fn cmd_bench_check(args: &Args) -> i32 {
+    let Some(path) = args.positional.get(1) else {
+        eprintln!("usage: drone bench-check <BENCH_N.json>");
+        return 2;
+    };
+    match std::fs::read_to_string(path) {
+        Ok(text) => match drone::util::benchfmt::validate(&text) {
+            Ok(summary) => {
+                println!("{path}: OK — {summary}");
+                0
+            }
+            Err(e) => {
+                eprintln!("{path}: schema violation: {e}");
+                1
+            }
+        },
+        Err(e) => {
+            eprintln!("cannot read {path}: {e}");
+            1
+        }
+    }
 }

@@ -1,45 +1,48 @@
-//! Generic discrete-event simulation engine (binary-heap event queue).
+//! Generic discrete-event simulation engine.
 //!
-//! The microservice application model runs on top of this: request arrivals,
-//! per-pod queueing, service completions. Time is f64 seconds.
+//! The event queue is an **index-based 4-ary min-heap** over an arena of
+//! event slots: the heap itself is a flat `Vec<u32>` of slot ids ordered by
+//! `(time, seq)`, and payloads live in reusable arena slots, so a
+//! steady-state simulation performs **no per-event allocation** once the
+//! arena has warmed up. The 4-ary layout halves the tree depth of a binary
+//! heap and keeps sift-down children in one cache line of ids.
+//!
+//! Ordering contract: events pop in ascending `(time, seq)` order, where
+//! `seq` is the insertion sequence number — exactly the total order of the
+//! `BinaryHeap<Scheduled>` implementation this replaced, so exact-mode
+//! simulations are bit-for-bit identical (same pop order, same RNG draw
+//! order). A property test in `tests/property_invariants.rs` pins the pop
+//! order against a `BinaryHeap` reference model on random interleavings.
+//!
+//! The microservice application model runs on top of this: request
+//! arrivals, per-pod queueing, service completions. Time is f64 seconds.
 
-use std::cmp::Ordering;
-use std::collections::BinaryHeap;
-
-/// An event carrying an opaque payload `E`, ordered by time (min-heap).
-#[derive(Clone, Debug)]
-struct Scheduled<E> {
+/// Arena slot: key fields are kept inline so heap comparisons never chase
+/// the payload, and `payload` is `Option` so slots can be vacated and
+/// recycled through the free list without `E: Default`.
+#[derive(Debug)]
+struct Slot<E> {
     time: f64,
     seq: u64,
-    payload: E,
+    payload: Option<E>,
 }
 
-impl<E> PartialEq for Scheduled<E> {
-    fn eq(&self, other: &Self) -> bool {
-        self.time == other.time && self.seq == other.seq
-    }
-}
-impl<E> Eq for Scheduled<E> {}
-impl<E> PartialOrd for Scheduled<E> {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl<E> Ord for Scheduled<E> {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // Reverse for min-heap; tie-break on sequence for determinism.
-        // `schedule` guarantees finite times, so the Equal fallback is
-        // unreachable in practice and exists only to satisfy totality.
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.seq.cmp(&self.seq))
-    }
-}
-
+/// A simulation clock plus a pending-event set.
+///
+/// # Non-finite times
+///
+/// `schedule` requires a finite time: a NaN key would corrupt the ordering
+/// of every event it is compared against. The contract is explicit —
+/// **debug builds panic** (`"non-finite event time"`); **release builds
+/// clamp to `now`**, i.e. the event runs immediately rather than poisoning
+/// later pops. `schedule_in` sanitizes a NaN delta to 0 before it can
+/// reach `schedule`, so it never trips the assert.
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    /// Heap of slot ids, min-ordered by the slot's `(time, seq)`.
+    heap: Vec<u32>,
+    /// Slot arena; `free` holds vacated ids for reuse.
+    slots: Vec<Slot<E>>,
+    free: Vec<u32>,
     now: f64,
     seq: u64,
     pub processed: u64,
@@ -47,7 +50,19 @@ pub struct EventQueue<E> {
 
 impl<E> EventQueue<E> {
     pub fn new() -> Self {
-        Self { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        Self::with_capacity(0)
+    }
+
+    /// Pre-size the arena and heap for `n` concurrently pending events.
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            heap: Vec::with_capacity(n),
+            slots: Vec::with_capacity(n),
+            free: Vec::new(),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+        }
     }
 
     pub fn now(&self) -> f64 {
@@ -62,42 +77,126 @@ impl<E> EventQueue<E> {
         self.heap.is_empty()
     }
 
+    /// Time of the earliest pending event, without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.first().map(|&id| self.slots[id as usize].time)
+    }
+
     /// Schedule `payload` at absolute time `t` (must be finite and >= now).
     ///
-    /// Non-finite times would poison the heap: `Scheduled::cmp` falls back
-    /// to `Ordering::Equal` when `partial_cmp` fails, so a single NaN event
-    /// silently corrupts the ordering of everything it is compared against.
-    /// Debug builds assert; release builds clamp to `now` (run the event
-    /// immediately rather than corrupt every later pop).
+    /// See the type-level docs for the non-finite-time contract: debug
+    /// builds assert, release builds clamp `t` to `now`.
     pub fn schedule(&mut self, t: f64, payload: E) {
         debug_assert!(t.is_finite(), "non-finite event time {t}");
         debug_assert!(t >= self.now - 1e-9, "scheduling into the past: {t} < {}", self.now);
         let t = if t.is_finite() { t.max(self.now) } else { self.now };
         self.seq += 1;
-        self.heap.push(Scheduled { time: t, seq: self.seq, payload });
+        let seq = self.seq;
+        let id = match self.free.pop() {
+            Some(id) => {
+                let s = &mut self.slots[id as usize];
+                s.time = t;
+                s.seq = seq;
+                s.payload = Some(payload);
+                id
+            }
+            None => {
+                assert!(self.slots.len() < u32::MAX as usize, "event arena exhausted");
+                self.slots.push(Slot { time: t, seq, payload: Some(payload) });
+                (self.slots.len() - 1) as u32
+            }
+        };
+        self.heap.push(id);
+        self.sift_up(self.heap.len() - 1);
     }
 
     pub fn schedule_in(&mut self, dt: f64, payload: E) {
         self.schedule(self.now + dt.max(0.0), payload);
     }
 
-    /// Pop the next event if it occurs at or before `horizon`.
-    pub fn next_before(&mut self, horizon: f64) -> Option<(f64, E)> {
-        if let Some(top) = self.heap.peek() {
-            if top.time <= horizon {
-                let ev = self.heap.pop().unwrap();
-                self.now = ev.time;
-                self.processed += 1;
-                return Some((ev.time, ev.payload));
-            }
+    /// Pop the earliest pending event, advancing the clock to its time.
+    pub fn pop(&mut self) -> Option<(f64, E)> {
+        if self.heap.is_empty() {
+            return None;
         }
-        None
+        let id = self.heap.swap_remove(0);
+        if !self.heap.is_empty() {
+            self.sift_down(0);
+        }
+        let slot = &mut self.slots[id as usize];
+        let t = slot.time;
+        let payload = slot.payload.take().expect("popped an already-vacated slot");
+        self.free.push(id);
+        self.now = t;
+        self.processed += 1;
+        Some((t, payload))
+    }
+
+    /// Batched window processing: pop and handle every event with
+    /// `time <= horizon`, including events the handler schedules during the
+    /// drain (the horizon is re-checked against the updated heap top each
+    /// iteration). The handler gets `&mut self` back so it can schedule
+    /// follow-up events; the clock advances to each event's time before the
+    /// handler runs, exactly as with `pop`.
+    pub fn drain_until<F: FnMut(&mut Self, f64, E)>(&mut self, horizon: f64, mut f: F) {
+        while let Some(t) = self.peek_time() {
+            if t > horizon {
+                break;
+            }
+            let (t, ev) = self.pop().expect("peeked event vanished");
+            f(self, t, ev);
+        }
     }
 
     /// Advance the clock to `t` without processing (end-of-window).
     pub fn advance_to(&mut self, t: f64) {
         if t > self.now {
             self.now = t;
+        }
+    }
+
+    /// `(time, seq)` lexicographic order. Times are finite by the
+    /// `schedule` contract, so `<` is a total order here.
+    #[inline]
+    fn less(&self, a: u32, b: u32) -> bool {
+        let (sa, sb) = (&self.slots[a as usize], &self.slots[b as usize]);
+        sa.time < sb.time || (sa.time == sb.time && sa.seq < sb.seq)
+    }
+
+    #[inline]
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 4;
+            if self.less(self.heap[i], self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.heap.len();
+        loop {
+            let first = 4 * i + 1;
+            if first >= n {
+                break;
+            }
+            let mut best = first;
+            let end = (first + 4).min(n);
+            for c in first + 1..end {
+                if self.less(self.heap[c], self.heap[best]) {
+                    best = c;
+                }
+            }
+            if self.less(self.heap[best], self.heap[i]) {
+                self.heap.swap(i, best);
+                i = best;
+            } else {
+                break;
+            }
         }
     }
 }
@@ -119,7 +218,7 @@ mod tests {
         q.schedule(1.0, "a");
         q.schedule(2.0, "b");
         let mut out = vec![];
-        while let Some((t, e)) = q.next_before(f64::INFINITY) {
+        while let Some((t, e)) = q.pop() {
             out.push((t, e));
         }
         assert_eq!(out, vec![(1.0, "a"), (2.0, "b"), (3.0, "c")]);
@@ -133,23 +232,47 @@ mod tests {
         q.schedule(1.0, 2);
         q.schedule(1.0, 3);
         let mut out = vec![];
-        while let Some((_, e)) = q.next_before(10.0) {
+        while let Some((_, e)) = q.pop() {
             out.push(e);
         }
         assert_eq!(out, vec![1, 2, 3]);
     }
 
     #[test]
-    fn horizon_respected() {
+    fn peek_respects_order_and_pop_advances_clock() {
         let mut q = EventQueue::new();
         q.schedule(1.0, ());
         q.schedule(5.0, ());
-        assert!(q.next_before(2.0).is_some());
-        assert!(q.next_before(2.0).is_none());
+        assert_eq!(q.peek_time(), Some(1.0));
+        assert!(q.pop().is_some());
+        assert_eq!(q.now(), 1.0);
+        assert_eq!(q.peek_time(), Some(5.0));
         assert_eq!(q.len(), 1);
         q.advance_to(2.0);
         assert_eq!(q.now(), 2.0);
-        assert!(q.next_before(5.0).is_some());
+        assert_eq!(q.pop(), Some((5.0, ())));
+        assert_eq!(q.peek_time(), None);
+    }
+
+    /// `drain_until` stops at the horizon, and events scheduled *during*
+    /// the drain at times at or before the horizon are drained too.
+    #[test]
+    fn drain_until_handles_mid_drain_schedules() {
+        let mut q = EventQueue::new();
+        q.schedule(1.0, "a");
+        q.schedule(4.0, "late");
+        let mut seen = vec![];
+        q.drain_until(3.0, |q, t, e| {
+            if e == "a" {
+                q.schedule_in(1.0, "b"); // t=2.0, inside the horizon
+                q.schedule(3.5, "c"); // outside
+            }
+            seen.push((t, e));
+        });
+        assert_eq!(seen, vec![(1.0, "a"), (2.0, "b")]);
+        assert_eq!(q.len(), 2); // "c" and "late" remain
+        assert_eq!(q.now(), 2.0);
+        assert_eq!(q.processed, 2);
     }
 
     #[test]
@@ -175,21 +298,63 @@ mod tests {
         let mut q = EventQueue::new();
         q.schedule(1.0, "later");
         q.schedule_in(f64::NAN, "now");
-        let (t, e) = q.next_before(10.0).unwrap();
-        assert_eq!((t, e), (0.0, "now"));
-        assert_eq!(q.next_before(10.0).unwrap(), (1.0, "later"));
+        assert_eq!(q.pop(), Some((0.0, "now")));
+        assert_eq!(q.pop(), Some((1.0, "later")));
     }
 
     #[test]
     fn clock_monotone() {
         let mut q = EventQueue::new();
         q.schedule(2.0, ());
-        let _ = q.next_before(10.0);
+        let _ = q.pop();
         assert_eq!(q.now(), 2.0);
         q.schedule_in(0.5, ());
-        let (t, _) = q.next_before(10.0).unwrap();
+        let (t, _) = q.pop().unwrap();
         assert_eq!(t, 2.5);
         q.advance_to(1.0); // no-op backwards
         assert_eq!(q.now(), 2.5);
+    }
+
+    /// Vacated slots are recycled through the free list: interleaved
+    /// schedule/pop churn must not grow the arena past the high-water mark
+    /// of concurrently pending events.
+    #[test]
+    fn arena_reuses_slots() {
+        let mut q = EventQueue::with_capacity(4);
+        for round in 0..100u64 {
+            let base = round as f64;
+            q.schedule(base + 0.1, round);
+            q.schedule(base + 0.2, round);
+            q.schedule(base + 0.3, round);
+            assert_eq!(q.pop().map(|(_, e)| e), Some(round));
+            assert_eq!(q.pop().map(|(_, e)| e), Some(round));
+            assert_eq!(q.pop().map(|(_, e)| e), Some(round));
+        }
+        assert!(q.is_empty());
+        assert!(q.slots.len() <= 3, "arena grew past high-water mark: {}", q.slots.len());
+        assert_eq!(q.processed, 300);
+    }
+
+    /// Large randomized churn keeps the heap invariant: every pop yields
+    /// the lexicographic minimum `(time, seq)` of what is pending.
+    #[test]
+    fn heap_invariant_under_churn() {
+        let mut rng = crate::util::rng::Pcg64::new(42);
+        let mut q = EventQueue::new();
+        let mut last_t = f64::NEG_INFINITY;
+        let mut pending = 0usize;
+        for _ in 0..5000 {
+            if pending == 0 || rng.f64() < 0.6 {
+                // Coarse times force frequent ties to exercise seq order.
+                let t = q.now() + (rng.f64() * 4.0).floor();
+                q.schedule(t, ());
+                pending += 1;
+            } else {
+                let (t, _) = q.pop().unwrap();
+                pending -= 1;
+                assert!(t >= last_t, "pop times regressed: {t} after {last_t}");
+                last_t = t;
+            }
+        }
     }
 }

@@ -1,0 +1,259 @@
+//! Machine-readable bench export — the `drone-bench/v1` schema.
+//!
+//! `cargo bench -- perf --json BENCH_N.json` serializes the perf
+//! micro-bench results through [`render`]; CI re-reads the artifact with
+//! `drone bench-check`, which calls [`validate`] so a malformed or
+//! truncated export fails the job instead of silently uploading garbage.
+//!
+//! The schema is intentionally small: a `schema` tag, a free-form string
+//! `meta` object (scale, backend, host notes), and a `groups` object
+//! mapping group name -> array of bench rows. Three groups are mandatory
+//! for the tracked trajectory — `queue` (event-queue micro-benches),
+//! `window` (window sim at low/high RPS x exact/fluid) and `decide`
+//! (end-to-end decide+advance) — extra groups are allowed and ignored by
+//! the check.
+
+use crate::util::json::Json;
+
+/// Schema tag written into and required from every export.
+pub const SCHEMA: &str = "drone-bench/v1";
+
+/// Groups that must be present (non-empty) for the export to validate.
+pub const REQUIRED_GROUPS: [&str; 3] = ["queue", "window", "decide"];
+
+/// One measured bench, as it appears in a group array.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Optional derived rate, e.g. ("req/s-sim", 1.2e6).
+    pub throughput: Option<(String, f64)>,
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn num(v: f64) -> String {
+    // Bench times are finite by construction; anything else is a bug we
+    // want the validator to reject, so write it as null (invalid) rather
+    // than emit non-JSON tokens like `NaN`.
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".into()
+    }
+}
+
+/// Serialize groups of bench rows into a `drone-bench/v1` document.
+/// Field order is fixed so exports diff cleanly across runs.
+pub fn render(meta: &[(&str, String)], groups: &[(&str, Vec<BenchRow>)]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    out.push_str("  \"meta\": {");
+    for (i, (k, v)) in meta.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": \"{}\"", esc(k), esc(v)));
+    }
+    out.push_str("\n  },\n");
+    out.push_str("  \"groups\": {");
+    for (gi, (gname, rows)) in groups.iter().enumerate() {
+        if gi > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!("\n    \"{}\": [", esc(gname)));
+        for (ri, r) in rows.iter().enumerate() {
+            if ri > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n      {{\"name\": \"{}\", \"iters\": {}, \"mean_ms\": {}, \
+                 \"p50_ms\": {}, \"p99_ms\": {}",
+                esc(&r.name),
+                r.iters,
+                num(r.mean_ms),
+                num(r.p50_ms),
+                num(r.p99_ms)
+            ));
+            if let Some((unit, v)) = &r.throughput {
+                out.push_str(&format!(
+                    ", \"throughput\": {}, \"throughput_unit\": \"{}\"",
+                    num(*v),
+                    esc(unit)
+                ));
+            }
+            out.push('}');
+        }
+        out.push_str("\n    ]");
+    }
+    out.push_str("\n  }\n}\n");
+    out
+}
+
+fn check_row(group: &str, row: &Json) -> Result<(), String> {
+    let name = row
+        .get("name")
+        .and_then(Json::as_str)
+        .ok_or_else(|| format!("group {group:?}: bench entry missing string \"name\""))?;
+    let ctx = format!("group {group:?} bench {name:?}");
+    let iters = row
+        .get("iters")
+        .and_then(Json::as_u64)
+        .ok_or_else(|| format!("{ctx}: missing integer \"iters\""))?;
+    if iters == 0 {
+        return Err(format!("{ctx}: zero iterations (bench never ran)"));
+    }
+    for key in ["mean_ms", "p50_ms", "p99_ms"] {
+        let v = row
+            .get(key)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| format!("{ctx}: missing number {key:?}"))?;
+        if !v.is_finite() || v < 0.0 {
+            return Err(format!("{ctx}: {key} = {v} is not a finite non-negative time"));
+        }
+    }
+    let p50 = row.get("p50_ms").and_then(Json::as_f64).unwrap();
+    let p99 = row.get("p99_ms").and_then(Json::as_f64).unwrap();
+    if p50 > p99 {
+        return Err(format!("{ctx}: p50_ms {p50} exceeds p99_ms {p99}"));
+    }
+    Ok(())
+}
+
+/// Check a serialized export against the `drone-bench/v1` schema.
+/// Ok carries a one-line human summary for the CI log.
+pub fn validate(text: &str) -> Result<String, String> {
+    let doc = Json::parse(text).map_err(|e| format!("not valid JSON: {e}"))?;
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or("missing string field \"schema\"")?;
+    if schema != SCHEMA {
+        return Err(format!("schema is {schema:?}, expected {SCHEMA:?}"));
+    }
+    let groups = match doc.get("groups") {
+        Some(Json::Obj(fields)) => fields,
+        _ => return Err("missing object field \"groups\"".into()),
+    };
+    let mut n_rows = 0usize;
+    for (gname, rows) in groups {
+        let rows = rows
+            .as_arr()
+            .ok_or_else(|| format!("group {gname:?} is not an array"))?;
+        for row in rows {
+            check_row(gname, row)?;
+        }
+        n_rows += rows.len();
+    }
+    for required in REQUIRED_GROUPS {
+        let present = groups
+            .iter()
+            .find(|(k, _)| k == required)
+            .and_then(|(_, v)| v.as_arr())
+            .map(|a| !a.is_empty())
+            .unwrap_or(false);
+        if !present {
+            return Err(format!("required group {required:?} is missing or empty"));
+        }
+    }
+    Ok(format!("{SCHEMA}: {} groups, {n_rows} benches", groups.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(name: &str) -> BenchRow {
+        BenchRow {
+            name: name.into(),
+            iters: 100,
+            mean_ms: 1.5,
+            p50_ms: 1.4,
+            p99_ms: 2.1,
+            throughput: Some(("req/s-sim".into(), 1.0e6)),
+        }
+    }
+
+    fn full_groups() -> Vec<(&'static str, Vec<BenchRow>)> {
+        vec![
+            ("queue", vec![row("push_pop"), row("drain")]),
+            ("window", vec![row("exact low"), row("fluid high")]),
+            ("decide", vec![row("decide+advance")]),
+        ]
+    }
+
+    #[test]
+    fn render_round_trips_through_validate() {
+        let text = render(&[("scale", "0.25".into())], &full_groups());
+        let summary = validate(&text).expect("render output must validate");
+        assert!(summary.contains("3 groups"), "{summary}");
+        assert!(summary.contains("5 benches"), "{summary}");
+    }
+
+    #[test]
+    fn missing_required_group_rejected() {
+        let groups = vec![
+            ("queue", vec![row("push_pop")]),
+            ("window", vec![row("exact low")]),
+        ];
+        let text = render(&[], &groups);
+        let err = validate(&text).unwrap_err();
+        assert!(err.contains("decide"), "{err}");
+    }
+
+    #[test]
+    fn empty_required_group_rejected() {
+        let groups = vec![
+            ("queue", vec![row("push_pop")]),
+            ("window", vec![]),
+            ("decide", vec![row("d")]),
+        ];
+        let text = render(&[], &groups);
+        let err = validate(&text).unwrap_err();
+        assert!(err.contains("window"), "{err}");
+    }
+
+    #[test]
+    fn wrong_schema_and_garbage_rejected() {
+        assert!(validate("not json").is_err());
+        assert!(validate("{\"schema\": \"drone-bench/v0\", \"groups\": {}}")
+            .unwrap_err()
+            .contains("drone-bench/v0"));
+    }
+
+    #[test]
+    fn non_finite_time_rejected() {
+        let mut r = row("bad");
+        r.mean_ms = f64::NAN;
+        let groups =
+            vec![("queue", vec![r]), ("window", vec![row("w")]), ("decide", vec![row("d")])];
+        let err = validate(&render(&[], &groups)).unwrap_err();
+        assert!(err.contains("mean_ms"), "{err}");
+    }
+
+    #[test]
+    fn extra_groups_allowed() {
+        let mut groups = full_groups();
+        groups.push(("experiments", vec![row("fig7a")]));
+        let text = render(&[], &groups);
+        assert!(validate(&text).is_ok());
+    }
+}

@@ -2,6 +2,7 @@
 //! rand/clap/serde/criterion): RNG + distributions, statistics, CLI parsing,
 //! table rendering and CSV output.
 
+pub mod benchfmt;
 pub mod cli;
 pub mod csv;
 pub mod json;

@@ -217,6 +217,74 @@ pub fn norm_cdf(z: f64) -> f64 {
     0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
 }
 
+/// Standard normal quantile (inverse CDF), Acklam's rational
+/// approximation (|rel err| < 1.2e-9 on (0,1)). Endpoints map to ∓∞.
+pub fn norm_ppf(u: f64) -> f64 {
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if u <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if u >= 1.0 {
+        return f64::INFINITY;
+    }
+    let tail = |p: f64| -> f64 {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    };
+    if u < P_LOW {
+        tail(u)
+    } else if u > 1.0 - P_LOW {
+        -tail(1.0 - u)
+    } else {
+        let q = u - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    }
+}
+
+/// Gamma(shape k, scale θ) quantile via the Wilson–Hilferty cube-root
+/// normal approximation — accurate to a few percent for k ≳ 1, which is
+/// what the fluid simulator's multi-hop latency fits produce.
+pub fn gamma_quantile(u: f64, shape: f64, scale: f64) -> f64 {
+    if shape <= 0.0 || scale <= 0.0 {
+        return 0.0;
+    }
+    let z = norm_ppf(u);
+    let t = 1.0 - 1.0 / (9.0 * shape) + z * (1.0 / (9.0 * shape)).sqrt();
+    (shape * scale * t.max(0.0).powi(3)).max(0.0)
+}
+
 /// Abramowitz & Stegun 7.1.26 erf approximation (|err| < 1.5e-7).
 pub fn erf(x: f64) -> f64 {
     let sign = if x < 0.0 { -1.0 } else { 1.0 };
@@ -344,6 +412,28 @@ mod tests {
         assert!((erf(-1.0) + 0.8427007929).abs() < 1e-6);
         assert!((norm_cdf(0.0) - 0.5).abs() < 1e-9);
         assert!((norm_cdf(1.6448536) - 0.95).abs() < 1e-4);
+    }
+
+    #[test]
+    fn norm_ppf_inverts_cdf() {
+        for &u in &[0.001, 0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999] {
+            let z = norm_ppf(u);
+            assert!((norm_cdf(z) - u).abs() < 2e-4, "u={u} z={z}");
+        }
+        assert!((norm_ppf(0.975) - 1.959964).abs() < 1e-4);
+        assert!(norm_ppf(0.5).abs() < 1e-9);
+        assert_eq!(norm_ppf(0.0), f64::NEG_INFINITY);
+        assert_eq!(norm_ppf(1.0), f64::INFINITY);
+    }
+
+    #[test]
+    fn gamma_quantile_reference_points() {
+        // Exponential (k=1, scale=2): median = 2 ln 2 ≈ 1.386.
+        assert!((gamma_quantile(0.5, 1.0, 2.0) - 2.0 * 2f64.ln()).abs() < 0.05);
+        // Monotone in u; near-normal for large shape (median ≈ k - 1/3).
+        assert!(gamma_quantile(0.9, 3.0, 1.0) > gamma_quantile(0.5, 3.0, 1.0));
+        assert!((gamma_quantile(0.5, 100.0, 1.0) - (100.0 - 1.0 / 3.0)).abs() < 0.05);
+        assert_eq!(gamma_quantile(0.5, 0.0, 1.0), 0.0);
     }
 
     #[test]

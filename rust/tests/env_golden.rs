@@ -287,8 +287,9 @@ fn golden_run_micro_env(
         }
         let errors = cluster.sweep_oom().len() as u32;
 
-        let stats =
-            microservice::run_window(&cluster, &env.graph, rate, env.period_s, &mut rng_des);
+        let stats = microservice::WindowSim::new(&cluster, &env.graph, rate, env.period_s)
+            .run(&mut rng_des)
+            .stats;
 
         let p90 = stats.p90();
         let completion = if stats.offered == 0 {
@@ -466,7 +467,9 @@ fn golden_run_hybrid_env(
             c.cpu_m = (c.cpu_m + BATCH_CPU_PRESSURE).min(0.9);
         }
 
-        let stats = microservice::run_window(&cluster, &graph, rate, PERIOD_S, &mut rng_des);
+        let stats = microservice::WindowSim::new(&cluster, &graph, rate, PERIOD_S)
+            .run(&mut rng_des)
+            .stats;
 
         let batch_pods = cluster.running_pod_count("batch");
         let current = cluster.mean_contention();

@@ -2,7 +2,7 @@
 //! randomized operation sequences (in-repo generator; no proptest offline)
 //! asserting the invariants that every experiment silently relies on.
 
-use drone::apps::microservice::{run_window, ServiceGraph};
+use drone::apps::microservice::{ServiceGraph, SimBackend, WindowSim};
 use drone::bandit::encode::{Action, ActionSpace, JointAction, JointSpace};
 use drone::bandit::gp::{gp_posterior, GpHyper};
 use drone::config::ClusterConfig;
@@ -133,7 +133,7 @@ fn prop_des_conservation_random_deployments() {
             apply_deployment(&mut cluster, &dep, true);
         }
         let rate = rng.uniform(5.0, 400.0);
-        let s = run_window(&cluster, g, rate, 15.0, &mut rng);
+        let s = WindowSim::new(&cluster, g, rate, 15.0).run(&mut rng).stats;
         assert_eq!(
             s.offered,
             s.completed + s.dropped + s.in_flight_at_end,
@@ -141,6 +141,104 @@ fn prop_des_conservation_random_deployments() {
         );
         assert_eq!(s.latencies_ms.len() as u64, s.completed);
         assert!(s.latencies_ms.iter().all(|&l| l >= 0.0));
+
+        // The fluid backend must conserve too (closed-form, nothing in
+        // flight at the end), for the same arbitrary deployments —
+        // including services materialized with zero pods.
+        let f = WindowSim::new(&cluster, g, rate, 15.0)
+            .with_backend(SimBackend::Fluid { threshold_rps: 0.0 })
+            .run(&mut rng)
+            .stats;
+        assert_eq!(f.offered, f.completed + f.dropped, "case {case}: fluid conservation");
+        assert_eq!(f.in_flight_at_end, 0, "case {case}: fluid leaves nothing in flight");
+        assert!(f.latencies_ms.iter().all(|&l| l.is_finite() && l >= 0.0), "case {case}");
+    }
+}
+
+/// Tentpole invariant (issue 6): the indexed 4-ary heap inside
+/// `EventQueue` must reproduce the old `BinaryHeap<Scheduled>` pop order
+/// *exactly* — (time, seq) lexicographic, FIFO on equal timestamps —
+/// across randomized schedule/pop interleavings with deliberately
+/// colliding and past (clamped) timestamps.
+#[test]
+fn prop_event_queue_matches_binary_heap_reference() {
+    use drone::sim::des::EventQueue;
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    // Reference model: the pre-indexed-heap implementation — one
+    // allocation per event, `Ord` reversed so the std max-heap pops
+    // earliest time first, FIFO on ties.
+    struct Sched {
+        time: f64,
+        seq: u64,
+        payload: u32,
+    }
+    impl PartialEq for Sched {
+        fn eq(&self, other: &Self) -> bool {
+            self.cmp(other) == Ordering::Equal
+        }
+    }
+    impl Eq for Sched {}
+    impl PartialOrd for Sched {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+    impl Ord for Sched {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .partial_cmp(&self.time)
+                .unwrap()
+                .then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+
+    let mut rng = Pcg64::new(707);
+    for case in 0..1200 {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        let mut reference: BinaryHeap<Sched> = BinaryHeap::new();
+        let mut now = 0.0f64;
+        let mut seq = 0u64;
+        let mut next_payload = 0u32;
+        let ops = 10 + rng.below(120);
+        for op in 0..ops {
+            if q.is_empty() || rng.chance(0.6) {
+                // Coarse grids most of the time (forced ties), sometimes
+                // continuous, sometimes a hair behind `now` — within the
+                // schedule contract's tolerance, so the clamp path runs.
+                let t = match rng.below(4) {
+                    0 => now + rng.below(4) as f64,
+                    1 => now.max(rng.below(6) as f64 * 0.25),
+                    2 => now + rng.f64() * 3.0,
+                    _ => now - 1e-10,
+                };
+                let clamped = t.max(now);
+                q.schedule(t, next_payload);
+                reference.push(Sched { time: clamped, seq, payload: next_payload });
+                seq += 1;
+                next_payload += 1;
+                assert_eq!(
+                    q.peek_time().map(f64::to_bits),
+                    reference.peek().map(|s| s.time.to_bits()),
+                    "case {case} op {op}: peek after schedule"
+                );
+            } else {
+                let (t, p) = q.pop().unwrap();
+                let r = reference.pop().unwrap();
+                assert_eq!(t.to_bits(), r.time.to_bits(), "case {case} op {op}: pop time");
+                assert_eq!(p, r.payload, "case {case} op {op}: pop order (seq {})", r.seq);
+                now = t;
+            }
+        }
+        // Drain both to empty: full order must agree, not just prefixes.
+        while let Some((t, p)) = q.pop() {
+            let r = reference.pop().unwrap();
+            assert_eq!(t.to_bits(), r.time.to_bits(), "case {case}: drain time");
+            assert_eq!(p, r.payload, "case {case}: drain order");
+        }
+        assert!(reference.is_empty(), "case {case}: indexed heap dropped events");
     }
 }
 

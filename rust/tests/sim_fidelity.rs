@@ -1,0 +1,179 @@
+//! Exact-vs-fluid cross-validation (issue 6 tentpole): the mean-value
+//! fluid backend must track the exact per-request DES on an overlap grid
+//! spanning healthy load through the saturation knee.
+//!
+//! Tolerances come from an offline calibration sweep (34 cells, rates
+//! 20–1500 rps, uniform and starved deployments, up to 5x overload):
+//! drop-rate and bottleneck-utilization track within a few points
+//! everywhere; quantiles are tightest at mid load and loosest right at
+//! the knee (rho ~ 0.96), where the fluid model is mildly optimistic.
+//! The asserted bounds add margin for exact-DES seed noise:
+//!   * per-cell  P90 relative error <= 0.45
+//!   * grid-mean P90 relative error <= 0.20
+//!   * per-cell  bottleneck-utilization absolute error <= 0.06
+//!   * per-cell  drop-rate absolute error <= 0.08
+
+use drone::apps::microservice::{ServiceGraph, SimBackend, WindowSim};
+use drone::config::ClusterConfig;
+use drone::sim::cluster::Cluster;
+use drone::sim::resources::Resources;
+use drone::sim::scheduler::{apply_deployment, Deployment};
+use drone::util::rng::Pcg64;
+
+const WINDOW_S: f64 = 20.0;
+const EXACT_SEEDS: [u64; 3] = [11, 12, 13];
+
+fn deployed_cluster(graph: &ServiceGraph, per_zone: usize) -> Cluster {
+    let mut cluster = Cluster::new(&ClusterConfig::default());
+    for sid in 0..graph.services.len() {
+        let r = apply_deployment(
+            &mut cluster,
+            &Deployment {
+                app: graph.app_name(sid),
+                zone_pods: vec![per_zone; cluster.n_zones()],
+                limits: Resources::new(1000.0, 1024.0, 300.0),
+            },
+            true,
+        );
+        assert!(r.pending.is_empty(), "grid deployment must fit");
+    }
+    cluster
+}
+
+struct Cell {
+    p90: f64,
+    max_util: f64,
+    drop_rate: f64,
+}
+
+/// Exact DES, averaged over seeds (the DES is stochastic; the fluid
+/// model is its mean — compare against the mean).
+fn exact_cell(cluster: &Cluster, graph: &ServiceGraph, rate: f64) -> Cell {
+    let (mut p90, mut util, mut drop) = (0.0, 0.0, 0.0);
+    for &seed in &EXACT_SEEDS {
+        let mut rng = Pcg64::new(seed);
+        let out = WindowSim::new(cluster, graph, rate, WINDOW_S).run(&mut rng);
+        assert!(!out.fluid);
+        p90 += out.stats.p90();
+        util += out.max_util();
+        drop += out.stats.drop_rate();
+    }
+    let n = EXACT_SEEDS.len() as f64;
+    Cell { p90: p90 / n, max_util: util / n, drop_rate: drop / n }
+}
+
+fn fluid_cell(cluster: &Cluster, graph: &ServiceGraph, rate: f64) -> Cell {
+    let mut rng = Pcg64::new(999); // untouched by the fluid path
+    let out = WindowSim::new(cluster, graph, rate, WINDOW_S)
+        .with_backend(SimBackend::Fluid { threshold_rps: 0.0 })
+        .run(&mut rng);
+    assert!(out.fluid);
+    let mut fresh = Pcg64::new(999);
+    assert_eq!(rng.next_u64(), fresh.next_u64(), "fluid must not draw from the RNG");
+    Cell { p90: out.stats.p90(), max_util: out.max_util(), drop_rate: out.stats.drop_rate() }
+}
+
+#[test]
+fn fluid_tracks_exact_on_overlap_grid() {
+    let g = ServiceGraph::socialnet();
+    let grid: [(usize, &[f64]); 2] =
+        [(1, &[60.0, 150.0, 300.0, 600.0]), (2, &[120.0, 300.0, 600.0, 900.0])];
+    let mut rel_errs = vec![];
+    for (per_zone, rates) in grid {
+        let cluster = deployed_cluster(&g, per_zone);
+        for &rate in rates {
+            let e = exact_cell(&cluster, &g, rate);
+            let f = fluid_cell(&cluster, &g, rate);
+            let ctx = format!("per_zone={per_zone} rate={rate}");
+            assert!(e.p90 > 0.0, "{ctx}: exact produced no completions");
+            let rel = (f.p90 - e.p90).abs() / e.p90;
+            assert!(
+                rel <= 0.45,
+                "{ctx}: P90 rel err {rel:.3} (exact {:.1} ms, fluid {:.1} ms)",
+                e.p90,
+                f.p90
+            );
+            rel_errs.push(rel);
+            assert!(
+                (f.max_util - e.max_util).abs() <= 0.06,
+                "{ctx}: util {:.3} vs {:.3}",
+                e.max_util,
+                f.max_util
+            );
+            assert!(
+                (f.drop_rate - e.drop_rate).abs() <= 0.08,
+                "{ctx}: drop {:.3} vs {:.3}",
+                e.drop_rate,
+                f.drop_rate
+            );
+        }
+    }
+    let mean_rel = rel_errs.iter().sum::<f64>() / rel_errs.len() as f64;
+    assert!(mean_rel <= 0.20, "grid-mean P90 rel err {mean_rel:.3} exceeds 0.20");
+}
+
+/// Sanity on the second service graph: the fluid model is graph-generic,
+/// not socialnet-calibrated.
+#[test]
+fn fluid_tracks_exact_on_sockshop() {
+    let g = ServiceGraph::sockshop();
+    let cluster = deployed_cluster(&g, 1);
+    for rate in [60.0, 200.0] {
+        let e = exact_cell(&cluster, &g, rate);
+        let f = fluid_cell(&cluster, &g, rate);
+        let rel = (f.p90 - e.p90).abs() / e.p90;
+        assert!(rel <= 0.45, "sockshop rate={rate}: P90 rel err {rel:.3}");
+        assert!((f.max_util - e.max_util).abs() <= 0.06, "sockshop rate={rate}: util");
+        assert!((f.drop_rate - e.drop_rate).abs() <= 0.08, "sockshop rate={rate}: drop");
+    }
+}
+
+/// A fluid threshold above the peak rate must be *bit-for-bit* the exact
+/// backend: same stats, same RNG consumption — so flipping the backend
+/// flag on without a qualifying window is a provable no-op.
+#[test]
+fn fluid_threshold_above_peak_is_bitwise_exact() {
+    let g = ServiceGraph::socialnet();
+    let cluster = deployed_cluster(&g, 1);
+    let mut rng_a = Pcg64::new(42);
+    let mut rng_b = Pcg64::new(42);
+    let a = WindowSim::new(&cluster, &g, 80.0, 12.0).run(&mut rng_a);
+    let b = WindowSim::new(&cluster, &g, 80.0, 12.0)
+        .with_backend(SimBackend::Fluid { threshold_rps: 1e9 })
+        .run(&mut rng_b);
+    assert!(!a.fluid && !b.fluid);
+    assert_eq!(a.stats.offered, b.stats.offered);
+    assert_eq!(a.stats.completed, b.stats.completed);
+    assert_eq!(a.stats.dropped, b.stats.dropped);
+    assert_eq!(a.stats.in_flight_at_end, b.stats.in_flight_at_end);
+    assert_eq!(a.stats.latencies_ms.len(), b.stats.latencies_ms.len());
+    for (x, y) in a.stats.latencies_ms.iter().zip(&b.stats.latencies_ms) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    for (x, y) in a.service_util.iter().zip(&b.service_util) {
+        assert_eq!(x.to_bits(), y.to_bits());
+    }
+    assert_eq!(rng_a.next_u64(), rng_b.next_u64(), "identical RNG consumption");
+}
+
+/// End-to-end smoke: a whole policy campaign runs on the fluid backend
+/// (threshold 0 — every window fluid) and produces finite records.
+#[test]
+fn micro_env_runs_on_fluid_backend() {
+    use drone::config::SystemConfig;
+    use drone::experiments::{run_micro_env, CloudSetting, MicroEnvConfig};
+    use drone::runtime::Backend;
+    let mut sys = SystemConfig::default();
+    sys.bandit.candidates = 32;
+    sys.artifacts_dir = "/nonexistent".into();
+    let mut env = MicroEnvConfig::socialnet(CloudSetting::Private, 600.0);
+    env.sim_backend = SimBackend::Fluid { threshold_rps: 0.0 };
+    let mut backend = Backend::Native;
+    let recs = run_micro_env("k8s-hpa", &env, &sys, &mut backend, 7);
+    assert_eq!(recs.len(), 10);
+    for r in &recs {
+        assert!(r.cost.is_finite(), "step {}: cost", r.step);
+        assert!(r.perf_raw.is_finite() && r.perf_raw >= 0.0, "step {}: p90", r.step);
+        assert!(r.resource_frac.is_finite(), "step {}", r.step);
+    }
+}
