@@ -1,0 +1,604 @@
+//! Data-defined service call-graphs: [`ServiceGraphBuilder`] and the
+//! `drone-graph/v1` on-disk spec.
+//!
+//! The hard-coded `ServiceGraph::socialnet()`/`sockshop()` constructors
+//! describe two fixed topologies; the trace-replay environment needs
+//! *arbitrary* graphs — services with per-service time parameters,
+//! optional declared call edges, and request-type path mixes — loaded
+//! from a declarative spec. The builder validates the spec (duplicate or
+//! dangling service names, cyclic edge declarations, degenerate shares
+//! and timings) and produces exactly the same `ServiceGraph` struct the
+//! constructors do, so everything downstream (WindowSim, both backends,
+//! every env) is untouched. The two classic topologies are re-exported
+//! as builder presets pinned bit-for-bit against the constructors.
+//!
+//! On disk the spec is JSON read through `util::json` (no serde in the
+//! offline vendor set):
+//!
+//! ```json
+//! {
+//!   "schema": "drone-graph/v1",
+//!   "services": [
+//!     {"name": "front", "base_ms": 1.5, "weight": 1.0},
+//!     {"name": "db", "base_ms": 2.0}
+//!   ],
+//!   "edges": [["front", "db"]],
+//!   "request_types": [
+//!     {"name": "get", "share": 1.0, "path": ["front", "db", "front"]}
+//!   ]
+//! }
+//! ```
+//!
+//! `weight` defaults to 1.0. `edges` is optional; when present, every
+//! adjacent hop in every request path must be covered by a declared edge
+//! (forward = call, reverse = return), and the declared edge set must be
+//! acyclic (a call hierarchy, not a cycle of services calling each
+//! other).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::apps::microservice::{RequestType, Service, ServiceGraph};
+use crate::util::json::Json;
+
+/// Schema tag required in every on-disk graph spec.
+pub const GRAPH_SCHEMA: &str = "drone-graph/v1";
+
+/// Builder for a [`ServiceGraph`] from declarative parts. Accumulates
+/// services / edges / request mixes in call order; all validation is
+/// deferred to [`ServiceGraphBuilder::build`] so specs read from disk
+/// and specs written in code go through the same checks.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceGraphBuilder {
+    services: Vec<Service>,
+    edges: Vec<(String, String)>,
+    requests: Vec<(String, f64, Vec<String>)>,
+}
+
+impl ServiceGraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a service with its mean service time (ms at one full core)
+    /// and relative CPU weight.
+    pub fn service(mut self, name: &str, base_ms: f64, weight: f64) -> Self {
+        self.services.push(Service { name: name.to_string(), base_ms, weight });
+        self
+    }
+
+    /// Declare a directed call edge `from -> to`. Optional: when any edge
+    /// is declared, request paths are checked against the edge set.
+    pub fn edge(mut self, from: &str, to: &str) -> Self {
+        self.edges.push((from.to_string(), to.to_string()));
+        self
+    }
+
+    /// Declare a request type: its traffic share and the service-name
+    /// visit sequence (call-graph fan-outs flattened, like the presets).
+    pub fn request(mut self, name: &str, share: f64, path: &[&str]) -> Self {
+        self.requests
+            .push((name.to_string(), share, path.iter().map(|s| s.to_string()).collect()));
+        self
+    }
+
+    /// Validate and build. Errors on: empty services/requests, duplicate
+    /// service names, non-finite or non-positive timings/weights/shares,
+    /// dangling references (a path or edge naming an undeclared service),
+    /// hops not covered by the declared edge set, and cyclic edge sets.
+    pub fn build(self) -> Result<ServiceGraph> {
+        if self.services.is_empty() {
+            bail!("graph spec declares no services");
+        }
+        if self.requests.is_empty() {
+            bail!("graph spec declares no request types");
+        }
+        let mut seen: Vec<&str> = vec![];
+        for s in &self.services {
+            if s.name.is_empty() {
+                bail!("service with empty name");
+            }
+            if seen.contains(&s.name.as_str()) {
+                bail!("duplicate service {:?}", s.name);
+            }
+            seen.push(&s.name);
+            if !s.base_ms.is_finite() || s.base_ms <= 0.0 {
+                bail!("service {:?}: base_ms {} is not a positive time", s.name, s.base_ms);
+            }
+            if !s.weight.is_finite() || s.weight <= 0.0 {
+                bail!("service {:?}: weight {} is not a positive weight", s.name, s.weight);
+            }
+        }
+        let id = |name: &str| -> Option<usize> {
+            self.services.iter().position(|s| s.name == name)
+        };
+
+        // Edge validation: endpoints must exist, and the declared set
+        // must be a call hierarchy (acyclic) — detected by Kahn peeling.
+        let mut edge_ids: Vec<(usize, usize)> = Vec::with_capacity(self.edges.len());
+        for (from, to) in &self.edges {
+            let f = id(from).ok_or_else(|| anyhow!("edge references unknown service {from:?}"))?;
+            let t = id(to).ok_or_else(|| anyhow!("edge references unknown service {to:?}"))?;
+            if f == t {
+                bail!("self-edge on service {from:?}");
+            }
+            edge_ids.push((f, t));
+        }
+        if !edge_ids.is_empty() {
+            let n = self.services.len();
+            let mut indeg = vec![0usize; n];
+            for &(_, t) in &edge_ids {
+                indeg[t] += 1;
+            }
+            let mut queue: Vec<usize> = (0..n).filter(|&v| indeg[v] == 0).collect();
+            let mut peeled = 0usize;
+            while let Some(v) = queue.pop() {
+                peeled += 1;
+                for &(f, t) in &edge_ids {
+                    if f == v {
+                        indeg[t] -= 1;
+                        if indeg[t] == 0 {
+                            queue.push(t);
+                        }
+                    }
+                }
+            }
+            if peeled < n {
+                let stuck: Vec<&str> = (0..n)
+                    .filter(|&v| indeg[v] > 0)
+                    .map(|v| self.services[v].name.as_str())
+                    .collect();
+                bail!("cyclic edge declaration through services {stuck:?}");
+            }
+        }
+
+        let mut request_types = Vec::with_capacity(self.requests.len());
+        let mut share_sum = 0.0;
+        for (name, share, path) in &self.requests {
+            if !share.is_finite() || *share <= 0.0 {
+                bail!("request type {name:?}: share {share} is not a positive share");
+            }
+            share_sum += share;
+            if path.is_empty() {
+                bail!("request type {name:?} has an empty path");
+            }
+            let mut ids = Vec::with_capacity(path.len());
+            for hop in path {
+                ids.push(
+                    id(hop).ok_or_else(|| {
+                        anyhow!("request type {name:?} visits unknown service {hop:?}")
+                    })?,
+                );
+            }
+            if !edge_ids.is_empty() {
+                for pair in ids.windows(2) {
+                    let (a, b) = (pair[0], pair[1]);
+                    let covered = edge_ids.contains(&(a, b)) || edge_ids.contains(&(b, a));
+                    if !covered {
+                        bail!(
+                            "request type {name:?}: hop {:?} -> {:?} matches no declared edge",
+                            self.services[a].name,
+                            self.services[b].name
+                        );
+                    }
+                }
+            }
+            request_types.push(RequestType { name: name.clone(), path: ids, share: *share });
+        }
+        if !share_sum.is_finite() {
+            bail!("request shares sum to a non-finite total");
+        }
+        Ok(ServiceGraph { services: self.services, request_types })
+    }
+}
+
+/// Parse a `drone-graph/v1` spec document.
+pub fn parse_graph(text: &str) -> Result<ServiceGraph> {
+    let doc = Json::parse(text).context("graph spec is not valid JSON")?;
+    let schema = doc
+        .get("schema")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("missing string field \"schema\""))?;
+    if schema != GRAPH_SCHEMA {
+        bail!("graph schema is {schema:?}, expected {GRAPH_SCHEMA:?}");
+    }
+    let mut b = ServiceGraphBuilder::new();
+    let services = doc
+        .get("services")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing \"services\" array"))?;
+    for (i, s) in services.iter().enumerate() {
+        let name = s
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("service #{i}: missing string \"name\""))?;
+        let base_ms = s
+            .get("base_ms")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("service {name:?}: missing number \"base_ms\""))?;
+        let weight = match s.get("weight") {
+            Some(w) => w
+                .as_f64()
+                .ok_or_else(|| anyhow!("service {name:?}: \"weight\" is not a number"))?,
+            None => 1.0,
+        };
+        b = b.service(name, base_ms, weight);
+    }
+    if let Some(edges) = doc.get("edges") {
+        let edges =
+            edges.as_arr().ok_or_else(|| anyhow!("\"edges\" is not an array of pairs"))?;
+        for (i, e) in edges.iter().enumerate() {
+            let pair = e.as_arr().filter(|p| p.len() == 2).ok_or_else(|| {
+                anyhow!("edge #{i}: expected a [\"from\", \"to\"] pair")
+            })?;
+            let from = pair[0]
+                .as_str()
+                .ok_or_else(|| anyhow!("edge #{i}: \"from\" is not a string"))?;
+            let to =
+                pair[1].as_str().ok_or_else(|| anyhow!("edge #{i}: \"to\" is not a string"))?;
+            b = b.edge(from, to);
+        }
+    }
+    let requests = doc
+        .get("request_types")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing \"request_types\" array"))?;
+    for (i, r) in requests.iter().enumerate() {
+        let name = r
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request type #{i}: missing string \"name\""))?;
+        let share = r
+            .get("share")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("request type {name:?}: missing number \"share\""))?;
+        let path = r
+            .get("path")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("request type {name:?}: missing \"path\" array"))?;
+        let hops: Vec<&str> = path
+            .iter()
+            .enumerate()
+            .map(|(j, h)| {
+                h.as_str()
+                    .ok_or_else(|| anyhow!("request type {name:?}: path hop #{j} not a string"))
+            })
+            .collect::<Result<_>>()?;
+        b = b.request(name, share, &hops);
+    }
+    b.build()
+}
+
+/// Load a `drone-graph/v1` spec from a file.
+pub fn load_graph(path: &str) -> Result<ServiceGraph> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading graph spec {path}"))?;
+    parse_graph(&text).with_context(|| format!("parsing graph spec {path}"))
+}
+
+/// Builder-constructed classic topologies by name (`"socialnet"` /
+/// `"sockshop"`); these are pinned bit-for-bit against the hard-coded
+/// `ServiceGraph` constructors, which remain the golden reference.
+pub fn preset(name: &str) -> Option<ServiceGraph> {
+    match name {
+        "socialnet" => Some(builder_socialnet().build().expect("socialnet preset is valid")),
+        "sockshop" => Some(builder_sockshop().build().expect("sockshop preset is valid")),
+        _ => None,
+    }
+}
+
+/// Resolve a graph argument the way the CLI and the trace suite do: a
+/// preset name first, otherwise a `drone-graph/v1` file path.
+pub fn resolve(name_or_path: &str) -> Result<ServiceGraph> {
+    match preset(name_or_path) {
+        Some(g) => Ok(g),
+        None => load_graph(name_or_path),
+    }
+}
+
+fn builder_socialnet() -> ServiceGraphBuilder {
+    ServiceGraphBuilder::new()
+        .service("nginx", 1.2, 1.0)
+        .service("compose-post", 2.8, 1.6)
+        .service("text", 1.9, 1.0)
+        .service("unique-id", 0.9, 0.5)
+        .service("media", 2.4, 1.0)
+        .service("user", 1.7, 1.0)
+        .service("url-shorten", 1.3, 0.5)
+        .service("user-mention", 1.5, 0.5)
+        .service("post-storage", 2.6, 1.4)
+        .service("user-timeline", 2.2, 1.2)
+        .service("home-timeline", 2.4, 1.4)
+        .service("social-graph", 2.0, 1.0)
+        .service("post-storage-db", 1.8, 1.0)
+        .service("user-timeline-db", 1.7, 1.0)
+        .service("social-graph-db", 1.6, 1.0)
+        .service("media-db", 1.7, 1.0)
+        .request(
+            "compose",
+            0.1,
+            &[
+                "nginx",
+                "compose-post",
+                "text",
+                "url-shorten",
+                "user-mention",
+                "unique-id",
+                "media",
+                "media-db",
+                "user",
+                "compose-post",
+                "post-storage",
+                "post-storage-db",
+                "user-timeline",
+                "user-timeline-db",
+                "home-timeline",
+                "nginx",
+            ],
+        )
+        .request(
+            "read-home",
+            0.6,
+            &[
+                "nginx",
+                "home-timeline",
+                "social-graph",
+                "social-graph-db",
+                "post-storage",
+                "post-storage-db",
+                "nginx",
+            ],
+        )
+        .request(
+            "read-user",
+            0.3,
+            &[
+                "nginx",
+                "user-timeline",
+                "user-timeline-db",
+                "post-storage",
+                "post-storage-db",
+                "nginx",
+            ],
+        )
+}
+
+fn builder_sockshop() -> ServiceGraphBuilder {
+    ServiceGraphBuilder::new()
+        .service("front-end", 1.6, 1.0)
+        .service("catalogue", 2.2, 1.0)
+        .service("catalogue-db", 1.8, 1.0)
+        .service("user", 1.8, 1.0)
+        .service("user-db", 1.6, 1.0)
+        .service("carts", 2.0, 1.0)
+        .service("carts-db", 1.7, 1.0)
+        .service("orders", 3.4, 2.0)
+        .service("orders-db", 1.9, 1.0)
+        .service("payment", 1.5, 1.0)
+        .service("shipping", 1.5, 1.0)
+        .service("queue-master", 1.3, 0.5)
+        .request(
+            "browse",
+            0.45,
+            &["front-end", "catalogue", "catalogue-db", "catalogue", "front-end"],
+        )
+        .request("login", 0.15, &["front-end", "user", "user-db", "user", "front-end"])
+        .request("cart", 0.2, &["front-end", "carts", "carts-db", "carts", "front-end"])
+        .request(
+            "checkout",
+            0.2,
+            &[
+                "front-end",
+                "carts",
+                "carts-db",
+                "orders",
+                "user",
+                "user-db",
+                "payment",
+                "shipping",
+                "queue-master",
+                "orders-db",
+                "orders",
+                "front-end",
+            ],
+        )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// The tentpole's fidelity pin: builder presets are *equal structs*
+    /// to the hard-coded constructors — same names, same f64 bits, same
+    /// path ids, same shares. (env_golden additionally pins that records
+    /// through the builder graph match the constructor graph bit-for-bit.)
+    #[test]
+    fn builder_presets_match_constructors_bitwise() {
+        let built = preset("socialnet").unwrap();
+        let golden = ServiceGraph::socialnet();
+        assert_eq!(built, golden);
+        for (b, g) in built.services.iter().zip(&golden.services) {
+            assert_eq!(b.base_ms.to_bits(), g.base_ms.to_bits());
+            assert_eq!(b.weight.to_bits(), g.weight.to_bits());
+        }
+        for (b, g) in built.request_types.iter().zip(&golden.request_types) {
+            assert_eq!(b.share.to_bits(), g.share.to_bits());
+            assert_eq!(b.path, g.path);
+        }
+        assert_eq!(preset("sockshop").unwrap(), ServiceGraph::sockshop());
+        assert!(preset("hotel-reservation").is_none());
+    }
+
+    #[test]
+    fn spec_document_round_trips_through_parse() {
+        let text = r#"{
+  "schema": "drone-graph/v1",
+  "services": [
+    {"name": "front", "base_ms": 1.5, "weight": 1.0},
+    {"name": "api", "base_ms": 2.5, "weight": 1.5},
+    {"name": "db", "base_ms": 2.0}
+  ],
+  "edges": [["front", "api"], ["api", "db"]],
+  "request_types": [
+    {"name": "get", "share": 0.7, "path": ["front", "api", "db", "api", "front"]},
+    {"name": "put", "share": 0.3, "path": ["front", "api", "front"]}
+  ]
+}"#;
+        let g = parse_graph(text).unwrap();
+        assert_eq!(g.services.len(), 3);
+        assert_eq!(g.services[2].weight, 1.0, "weight defaults to 1.0");
+        assert_eq!(g.request_types[0].path, vec![0, 1, 2, 1, 0]);
+        assert_eq!(g.service_id("db"), Some(2));
+
+        // Same graph through the builder API: equal structs.
+        let b = ServiceGraphBuilder::new()
+            .service("front", 1.5, 1.0)
+            .service("api", 2.5, 1.5)
+            .service("db", 2.0, 1.0)
+            .edge("front", "api")
+            .edge("api", "db")
+            .request("get", 0.7, &["front", "api", "db", "api", "front"])
+            .request("put", 0.3, &["front", "api", "front"])
+            .build()
+            .unwrap();
+        assert_eq!(b, g);
+    }
+
+    #[test]
+    fn dangling_and_cyclic_edges_rejected() {
+        // Path naming an undeclared service.
+        let err = ServiceGraphBuilder::new()
+            .service("a", 1.0, 1.0)
+            .request("r", 1.0, &["a", "ghost"])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+
+        // Edge endpoint naming an undeclared service.
+        let err = ServiceGraphBuilder::new()
+            .service("a", 1.0, 1.0)
+            .edge("a", "ghost")
+            .request("r", 1.0, &["a"])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("ghost"), "{err}");
+
+        // Cyclic declared edges.
+        let err = ServiceGraphBuilder::new()
+            .service("a", 1.0, 1.0)
+            .service("b", 1.0, 1.0)
+            .service("c", 1.0, 1.0)
+            .edge("a", "b")
+            .edge("b", "c")
+            .edge("c", "a")
+            .request("r", 1.0, &["a", "b"])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("cyclic"), "{err}");
+
+        // A hop with no covering edge (when edges are declared).
+        let err = ServiceGraphBuilder::new()
+            .service("a", 1.0, 1.0)
+            .service("b", 1.0, 1.0)
+            .service("c", 1.0, 1.0)
+            .edge("a", "b")
+            .request("r", 1.0, &["a", "c"])
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("matches no declared edge"), "{err}");
+    }
+
+    #[test]
+    fn degenerate_specs_rejected() {
+        assert!(ServiceGraphBuilder::new().build().is_err(), "no services");
+        assert!(
+            ServiceGraphBuilder::new().service("a", 1.0, 1.0).build().is_err(),
+            "no request types"
+        );
+        let dup = ServiceGraphBuilder::new()
+            .service("a", 1.0, 1.0)
+            .service("a", 2.0, 1.0)
+            .request("r", 1.0, &["a"])
+            .build();
+        assert!(dup.unwrap_err().to_string().contains("duplicate"));
+        for (base_ms, weight, share) in
+            [(0.0, 1.0, 1.0), (f64::NAN, 1.0, 1.0), (1.0, -1.0, 1.0), (1.0, 1.0, 0.0)]
+        {
+            let r = ServiceGraphBuilder::new()
+                .service("a", base_ms, weight)
+                .request("r", share, &["a"])
+                .build();
+            assert!(r.is_err(), "base_ms={base_ms} weight={weight} share={share}");
+        }
+        assert!(
+            ServiceGraphBuilder::new()
+                .service("a", 1.0, 1.0)
+                .request("r", 1.0, &[])
+                .build()
+                .is_err(),
+            "empty path"
+        );
+    }
+
+    #[test]
+    fn malformed_documents_error_not_panic() {
+        assert!(parse_graph("not json").is_err());
+        assert!(parse_graph("{}").is_err(), "missing schema");
+        assert!(parse_graph("{\"schema\": \"drone-graph/v0\"}").is_err(), "wrong schema");
+        let no_services = r#"{"schema": "drone-graph/v1", "request_types": []}"#;
+        assert!(parse_graph(no_services).is_err());
+        let bad_edge = r#"{
+  "schema": "drone-graph/v1",
+  "services": [{"name": "a", "base_ms": 1.0}],
+  "edges": [["a"]],
+  "request_types": [{"name": "r", "share": 1.0, "path": ["a"]}]
+}"#;
+        assert!(parse_graph(bad_edge).unwrap_err().to_string().contains("pair"));
+    }
+
+    /// Property sweep: seeded random chain-topology specs always build
+    /// into well-formed graphs (ids in range, shares positive, service
+    /// count preserved), and a random dangling or cyclic mutation of the
+    /// same spec is always rejected.
+    #[test]
+    fn prop_random_specs_build_and_mutations_fail() {
+        let mut rng = Pcg64::new(0x9aaf);
+        for case in 0..40 {
+            let n = 2 + (rng.next_u64() % 8) as usize;
+            let names: Vec<String> = (0..n).map(|i| format!("svc{i}")).collect();
+            let mut b = ServiceGraphBuilder::new();
+            for name in &names {
+                b = b.service(name, 0.5 + rng.f64() * 4.0, 0.25 + rng.f64() * 2.0);
+            }
+            // A chain call hierarchy svc0 -> svc1 -> ... -> svc{n-1}.
+            for w in names.windows(2) {
+                b = b.edge(&w[0], &w[1]);
+            }
+            // Requests walk down a prefix of the chain and return.
+            let n_req = 1 + (rng.next_u64() % 3) as usize;
+            for r in 0..n_req {
+                let depth = 1 + (rng.next_u64() % n as u64) as usize;
+                let mut path: Vec<&str> = names[..depth].iter().map(|s| s.as_str()).collect();
+                let back: Vec<&str> =
+                    names[..depth.saturating_sub(1)].iter().rev().map(|s| s.as_str()).collect();
+                path.extend(back);
+                b = b.request(&format!("req{r}"), 0.1 + rng.f64(), &path);
+            }
+
+            let g = b.clone().build().unwrap_or_else(|e| panic!("case {case}: {e}"));
+            assert_eq!(g.services.len(), n);
+            assert_eq!(g.request_types.len(), n_req);
+            for rt in &g.request_types {
+                assert!(rt.share > 0.0);
+                assert!(rt.path.iter().all(|&s| s < n));
+            }
+
+            // Mutation 1: a dangling hop.
+            let dangle = b.clone().request("bad", 1.0, &[&names[0], "nowhere"]).build();
+            assert!(dangle.unwrap_err().to_string().contains("nowhere"));
+            // Mutation 2: close the chain into a cycle.
+            let cyc = b.clone().edge(&names[n - 1], &names[0]).build();
+            assert!(cyc.unwrap_err().to_string().contains("cyclic"));
+        }
+    }
+}

@@ -31,9 +31,11 @@ use crate::util::rng::Pcg64;
 
 pub type ServiceId = usize;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Service {
-    pub name: &'static str,
+    /// Owned name so graphs can be data-defined (`apps::graph`), not
+    /// only compiled in.
+    pub name: String,
     /// Mean service time (ms) at 1 full core with no contention.
     pub base_ms: f64,
     /// Relative CPU weight (bottleneck services get more work per request).
@@ -42,14 +44,14 @@ pub struct Service {
 
 /// A request type: the sequence of services a request visits (call graph
 /// fan-outs are flattened into the visit sequence) plus its traffic share.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct RequestType {
-    pub name: &'static str,
+    pub name: String,
     pub path: Vec<ServiceId>,
     pub share: f64,
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServiceGraph {
     pub services: Vec<Service>,
     pub request_types: Vec<RequestType>,
@@ -63,27 +65,32 @@ impl ServiceGraph {
     /// Sockshop-style online-shop graph (Fig. 3): front-end fans into
     /// catalogue/user/cart/orders; `orders` is the connected bottleneck.
     pub fn sockshop() -> Self {
+        let svc = |name: &str, base_ms: f64, weight: f64| Service {
+            name: name.to_string(),
+            base_ms,
+            weight,
+        };
         let services = vec![
-            Service { name: "front-end", base_ms: 1.6, weight: 1.0 },  // 0
-            Service { name: "catalogue", base_ms: 2.2, weight: 1.0 },  // 1
-            Service { name: "catalogue-db", base_ms: 1.8, weight: 1.0 }, // 2
-            Service { name: "user", base_ms: 1.8, weight: 1.0 },       // 3
-            Service { name: "user-db", base_ms: 1.6, weight: 1.0 },    // 4
-            Service { name: "carts", base_ms: 2.0, weight: 1.0 },      // 5
-            Service { name: "carts-db", base_ms: 1.7, weight: 1.0 },   // 6
-            Service { name: "orders", base_ms: 3.4, weight: 2.0 },     // 7
-            Service { name: "orders-db", base_ms: 1.9, weight: 1.0 },  // 8
-            Service { name: "payment", base_ms: 1.5, weight: 1.0 },    // 9
-            Service { name: "shipping", base_ms: 1.5, weight: 1.0 },   // 10
-            Service { name: "queue-master", base_ms: 1.3, weight: 0.5 }, // 11
+            svc("front-end", 1.6, 1.0),    // 0
+            svc("catalogue", 2.2, 1.0),    // 1
+            svc("catalogue-db", 1.8, 1.0), // 2
+            svc("user", 1.8, 1.0),         // 3
+            svc("user-db", 1.6, 1.0),      // 4
+            svc("carts", 2.0, 1.0),        // 5
+            svc("carts-db", 1.7, 1.0),     // 6
+            svc("orders", 3.4, 2.0),       // 7
+            svc("orders-db", 1.9, 1.0),    // 8
+            svc("payment", 1.5, 1.0),      // 9
+            svc("shipping", 1.5, 1.0),     // 10
+            svc("queue-master", 1.3, 0.5), // 11
         ];
         let request_types = vec![
-            RequestType { name: "browse", path: vec![0, 1, 2, 1, 0], share: 0.45 },
-            RequestType { name: "login", path: vec![0, 3, 4, 3, 0], share: 0.15 },
-            RequestType { name: "cart", path: vec![0, 5, 6, 5, 0], share: 0.2 },
+            RequestType { name: "browse".into(), path: vec![0, 1, 2, 1, 0], share: 0.45 },
+            RequestType { name: "login".into(), path: vec![0, 3, 4, 3, 0], share: 0.15 },
+            RequestType { name: "cart".into(), path: vec![0, 5, 6, 5, 0], share: 0.2 },
             // Checkout traverses the Order hub and everything behind it.
             RequestType {
-                name: "checkout",
+                name: "checkout".into(),
                 path: vec![0, 5, 6, 7, 3, 4, 9, 10, 11, 8, 7, 0],
                 share: 0.2,
             },
@@ -94,37 +101,42 @@ impl ServiceGraph {
     /// Condensed DeathStarBench SocialNetwork graph (the paper's Sec. 5.3
     /// application, 36 microservices condensed to the 16 on the hot paths).
     pub fn socialnet() -> Self {
+        let svc = |name: &str, base_ms: f64, weight: f64| Service {
+            name: name.to_string(),
+            base_ms,
+            weight,
+        };
         let services = vec![
-            Service { name: "nginx", base_ms: 1.2, weight: 1.0 },          // 0
-            Service { name: "compose-post", base_ms: 2.8, weight: 1.6 },   // 1
-            Service { name: "text", base_ms: 1.9, weight: 1.0 },           // 2
-            Service { name: "unique-id", base_ms: 0.9, weight: 0.5 },      // 3
-            Service { name: "media", base_ms: 2.4, weight: 1.0 },          // 4
-            Service { name: "user", base_ms: 1.7, weight: 1.0 },           // 5
-            Service { name: "url-shorten", base_ms: 1.3, weight: 0.5 },    // 6
-            Service { name: "user-mention", base_ms: 1.5, weight: 0.5 },   // 7
-            Service { name: "post-storage", base_ms: 2.6, weight: 1.4 },   // 8
-            Service { name: "user-timeline", base_ms: 2.2, weight: 1.2 },  // 9
-            Service { name: "home-timeline", base_ms: 2.4, weight: 1.4 },  // 10
-            Service { name: "social-graph", base_ms: 2.0, weight: 1.0 },   // 11
-            Service { name: "post-storage-db", base_ms: 1.8, weight: 1.0 }, // 12
-            Service { name: "user-timeline-db", base_ms: 1.7, weight: 1.0 }, // 13
-            Service { name: "social-graph-db", base_ms: 1.6, weight: 1.0 }, // 14
-            Service { name: "media-db", base_ms: 1.7, weight: 1.0 },       // 15
+            svc("nginx", 1.2, 1.0),            // 0
+            svc("compose-post", 2.8, 1.6),     // 1
+            svc("text", 1.9, 1.0),             // 2
+            svc("unique-id", 0.9, 0.5),        // 3
+            svc("media", 2.4, 1.0),            // 4
+            svc("user", 1.7, 1.0),             // 5
+            svc("url-shorten", 1.3, 0.5),      // 6
+            svc("user-mention", 1.5, 0.5),     // 7
+            svc("post-storage", 2.6, 1.4),     // 8
+            svc("user-timeline", 2.2, 1.2),    // 9
+            svc("home-timeline", 2.4, 1.4),    // 10
+            svc("social-graph", 2.0, 1.0),     // 11
+            svc("post-storage-db", 1.8, 1.0),  // 12
+            svc("user-timeline-db", 1.7, 1.0), // 13
+            svc("social-graph-db", 1.6, 1.0),  // 14
+            svc("media-db", 1.7, 1.0),         // 15
         ];
         let request_types = vec![
             RequestType {
-                name: "compose",
+                name: "compose".into(),
                 path: vec![0, 1, 2, 6, 7, 3, 4, 15, 5, 1, 8, 12, 9, 13, 10, 0],
                 share: 0.1,
             },
             RequestType {
-                name: "read-home",
+                name: "read-home".into(),
                 path: vec![0, 10, 11, 14, 8, 12, 0],
                 share: 0.6,
             },
             RequestType {
-                name: "read-user",
+                name: "read-user".into(),
                 path: vec![0, 9, 13, 8, 12, 0],
                 share: 0.3,
             },

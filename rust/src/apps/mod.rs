@@ -2,11 +2,13 @@
 //! models) and microservice applications (DES queueing over a call graph).
 
 pub mod batch;
+pub mod graph;
 pub mod microservice;
 
 pub use batch::{
     run_batch_job, run_cost, BatchWorkload, DeployMode, JobResult, Platform, RunSpec,
 };
+pub use graph::ServiceGraphBuilder;
 pub use microservice::{
     RequestType, Service, ServiceGraph, SimBackend, WindowOutcome, WindowSim, WindowStats,
 };

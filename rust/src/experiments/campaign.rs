@@ -39,7 +39,8 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::apps::batch::{run_batch_job, BatchWorkload, DeployMode, Platform, RunSpec};
-use crate::apps::microservice::{self, ServiceGraph};
+use crate::apps::graph;
+use crate::apps::microservice::{self, ServiceGraph, SimBackend};
 use crate::config::SystemConfig;
 use crate::runtime::Backend;
 use crate::sim::cluster::Cluster;
@@ -54,8 +55,10 @@ use crate::util::table::{pm, Table};
 use super::env::{run_hybrid_env, HybridEnvConfig};
 use super::harness::{
     batch_perf_score, deadline_passed, micro_perf_score, note_env_execution, run_batch_env,
-    run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+    run_micro_env, run_trace_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+    TraceEnvConfig,
 };
+use crate::trace::replay::{self, ReplayTrace};
 
 // ---------------------------------------------------------------------------
 // Scenario descriptors
@@ -82,6 +85,10 @@ pub enum Suite {
     /// factor + micro service factor), so its gain over the fixed
     /// co-tenant `hybrid` suite is directly measurable (Table 5).
     HybridJoint,
+    /// Recorded-trace replay (`env::TraceEnv`): a vendored Alibaba-shaped
+    /// MSRTQps slice drives a config-defined service graph instead of the
+    /// synthetic diurnal generator.
+    Trace,
     /// Fig. 1: single Spark jobs across a total-RAM sweep, container vs VM.
     Fig1Sweep,
     /// Fig. 2: Sort runs under interference across data sizes, Spark vs
@@ -101,6 +108,7 @@ pub const ALL_SUITES: &[Suite] = &[
     Suite::MicroPrivate,
     Suite::Hybrid,
     Suite::HybridJoint,
+    Suite::Trace,
 ];
 
 /// The figure-specific sweep suites (policy axis = deployment variant).
@@ -115,6 +123,7 @@ impl Suite {
             Suite::MicroPrivate => "micro-private",
             Suite::Hybrid => "hybrid",
             Suite::HybridJoint => "hybrid-joint",
+            Suite::Trace => "trace",
             Suite::Fig1Sweep => "fig1",
             Suite::Fig2Variance => "fig2",
             Suite::Fig4Affinity => "fig4",
@@ -143,6 +152,7 @@ impl Suite {
                 | (Suite::MicroPublic | Suite::MicroPrivate, EnvKind::Micro { .. })
                 | (Suite::Hybrid, EnvKind::Hybrid { .. })
                 | (Suite::HybridJoint, EnvKind::HybridJoint { .. })
+                | (Suite::Trace, EnvKind::Trace { .. })
                 | (Suite::Fig1Sweep, EnvKind::SingleJob { .. })
                 | (Suite::Fig2Variance, EnvKind::SortVariance { .. })
                 | (Suite::Fig4Affinity, EnvKind::Affinity { .. })
@@ -159,6 +169,7 @@ impl Suite {
             Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
             Suite::Hybrid => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::HybridJoint => &["k8s-hpa", "autopilot", "showar", "drone"],
+            Suite::Trace => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::Fig1Sweep => &["container", "vm"],
             Suite::Fig2Variance => &["spark", "flink"],
             Suite::Fig4Affinity => &["colocated", "isolated"],
@@ -195,14 +206,41 @@ pub enum EnvKind {
         stress: f64,
     },
     /// Trace-driven SocialNet policy loop (`run_micro_env`).
-    Micro { steps: u64, base_rps: f64, amplitude_rps: f64 },
+    /// `fluid_threshold_rps: Some(x)` switches the window simulator to
+    /// `SimBackend::Fluid { threshold_rps: x }`; `None` (the default) is
+    /// the exact DES backend and keeps the pre-backend cache keys.
+    Micro {
+        steps: u64,
+        base_rps: f64,
+        amplitude_rps: f64,
+        fluid_threshold_rps: Option<f64>,
+    },
     /// Heterogeneous co-location loop (`env::HybridEnv`): SocialNet plus a
     /// recurring batch tenant of `workload` on one shared cluster.
-    Hybrid { workload: BatchWorkload, steps: u64, base_rps: f64, amplitude_rps: f64 },
+    Hybrid {
+        workload: BatchWorkload,
+        steps: u64,
+        base_rps: f64,
+        amplitude_rps: f64,
+        fluid_threshold_rps: Option<f64>,
+    },
     /// Joint-rightsizing co-location (`env::HybridEnv` with
     /// `HybridEnvConfig::joint`): the two-factor action space spans both
     /// tenants.
-    HybridJoint { workload: BatchWorkload, steps: u64, base_rps: f64, amplitude_rps: f64 },
+    HybridJoint {
+        workload: BatchWorkload,
+        steps: u64,
+        base_rps: f64,
+        amplitude_rps: f64,
+        fluid_threshold_rps: Option<f64>,
+    },
+    /// Recorded-trace replay loop (`env::TraceEnv`): builtin trace `trace`
+    /// scaled by `scale` drives the preset service graph `graph`. Both are
+    /// *names*, never paths, so cache keys are machine-independent. The
+    /// suite opts into the fluid window backend above
+    /// `fluid_threshold_rps` (recorded bursts are where the DES is
+    /// slowest); below it every window runs the exact DES.
+    Trace { trace: String, graph: String, steps: u64, scale: f64, fluid_threshold_rps: f64 },
     /// One statically-provisioned Spark job at a total-RAM point (Fig. 1);
     /// the policy axis selects container vs VM deployment.
     SingleJob { workload: BatchWorkload, ram_gb: u32 },
@@ -221,6 +259,7 @@ impl EnvKind {
             EnvKind::Micro { .. } => "SocialNet".to_string(),
             EnvKind::Hybrid { workload, .. } => format!("{}+SocialNet", workload.name()),
             EnvKind::HybridJoint { workload, .. } => format!("{}+SocialNet", workload.name()),
+            EnvKind::Trace { trace, graph, .. } => format!("{trace}@{graph}"),
             EnvKind::SingleJob { workload, ram_gb } => {
                 format!("{}@{}GB", workload.name(), ram_gb)
             }
@@ -240,28 +279,48 @@ impl EnvKind {
                 steps,
                 json_f64(*stress)
             ),
-            EnvKind::Micro { steps, base_rps, amplitude_rps } => format!(
+            EnvKind::Micro { steps, base_rps, amplitude_rps, fluid_threshold_rps } => format!(
                 "{{\"kind\": \"micro\", \"steps\": {}, \"base_rps\": {}, \
-                 \"amplitude_rps\": {}}}",
+                 \"amplitude_rps\": {}{}}}",
                 steps,
                 json_f64(*base_rps),
-                json_f64(*amplitude_rps)
+                json_f64(*amplitude_rps),
+                fluid_field(*fluid_threshold_rps)
             ),
-            EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps } => format!(
-                "{{\"kind\": \"hybrid\", \"workload\": {}, \"steps\": {}, \"base_rps\": {}, \
-                 \"amplitude_rps\": {}}}",
-                json_str(workload.name()),
+            EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
+                format!(
+                    "{{\"kind\": \"hybrid\", \"workload\": {}, \"steps\": {}, \"base_rps\": {}, \
+                     \"amplitude_rps\": {}{}}}",
+                    json_str(workload.name()),
+                    steps,
+                    json_f64(*base_rps),
+                    json_f64(*amplitude_rps),
+                    fluid_field(*fluid_threshold_rps)
+                )
+            }
+            EnvKind::HybridJoint {
+                workload,
                 steps,
-                json_f64(*base_rps),
-                json_f64(*amplitude_rps)
-            ),
-            EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps } => format!(
+                base_rps,
+                amplitude_rps,
+                fluid_threshold_rps,
+            } => format!(
                 "{{\"kind\": \"hybrid-joint\", \"workload\": {}, \"steps\": {}, \
-                 \"base_rps\": {}, \"amplitude_rps\": {}}}",
+                 \"base_rps\": {}, \"amplitude_rps\": {}{}}}",
                 json_str(workload.name()),
                 steps,
                 json_f64(*base_rps),
-                json_f64(*amplitude_rps)
+                json_f64(*amplitude_rps),
+                fluid_field(*fluid_threshold_rps)
+            ),
+            EnvKind::Trace { trace, graph, steps, scale, fluid_threshold_rps } => format!(
+                "{{\"kind\": \"trace\", \"trace\": {}, \"graph\": {}, \"steps\": {}, \
+                 \"scale\": {}, \"fluid_threshold_rps\": {}}}",
+                json_str(trace),
+                json_str(graph),
+                steps,
+                json_f64(*scale),
+                json_f64(*fluid_threshold_rps)
             ),
             EnvKind::SingleJob { workload, ram_gb } => format!(
                 "{{\"kind\": \"single-job\", \"workload\": {}, \"ram_gb\": {}}}",
@@ -280,6 +339,8 @@ impl EnvKind {
     /// Inverse of [`Self::to_json`] for the campaign store.
     pub fn from_json(v: &crate::util::json::Json) -> Option<EnvKind> {
         let workload = || BatchWorkload::from_name(v.get("workload")?.as_str()?);
+        // Absent field = exact backend (the pre-backend store layout).
+        let fluid = || -> Option<f64> { v.get("fluid_threshold_rps")?.f64_or_nan() };
         match v.get("kind")?.as_str()? {
             "batch" => Some(EnvKind::Batch {
                 workload: workload()?,
@@ -290,19 +351,41 @@ impl EnvKind {
                 steps: v.get("steps")?.as_u64()?,
                 base_rps: v.get("base_rps")?.f64_or_nan()?,
                 amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+                fluid_threshold_rps: fluid(),
             }),
             "hybrid" => Some(EnvKind::Hybrid {
                 workload: workload()?,
                 steps: v.get("steps")?.as_u64()?,
                 base_rps: v.get("base_rps")?.f64_or_nan()?,
                 amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+                fluid_threshold_rps: fluid(),
             }),
             "hybrid-joint" => Some(EnvKind::HybridJoint {
                 workload: workload()?,
                 steps: v.get("steps")?.as_u64()?,
                 base_rps: v.get("base_rps")?.f64_or_nan()?,
                 amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+                fluid_threshold_rps: fluid(),
             }),
+            "trace" => {
+                // Campaign trace scenarios must reference *builtin* traces
+                // and *preset* graphs — names resolve identically on every
+                // machine, so a hand-edited path in a store is rejected
+                // here (and compacted away) instead of panicking a worker.
+                let trace = v.get("trace")?.as_str()?.to_string();
+                let graph_name = v.get("graph")?.as_str()?.to_string();
+                replay::builtin(&trace)?;
+                if graph::preset(&graph_name).is_err() {
+                    return None;
+                }
+                Some(EnvKind::Trace {
+                    trace,
+                    graph: graph_name,
+                    steps: v.get("steps")?.as_u64()?,
+                    scale: v.get("scale")?.f64_or_nan()?,
+                    fluid_threshold_rps: v.get("fluid_threshold_rps")?.f64_or_nan()?,
+                })
+            }
             "single-job" => Some(EnvKind::SingleJob {
                 workload: workload()?,
                 ram_gb: v.get("ram_gb")?.as_u64()? as u32,
@@ -366,6 +449,19 @@ pub struct CampaignSpec {
     /// SocialNet trace shape (trough rps, peak-to-trough amplitude rps).
     pub micro_base_rps: f64,
     pub micro_amplitude_rps: f64,
+    /// Fluid-backend threshold for the micro/hybrid suites
+    /// (`--fluid-threshold`): `Some(x)` runs windows at >= x rps through
+    /// the fluid approximation. `None` (default) keeps the exact DES and
+    /// the pre-backend cache keys — goldens only apply to exact runs.
+    pub micro_fluid_threshold_rps: Option<f64>,
+    /// Builtin trace + preset graph the trace suite replays.
+    pub trace_name: String,
+    pub trace_graph: String,
+    /// Multiplier sizing the recorded rates to the simulated cluster.
+    pub trace_scale: f64,
+    /// The trace suite always opts into the fluid backend above this
+    /// recorded rate (recorded bursts are the DES's worst case).
+    pub trace_fluid_threshold_rps: f64,
     /// Co-tenant memory stress for the batch-private suite (`--stress`;
     /// Table 3's profile by default, Fig. 7c prebuilds use 0.05).
     pub private_stress: f64,
@@ -394,6 +490,11 @@ impl Default for CampaignSpec {
             micro_steps: 12,
             micro_base_rps: 60.0,
             micro_amplitude_rps: 140.0,
+            micro_fluid_threshold_rps: None,
+            trace_name: replay::ALIBABA_SAMPLE.to_string(),
+            trace_graph: "socialnet".to_string(),
+            trace_scale: 1.0,
+            trace_fluid_threshold_rps: TRACE_FLUID_THRESHOLD_RPS,
             private_stress: BATCH_PRIVATE_STRESS,
             figure_scale: 0.3,
             timeout_s: 0.0,
@@ -405,6 +506,12 @@ impl Default for CampaignSpec {
 /// The co-tenant memory stress the batch-private suite runs under
 /// (Table 3's stress-ng profile).
 pub const BATCH_PRIVATE_STRESS: f64 = 0.30;
+
+/// Recorded rate (rps) above which the trace suite's windows switch to
+/// the fluid backend (`--fluid-threshold` overrides). The vendored sample
+/// peaks below this at scale 1.0, so the default suite replays exactly;
+/// scaled-up replays hand only their busiest windows to the fluid model.
+pub const TRACE_FLUID_THRESHOLD_RPS: f64 = 120.0;
 
 /// The light co-tenant pressure Fig. 7c runs under; prebuild its grid with
 /// `drone campaign --experiments batch-private --stress 0.05`.
@@ -428,6 +535,7 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
                 amplitude_rps: spec.micro_amplitude_rps,
+                fluid_threshold_rps: spec.micro_fluid_threshold_rps,
             }],
             // One co-location cell per campaign: the batch co-tenant is the
             // first requested workload (SparkPi in the default lineup).
@@ -436,12 +544,23 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
                 amplitude_rps: spec.micro_amplitude_rps,
+                fluid_threshold_rps: spec.micro_fluid_threshold_rps,
             }],
             Suite::HybridJoint => vec![EnvKind::HybridJoint {
                 workload: spec.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi),
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
                 amplitude_rps: spec.micro_amplitude_rps,
+                fluid_threshold_rps: spec.micro_fluid_threshold_rps,
+            }],
+            // One replay cell: the builtin trace over the preset graph,
+            // truncated to the campaign's micro step budget.
+            Suite::Trace => vec![EnvKind::Trace {
+                trace: spec.trace_name.clone(),
+                graph: spec.trace_graph.clone(),
+                steps: spec.micro_steps,
+                scale: spec.trace_scale,
+                fluid_threshold_rps: spec.trace_fluid_threshold_rps,
             }],
             Suite::Fig1Sweep => FIG1_WORKLOADS
                 .iter()
@@ -601,9 +720,11 @@ impl StepRow {
 
 /// Compress a latency sample to at most `k` sorted quantile points
 /// (min and max always included; `n <= k` keeps the full sorted sample).
+/// Sorted with `total_cmp` (same NaN-safety as `stats::percentile`): a
+/// NaN latency must never panic the aggregator mid-campaign.
 pub fn latency_digest(lat: &[f64], k: usize) -> Vec<f64> {
     let mut v: Vec<f64> = lat.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    crate::util::stats::sort_total(&mut v);
     if v.len() <= k || k < 2 {
         return v;
     }
@@ -720,29 +841,46 @@ fn run_scenario(
             env.deadline = deadline;
             (*steps, rows_of(run_batch_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
-        EnvKind::Micro { steps, base_rps, amplitude_rps } => {
+        EnvKind::Micro { steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
             let mut env = MicroEnvConfig::socialnet(sc.setting, *steps as f64 * 60.0);
             env.trace.base_rps = *base_rps;
             env.trace.amplitude_rps = *amplitude_rps;
+            env.sim_backend = sim_backend_for(*fluid_threshold_rps);
             env.deadline = deadline;
             (*steps, rows_of(run_micro_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
-        EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps } => {
+        EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
             let mut env = HybridEnvConfig::new(*workload, sc.setting, *steps);
             env.trace.base_rps = *base_rps;
             env.trace.amplitude_rps = *amplitude_rps;
+            env.sim_backend = sim_backend_for(*fluid_threshold_rps);
             env.deadline = deadline;
             (*steps, rows_of(run_hybrid_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
-        EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps } => {
+        EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
             let mut backend = Backend::auto(&sys.artifacts_dir);
             let mut env = HybridEnvConfig::joint(*workload, sc.setting, *steps);
             env.trace.base_rps = *base_rps;
             env.trace.amplitude_rps = *amplitude_rps;
+            env.sim_backend = sim_backend_for(*fluid_threshold_rps);
             env.deadline = deadline;
             (*steps, rows_of(run_hybrid_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
+        }
+        EnvKind::Trace { trace, graph, steps, scale, fluid_threshold_rps } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            // `from_json` and the CLI both validate these names, so the
+            // expects only fire on a descriptor built by hand in code.
+            let replay = ReplayTrace::resolve(trace, *scale)
+                .expect("campaign trace envs reference builtin traces");
+            let g = graph::resolve(graph).expect("campaign trace envs reference preset graphs");
+            let mut env = TraceEnvConfig::new(sc.setting, replay, g);
+            env.max_steps = Some(*steps);
+            env.sim_backend = SimBackend::Fluid { threshold_rps: *fluid_threshold_rps };
+            env.deadline = deadline;
+            let planned = env.steps();
+            (planned, rows_of(run_trace_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
         EnvKind::SingleJob { workload, ram_gb } => {
             (1, run_single_job(sc, sys, *workload, *ram_gb, deadline, digest_points))
@@ -1065,6 +1203,7 @@ impl CampaignResult {
                 | Suite::MicroPrivate
                 | Suite::Hybrid
                 | Suite::HybridJoint
+                | Suite::Trace
                 | Suite::Fig4Affinity => "P90 ms",
                 _ => "elapsed s",
             };
@@ -1289,6 +1428,25 @@ pub(crate) fn json_str(s: &str) -> String {
     out
 }
 
+/// Serialized form of an optional fluid threshold. Back-compat mirrors
+/// the `digest_points` header field: the exact backend is implicit, so
+/// every pre-backend cache key and store keeps its byte layout, and a
+/// store missing the field reads back as Exact.
+fn fluid_field(threshold_rps: Option<f64>) -> String {
+    match threshold_rps {
+        Some(v) => format!(", \"fluid_threshold_rps\": {}", json_f64(v)),
+        None => String::new(),
+    }
+}
+
+/// Window-sim backend for an optional fluid threshold (micro/hybrid envs).
+fn sim_backend_for(threshold_rps: Option<f64>) -> SimBackend {
+    match threshold_rps {
+        Some(threshold_rps) => SimBackend::Fluid { threshold_rps },
+        None => SimBackend::Exact,
+    }
+}
+
 /// JSON has no NaN/Infinity; map non-finite values to null.
 pub(crate) fn json_f64(v: f64) -> String {
     if v.is_finite() {
@@ -1337,9 +1495,11 @@ mod tests {
 
     #[test]
     fn suites_parse_forms() {
-        assert_eq!(parse_suites("all").unwrap().len(), 6);
+        assert_eq!(parse_suites("all").unwrap().len(), 7);
         assert!(parse_suites("all").unwrap().contains(&Suite::Hybrid));
         assert!(parse_suites("all").unwrap().contains(&Suite::HybridJoint));
+        assert!(parse_suites("all").unwrap().contains(&Suite::Trace));
+        assert_eq!(parse_suites("trace").unwrap(), vec![Suite::Trace]);
         assert_eq!(parse_suites("hybrid-joint").unwrap(), vec![Suite::HybridJoint]);
         let two = parse_suites("batch-public, micro-private").unwrap();
         assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
@@ -1407,18 +1567,38 @@ mod tests {
         use crate::util::json::Json;
         let envs = [
             EnvKind::Batch { workload: BatchWorkload::LogisticRegression, steps: 30, stress: 0.05 },
-            EnvKind::Micro { steps: 360, base_rps: 60.0, amplitude_rps: 140.0 },
+            EnvKind::Micro {
+                steps: 360,
+                base_rps: 60.0,
+                amplitude_rps: 140.0,
+                fluid_threshold_rps: None,
+            },
+            EnvKind::Micro {
+                steps: 360,
+                base_rps: 60.0,
+                amplitude_rps: 140.0,
+                fluid_threshold_rps: Some(150.0),
+            },
             EnvKind::Hybrid {
                 workload: BatchWorkload::SparkPi,
                 steps: 12,
                 base_rps: 60.0,
                 amplitude_rps: 140.0,
+                fluid_threshold_rps: None,
             },
             EnvKind::HybridJoint {
                 workload: BatchWorkload::SparkPi,
                 steps: 12,
                 base_rps: 60.0,
                 amplitude_rps: 140.0,
+                fluid_threshold_rps: Some(90.0),
+            },
+            EnvKind::Trace {
+                trace: replay::ALIBABA_SAMPLE.to_string(),
+                graph: "socialnet".to_string(),
+                steps: 12,
+                scale: 1.0,
+                fluid_threshold_rps: TRACE_FLUID_THRESHOLD_RPS,
             },
             EnvKind::SingleJob { workload: BatchWorkload::PageRank, ram_gb: 96 },
             EnvKind::SortVariance { data_gb: 60 },
@@ -1432,6 +1612,21 @@ mod tests {
             // the campaign store's cache identity depends on this.
             assert_eq!(back.to_json(), env.to_json());
         }
+        // The default (exact) backend keeps the pre-backend env string, so
+        // every existing cache key still matches.
+        let exact = EnvKind::Micro {
+            steps: 360,
+            base_rps: 60.0,
+            amplitude_rps: 140.0,
+            fluid_threshold_rps: None,
+        };
+        assert!(!exact.to_json().contains("fluid_threshold_rps"));
+        // A trace env naming an unknown builtin or preset is rejected at
+        // parse time (never panics a campaign worker).
+        let bogus = "{\"kind\": \"trace\", \"trace\": \"no-such-trace\", \"graph\": \
+                     \"socialnet\", \"steps\": 2, \"scale\": 1.000000, \
+                     \"fluid_threshold_rps\": 120.000000}";
+        assert!(EnvKind::from_json(&Json::parse(bogus).unwrap()).is_none());
     }
 
     #[test]
@@ -1550,6 +1745,35 @@ mod tests {
             serial.to_json_canonical(),
             parallel.to_json_canonical(),
             "canonical campaign.json must agree for jobs=1 vs jobs=4"
+        );
+    }
+
+    /// The trace suite rides the same determinism contract: replay holds
+    /// no RNG of its own, so the seed streams fully determine the records
+    /// whatever the thread count.
+    #[test]
+    fn trace_campaign_deterministic_across_job_counts() {
+        let sys = small_sys();
+        let spec = CampaignSpec {
+            suites: vec![Suite::Trace],
+            policies: Some(vec!["drone".into(), "k8s-hpa".into()]),
+            workloads: vec![],
+            seeds: vec![0, 1],
+            micro_steps: 2,
+            ..Default::default()
+        };
+        let serial = run_campaign(&spec, &sys, 1);
+        let parallel = run_campaign(&spec, &sys, 4);
+        assert_eq!(serial.outcomes.len(), 4);
+        assert_eq!(serial.outcomes[0].scenario.name(), "trace/alibaba-sample@socialnet/drone/s0");
+        for o in &serial.outcomes {
+            assert_eq!(o.records.len(), 2, "{}", o.scenario.name());
+            assert!(o.records.iter().all(|r| r.offered > 0), "{}", o.scenario.name());
+        }
+        assert_eq!(
+            serial.to_json_canonical(),
+            parallel.to_json_canonical(),
+            "trace suite must stay byte-identical for jobs=1 vs jobs=4"
         );
     }
 

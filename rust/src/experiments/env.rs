@@ -49,9 +49,12 @@ use crate::trace::diurnal::{DiurnalConfig, DiurnalTrace};
 use crate::trace::spot::{SpotConfig, SpotTrace};
 use crate::util::rng::Pcg64;
 
+use crate::trace::replay::ReplayTrace;
+
 use super::harness::{
     batch_cost_scale, batch_perf_score, deadline_passed, micro_perf_score, note_env_execution,
     placed_cross_zone_frac, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+    TraceEnvConfig,
 };
 
 /// A simulated decision-loop environment: owns its simulation state and
@@ -664,6 +667,198 @@ impl Environment for MicroEnv {
 }
 
 // ---------------------------------------------------------------------------
+// Trace-replay environment (recorded arrivals over a data-defined graph)
+// ---------------------------------------------------------------------------
+
+struct TraceState {
+    space: ActionSpace,
+    cluster: Cluster,
+    interference: InterferenceModel,
+    replay: ReplayTrace,
+    spot: SpotTrace,
+    spot_mean: f64,
+    store: MetricStore,
+    rng_des: Pcg64,
+    cluster_ram_mb: f64,
+    workload_scale: f64,
+    graph: ServiceGraph,
+    /// This step's arrival rate and spot price (set by `observe`).
+    rate: f64,
+    price: f64,
+    /// Scheduler outcome of this step's deployment (set by `actuate`).
+    requested_ram_mb: f64,
+    pending: usize,
+}
+
+/// The microservice decision loop driven by a *recorded* arrival trace
+/// ([`ReplayTrace`]) over a data-defined service graph — same physics,
+/// same actuation and scoring as [`MicroEnv`], different exogenous
+/// workload. Replay is deterministic (the recording carries its own
+/// noise), so the only stochastic streams are the DES, interference and
+/// spot prices.
+pub struct TraceEnv {
+    cfg: TraceEnvConfig,
+    st: Option<TraceState>,
+}
+
+impl TraceEnv {
+    pub fn new(cfg: TraceEnvConfig) -> Self {
+        Self { cfg, st: None }
+    }
+
+    fn st(&mut self) -> &mut TraceState {
+        self.st.as_mut().expect("TraceEnv used before init")
+    }
+}
+
+impl Environment for TraceEnv {
+    fn seed_tag(&self) -> u64 {
+        // Disjoint from every other env family (0xba7c<<4 batch,
+        // 0x51c0<<8 micro, 0x6b1d/0x601d<<8 hybrid).
+        0x7ace_u64 << 8
+    }
+
+    fn steps(&self) -> u64 {
+        self.cfg.steps()
+    }
+
+    fn period_s(&self) -> f64 {
+        self.cfg.period_s
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.cfg.deadline
+    }
+
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64) {
+        // Fork order mirrors MicroEnv: 2 DES, 3 interference, 4 trace,
+        // 5 spot. Fork 4 is still drawn even though replay consumes no
+        // randomness — keeping the layout identical across the micro
+        // family means adding replay noise later cannot silently shift
+        // the DES/spot streams.
+        let rng_des = root.fork(2);
+        let mut rng_interf = root.fork(3);
+        let _rng_replay = root.fork(4);
+        let mut rng_spot = root.fork(5);
+        let interference = if self.cfg.interference && sys.interference.enabled {
+            InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+        } else {
+            InterferenceModel::disabled()
+        };
+        self.st = Some(TraceState {
+            space: ActionSpace::microservices(sys.cluster.zones),
+            cluster: Cluster::new(&sys.cluster),
+            interference,
+            replay: self.cfg.replay.clone(),
+            spot: SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0)),
+            spot_mean: SpotConfig::gcp_e2().mean_price,
+            store: MetricStore::new(3600.0 * 8.0),
+            rng_des,
+            cluster_ram_mb: sys.cluster_ram_mb(),
+            workload_scale: self.cfg.replay.peak_rps(),
+            graph: self.cfg.graph.clone(),
+            rate: 0.0,
+            price: 0.0,
+            requested_ram_mb: 0.0,
+            pending: 0,
+        });
+    }
+
+    fn joint_space(&self) -> JointSpace {
+        JointSpace::single(self.st.as_ref().expect("TraceEnv used before init").space.clone())
+    }
+
+    fn app_profile(&self) -> AppProfile {
+        AppProfile::Microservices
+    }
+
+    fn observe(&mut self, _step: u64, now: f64) -> ContextVector {
+        let period_s = self.cfg.period_s;
+        let setting = self.cfg.setting;
+        let st = self.st();
+        st.interference.step(&mut st.cluster, now, period_s);
+        st.rate = st.replay.sample_rate(now);
+        st.store.push("workload", now, st.rate);
+        st.price = st.spot.step(period_s / 3600.0);
+        st.store.push("spot_price", now, st.price);
+
+        let spot_for_ctx = match setting {
+            CloudSetting::Public => Some(st.spot_mean),
+            CloudSetting::Private => None,
+        };
+        ContextVector::observe(&st.cluster, &st.store, now, st.workload_scale, spot_for_ctx)
+    }
+
+    fn actuate(&mut self, action: &JointAction) {
+        let action = action.primary();
+        let st = self.st();
+        let (deps, requested_ram_mb) = ms_deployments(&st.graph, &st.space, action);
+        let results = apply_deployments_fair(&mut st.cluster, &deps, true);
+        st.pending = results.iter().map(|r| r.pending_total()).sum();
+        st.requested_ram_mb = requested_ram_mb;
+    }
+
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        joint: &JointAction,
+        tel: &mut Telemetry,
+    ) -> StepRecord {
+        let action = joint.primary();
+        let period_s = self.cfg.period_s;
+        let setting = self.cfg.setting;
+        let sim_backend = self.cfg.sim_backend;
+        let st = self.st();
+        let rate = st.rate;
+
+        let (total_pods, rps_per_pod, errors) = ms_apply_load(&mut st.cluster, &st.graph, rate);
+
+        let stats = microservice::WindowSim::new(&st.cluster, &st.graph, rate, period_s)
+            .with_backend(sim_backend)
+            .run(&mut st.rng_des)
+            .stats;
+
+        let p90 = stats.p90();
+        let completion = ms_completion(&stats);
+        let perf_score = micro_perf_score(p90) * completion * completion;
+        let ram_alloc = st.cluster.total_ram_allocated();
+        let resource_frac = st.requested_ram_mb.max(ram_alloc) / st.cluster_ram_mb;
+        let cost = ms_alloc_cost(&st.cluster, period_s, st.price, st.spot_mean);
+
+        tel.last_action = Some(joint.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match setting {
+            CloudSetting::Public => Some((cost / 0.25).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        // As for MicroEnv: a bad window is ordinary feedback, not a halt.
+        tel.failure = false;
+        tel.app_cpu_util = (rate / (total_pods.max(1) as f64 * (action.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, rps_per_pod);
+        tel.p90_latency_ms = Some(p90);
+
+        StepRecord {
+            step,
+            t: now,
+            perf_raw: p90,
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: errors + st.pending as u32,
+            halted: tel.failure,
+            dropped: stats.dropped,
+            offered: stats.offered,
+            latencies_ms: stats.latencies_ms,
+            action: Some(joint.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Hybrid environment (co-located heterogeneous tenants)
 // ---------------------------------------------------------------------------
 
@@ -1051,6 +1246,7 @@ pub fn run_hybrid_env(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::experiments::harness;
 
     fn sys() -> SystemConfig {
         let mut s = SystemConfig::default();
@@ -1138,6 +1334,92 @@ mod tests {
             assert!(r.ram_alloc_mb >= batch_ram - 1e-6);
             assert!(r.resource_frac > 0.0);
         }
+    }
+
+    fn small_trace(steps: u64) -> TraceEnvConfig {
+        let replay = ReplayTrace::resolve(crate::trace::replay::ALIBABA_SAMPLE, 0.5)
+            .expect("builtin sample");
+        let mut cfg = TraceEnvConfig::new(
+            CloudSetting::Public,
+            replay,
+            crate::apps::graph::preset("socialnet").unwrap(),
+        );
+        cfg.max_steps = Some(steps);
+        cfg
+    }
+
+    #[test]
+    fn trace_env_runs_all_policies() {
+        let sys = sys();
+        let cfg = small_trace(3);
+        assert_eq!(cfg.steps(), 3, "max_steps caps the replay span");
+        for policy in ["drone", "k8s-hpa", "autopilot", "showar"] {
+            let mut backend = Backend::Native;
+            let recs = harness::run_trace_env(policy, &cfg, &sys, &mut backend, 7);
+            assert_eq!(recs.len(), 3, "{policy}");
+            for r in &recs {
+                assert!(r.offered > 0, "{policy}: replay must offer traffic");
+                assert!(r.dropped <= r.offered);
+                assert!((0.0..=1.0).contains(&r.perf_score));
+                assert!(r.action.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn trace_env_deterministic_per_seed_and_disjoint_from_micro() {
+        let sys = sys();
+        let cfg = small_trace(3);
+        let mut b1 = Backend::Native;
+        let mut b2 = Backend::Native;
+        let a = harness::run_trace_env("drone", &cfg, &sys, &mut b1, 5);
+        let b = harness::run_trace_env("drone", &cfg, &sys, &mut b2, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf_raw.to_bits(), y.perf_raw.to_bits());
+            assert_eq!(x.perf_score.to_bits(), y.perf_score.to_bits());
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.offered, y.offered);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(x.action, y.action);
+        }
+        let mut b3 = Backend::Native;
+        let c = harness::run_trace_env("drone", &cfg, &sys, &mut b3, 6);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.perf_raw != y.perf_raw));
+    }
+
+    /// The fluid opt-in is real: a threshold below the replayed rates
+    /// routes windows through the fluid backend (different stats stream)
+    /// while an above-peak threshold reproduces `Exact` bit-for-bit —
+    /// the same contract `WindowSim` documents.
+    #[test]
+    fn trace_env_fluid_backend_engages_below_threshold() {
+        let sys = sys();
+        let cfg = small_trace(3);
+        let mut above = cfg.clone();
+        above.sim_backend = SimBackend::Fluid { threshold_rps: 1e9 };
+        let mut below = cfg.clone();
+        below.sim_backend = SimBackend::Fluid { threshold_rps: 0.0 };
+        let mut b1 = Backend::Native;
+        let mut b2 = Backend::Native;
+        let mut b3 = Backend::Native;
+        let exact = harness::run_trace_env("k8s-hpa", &cfg, &sys, &mut b1, 4);
+        let same = harness::run_trace_env("k8s-hpa", &above, &sys, &mut b2, 4);
+        let fluid = harness::run_trace_env("k8s-hpa", &below, &sys, &mut b3, 4);
+        for (x, y) in exact.iter().zip(&same) {
+            assert_eq!(x.perf_raw.to_bits(), y.perf_raw.to_bits());
+        }
+        assert!(exact.iter().zip(&fluid).any(|(x, y)| x.perf_raw != y.perf_raw));
+    }
+
+    #[test]
+    fn expired_deadline_truncates_trace_env() {
+        let sys = sys();
+        let mut cfg = small_trace(3);
+        cfg.deadline = Some(std::time::Instant::now());
+        let mut backend = Backend::Native;
+        let recs = harness::run_trace_env("k8s-hpa", &cfg, &sys, &mut backend, 1);
+        assert!(recs.is_empty());
     }
 
     fn small_hybrid_joint(steps: u64) -> HybridEnvConfig {

@@ -587,6 +587,7 @@ fn fig8_requests(sys: &SystemConfig, scale: f64) -> Vec<Scenario> {
                     steps,
                     base_rps: trace.base_rps,
                     amplitude_rps: trace.amplitude_rps,
+                    fluid_threshold_rps: None,
                 },
                 policy,
                 sys.seed,

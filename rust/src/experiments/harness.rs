@@ -21,10 +21,11 @@ use crate::config::SystemConfig;
 use crate::runtime::Backend;
 use crate::sim::cluster::Cluster;
 use crate::trace::diurnal::DiurnalConfig;
+use crate::trace::replay::ReplayTrace;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
-use super::env::{run_env, BatchEnv, MicroEnv};
+use super::env::{run_env, BatchEnv, MicroEnv, TraceEnv};
 
 /// Process-wide count of simulated environment executions (decision loops
 /// and the campaign's single-shot figure cells). The figure pipeline's
@@ -223,6 +224,72 @@ pub fn run_micro_env(
     seed: u64,
 ) -> Vec<StepRecord> {
     let mut e = MicroEnv::new(env.clone());
+    run_env(policy_name, &mut e, sys, backend, seed)
+}
+
+// ---------------------------------------------------------------------------
+// Trace-replay environment configuration
+// ---------------------------------------------------------------------------
+
+/// Configuration of the trace-replay environment: the microservice
+/// decision loop driven by a *recorded* arrival trace ([`ReplayTrace`])
+/// over a data-defined service graph, instead of the synthetic diurnal
+/// generator over a compiled-in one.
+#[derive(Clone, Debug)]
+pub struct TraceEnvConfig {
+    pub setting: CloudSetting,
+    /// The replay arrival source (resolved from a builtin name or a
+    /// `drone-trace/v1` file before the env is constructed).
+    pub replay: ReplayTrace,
+    pub graph: ServiceGraph,
+    /// Decision period (paper: 60 s; also the replay's natural window).
+    pub period_s: f64,
+    /// Optional cap on decision periods — `None` replays the full trace
+    /// span at `period_s`.
+    pub max_steps: Option<u64>,
+    pub interference: bool,
+    /// Window-simulation backend. The trace campaign suite opts into
+    /// `Fluid` above a threshold (recorded peaks are where per-request
+    /// DES is wasted work); `drone run` defaults to `Exact`.
+    pub sim_backend: SimBackend,
+    pub deadline: Option<std::time::Instant>,
+}
+
+impl TraceEnvConfig {
+    pub fn new(setting: CloudSetting, replay: ReplayTrace, graph: ServiceGraph) -> Self {
+        Self {
+            setting,
+            replay,
+            graph,
+            period_s: 60.0,
+            max_steps: None,
+            interference: true,
+            sim_backend: SimBackend::Exact,
+            deadline: None,
+        }
+    }
+
+    /// Planned steps: the full trace span at the decision period, capped
+    /// by `max_steps` when set.
+    pub fn steps(&self) -> u64 {
+        let span_steps = (self.replay.span_s() / self.period_s).ceil() as u64;
+        match self.max_steps {
+            Some(cap) => span_steps.min(cap),
+            None => span_steps,
+        }
+    }
+}
+
+/// Run one policy through the trace-replay loop (thin wrapper over the
+/// generic `env::run_env` driver, like [`run_micro_env`]).
+pub fn run_trace_env(
+    policy_name: &str,
+    env: &TraceEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut e = TraceEnv::new(env.clone());
     run_env(policy_name, &mut e, sys, backend, seed)
 }
 

@@ -24,9 +24,10 @@ pub mod regret;
 pub mod tables;
 
 pub use campaign::{run_campaign, CampaignResult, CampaignSpec, Scenario, Suite};
-pub use env::{run_env, run_hybrid_env, Environment, HybridEnv, HybridEnvConfig};
+pub use env::{run_env, run_hybrid_env, Environment, HybridEnv, HybridEnvConfig, TraceEnv};
 pub use harness::{
-    run_batch_env, run_micro_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
+    run_batch_env, run_micro_env, run_trace_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
+    StepRecord, TraceEnvConfig,
 };
 pub use store::{CampaignStore, ExecPolicy};
 

@@ -189,6 +189,7 @@ pub fn table4(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
                     steps,
                     base_rps: trace.base_rps,
                     amplitude_rps: trace.amplitude_rps,
+                    fluid_threshold_rps: None,
                 },
                 policy,
                 sys.seed,
@@ -246,10 +247,20 @@ pub fn table5(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
         let workload = defaults.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi);
         let (base_rps, amplitude_rps) = (defaults.micro_base_rps, defaults.micro_amplitude_rps);
         match suite {
-            Suite::HybridJoint => {
-                EnvKind::HybridJoint { workload, steps, base_rps, amplitude_rps }
-            }
-            _ => EnvKind::Hybrid { workload, steps, base_rps, amplitude_rps },
+            Suite::HybridJoint => EnvKind::HybridJoint {
+                workload,
+                steps,
+                base_rps,
+                amplitude_rps,
+                fluid_threshold_rps: None,
+            },
+            _ => EnvKind::Hybrid {
+                workload,
+                steps,
+                base_rps,
+                amplitude_rps,
+                fluid_threshold_rps: None,
+            },
         }
     };
     let mut requests = vec![];

@@ -44,18 +44,20 @@ fn print_usage() {
         "drone — dynamic resource orchestration for the containerized cloud
 
 USAGE:
-  drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint> [--workload <w>]
+  drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint|trace> [--workload <w>]
             [--setting <public|private>] [--steps N] [--seed S] [--config file.toml]
             [--sim-backend <exact|fluid>] [--fluid-threshold RPS]
+            [--trace-file NAME|PATH] [--graph-file NAME|PATH] [--trace-scale F]
   drone experiment <id|all> [--scale 0.2] [--seed S] [--jobs N] [--timeout SECS] [--no-exec]
                    [--refresh] [--digest-points K]
   drone campaign [--experiments all|<suite,...>] [--seeds N|a..b|a..=b] [--jobs N]
                  [--steps N] [--policies p1,p2] [--workloads w1,w2] [--timeout SECS]
                  [--stress F] [--scale S] [--refresh] [--digest-points K]
+                 [--fluid-threshold RPS] [--trace-scale F]
   drone campaign --compact
   drone list
   drone selfcheck
-  drone bench-check <BENCH_N.json>
+  drone bench-check <BENCH_N.json> [--baseline OLD.json] [--max-regression F]
 
 Environment-backed figures/tables read scenario records from the campaign
 store (results/campaign.json, opened once per invocation), executing only
@@ -69,18 +71,30 @@ any registered suite or the current config fingerprint (plus timed-out
 leftovers and duplicates), reporting compacted(n).
 
 --sim-backend selects the microservice window simulator for `drone run`
-(micro/hybrid envs): `exact` (default; per-request DES, what all goldens
-pin) or `fluid` (M/M/c mean-value approximation for windows at or above
---fluid-threshold RPS, default 120; windows below it still run exact).
+(micro/hybrid/trace envs): `exact` (default; per-request DES, what all
+goldens pin) or `fluid` (M/M/c mean-value approximation for windows at or
+above --fluid-threshold RPS, default 120; windows below it still run
+exact). `drone campaign --fluid-threshold` does the same for the
+micro/hybrid/trace suites (cache keys record the backend, so fluid and
+exact runs never alias).
+
+`run --env trace` replays a recorded `drone-trace/v1` rate trace over a
+config-defined service graph: --trace-file takes a builtin trace name
+(alibaba-sample) or a trace file path, --graph-file takes a preset graph
+name (socialnet, sockshop) or a drone-graph/v1 JSON file path, and
+--trace-scale multiplies every recorded rate.
+
 `bench-check` validates a bench_main --json export against the
-drone-bench/v1 schema (used by CI to keep the perf trajectory parseable).
+drone-bench/v1 schema (used by CI to keep the perf trajectory parseable);
+with --baseline it also fails on any tracked bench whose p99 regressed
+more than --max-regression (default 0.25 = +25%) vs the baseline export.
 
 POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
              table2 table3 table4 table5 regret ablation
 SUITES: batch-public batch-private micro-public micro-private hybrid
-        hybrid-joint fig1 fig2 fig4"
+        hybrid-joint trace fig1 fig2 fig4"
     );
 }
 
@@ -162,6 +176,43 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
             let recs = experiments::run_micro_env(&policy, &env, sys, &mut backend, sys.seed);
             let mut tab = Table::new(
                 &format!("{policy} on SocialNet ({setting:?})"),
+                &["step", "p90_ms", "drops", "offered", "ram_gb"],
+            );
+            for r in &recs {
+                tab.row(&[
+                    format!("{}", r.step),
+                    format!("{:.1}", r.perf_raw),
+                    format!("{}", r.dropped),
+                    format!("{}", r.offered),
+                    format!("{:.1}", r.ram_alloc_mb / 1024.0),
+                ]);
+            }
+            tab.print();
+        }
+        "trace" => {
+            let trace_arg = args.get_str("trace-file", drone::trace::ALIBABA_SAMPLE);
+            let graph_arg = args.get_str("graph-file", "socialnet");
+            let scale = args.get_f64("trace-scale", 1.0);
+            let replay = match drone::trace::ReplayTrace::resolve(&trace_arg, scale) {
+                Ok(r) => r,
+                Err(e) => {
+                    eprintln!("cannot load trace {trace_arg:?}: {e:#}");
+                    return 2;
+                }
+            };
+            let graph = match drone::apps::graph::resolve(&graph_arg) {
+                Ok(g) => g,
+                Err(e) => {
+                    eprintln!("cannot load graph {graph_arg:?}: {e:#}");
+                    return 2;
+                }
+            };
+            let mut env = experiments::TraceEnvConfig::new(setting, replay, graph);
+            env.max_steps = Some(steps);
+            env.sim_backend = sim_backend;
+            let recs = experiments::run_trace_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mut tab = Table::new(
+                &format!("{policy} replaying {trace_arg} on {graph_arg} ({setting:?}, x{scale})"),
                 &["step", "p90_ms", "drops", "offered", "ram_gb"],
             );
             for r in &recs {
@@ -321,6 +372,19 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     spec.figure_scale = args.get_f64("scale", spec.figure_scale);
     spec.timeout_s = args.get_f64("timeout", 0.0);
     spec.digest_points = args.get_usize("digest-points", spec.digest_points).max(2);
+    spec.trace_scale = args.get_f64("trace-scale", spec.trace_scale);
+    // --fluid-threshold switches the micro/hybrid suites to the fluid
+    // window backend (absent = exact, the pre-backend cache keys) and
+    // overrides the trace suite's always-on threshold.
+    if args.get("fluid-threshold").is_some() {
+        let th = args.get_f64("fluid-threshold", campaign::TRACE_FLUID_THRESHOLD_RPS);
+        if !th.is_finite() || th < 0.0 {
+            eprintln!("--fluid-threshold must be a non-negative rps value, got {th}");
+            return 2;
+        }
+        spec.micro_fluid_threshold_rps = Some(th);
+        spec.trace_fluid_threshold_rps = th;
+    }
 
     let jobs = args.get_usize("jobs", drone::experiments::store::default_jobs());
     let scenarios = campaign::enumerate(&spec);
@@ -495,27 +559,47 @@ fn cmd_selfcheck(_sys: &SystemConfig) -> i32 {
     1
 }
 
-/// `drone bench-check <path>`: validate a `bench_main --json` export
-/// against the drone-bench/v1 schema, so the tracked perf trajectory
-/// (BENCH_*.json artifacts) cannot silently drift shape.
+/// `drone bench-check <path> [--baseline OLD.json]`: validate a
+/// `bench_main --json` export against the drone-bench/v1 schema, so the
+/// tracked perf trajectory (BENCH_*.json artifacts) cannot silently drift
+/// shape; with `--baseline` additionally fail when any tracked bench's
+/// p99 regressed past `--max-regression` (default +25%) vs the baseline.
 fn cmd_bench_check(args: &Args) -> i32 {
+    use drone::util::benchfmt;
     let Some(path) = args.positional.get(1) else {
-        eprintln!("usage: drone bench-check <BENCH_N.json>");
+        eprintln!("usage: drone bench-check <BENCH_N.json> [--baseline OLD.json]");
         return 2;
     };
-    match std::fs::read_to_string(path) {
-        Ok(text) => match drone::util::benchfmt::validate(&text) {
-            Ok(summary) => {
-                println!("{path}: OK — {summary}");
-                0
-            }
-            Err(e) => {
-                eprintln!("{path}: schema violation: {e}");
-                1
-            }
-        },
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
         Err(e) => {
             eprintln!("cannot read {path}: {e}");
+            return 1;
+        }
+    };
+    match benchfmt::validate(&text) {
+        Ok(summary) => println!("{path}: OK — {summary}"),
+        Err(e) => {
+            eprintln!("{path}: schema violation: {e}");
+            return 1;
+        }
+    }
+    let Some(baseline_path) = args.get("baseline") else { return 0 };
+    let baseline = match std::fs::read_to_string(baseline_path) {
+        Ok(text) => text,
+        Err(e) => {
+            eprintln!("cannot read baseline {baseline_path}: {e}");
+            return 1;
+        }
+    };
+    let max_regression = args.get_f64("max-regression", benchfmt::MAX_P99_REGRESSION);
+    match benchfmt::compare(&text, &baseline, max_regression) {
+        Ok(summary) => {
+            println!("{path} vs {baseline_path}: OK — {summary}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{path} vs {baseline_path}: perf regression gate failed: {e}");
             1
         }
     }

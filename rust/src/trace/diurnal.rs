@@ -70,13 +70,24 @@ impl DiurnalTrace {
     }
 
     /// Generate a full series of (t, rate) samples every `dt` seconds.
+    ///
+    /// Mirrors the `EventQueue` non-finite-time contract: a non-positive
+    /// or non-finite `dt`, or a non-finite `duration_s`, would make
+    /// `(duration_s / dt).ceil() as usize` silently produce 0 samples or
+    /// an absurd allocation — **debug builds panic**, release builds
+    /// clamp to an empty series. Samples are capped at `t < duration_s`,
+    /// so a non-integer `duration_s / dt` never emits one past the end.
     pub fn series(&mut self, duration_s: f64, dt: f64) -> Vec<(f64, f64)> {
+        debug_assert!(dt.is_finite() && dt > 0.0, "non-positive series dt {dt}");
+        debug_assert!(duration_s.is_finite(), "non-finite series duration {duration_s}");
+        if !dt.is_finite() || dt <= 0.0 || !duration_s.is_finite() || duration_s <= 0.0 {
+            return vec![];
+        }
         let n = (duration_s / dt).ceil() as usize;
         (0..n)
-            .map(|i| {
-                let t = i as f64 * dt;
-                (t, self.sample_rate(t))
-            })
+            .map(|i| i as f64 * dt)
+            .take_while(|&t| t < duration_s)
+            .map(|t| (t, self.sample_rate(t)))
             .collect()
     }
 }
@@ -109,5 +120,41 @@ mod tests {
         let mut a = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(5));
         let mut b = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(5));
         assert_eq!(a.series(3600.0, 60.0), b.series(3600.0, 60.0));
+    }
+
+    /// Non-integer duration/dt: the last sample must stay inside the
+    /// window (t < duration), not land past it.
+    #[test]
+    fn series_caps_samples_inside_duration() {
+        let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(7));
+        let s = tr.series(100.0, 60.0);
+        assert_eq!(s.len(), 2);
+        assert_eq!((s[0].0, s[1].0), (0.0, 60.0));
+        assert!(s.iter().all(|(t, _)| *t < 100.0));
+    }
+
+    /// Negative (or zero) duration clamps to an empty series in every
+    /// build profile — no assert, no allocation.
+    #[test]
+    fn series_negative_duration_is_empty() {
+        let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(8));
+        assert!(tr.series(-3600.0, 60.0).is_empty());
+        assert!(tr.series(0.0, 60.0).is_empty());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-positive series dt")]
+    fn series_rejects_zero_dt() {
+        let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(9));
+        tr.series(3600.0, 0.0);
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-finite series duration")]
+    fn series_rejects_non_finite_duration() {
+        let mut tr = DiurnalTrace::new(DiurnalConfig::default(), Pcg64::new(10));
+        tr.series(f64::NAN, 60.0);
     }
 }

@@ -1,0 +1,215 @@
+//! The `drone-trace/v1` on-disk trace format: line-delimited windows of
+//! `(t, rps[, rt_hint])` — the compact interchange between real-cluster
+//! trace slices (Alibaba 2021 microservice traces, MSRTQps tables) and
+//! the replay arrival source ([`super::replay::ReplayTrace`]).
+//!
+//! ```text
+//! # drone-trace/v1
+//! # any number of comment lines (provenance, units)
+//! 0.000000 41.250000 8.300000
+//! 60.000000 43.700000 8.100000
+//! ```
+//!
+//! * First significant line is the schema header, verbatim.
+//! * `#` lines are comments; blank lines are ignored.
+//! * Data lines carry 2 or 3 whitespace-separated numbers: window start
+//!   time `t` (seconds, strictly increasing), offered rate `rps`
+//!   (req/s, >= 0) and an optional mean-RT hint (ms, > 0) for future
+//!   per-service calibration.
+//! * Numbers are written at fixed `{:.6}` precision — the campaign's
+//!   `round6` contract — so `render(parse(x)) == x` for any file this
+//!   module wrote (byte-stable round trip, asserted in tests).
+//!
+//! All malformed inputs (truncated line, non-numeric token, non-monotone
+//! `t`, negative rate, non-finite value) are `anyhow` errors naming the
+//! line — never a panic: trace files are user input.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Schema header line required at the top of every trace file.
+pub const TRACE_SCHEMA: &str = "drone-trace/v1";
+
+/// One replay window: offered load from `t` until the next window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TraceWindow {
+    /// Window start, seconds from trace origin. Strictly increasing.
+    pub t: f64,
+    /// Offered request rate over the window, req/s.
+    pub rps: f64,
+    /// Optional observed mean response time (ms) — carried for the
+    /// planned per-service RT replay calibration, unused by the arrival
+    /// source itself.
+    pub rt_hint_ms: Option<f64>,
+}
+
+/// Parse a `drone-trace/v1` document into its windows.
+pub fn parse_trace(text: &str) -> Result<Vec<TraceWindow>> {
+    let mut lines = text.lines().enumerate();
+    let header = loop {
+        match lines.next() {
+            Some((_, l)) if l.trim().is_empty() => continue,
+            Some((_, l)) => break l.trim(),
+            None => bail!("empty trace file (missing '# {TRACE_SCHEMA}' header)"),
+        }
+    };
+    if header != format!("# {TRACE_SCHEMA}") {
+        bail!("bad trace header {header:?}, expected '# {TRACE_SCHEMA}'");
+    }
+
+    let mut windows: Vec<TraceWindow> = vec![];
+    for (i, line) in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let n = i + 1; // 1-based for error messages
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        if toks.len() < 2 || toks.len() > 3 {
+            bail!(
+                "line {n}: expected 't rps [rt_hint]' (2-3 fields), found {} in {line:?}",
+                toks.len()
+            );
+        }
+        let num = |tok: &str, what: &str| -> Result<f64> {
+            let v: f64 = tok
+                .parse()
+                .map_err(|_| anyhow!("line {n}: {what} {tok:?} is not a number"))?;
+            if !v.is_finite() {
+                bail!("line {n}: {what} {tok:?} is not finite");
+            }
+            Ok(v)
+        };
+        let t = num(toks[0], "time")?;
+        let rps = num(toks[1], "rps")?;
+        if rps < 0.0 {
+            bail!("line {n}: negative rps {rps}");
+        }
+        if let Some(prev) = windows.last() {
+            if t <= prev.t {
+                bail!("line {n}: non-monotone time {t} (previous window starts at {})", prev.t);
+            }
+        }
+        let rt_hint_ms = match toks.get(2) {
+            Some(tok) => {
+                let rt = num(tok, "rt_hint")?;
+                if rt <= 0.0 {
+                    bail!("line {n}: non-positive rt_hint {rt}");
+                }
+                Some(rt)
+            }
+            None => None,
+        };
+        windows.push(TraceWindow { t, rps, rt_hint_ms });
+    }
+    if windows.is_empty() {
+        bail!("trace file has a header but no windows");
+    }
+    Ok(windows)
+}
+
+/// Render windows back into a `drone-trace/v1` document. `comments` are
+/// emitted verbatim after the header, one `# ` line each. Values print at
+/// `{:.6}` — re-rendering a parsed document reproduces it byte-for-byte.
+pub fn render_trace(windows: &[TraceWindow], comments: &[&str]) -> String {
+    let mut out = format!("# {TRACE_SCHEMA}\n");
+    for c in comments {
+        out.push_str("# ");
+        out.push_str(c);
+        out.push('\n');
+    }
+    for w in windows {
+        match w.rt_hint_ms {
+            Some(rt) => out.push_str(&format!("{:.6} {:.6} {:.6}\n", w.t, w.rps, rt)),
+            None => out.push_str(&format!("{:.6} {:.6}\n", w.t, w.rps)),
+        }
+    }
+    out
+}
+
+/// Load and parse a trace file from disk.
+pub fn load_trace(path: &str) -> Result<Vec<TraceWindow>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace file {path}"))?;
+    parse_trace(&text).with_context(|| format!("parsing trace file {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Vec<TraceWindow> {
+        vec![
+            TraceWindow { t: 0.0, rps: 41.25, rt_hint_ms: Some(8.3) },
+            TraceWindow { t: 60.0, rps: 43.7, rt_hint_ms: Some(8.1) },
+            TraceWindow { t: 120.0, rps: 39.119999, rt_hint_ms: None },
+        ]
+    }
+
+    /// write -> parse -> rewrite must be byte-stable (the round6
+    /// contract), and parsed values must match to 1e-6.
+    #[test]
+    fn round_trip_is_byte_stable() {
+        let text = render_trace(&sample(), &["unit test trace", "units: s req/s ms"]);
+        let parsed = parse_trace(&text).unwrap();
+        assert_eq!(parsed.len(), 3);
+        for (p, s) in parsed.iter().zip(&sample()) {
+            assert!((p.t - s.t).abs() < 1e-9);
+            assert!((p.rps - s.rps).abs() < 1e-9);
+            assert_eq!(p.rt_hint_ms.is_some(), s.rt_hint_ms.is_some());
+        }
+        // Comments are not part of the data model; compare data-for-data.
+        let rewritten = render_trace(&parsed, &["unit test trace", "units: s req/s ms"]);
+        assert_eq!(text, rewritten, "render(parse(x)) must reproduce x byte-for-byte");
+        // And a second full cycle is a fixed point.
+        let recycled = render_trace(&parse_trace(&rewritten).unwrap(), &[]);
+        assert_eq!(recycled.len(), render_trace(&parsed, &[]).len());
+    }
+
+    #[test]
+    fn tolerates_comments_and_blank_lines() {
+        let text = "\n# drone-trace/v1\n# provenance: test\n\n0.000000 10.000000\n\n\
+                    # midstream comment\n60.000000 12.000000\n";
+        let w = parse_trace(text).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[1].rps, 12.0);
+        assert_eq!(w[0].rt_hint_ms, None);
+    }
+
+    #[test]
+    fn malformed_inputs_error_not_panic() {
+        // Missing / wrong header.
+        assert!(parse_trace("").is_err());
+        assert!(parse_trace("0.0 10.0\n").is_err());
+        assert!(parse_trace("# drone-trace/v2\n0.0 10.0\n").is_err());
+        // Header but no data.
+        assert!(parse_trace("# drone-trace/v1\n# only comments\n").is_err());
+        let hdr = "# drone-trace/v1\n";
+        // Truncated line (one field).
+        let err = parse_trace(&format!("{hdr}0.000000\n")).unwrap_err();
+        assert!(err.to_string().contains("2-3 fields"), "{err}");
+        // Too many fields.
+        assert!(parse_trace(&format!("{hdr}0 1 2 3\n")).is_err());
+        // Non-numeric token.
+        let err = parse_trace(&format!("{hdr}0.0 fast\n")).unwrap_err();
+        assert!(err.to_string().contains("not a number"), "{err}");
+        // Non-finite value.
+        assert!(parse_trace(&format!("{hdr}0.0 inf\n")).is_err());
+        assert!(parse_trace(&format!("{hdr}NaN 10.0\n")).is_err());
+        // Non-monotone t.
+        let err = parse_trace(&format!("{hdr}0.0 10.0\n60.0 11.0\n30.0 12.0\n")).unwrap_err();
+        assert!(err.to_string().contains("non-monotone"), "{err}");
+        assert!(err.to_string().contains("line 4"), "{err}");
+        // Negative rps.
+        let err = parse_trace(&format!("{hdr}0.0 -5.0\n")).unwrap_err();
+        assert!(err.to_string().contains("negative rps"), "{err}");
+        // Bad rt_hint.
+        assert!(parse_trace(&format!("{hdr}0.0 10.0 0.0\n")).is_err());
+        assert!(parse_trace(&format!("{hdr}0.0 10.0 nan\n")).is_err());
+    }
+
+    #[test]
+    fn zero_rate_windows_are_legal() {
+        let w = parse_trace("# drone-trace/v1\n0.0 0.0\n60.0 5.0\n").unwrap();
+        assert_eq!(w[0].rps, 0.0);
+    }
+}

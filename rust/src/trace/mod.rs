@@ -1,9 +1,15 @@
-//! Exogenous trace generators: the diurnal request-rate workload (the
-//! paper's Twitter-sample stand-in) and mean-reverting jump-diffusion spot
-//! prices (the Fig. 5 stand-in).
+//! Exogenous traces: the synthetic diurnal request-rate generator (the
+//! paper's Twitter-sample stand-in), mean-reverting jump-diffusion spot
+//! prices (the Fig. 5 stand-in), and recorded-trace replay — the
+//! `drone-trace/v1` format plus a step-function arrival source serving
+//! the same interface as the generator.
 
 pub mod diurnal;
+pub mod format;
+pub mod replay;
 pub mod spot;
 
 pub use diurnal::{DiurnalConfig, DiurnalTrace};
+pub use format::{load_trace, parse_trace, render_trace, TraceWindow, TRACE_SCHEMA};
+pub use replay::{ReplayTrace, ALIBABA_SAMPLE};
 pub use spot::{SpotConfig, SpotTrace};

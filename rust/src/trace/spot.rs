@@ -103,13 +103,22 @@ impl SpotTrace {
     }
 
     /// Generate (t_hours, price) over `hours` at `dt_hours` resolution.
+    ///
+    /// Same guard contract as `DiurnalTrace::series` (mirroring the
+    /// `EventQueue` non-finite-time rules): non-positive/non-finite
+    /// `dt_hours` or non-finite `hours` panics debug builds and clamps
+    /// to an empty series in release; samples are capped at `t < hours`.
     pub fn series(&mut self, hours: f64, dt_hours: f64) -> Vec<(f64, f64)> {
+        debug_assert!(dt_hours.is_finite() && dt_hours > 0.0, "non-positive series dt {dt_hours}");
+        debug_assert!(hours.is_finite(), "non-finite series duration {hours}");
+        if !dt_hours.is_finite() || dt_hours <= 0.0 || !hours.is_finite() || hours <= 0.0 {
+            return vec![];
+        }
         let n = (hours / dt_hours).ceil() as usize;
         (0..n)
-            .map(|i| {
-                let t = i as f64 * dt_hours;
-                (t, self.step(dt_hours))
-            })
+            .map(|i| i as f64 * dt_hours)
+            .take_while(|&t| t < hours)
+            .map(|t| (t, self.step(dt_hours)))
             .collect()
     }
 }
@@ -136,6 +145,27 @@ mod tests {
         let s = tr.series(24.0 * 60.0, 1.0);
         let avg: f64 = s.iter().map(|x| x.1).sum::<f64>() / s.len() as f64;
         assert!((avg - mean).abs() / mean < 0.25, "avg={avg} mean={mean}");
+    }
+
+    /// Series guard contract: inside-window capping for non-integer
+    /// spans, empty output for non-positive spans, debug assert on
+    /// degenerate dt.
+    #[test]
+    fn series_guards_duration_and_dt() {
+        let mut tr = SpotTrace::new(SpotConfig::gcp_e2(), Pcg64::new(11));
+        let s = tr.series(2.5, 1.0);
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(|(t, _)| *t < 2.5));
+        assert!(tr.series(-1.0, 1.0).is_empty());
+        assert!(tr.series(0.0, 1.0).is_empty());
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "non-positive series dt")]
+    fn series_rejects_zero_dt() {
+        let mut tr = SpotTrace::new(SpotConfig::gcp_e2(), Pcg64::new(12));
+        tr.series(24.0, 0.0);
     }
 
     #[test]

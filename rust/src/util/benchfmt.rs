@@ -177,6 +177,93 @@ pub fn validate(text: &str) -> Result<String, String> {
     Ok(format!("{SCHEMA}: {} groups, {n_rows} benches", groups.len()))
 }
 
+/// Default p99 regression gate for [`compare`]: a matched bench may be at
+/// most 25% slower than the baseline before the check fails.
+pub const MAX_P99_REGRESSION: f64 = 0.25;
+
+/// Collect `(group, name) -> p99_ms` for the tracked (required) groups of
+/// a validated export. Extra groups are observability-only and never
+/// gate, so they are skipped here too.
+fn p99_by_bench(doc: &Json) -> Vec<((String, String), f64)> {
+    let mut out = vec![];
+    let Some(Json::Obj(groups)) = doc.get("groups") else { return out };
+    for (gname, rows) in groups {
+        if !REQUIRED_GROUPS.contains(&gname.as_str()) {
+            continue;
+        }
+        for row in rows.as_arr().unwrap_or(&[]) {
+            let (Some(name), Some(p99)) = (
+                row.get("name").and_then(Json::as_str),
+                row.get("p99_ms").and_then(Json::as_f64),
+            ) else {
+                continue;
+            };
+            out.push(((gname.clone(), name.to_string()), p99));
+        }
+    }
+    out
+}
+
+/// Compare a fresh export against a baseline export (both must pass
+/// [`validate`] first). Benches are matched by (group, name) within the
+/// required groups only, so added, removed or renamed benches never trip
+/// the gate — but zero matches is an error (a wholesale rename would
+/// otherwise make the check vacuously green). Ok carries a one-line
+/// summary; Err lists every matched bench whose p99 regressed by more
+/// than `max_regression` (fractional: 0.25 = +25%).
+pub fn compare(new_text: &str, baseline_text: &str, max_regression: f64) -> Result<String, String> {
+    validate(new_text).map_err(|e| format!("new export: {e}"))?;
+    validate(baseline_text).map_err(|e| format!("baseline: {e}"))?;
+    let new_doc = Json::parse(new_text).expect("validated above");
+    let base_doc = Json::parse(baseline_text).expect("validated above");
+    let news = p99_by_bench(&new_doc);
+    let bases = p99_by_bench(&base_doc);
+
+    let mut matched = 0usize;
+    let mut worst: f64 = f64::NEG_INFINITY;
+    let mut regressions = vec![];
+    for (key, new_p99) in &news {
+        let Some((_, base_p99)) = bases.iter().find(|(k, _)| k == key) else { continue };
+        if *base_p99 <= 0.0 {
+            // A zero-time baseline can't express a ratio; skip rather than
+            // divide by zero (validate already rejects negatives).
+            continue;
+        }
+        matched += 1;
+        let delta = new_p99 / base_p99 - 1.0;
+        worst = worst.max(delta);
+        if delta > max_regression {
+            regressions.push(format!(
+                "{}/{}: p99 {:.4} ms -> {:.4} ms (+{:.1}%, limit +{:.0}%)",
+                key.0,
+                key.1,
+                base_p99,
+                new_p99,
+                delta * 100.0,
+                max_regression * 100.0
+            ));
+        }
+    }
+    if matched == 0 {
+        return Err("no benches in common with the baseline (required groups); \
+                    refresh the baseline artifact"
+            .into());
+    }
+    if !regressions.is_empty() {
+        return Err(format!(
+            "{} of {matched} matched benches regressed past +{:.0}% p99:\n  {}",
+            regressions.len(),
+            max_regression * 100.0,
+            regressions.join("\n  ")
+        ));
+    }
+    Ok(format!(
+        "{matched} matched benches within +{:.0}% p99 of baseline (worst {:+.1}%)",
+        max_regression * 100.0,
+        worst * 100.0
+    ))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -255,5 +342,55 @@ mod tests {
         groups.push(("experiments", vec![row("fig7a")]));
         let text = render(&[], &groups);
         assert!(validate(&text).is_ok());
+    }
+
+    fn row_p99(name: &str, p99_ms: f64) -> BenchRow {
+        BenchRow { p99_ms, p50_ms: p99_ms.min(1.4), ..row(name) }
+    }
+
+    #[test]
+    fn compare_passes_within_threshold() {
+        let baseline = render(&[], &full_groups());
+        let mut faster = full_groups();
+        faster[0].1 = vec![row_p99("push_pop", 2.0), row_p99("drain", 2.5)];
+        let summary = compare(&render(&[], &faster), &baseline, MAX_P99_REGRESSION).unwrap();
+        assert!(summary.contains("matched benches"), "{summary}");
+    }
+
+    #[test]
+    fn compare_fails_on_p99_regression() {
+        let baseline = render(&[], &full_groups());
+        let mut slower = full_groups();
+        // Baseline p99 is 2.1 ms; 3.0 ms is +43%, past the 25% gate.
+        slower[2].1 = vec![row_p99("decide+advance", 3.0)];
+        let err = compare(&render(&[], &slower), &baseline, MAX_P99_REGRESSION).unwrap_err();
+        assert!(err.contains("decide/decide+advance"), "{err}");
+        assert!(err.contains("+42.9%"), "{err}");
+    }
+
+    #[test]
+    fn compare_ignores_unmatched_and_untracked_benches() {
+        let baseline = render(&[], &full_groups());
+        let mut groups = full_groups();
+        // Renamed bench: not matched, not gated.
+        groups[0].1.push(row_p99("brand-new-bench", 99.0));
+        // Regression outside the required groups: observability only.
+        groups.push(("experiments", vec![row_p99("fig7a", 500.0)]));
+        assert!(compare(&render(&[], &groups), &baseline, MAX_P99_REGRESSION).is_ok());
+    }
+
+    #[test]
+    fn compare_rejects_zero_overlap() {
+        let baseline = render(&[], &full_groups());
+        let renamed = vec![
+            ("queue", vec![row("q2")]),
+            ("window", vec![row("w2")]),
+            ("decide", vec![row("d2")]),
+        ];
+        let err = compare(&render(&[], &renamed), &baseline, MAX_P99_REGRESSION).unwrap_err();
+        assert!(err.contains("no benches in common"), "{err}");
+        // And a malformed side fails with its own context.
+        assert!(compare("not json", &baseline, 0.25).unwrap_err().contains("new export"));
+        assert!(compare(&baseline, "not json", 0.25).unwrap_err().contains("baseline"));
     }
 }

@@ -33,13 +33,26 @@ pub fn cov(xs: &[f64]) -> f64 {
     }
 }
 
-/// Percentile with linear interpolation, q in [0, 100].
+/// Total-order float sort via [`f64::total_cmp`]. NaN placement is
+/// well-defined instead of a panic: -NaN sorts before -inf, +NaN after
+/// +inf (and -0.0 before +0.0). Helpers whose contract cannot tolerate
+/// NaN at either end filter non-finite values *before* sorting; callers
+/// that keep NaN (none today) get it parked deterministically at the
+/// extremes rather than corrupting the comparator.
+pub fn sort_total(v: &mut [f64]) {
+    v.sort_by(f64::total_cmp);
+}
+
+/// Percentile with linear interpolation, q in [0, 100]. Non-finite
+/// samples (NaN latencies from halted cells, ±inf) carry no rank
+/// information and are dropped before sorting; an all-non-finite input
+/// behaves like an empty one (returns 0.0).
 pub fn percentile(xs: &[f64], q: f64) -> f64 {
-    if xs.is_empty() {
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
         return 0.0;
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_total(&mut v);
     percentile_sorted(&v, q)
 }
 
@@ -71,11 +84,14 @@ pub fn max(xs: &[f64]) -> f64 {
 /// Empirical CDF evaluated at `points` support values: returns
 /// (value, fraction <= value) pairs.
 pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
-    if xs.is_empty() || points == 0 {
+    // The support grid is built from the sorted ends, so a NaN or ±inf
+    // sample would poison every grid point; drop them up front (an
+    // all-non-finite input is an empty CDF).
+    let mut v: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() || points == 0 {
         return vec![];
     }
-    let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_total(&mut v);
     let (lo, hi) = (v[0], v[v.len() - 1]);
     let n = v.len() as f64;
     if points == 1 {
@@ -97,11 +113,17 @@ pub fn cdf(xs: &[f64], points: usize) -> Vec<(f64, f64)> {
 /// pool per-step latency digests, where each digest point stands for
 /// `count / digest_len` raw observations.
 pub fn weighted_percentile(samples: &[(f64, f64)], q: f64) -> f64 {
-    let mut v: Vec<(f64, f64)> = samples.iter().copied().filter(|(_, w)| *w > 0.0).collect();
+    // Keep only usable mass: finite values with positive finite weight
+    // (a NaN value has no rank; a NaN/inf weight has no mass).
+    let mut v: Vec<(f64, f64)> = samples
+        .iter()
+        .copied()
+        .filter(|(x, w)| x.is_finite() && w.is_finite() && *w > 0.0)
+        .collect();
     if v.is_empty() {
         return 0.0;
     }
-    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    v.sort_by(|a, b| a.0.total_cmp(&b.0));
     let total: f64 = v.iter().map(|(_, w)| w).sum();
     let target = q.clamp(0.0, 100.0) / 100.0 * total;
     let mut cum = 0.0;
@@ -117,11 +139,15 @@ pub fn weighted_percentile(samples: &[(f64, f64)], q: f64) -> f64 {
 /// Weighted empirical CDF on a `points`-value support grid, mirroring
 /// [`cdf`] (including the single-point degenerate case).
 pub fn weighted_cdf(samples: &[(f64, f64)], points: usize) -> Vec<(f64, f64)> {
-    let mut v: Vec<(f64, f64)> = samples.iter().copied().filter(|(_, w)| *w > 0.0).collect();
+    let mut v: Vec<(f64, f64)> = samples
+        .iter()
+        .copied()
+        .filter(|(x, w)| x.is_finite() && w.is_finite() && *w > 0.0)
+        .collect();
     if v.is_empty() || points == 0 {
         return vec![];
     }
-    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    v.sort_by(|a, b| a.0.total_cmp(&b.0));
     let (lo, hi) = (v[0].0, v[v.len() - 1].0);
     let total: f64 = v.iter().map(|(_, w)| w).sum();
     if points == 1 {
@@ -317,6 +343,59 @@ mod tests {
         assert_eq!(percentile(&xs, 100.0), 50.0);
         assert_eq!(percentile(&xs, 50.0), 30.0);
         assert!((percentile(&xs, 90.0) - 46.0).abs() < 1e-9);
+    }
+
+    /// The NaN-panic regression: every percentile/CDF helper must accept
+    /// NaN/±inf samples (halted cells carry NaN perf_raw) without
+    /// panicking, and must answer as if the non-finite samples were not
+    /// there.
+    #[test]
+    fn non_finite_samples_are_filtered_not_fatal() {
+        let dirty = [f64::NAN, 10.0, f64::INFINITY, 20.0, 30.0, f64::NEG_INFINITY, 40.0, 50.0];
+        let clean = [10.0, 20.0, 30.0, 40.0, 50.0];
+        for q in [0.0, 50.0, 90.0, 100.0] {
+            assert_eq!(percentile(&dirty, q), percentile(&clean, q), "q={q}");
+        }
+        assert_eq!(cdf(&dirty, 8), cdf(&clean, 8));
+        assert_eq!(cdf(&dirty, 1), cdf(&clean, 1));
+
+        let dirty_w: Vec<(f64, f64)> = dirty.iter().map(|&x| (x, 1.0)).collect();
+        let clean_w: Vec<(f64, f64)> = clean.iter().map(|&x| (x, 1.0)).collect();
+        for q in [10.0, 50.0, 95.0] {
+            assert_eq!(
+                weighted_percentile(&dirty_w, q),
+                weighted_percentile(&clean_w, q),
+                "q={q}"
+            );
+        }
+        assert_eq!(weighted_cdf(&dirty_w, 6), weighted_cdf(&clean_w, 6));
+
+        // Non-finite *weights* carry no mass either.
+        let bad_w = [(1.0, f64::NAN), (2.0, f64::INFINITY), (3.0, 1.0)];
+        assert_eq!(weighted_percentile(&bad_w, 50.0), 3.0);
+        assert_eq!(weighted_cdf(&bad_w, 1), vec![(3.0, 1.0)]);
+
+        // All-non-finite inputs degrade to the empty-input contract.
+        let all_bad = [f64::NAN, f64::INFINITY, f64::NEG_INFINITY];
+        assert_eq!(percentile(&all_bad, 50.0), 0.0);
+        assert!(cdf(&all_bad, 8).is_empty());
+        let all_bad_w: Vec<(f64, f64)> = all_bad.iter().map(|&x| (x, 1.0)).collect();
+        assert_eq!(weighted_percentile(&all_bad_w, 50.0), 0.0);
+        assert!(weighted_cdf(&all_bad_w, 8).is_empty());
+    }
+
+    /// `sort_total` parks NaN deterministically at the extremes instead
+    /// of corrupting the comparator: -NaN before -inf, +NaN after +inf.
+    #[test]
+    fn sort_total_places_nan_deterministically() {
+        let neg_nan = f64::from_bits(f64::NAN.to_bits() | (1 << 63));
+        let mut v = [1.0, f64::NAN, f64::NEG_INFINITY, neg_nan, f64::INFINITY, -2.0];
+        sort_total(&mut v);
+        assert!(v[0].is_nan() && v[0].is_sign_negative());
+        assert_eq!(v[1], f64::NEG_INFINITY);
+        assert_eq!(&v[2..4], &[-2.0, 1.0]);
+        assert_eq!(v[4], f64::INFINITY);
+        assert!(v[5].is_nan() && v[5].is_sign_positive());
     }
 
     #[test]

@@ -649,6 +649,34 @@ fn run_env_matches_pre_refactor_micro_loops_bit_for_bit() {
     assert_records_identical(&new, &golden, "micro-private/showar/s2");
 }
 
+/// Builder-preset pin: a data-defined `apps::graph` preset substituted
+/// for the hard-coded constructor graph must reproduce the constructor
+/// golden loop bit-for-bit through the full env — same service order,
+/// same f64 bits in every timing/share, so every RNG draw and every
+/// floating-point op downstream lands identically.
+#[test]
+fn builder_presets_match_constructor_graphs_bit_for_bit() {
+    let sys = test_sys();
+    let mut env = MicroEnvConfig::socialnet(CloudSetting::Public, 180.0);
+    env.trace.base_rps = 15.0;
+    env.trace.amplitude_rps = 20.0;
+    let mut golden_env = env.clone();
+    env.graph = drone::apps::graph::preset("socialnet").expect("socialnet preset");
+    golden_env.graph = ServiceGraph::socialnet();
+    for (policy, seed) in [("drone", 0u64), ("k8s-hpa", 1)] {
+        let mut b_new = Backend::Native;
+        let mut b_old = Backend::Native;
+        let new = run_micro_env(policy, &env, &sys, &mut b_new, seed);
+        let golden = golden_run_micro_env(policy, &golden_env, &sys, &mut b_old, seed);
+        assert_records_identical(&new, &golden, &format!("builder-preset/{policy}/s{seed}"));
+    }
+    // Struct-level pins for both presets (covers sockshop too, without a
+    // second env sweep — the env path above already proves equal structs
+    // imply equal records).
+    assert_eq!(drone::apps::graph::preset("socialnet").unwrap(), ServiceGraph::socialnet());
+    assert_eq!(drone::apps::graph::preset("sockshop").unwrap(), ServiceGraph::sockshop());
+}
+
 /// The PR-4 `hybrid` suite (fixed co-tenant) through the factored action
 /// path must reproduce the pre-factored loop bit-for-bit — same RNG fork
 /// order, same deployment sequence, same blended scoring.

@@ -47,7 +47,12 @@ fn figure_requests(sys: &SystemConfig) -> Vec<Scenario> {
     requests.push(Scenario {
         id: 0,
         suite: Suite::MicroPublic,
-        env: EnvKind::Micro { steps: 3, base_rps: 12.0, amplitude_rps: 18.0 },
+        env: EnvKind::Micro {
+            steps: 3,
+            base_rps: 12.0,
+            amplitude_rps: 18.0,
+            fluid_threshold_rps: None,
+        },
         setting: drone::experiments::CloudSetting::Public,
         policy: "k8s-hpa".into(),
         seed: sys.seed,
