@@ -334,6 +334,50 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64, col: &mut Collector) {
             });
             col.add("decide", &r);
         }
+        // The many-tenant cluster regime: five tenants rightsized through
+        // one joint action pushes the GP input to d≈40 (5×7 action dims +
+        // 6 context). Times the full kernel against the additive
+        // per-factor kernel — past 3 factors the candidate generator also
+        // switches to coordinate descent, so the additive row is the
+        // exact path `drone-additive` takes in the cluster suite.
+        {
+            use drone::bandit::gp::additive_for;
+            let factors: Vec<ActionSpace> = (0..5)
+                .map(|t| {
+                    if t % 2 == 0 {
+                        ActionSpace::hybrid_batch(4)
+                    } else {
+                        ActionSpace::microservices(4)
+                    }
+                })
+                .collect();
+            for (label, additive) in [("full", false), ("additive", true)] {
+                let js = JointSpace::new(factors.clone());
+                let d = js.joint_dim();
+                let dim = js.dim();
+                let mut core =
+                    BanditCore::new(js, BanditConfig::default(), Acquisition::Ucb, true, 0);
+                if additive {
+                    core.kernel = additive_for(core.candgen.space());
+                }
+                let mut backend = Backend::native_cached();
+                let mut rng2 = Pcg64::new(9);
+                let ctx = ContextVector { workload: 0.5, ..Default::default() };
+                for i in 0..30 {
+                    let a = core.candgen.decode(&vec![0.5; dim]);
+                    core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
+                }
+                let _ = core.select(&mut backend, &ctx, &mut rng2);
+                let r = bench(
+                    &format!("decide cluster 5-tenant d={d} kernel={label} m=256 window=30"),
+                    budget_s,
+                    || {
+                        let _ = core.select(&mut backend, &ctx, &mut rng2);
+                    },
+                );
+                col.add("decide", &r);
+            }
+        }
 
         // End-to-end control step: one bandit decision followed by the
         // 10 s microservice window it controls — the per-step cost a

@@ -11,9 +11,24 @@
 //! factor, so a joint batch+micro space is searched exactly like the
 //! single-tenant spaces were — one normalized vector, per-factor
 //! decode/clamp on the way out.
+//!
+//! Past [`COORD_DESCENT_MIN_FACTORS`] factors the global scheme stops
+//! paying: a fixed batch over a 40+-dimensional unit cube is vanishingly
+//! sparse, and perturbing every tenant at once buries each tenant's signal
+//! in the others' noise. Wide spaces therefore switch to **coordinate
+//! descent**: each `generate` round holds the incumbent fixed and varies
+//! exactly one factor's slice (local perturbations *and* Halton fill),
+//! cycling the active factor across decision epochs. Candidate cost and
+//! posterior distance structure then scale with the widest factor, not the
+//! summed dimension. Spaces at or under the threshold keep the original
+//! global generator verbatim — bit-identical output, pinned by tests.
 
 use super::encode::{Action, ActionSpace, JointAction, JointSpace};
 use crate::util::rng::{Halton, Pcg64};
+
+/// Factor count above which `generate` switches from global Halton fan-out
+/// to per-factor coordinate descent.
+pub const COORD_DESCENT_MIN_FACTORS: usize = 3;
 
 #[derive(Clone, Debug)]
 pub struct CandidateGen {
@@ -23,6 +38,9 @@ pub struct CandidateGen {
     pub local_sigma: f64,
     /// Fraction of the batch drawn locally around the incumbent.
     pub local_frac: f64,
+    /// Coordinate-descent round counter: `round % n_factors` is the factor
+    /// varied this epoch. Only advanced on wide (> threshold) spaces.
+    round: u64,
 }
 
 impl CandidateGen {
@@ -33,6 +51,7 @@ impl CandidateGen {
             halton: Halton::with_offset(dims, seed_offset),
             local_sigma: 0.08,
             local_frac: 0.6,
+            round: 0,
         }
     }
 
@@ -57,6 +76,9 @@ impl CandidateGen {
         if m == 0 {
             return out;
         }
+        if self.space.n_factors() > COORD_DESCENT_MIN_FACTORS {
+            return self.generate_coord_descent(m, incumbent, rng);
+        }
         let inc_enc = incumbent.map(|a| self.space.encode(a));
         if let Some(enc) = &inc_enc {
             out.push(enc.clone());
@@ -80,6 +102,65 @@ impl CandidateGen {
         debug_assert_eq!(out.len(), m);
         debug_assert!(out.iter().all(|p| p.len() == dim));
         out
+    }
+
+    /// Coordinate-descent batch for wide joint spaces: slot 0 is the
+    /// incumbent (when present, exactly as in the global path), and every
+    /// other candidate varies only the active factor's slice against the
+    /// incumbent base — Gaussian perturbations for the local share, the
+    /// active slice of a fresh Halton point for the global fill. With no
+    /// incumbent yet (cold start) the base is the mid-cube point and the
+    /// whole batch is per-factor global exploration.
+    fn generate_coord_descent(
+        &mut self,
+        m: usize,
+        incumbent: Option<&JointAction>,
+        rng: &mut Pcg64,
+    ) -> Vec<Vec<f64>> {
+        let dim = self.space.dim();
+        let nf = self.space.n_factors();
+        let active = (self.round as usize) % nf;
+        self.round += 1;
+        let (off, len) = {
+            let mut off = 0;
+            for f in &self.space.factors()[..active] {
+                off += f.dim();
+            }
+            (off, self.space.factors()[active].dim())
+        };
+        let inc_enc = incumbent.map(|a| self.space.encode(a));
+        let base = inc_enc.clone().unwrap_or_else(|| vec![0.5; dim]);
+        let mut out: Vec<Vec<f64>> = Vec::with_capacity(m);
+        if let Some(enc) = &inc_enc {
+            out.push(enc.clone());
+        }
+        let target_with_local = if inc_enc.is_some() {
+            1 + (((m as f64) * self.local_frac) as usize).min(m.saturating_sub(1))
+        } else {
+            0
+        };
+        while out.len() < target_with_local {
+            let mut p = base.clone();
+            for v in &mut p[off..off + len] {
+                *v = (*v + self.local_sigma * rng.normal()).clamp(0.0, 1.0);
+            }
+            out.push(p);
+        }
+        while out.len() < m {
+            let h = self.halton.next_point();
+            let mut p = base.clone();
+            p[off..off + len].copy_from_slice(&h[off..off + len]);
+            out.push(p);
+        }
+        debug_assert_eq!(out.len(), m);
+        debug_assert!(out.iter().all(|p| p.len() == dim));
+        out
+    }
+
+    /// The factor `generate` will vary on its next coordinate-descent
+    /// round (tests/introspection; meaningless for narrow spaces).
+    pub fn next_active_factor(&self) -> usize {
+        (self.round as usize) % self.space.n_factors().max(1)
     }
 
     /// Decode candidate `i` into concrete (per-factor clamped) actions.
@@ -232,6 +313,65 @@ mod tests {
             // Per-factor clamp guarantees every tenant keeps >= 1 pod.
             assert!(a.parts.iter().all(|part| part.total_pods() >= 1));
         }
+    }
+
+    #[test]
+    fn wide_space_uses_coordinate_descent() {
+        let js = JointSpace::new(vec![
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+            ActionSpace::microservices(4),
+            ActionSpace::default(),
+        ]);
+        let dims: Vec<usize> = js.factors().iter().map(|f| f.dim()).collect();
+        let mut g = CandidateGen::new(js.clone(), 0);
+        let mut rng = Pcg64::new(5);
+        let inc = initial_joint(&js, 1.0);
+        let enc = js.encode(&inc);
+        for round in 0..js.n_factors() * 2 {
+            let active = g.next_active_factor();
+            assert_eq!(active, round % js.n_factors(), "factors cycle across epochs");
+            let c = g.generate(16, Some(&inc), &mut rng);
+            assert_eq!(c.len(), 16);
+            assert_eq!(c[0], enc, "incumbent keeps slot 0");
+            let off: usize = dims[..active].iter().sum();
+            let len = dims[active];
+            for p in &c[1..] {
+                for (t, (&v, &b)) in p.iter().zip(&enc).enumerate() {
+                    if t < off || t >= off + len {
+                        assert_eq!(v, b, "round {round}: inactive dim {t} must hold the incumbent");
+                    }
+                }
+            }
+            assert!(
+                c[1..].iter().any(|p| p[off..off + len] != enc[off..off + len]),
+                "round {round}: the active factor's slice must actually vary"
+            );
+        }
+    }
+
+    #[test]
+    fn threshold_spaces_keep_the_global_generator() {
+        // Exactly at the threshold (3 factors): the global path runs and
+        // the coordinate-descent round counter never advances.
+        let js = JointSpace::new(vec![
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+            ActionSpace::default(),
+        ]);
+        let mut g = CandidateGen::new(js.clone(), 0);
+        let mut rng = Pcg64::new(6);
+        let inc = initial_joint(&js, 1.0);
+        for _ in 0..4 {
+            let c = g.generate(8, Some(&inc), &mut rng);
+            assert_eq!(c.len(), 8);
+            assert_eq!(g.next_active_factor(), 0, "narrow spaces never advance the round");
+        }
+        // Halton fill on the global path varies more than one factor slice.
+        let tail = g.generate(8, None, &mut rng);
+        let d0 = js.factors()[0].dim();
+        let enc = js.encode(&inc);
+        assert!(tail.iter().any(|p| p[..d0] != enc[..d0] && p[d0..] != enc[d0..]));
     }
 
     #[test]

@@ -17,8 +17,80 @@
 //! trustworthy as an oracle, and exactly why the hot path doesn't use it
 //! (see the bench `cached vs rebuild` series in benches/bench_main.rs).
 
+use crate::bandit::encode::JointSpace;
+use crate::monitor::context::CTX_DIM;
+
 pub const JITTER: f64 = 1e-6;
 const SQRT3: f64 = 1.732_050_807_568_877_2;
+
+/// Which covariance structure the posterior puts over `[action || context]`
+/// feature rows.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelKind {
+    /// One Matern-3/2 over the whole feature vector — the default and the
+    /// oracle every cached/artifact path is validated against.
+    Full,
+    /// Sum of independent Matern-3/2 terms over disjoint `(offset, len)`
+    /// feature slices — one per `JointSpace` factor plus the shared context
+    /// block. Each term carries `signal_var / n_groups`, so `k(x, x)` still
+    /// totals `signal_var` and the prior-variance initialization of the
+    /// posterior is unchanged. Distances (and therefore effective sample
+    /// complexity) scale with the widest *group*, not the summed dimension.
+    Additive { groups: Vec<(usize, usize)> },
+}
+
+/// Per-factor additive layout for a joint space: one group per action-space
+/// factor plus one over the trailing context block. A single-factor space
+/// gets one group spanning every feature, which makes the additive kernel
+/// coincide analytically with `Full` (the parity property tests pin this).
+pub fn additive_for(space: &JointSpace) -> KernelKind {
+    if space.n_factors() <= 1 {
+        return KernelKind::Additive { groups: vec![(0, space.dim() + CTX_DIM)] };
+    }
+    let mut groups = Vec::with_capacity(space.n_factors() + 1);
+    let mut off = 0;
+    for f in space.factors() {
+        groups.push((off, f.dim()));
+        off += f.dim();
+    }
+    groups.push((off, CTX_DIM));
+    KernelKind::Additive { groups }
+}
+
+/// Covariance between row-major point sets a [n,d], b [m,d] under `kind`.
+/// `Full` delegates to `matern32` verbatim, so every existing caller that
+/// routes through here stays bit-identical.
+pub fn kernel_cov(kind: &KernelKind, a: &[f64], b: &[f64], d: usize, hyp: GpHyper) -> Vec<f64> {
+    match kind {
+        KernelKind::Full => matern32(a, b, d, hyp.lengthscale, hyp.signal_var),
+        KernelKind::Additive { groups } => {
+            assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
+            assert!(!groups.is_empty(), "additive kernel needs at least one group");
+            let n = a.len() / d;
+            let m = b.len() / d;
+            let sv = hyp.signal_var / groups.len() as f64;
+            let s = SQRT3 / hyp.lengthscale;
+            let mut k = vec![0.0; n * m];
+            for &(off, len) in groups {
+                assert!(len > 0 && off + len <= d, "group ({off},{len}) out of d={d}");
+                for i in 0..n {
+                    let ai = &a[i * d + off..i * d + off + len];
+                    for j in 0..m {
+                        let bj = &b[j * d + off..j * d + off + len];
+                        let mut sq = 0.0;
+                        for t in 0..len {
+                            let diff = ai[t] - bj[t];
+                            sq += diff * diff;
+                        }
+                        let r = s * sq.max(0.0).sqrt();
+                        k[i * m + j] += sv * (1.0 + r) * (-r).exp();
+                    }
+                }
+            }
+            k
+        }
+    }
+}
 
 /// Matern-3/2 covariance between row-major point sets a [n,d], b [m,d].
 pub fn matern32(a: &[f64], b: &[f64], d: usize, lengthscale: f64, signal_var: f64) -> Vec<f64> {
@@ -122,13 +194,28 @@ pub fn gp_posterior(
     d: usize,
     hyp: GpHyper,
 ) -> (Vec<f64>, Vec<f64>) {
+    gp_posterior_kernel(z, y, mask, x, d, hyp, &KernelKind::Full)
+}
+
+/// `gp_posterior` with an explicit covariance structure. `Full` reproduces
+/// `gp_posterior` op-for-op; `Additive` swaps only the two covariance
+/// builds — masking, Cholesky and the fused solve are untouched.
+pub fn gp_posterior_kernel(
+    z: &[f64],
+    y: &[f64],
+    mask: &[f64],
+    x: &[f64],
+    d: usize,
+    hyp: GpHyper,
+    kind: &KernelKind,
+) -> (Vec<f64>, Vec<f64>) {
     let n = y.len();
     assert_eq!(z.len(), n * d);
     assert_eq!(mask.len(), n);
     let m = x.len() / d;
 
-    let mut k_zz = matern32(z, z, d, hyp.lengthscale, hyp.signal_var);
-    let mut k_zx = matern32(z, x, d, hyp.lengthscale, hyp.signal_var);
+    let mut k_zz = kernel_cov(kind, z, z, d, hyp);
+    let mut k_zx = kernel_cov(kind, z, x, d, hyp);
 
     // Masking: zero masked rows/cols, isolate masked diagonal at 1 + noise.
     for i in 0..n {
@@ -326,6 +413,64 @@ mod tests {
             assert!(mu[c].abs() < 1e-10);
             assert!((sig[c] - 3.0f64.sqrt()).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn additive_single_group_is_bitwise_full() {
+        // One group spanning all dims divides signal_var by 1 and adds each
+        // term to 0.0 — every float op matches matern32 exactly.
+        let mut rng = Pcg64::new(6);
+        let (n, m, d) = (12, 9, 13);
+        let z = rand_mat(&mut rng, n, d);
+        let x = rand_mat(&mut rng, m, d);
+        let hyp = GpHyper::default();
+        let kind = KernelKind::Additive { groups: vec![(0, d)] };
+        assert_eq!(
+            kernel_cov(&kind, &z, &x, d, hyp),
+            matern32(&z, &x, d, hyp.lengthscale, hyp.signal_var)
+        );
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mask = vec![1.0; n];
+        let (mu_a, sig_a) = gp_posterior_kernel(&z, &y, &mask, &x, d, hyp, &kind);
+        let (mu_f, sig_f) = gp_posterior(&z, &y, &mask, &x, d, hyp);
+        assert_eq!(mu_a, mu_f);
+        assert_eq!(sig_a, sig_f);
+    }
+
+    #[test]
+    fn additive_diag_totals_signal_var() {
+        let mut rng = Pcg64::new(7);
+        let d = 20;
+        let z = rand_mat(&mut rng, 5, d);
+        let hyp = GpHyper { signal_var: 2.5, ..Default::default() };
+        let kind = KernelKind::Additive { groups: vec![(0, 7), (7, 7), (14, 6)] };
+        let k = kernel_cov(&kind, &z, &z, d, hyp);
+        for i in 0..5 {
+            assert!((k[i * 5 + i] - 2.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn additive_for_layout_matches_factors() {
+        use crate::bandit::encode::ActionSpace;
+        let single = JointSpace::single(ActionSpace::default());
+        assert_eq!(
+            additive_for(&single),
+            KernelKind::Additive { groups: vec![(0, single.dim() + CTX_DIM)] }
+        );
+        let js = JointSpace::new(vec![
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+            ActionSpace::default(),
+        ]);
+        let dims: Vec<usize> = js.factors().iter().map(|f| f.dim()).collect();
+        let expected = vec![
+            (0, dims[0]),
+            (dims[0], dims[1]),
+            (dims[0] + dims[1], dims[2]),
+            (dims[0] + dims[1] + dims[2], CTX_DIM),
+        ];
+        assert_eq!(additive_for(&js), KernelKind::Additive { groups: expected });
     }
 
     #[test]

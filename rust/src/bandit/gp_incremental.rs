@@ -46,7 +46,7 @@
 //! [`CacheStats::drift_rebuilds`]; the standard campaign grids never
 //! trigger either condition, so their results are unchanged.
 
-use super::gp::{self, GpHyper};
+use super::gp::{self, GpHyper, KernelKind};
 use super::window::SlidingWindow;
 
 /// Evictions tolerated between full factor rebuilds: the numerical-drift
@@ -82,6 +82,9 @@ pub struct CacheStats {
 #[derive(Clone, Debug)]
 struct State {
     hyp: GpHyper,
+    /// Covariance structure the factor was built under. A kernel change is
+    /// a cache invalidation, exactly like a hyperparameter change.
+    kernel: KernelKind,
     d: usize,
     /// Physical stride of `l` and row capacity of `z` (= window capacity).
     cap: usize,
@@ -104,10 +107,20 @@ struct State {
 /// decision periods (the runtime keeps one inside
 /// `runtime::Backend::NativeCached`), and call [`CachedGp::posterior`]
 /// with the live window each decision.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct CachedGp {
     state: Option<State>,
     pub stats: CacheStats,
+    /// Covariance structure for every factor this engine builds. `Full` by
+    /// default; set via [`CachedGp::with_kernel`] (or [`CachedGp::set_kernel`])
+    /// for the additive per-factor path.
+    kernel: KernelKind,
+}
+
+impl Default for CachedGp {
+    fn default() -> Self {
+        Self { state: None, stats: CacheStats::default(), kernel: KernelKind::Full }
+    }
 }
 
 fn hyp_eq(a: &GpHyper, b: &GpHyper) -> bool {
@@ -117,10 +130,11 @@ fn hyp_eq(a: &GpHyper, b: &GpHyper) -> bool {
 }
 
 impl State {
-    fn new(w: &SlidingWindow, hyp: GpHyper) -> Self {
+    fn new(w: &SlidingWindow, hyp: GpHyper, kernel: KernelKind) -> Self {
         let (cap, d) = (w.capacity(), w.dim());
         Self {
             hyp,
+            kernel,
             d,
             cap,
             n: 0,
@@ -139,11 +153,11 @@ impl State {
         debug_assert!(n < cap, "append beyond capacity");
         // New kernel column against the stored inputs, then the new factor
         // row via one forward solve L c = k.
-        let mut c =
-            gp::matern32(&self.z[..n * d], z_new, d, self.hyp.lengthscale, self.hyp.signal_var);
+        let mut c = gp::kernel_cov(&self.kernel, &self.z[..n * d], z_new, d, self.hyp);
         gp::solve_lower_strided(&self.l, cap, n, &mut c, 1);
         // Diagonal: k(z,z) + noise - c·c, with the oracle's JITTER floor.
-        // (Matern-3/2 at distance 0 is exactly signal_var.)
+        // (Matern-3/2 at distance 0 is exactly signal_var — per-group terms
+        // sum back to signal_var under the additive kernel.)
         let mut s = self.hyp.signal_var + self.hyp.noise_var;
         for t in 0..n {
             s -= c[t] * c[t];
@@ -195,11 +209,26 @@ impl CachedGp {
         Self::default()
     }
 
+    /// An engine whose factors use the given covariance structure.
+    pub fn with_kernel(kernel: KernelKind) -> Self {
+        Self { kernel, ..Self::default() }
+    }
+
+    /// Switch covariance structure. A change invalidates the cached factor
+    /// on the next sync (one counted rebuild), exactly like new hypers.
+    pub fn set_kernel(&mut self, kernel: KernelKind) {
+        self.kernel = kernel;
+    }
+
+    pub fn kernel(&self) -> &KernelKind {
+        &self.kernel
+    }
+
     /// Full O(n³) factorization from the window contents — the same op
     /// sequence as the stateless oracle's sequential accumulation, so a
     /// freshly rebuilt factor is bit-identical to it.
     fn rebuild_from(&mut self, window: &SlidingWindow, hyp: GpHyper) {
-        let mut st = State::new(window, hyp);
+        let mut st = State::new(window, hyp, self.kernel.clone());
         for o in window.iter() {
             st.append(&o.z);
         }
@@ -220,6 +249,7 @@ impl CachedGp {
                     && s.d == window.dim()
                     && s.cap == window.capacity()
                     && hyp_eq(&s.hyp, &hyp)
+                    && s.kernel == self.kernel
                     && window.epoch() >= s.epoch
                     && (window.epoch() - s.epoch) as usize <= window.len()
             }
@@ -275,7 +305,7 @@ impl CachedGp {
         let mut mu = vec![0.0; m];
         let mut var = vec![s.hyp.signal_var; m];
         if n > 0 {
-            let kzx = gp::matern32(&s.z[..n * d], x, d, s.hyp.lengthscale, s.hyp.signal_var);
+            let kzx = gp::kernel_cov(&s.kernel, &s.z[..n * d], x, d, s.hyp);
             // Fused RHS [y | K_zx] -> one forward solve, as in the oracle.
             let r = 1 + m;
             let mut rhs = vec![0.0; n * r];
@@ -566,6 +596,38 @@ mod tests {
             "near-duplicate/low-noise stream must trip the diagonal drift guard"
         );
         assert!(eng.stats.evictions > 0, "the sweep must exercise the downdate path");
+    }
+
+    /// The additive per-factor kernel rides the same cached-factor
+    /// machinery: push/evict traffic agrees with the stateless kernel
+    /// oracle, and switching kernels invalidates the factor exactly once.
+    #[test]
+    fn additive_kernel_engine_matches_kernel_oracle() {
+        let mut rng = Pcg64::new(23);
+        let d = 6;
+        let kind = KernelKind::Additive { groups: vec![(0, 2), (2, 2), (4, 2)] };
+        let cap = 8;
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::with_kernel(kind.clone());
+        let hyp = GpHyper::default();
+        let x: Vec<f64> = (0..5 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for step in 0..24 {
+            w.push(rand_obs(&mut rng, d));
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let (mu_c, sig_c) = eng.posterior(&w, &ys, &x, hyp);
+            let (z, _, _, mask) = w.padded(w.len());
+            let (mu_o, sig_o) = gp::gp_posterior_kernel(&z, &ys, &mask, &x, d, hyp, &kind);
+            assert!(max_abs_diff(&mu_c, &mu_o) < 1e-9, "step {step} mu");
+            assert!(max_abs_diff(&sig_c, &sig_o) < 1e-9, "step {step} sigma");
+        }
+        assert_eq!(eng.stats.rebuilds, 1, "one kernel, one build");
+        // A kernel switch is a cache invalidation, exactly like new hypers.
+        eng.set_kernel(KernelKind::Full);
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        eng.posterior(&w, &ys, &x, hyp);
+        assert_eq!(eng.stats.rebuilds, 2);
+        eng.posterior(&w, &ys, &x, hyp);
+        assert_eq!(eng.stats.rebuilds, 2, "repeat sync under the same kernel is free");
     }
 
     /// One cached factor serves both GP targets (perf and resource): two

@@ -52,7 +52,7 @@ use crate::util::rng::{hash_str, Pcg64};
 use crate::util::stats;
 use crate::util::table::{pm, Table};
 
-use super::env::{run_hybrid_env, HybridEnvConfig};
+use super::env::{run_cluster_env, run_hybrid_env, ClusterEnvConfig, HybridEnvConfig};
 use super::harness::{
     batch_perf_score, deadline_passed, micro_perf_score, note_env_execution, run_batch_env,
     run_micro_env, run_trace_env, BatchEnvConfig, CloudSetting, MicroEnvConfig, StepRecord,
@@ -89,6 +89,12 @@ pub enum Suite {
     /// MSRTQps slice drives a config-defined service graph instead of the
     /// synthetic diurnal generator.
     Trace,
+    /// Many-tenant co-location (`env::ClusterEnv`): 12 heterogeneous
+    /// tenants — alternating batch and microservice profiles — share one
+    /// cluster, all rightsized through one N-factor joint action. The
+    /// scale regime the additive kernel + coordinate-descent candidate
+    /// path exists for (Table 6).
+    Cluster,
     /// Fig. 1: single Spark jobs across a total-RAM sweep, container vs VM.
     Fig1Sweep,
     /// Fig. 2: Sort runs under interference across data sizes, Spark vs
@@ -109,6 +115,7 @@ pub const ALL_SUITES: &[Suite] = &[
     Suite::Hybrid,
     Suite::HybridJoint,
     Suite::Trace,
+    Suite::Cluster,
 ];
 
 /// The figure-specific sweep suites (policy axis = deployment variant).
@@ -124,6 +131,7 @@ impl Suite {
             Suite::Hybrid => "hybrid",
             Suite::HybridJoint => "hybrid-joint",
             Suite::Trace => "trace",
+            Suite::Cluster => "cluster",
             Suite::Fig1Sweep => "fig1",
             Suite::Fig2Variance => "fig2",
             Suite::Fig4Affinity => "fig4",
@@ -153,6 +161,7 @@ impl Suite {
                 | (Suite::Hybrid, EnvKind::Hybrid { .. })
                 | (Suite::HybridJoint, EnvKind::HybridJoint { .. })
                 | (Suite::Trace, EnvKind::Trace { .. })
+                | (Suite::Cluster, EnvKind::Cluster { .. })
                 | (Suite::Fig1Sweep, EnvKind::SingleJob { .. })
                 | (Suite::Fig2Variance, EnvKind::SortVariance { .. })
                 | (Suite::Fig4Affinity, EnvKind::Affinity { .. })
@@ -168,8 +177,12 @@ impl Suite {
             Suite::MicroPublic => &["k8s-hpa", "autopilot", "showar", "drone"],
             Suite::MicroPrivate => &["k8s-hpa", "autopilot", "showar", "drone-safe"],
             Suite::Hybrid => &["k8s-hpa", "autopilot", "showar", "drone"],
-            Suite::HybridJoint => &["k8s-hpa", "autopilot", "showar", "drone"],
+            Suite::HybridJoint => &["k8s-hpa", "k8s-hpa-joint", "autopilot", "showar", "drone"],
             Suite::Trace => &["k8s-hpa", "autopilot", "showar", "drone"],
+            // The many-tenant suite compares the PR-5 full-kernel path
+            // against the additive + coordinate-descent path directly,
+            // with the joint-aware reactive baseline as the control.
+            Suite::Cluster => &["k8s-hpa-joint", "drone", "drone-additive"],
             Suite::Fig1Sweep => &["container", "vm"],
             Suite::Fig2Variance => &["spark", "flink"],
             Suite::Fig4Affinity => &["colocated", "isolated"],
@@ -241,6 +254,16 @@ pub enum EnvKind {
     /// `fluid_threshold_rps` (recorded bursts are where the DES is
     /// slowest); below it every window runs the exact DES.
     Trace { trace: String, graph: String, steps: u64, scale: f64, fluid_threshold_rps: f64 },
+    /// Many-tenant co-location loop (`env::ClusterEnv`): `tenants`
+    /// heterogeneous tenants (even slots batch, odd slots micro) share
+    /// one cluster under an N-factor joint action space.
+    Cluster {
+        tenants: usize,
+        steps: u64,
+        base_rps: f64,
+        amplitude_rps: f64,
+        fluid_threshold_rps: Option<f64>,
+    },
     /// One statically-provisioned Spark job at a total-RAM point (Fig. 1);
     /// the policy axis selects container vs VM deployment.
     SingleJob { workload: BatchWorkload, ram_gb: u32 },
@@ -260,6 +283,7 @@ impl EnvKind {
             EnvKind::Hybrid { workload, .. } => format!("{}+SocialNet", workload.name()),
             EnvKind::HybridJoint { workload, .. } => format!("{}+SocialNet", workload.name()),
             EnvKind::Trace { trace, graph, .. } => format!("{trace}@{graph}"),
+            EnvKind::Cluster { tenants, .. } => format!("{tenants}tenants"),
             EnvKind::SingleJob { workload, ram_gb } => {
                 format!("{}@{}GB", workload.name(), ram_gb)
             }
@@ -322,6 +346,17 @@ impl EnvKind {
                 json_f64(*scale),
                 json_f64(*fluid_threshold_rps)
             ),
+            EnvKind::Cluster { tenants, steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
+                format!(
+                    "{{\"kind\": \"cluster\", \"tenants\": {}, \"steps\": {}, \
+                     \"base_rps\": {}, \"amplitude_rps\": {}{}}}",
+                    tenants,
+                    steps,
+                    json_f64(*base_rps),
+                    json_f64(*amplitude_rps),
+                    fluid_field(*fluid_threshold_rps)
+                )
+            }
             EnvKind::SingleJob { workload, ram_gb } => format!(
                 "{{\"kind\": \"single-job\", \"workload\": {}, \"ram_gb\": {}}}",
                 json_str(workload.name()),
@@ -386,6 +421,13 @@ impl EnvKind {
                     fluid_threshold_rps: v.get("fluid_threshold_rps")?.f64_or_nan()?,
                 })
             }
+            "cluster" => Some(EnvKind::Cluster {
+                tenants: v.get("tenants")?.as_u64()? as usize,
+                steps: v.get("steps")?.as_u64()?,
+                base_rps: v.get("base_rps")?.f64_or_nan()?,
+                amplitude_rps: v.get("amplitude_rps")?.f64_or_nan()?,
+                fluid_threshold_rps: fluid(),
+            }),
             "single-job" => Some(EnvKind::SingleJob {
                 workload: workload()?,
                 ram_gb: v.get("ram_gb")?.as_u64()? as u32,
@@ -517,6 +559,11 @@ pub const TRACE_FLUID_THRESHOLD_RPS: f64 = 120.0;
 /// `drone campaign --experiments batch-private --stress 0.05`.
 pub const FIG7C_STRESS: f64 = 0.05;
 
+/// The cluster suite's headline tenant count (the paper-scale "many
+/// tenants on one cluster" configuration; `table6` additionally sweeps
+/// smaller counts).
+pub const CLUSTER_TENANTS: usize = 12;
+
 /// Expand the spec into the ordered scenario list. Order (and therefore
 /// scenario ids) is deterministic: suites, then workloads, then policies,
 /// then seeds — exactly the nesting a human would write as four loops.
@@ -548,6 +595,15 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
             }],
             Suite::HybridJoint => vec![EnvKind::HybridJoint {
                 workload: spec.workloads.first().copied().unwrap_or(BatchWorkload::SparkPi),
+                steps: spec.micro_steps,
+                base_rps: spec.micro_base_rps,
+                amplitude_rps: spec.micro_amplitude_rps,
+                fluid_threshold_rps: spec.micro_fluid_threshold_rps,
+            }],
+            // One many-tenant cell at the headline tenant count (table6
+            // sweeps 2/4/8/12 through its own store requests).
+            Suite::Cluster => vec![EnvKind::Cluster {
+                tenants: CLUSTER_TENANTS,
                 steps: spec.micro_steps,
                 base_rps: spec.micro_base_rps,
                 amplitude_rps: spec.micro_amplitude_rps,
@@ -881,6 +937,15 @@ fn run_scenario(
             env.deadline = deadline;
             let planned = env.steps();
             (planned, rows_of(run_trace_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
+        }
+        EnvKind::Cluster { tenants, steps, base_rps, amplitude_rps, fluid_threshold_rps } => {
+            let mut backend = Backend::auto(&sys.artifacts_dir);
+            let mut env = ClusterEnvConfig::new(sc.setting, *steps, *tenants);
+            env.trace.base_rps = *base_rps;
+            env.trace.amplitude_rps = *amplitude_rps;
+            env.sim_backend = sim_backend_for(*fluid_threshold_rps);
+            env.deadline = deadline;
+            (*steps, rows_of(run_cluster_env(&sc.policy, &env, sys, &mut backend, sc.seed)))
         }
         EnvKind::SingleJob { workload, ram_gb } => {
             (1, run_single_job(sc, sys, *workload, *ram_gb, deadline, digest_points))
@@ -1495,11 +1560,13 @@ mod tests {
 
     #[test]
     fn suites_parse_forms() {
-        assert_eq!(parse_suites("all").unwrap().len(), 7);
+        assert_eq!(parse_suites("all").unwrap().len(), 8);
         assert!(parse_suites("all").unwrap().contains(&Suite::Hybrid));
         assert!(parse_suites("all").unwrap().contains(&Suite::HybridJoint));
         assert!(parse_suites("all").unwrap().contains(&Suite::Trace));
+        assert!(parse_suites("all").unwrap().contains(&Suite::Cluster));
         assert_eq!(parse_suites("trace").unwrap(), vec![Suite::Trace]);
+        assert_eq!(parse_suites("cluster").unwrap(), vec![Suite::Cluster]);
         assert_eq!(parse_suites("hybrid-joint").unwrap(), vec![Suite::HybridJoint]);
         let two = parse_suites("batch-public, micro-private").unwrap();
         assert_eq!(two, vec![Suite::BatchPublic, Suite::MicroPrivate]);
@@ -1600,6 +1667,20 @@ mod tests {
                 scale: 1.0,
                 fluid_threshold_rps: TRACE_FLUID_THRESHOLD_RPS,
             },
+            EnvKind::Cluster {
+                tenants: CLUSTER_TENANTS,
+                steps: 12,
+                base_rps: 60.0,
+                amplitude_rps: 140.0,
+                fluid_threshold_rps: None,
+            },
+            EnvKind::Cluster {
+                tenants: 4,
+                steps: 6,
+                base_rps: 30.0,
+                amplitude_rps: 40.0,
+                fluid_threshold_rps: Some(120.0),
+            },
             EnvKind::SingleJob { workload: BatchWorkload::PageRank, ram_gb: 96 },
             EnvKind::SortVariance { data_gb: 60 },
             EnvKind::Affinity { window_s: 36.0 },
@@ -1667,6 +1748,35 @@ mod tests {
         let policies: Vec<&str> = scenarios.iter().map(|s| s.policy.as_str()).collect();
         assert_eq!(policies, vec!["k8s-hpa", "autopilot", "showar", "drone-safe"]);
         assert!(scenarios.iter().all(|s| s.setting == CloudSetting::Private));
+        // The joint-aware reactive baseline is part of the joint suites'
+        // default lineups (alongside the per-factor-blind k8s-hpa).
+        assert!(Suite::HybridJoint.default_policies().contains(&"k8s-hpa-joint"));
+        assert!(Suite::Cluster.default_policies().contains(&"k8s-hpa-joint"));
+        assert!(Suite::Cluster.default_policies().contains(&"drone-additive"));
+    }
+
+    #[test]
+    fn cluster_suite_enumerates_the_headline_cell() {
+        let spec = CampaignSpec {
+            suites: vec![Suite::Cluster],
+            workloads: vec![],
+            seeds: vec![0, 1],
+            ..Default::default()
+        };
+        let scenarios = enumerate(&spec);
+        // 1 env * 3 policies * 2 seeds.
+        assert_eq!(scenarios.len(), 6);
+        assert_eq!(scenarios[0].name(), "cluster/12tenants/k8s-hpa-joint/s0");
+        for sc in &scenarios {
+            assert!(sc.suite.matches_env(&sc.env));
+            match &sc.env {
+                EnvKind::Cluster { tenants, steps, .. } => {
+                    assert_eq!(*tenants, CLUSTER_TENANTS);
+                    assert_eq!(*steps, spec.micro_steps);
+                }
+                other => panic!("cluster suite must enumerate cluster envs, got {other:?}"),
+            }
+        }
     }
 
     #[test]

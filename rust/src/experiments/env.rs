@@ -1243,6 +1243,475 @@ pub fn run_hybrid_env(
     run_env(policy_name, &mut env, sys, backend, seed)
 }
 
+// ---------------------------------------------------------------------------
+// Cluster environment (many heterogeneous tenants on one shared cluster)
+// ---------------------------------------------------------------------------
+
+/// Configuration of the many-tenant cluster scenario: `tenants`
+/// heterogeneous tenants — alternating recurring-batch and microservice
+/// profiles — co-located on one shared [`Cluster`], every one of them
+/// policy-managed through an N-factor [`JointSpace`]. This is the scale
+/// regime the additive per-factor kernel and coordinate-descent candidate
+/// generation exist for: at 12 tenants the joint action space is ~84
+/// dimensional, where the full-kernel + global-Halton path stops being
+/// viable.
+#[derive(Clone, Debug)]
+pub struct ClusterEnvConfig {
+    pub setting: CloudSetting,
+    pub steps: u64,
+    /// Number of co-located tenants (clamped to >= 2 so the suite always
+    /// has both a batch and a serving tenant). Even slots are batch
+    /// tenants, odd slots are microservice tenants.
+    pub tenants: usize,
+    pub trace: DiurnalConfig,
+    pub interference: bool,
+    /// Window-simulation backend for the microservice tenants. The
+    /// campaign suite opts into `Fluid` above a threshold — with many
+    /// serving tenants per step, per-request DES on peak windows is
+    /// wasted work; `drone run` defaults to `Exact`.
+    pub sim_backend: SimBackend,
+    pub deadline: Option<std::time::Instant>,
+}
+
+impl ClusterEnvConfig {
+    pub fn new(setting: CloudSetting, steps: u64, tenants: usize) -> Self {
+        Self {
+            setting,
+            steps,
+            tenants: tenants.max(2),
+            trace: DiurnalConfig::default(),
+            interference: true,
+            sim_backend: SimBackend::Exact,
+            deadline: None,
+        }
+    }
+}
+
+/// Decision period: the serving tenants set the pace, as in hybrid.
+const CLUSTER_PERIOD_S: f64 = 60.0;
+/// Dataset each recurring batch tenant processes per period — smaller
+/// than the hybrid tenant's 60 GB because several batch tenants share
+/// the cluster.
+const CLUSTER_BATCH_DATA_GB: f64 = 40.0;
+/// Weight of the batch tenants in the blended performance score.
+const CLUSTER_BATCH_SCORE_WEIGHT: f64 = 0.3;
+
+/// One policy-managed tenant of the cluster scenario.
+enum ClusterTenant {
+    /// Recurring batch jobs under an executor-sized action factor.
+    Batch { app: String, workload: BatchWorkload },
+    /// A trace-driven service graph (service names are prefixed per
+    /// tenant, so every tenant's pods are disjoint app families) with a
+    /// fixed share of the cluster-wide arrival rate.
+    Micro { graph: ServiceGraph, rate_share: f64 },
+}
+
+/// Tenant-scoped variant of [`ms_apply_load`]: writes this window's load
+/// onto *one* tenant's pods only (matched by the tenant's own app names,
+/// not the global `ms-` prefix) and leaves the OOM sweep to the caller —
+/// with many serving tenants, usage must be set for all of them before
+/// one cluster-wide sweep decides who dies. Returns (running pods,
+/// rps per pod).
+fn ms_apply_load_scoped(cluster: &mut Cluster, graph: &ServiceGraph, rate: f64) -> (usize, f64) {
+    let apps: Vec<String> = (0..graph.services.len()).map(|sid| graph.app_name(sid)).collect();
+    let total_pods: usize = apps.iter().map(|a| cluster.running_pod_count(a)).sum();
+    let rps_per_pod = if total_pods > 0 { rate / total_pods as f64 } else { rate };
+    for p in cluster.pods.iter_mut() {
+        if apps.iter().any(|a| a == &p.app) {
+            let usage = microservice::pod_ram_usage_mb(180.0, rps_per_pod);
+            p.usage = Resources::new(p.limits.cpu_m * 0.6, usage, p.limits.net_mbps * 0.3);
+        }
+    }
+    (total_pods, rps_per_pod)
+}
+
+struct ClusterState {
+    tenants: Vec<ClusterTenant>,
+    /// One action factor per tenant, in tenant order (the joint
+    /// encoding's layout).
+    spaces: Vec<ActionSpace>,
+    cluster: Cluster,
+    interference: InterferenceModel,
+    trace: DiurnalTrace,
+    spot: SpotTrace,
+    spot_mean: f64,
+    store: MetricStore,
+    rng_des: Pcg64,
+    rng_jobs: Pcg64,
+    cluster_ram_mb: f64,
+    workload_scale: f64,
+    rate: f64,
+    price: f64,
+    /// Total *requested* RAM footprint of the decided joint action
+    /// (every tenant, placed or not — what P(x, w) must observe).
+    requested_ram_mb: f64,
+    pending: usize,
+}
+
+/// Many-tenant co-location: `tenants` heterogeneous tenants — recurring
+/// batch jobs in the even slots, per-tenant service graphs (SocialNet and
+/// Sockshop presets, service names prefixed `t{i}-`) in the odd slots —
+/// share one [`Cluster`] and are *all* rightsized by the policy through
+/// one N-factor joint action, actuated atomically per step. The tenants
+/// interfere exactly as in [`HybridEnv`] — allocations compete under fair
+/// placement, busy executors exert CPU pressure on their nodes, and one
+/// cluster-wide OOM sweep arbitrates overcommit — but at a factor count
+/// where the additive kernel and coordinate-descent candidates earn their
+/// keep. Built from the same physics pieces as every other env.
+pub struct ClusterEnv {
+    cfg: ClusterEnvConfig,
+    st: Option<ClusterState>,
+}
+
+impl ClusterEnv {
+    pub fn new(cfg: ClusterEnvConfig) -> Self {
+        let mut cfg = cfg;
+        cfg.tenants = cfg.tenants.max(2);
+        Self { cfg, st: None }
+    }
+
+    fn st(&mut self) -> &mut ClusterState {
+        self.st.as_mut().expect("ClusterEnv used before init")
+    }
+}
+
+impl Environment for ClusterEnv {
+    fn seed_tag(&self) -> u64 {
+        // Disjoint from every other env family (0xba7c<<4 batch,
+        // 0x51c0<<8 micro, 0x7ace<<8 trace, 0x6b1d/0x601d<<8 hybrid).
+        0xc157_u64 << 8
+    }
+
+    fn steps(&self) -> u64 {
+        self.cfg.steps
+    }
+
+    fn period_s(&self) -> f64 {
+        CLUSTER_PERIOD_S
+    }
+
+    fn deadline(&self) -> Option<Instant> {
+        self.cfg.deadline
+    }
+
+    fn init(&mut self, sys: &SystemConfig, root: &mut Pcg64) {
+        // Fork order mirrors HybridEnv: 2 DES, 3 interference, 4 trace,
+        // 5 spot, 6 batch jobs.
+        let rng_des = root.fork(2);
+        let mut rng_interf = root.fork(3);
+        let mut rng_trace = root.fork(4);
+        let mut rng_spot = root.fork(5);
+        let rng_jobs = root.fork(6);
+        let interference = if self.cfg.interference && sys.interference.enabled {
+            InterferenceModel::new(sys.interference.clone(), rng_interf.fork(0))
+        } else {
+            InterferenceModel::disabled()
+        };
+
+        // Tenant roster: even slots batch (workloads cycling through the
+        // recurring-job presets), odd slots micro (graph presets cycling,
+        // cloned with a per-tenant service-name prefix so the app
+        // families never collide). Rate shares are fixed, deterministic
+        // and heterogeneous — later micro tenants carry more traffic.
+        let batch_workloads =
+            [BatchWorkload::SparkPi, BatchWorkload::LogisticRegression, BatchWorkload::PageRank];
+        let mut tenants = Vec::with_capacity(self.cfg.tenants);
+        let mut spaces = Vec::with_capacity(self.cfg.tenants);
+        let mut raw_shares = vec![];
+        for t in 0..self.cfg.tenants {
+            if t % 2 == 0 {
+                let i = t / 2;
+                tenants.push(ClusterTenant::Batch {
+                    app: format!("t{t}-batch"),
+                    workload: batch_workloads[i % batch_workloads.len()],
+                });
+                spaces.push(ActionSpace::hybrid_batch(sys.cluster.zones));
+            } else {
+                let j = t / 2;
+                let mut graph =
+                    if j % 2 == 0 { ServiceGraph::socialnet() } else { ServiceGraph::sockshop() };
+                for s in &mut graph.services {
+                    s.name = format!("t{t}-{}", s.name);
+                }
+                raw_shares.push(1.0 + 0.25 * (j % 3) as f64);
+                tenants.push(ClusterTenant::Micro { graph, rate_share: 0.0 });
+                spaces.push(ActionSpace::microservices(sys.cluster.zones));
+            }
+        }
+        // Normalize the micro tenants' shares of the cluster-wide rate.
+        let share_sum: f64 = raw_shares.iter().sum();
+        let mut k = 0;
+        for t in tenants.iter_mut() {
+            if let ClusterTenant::Micro { rate_share, .. } = t {
+                *rate_share = raw_shares[k] / share_sum;
+                k += 1;
+            }
+        }
+
+        self.st = Some(ClusterState {
+            tenants,
+            spaces,
+            cluster: Cluster::new(&sys.cluster),
+            interference,
+            trace: DiurnalTrace::new(self.cfg.trace.clone(), rng_trace.fork(0)),
+            spot: SpotTrace::new(SpotConfig::gcp_e2(), rng_spot.fork(0)),
+            spot_mean: SpotConfig::gcp_e2().mean_price,
+            store: MetricStore::new(3600.0 * 8.0),
+            rng_des,
+            rng_jobs,
+            cluster_ram_mb: sys.cluster_ram_mb(),
+            workload_scale: self.cfg.trace.base_rps + self.cfg.trace.amplitude_rps * 1.2,
+            rate: 0.0,
+            price: 0.0,
+            requested_ram_mb: 0.0,
+            pending: 0,
+        });
+    }
+
+    fn joint_space(&self) -> JointSpace {
+        let st = self.st.as_ref().expect("ClusterEnv used before init");
+        JointSpace::new(st.spaces.clone())
+    }
+
+    fn app_profile(&self) -> AppProfile {
+        // The serving (last) factor: with >= 2 tenants and alternating
+        // slots the last even-count slot is always a microservice tenant.
+        if (self.cfg.tenants.max(2) - 1) % 2 == 1 {
+            AppProfile::Microservices
+        } else {
+            AppProfile::Batch
+        }
+    }
+
+    fn observe(&mut self, _step: u64, now: f64) -> ContextVector {
+        let setting = self.cfg.setting;
+        let st = self.st();
+        st.interference.step(&mut st.cluster, now, CLUSTER_PERIOD_S);
+        st.rate = st.trace.sample_rate(now);
+        st.store.push("workload", now, st.rate);
+        st.price = st.spot.step(CLUSTER_PERIOD_S / 3600.0);
+        st.store.push("spot_price", now, st.price);
+
+        let spot_for_ctx = match setting {
+            CloudSetting::Public => Some(st.spot_mean),
+            CloudSetting::Private => None,
+        };
+        // The context sees the whole shared cluster — every tenant's
+        // allocation and pressure is part of the signal.
+        ContextVector::observe(&st.cluster, &st.store, now, st.workload_scale, spot_for_ctx)
+    }
+
+    fn actuate(&mut self, action: &JointAction) {
+        let st = self.st();
+        assert_eq!(action.parts.len(), st.tenants.len(), "one action factor per tenant");
+        // All tenants' deployments are assembled first and placed in ONE
+        // fair pass: capacity pressure degrades every tenant a little
+        // instead of starving whichever tenant actuates last.
+        let mut deps = Vec::new();
+        let mut requested_ram_mb = 0.0;
+        for (i, tenant) in st.tenants.iter().enumerate() {
+            let part = &action.parts[i];
+            match tenant {
+                ClusterTenant::Batch { app, .. } => {
+                    requested_ram_mb += part.total_pods() as f64 * part.ram_mb;
+                    deps.push(Deployment {
+                        app: app.clone(),
+                        zone_pods: part.zone_pods.clone(),
+                        limits: part.per_pod(),
+                    });
+                }
+                ClusterTenant::Micro { graph, .. } => {
+                    let (tenant_deps, req) = ms_deployments(graph, &st.spaces[i], part);
+                    requested_ram_mb += req;
+                    deps.extend(tenant_deps);
+                }
+            }
+        }
+        let results = apply_deployments_fair(&mut st.cluster, &deps, true);
+        st.pending = results.iter().map(|r| r.pending_total()).sum();
+        st.requested_ram_mb = requested_ram_mb;
+    }
+
+    fn advance(
+        &mut self,
+        step: u64,
+        now: f64,
+        joint: &JointAction,
+        tel: &mut Telemetry,
+    ) -> StepRecord {
+        let setting = self.cfg.setting;
+        let sim_backend = self.cfg.sim_backend;
+        let serving = joint.serving().clone();
+        let st = self.st();
+        let rate = st.rate;
+
+        // Phase 1: write every serving tenant's window load onto its own
+        // pods, then run ONE cluster-wide OOM sweep — overcommit is
+        // arbitrated across all tenants at once, exactly like the kernel
+        // would on a real node.
+        let mut micro_loads = vec![]; // (tenant idx, rate, pods, rps/pod)
+        for (i, tenant) in st.tenants.iter().enumerate() {
+            if let ClusterTenant::Micro { graph, rate_share } = tenant {
+                let tenant_rate = rate * rate_share;
+                let (pods, rps) = ms_apply_load_scoped(&mut st.cluster, graph, tenant_rate);
+                micro_loads.push((i, tenant_rate, pods, rps));
+            }
+        }
+        let ooms = st.cluster.sweep_oom().len() as u32;
+
+        // Phase 2: every batch tenant's busy executors exert CPU pressure
+        // on their nodes for this window (re-applied per step while the
+        // tenant lives, as in the hybrid env).
+        for tenant in &st.tenants {
+            if let ClusterTenant::Batch { app, .. } = tenant {
+                let nodes: Vec<usize> = st.cluster.pods_of(app).map(|p| p.node).collect();
+                for n in nodes {
+                    let c = &mut st.cluster.nodes[n].contention;
+                    c.cpu_m = (c.cpu_m + HYBRID_BATCH_CPU_PRESSURE).min(0.9);
+                }
+            }
+        }
+
+        // Phase 3: each serving tenant's traffic window runs under that
+        // pressure, in tenant order on the shared DES stream.
+        let mut micro_scores = vec![];
+        let mut p90s = vec![];
+        let mut offered = 0u64;
+        let mut dropped = 0u64;
+        let mut latencies_ms = vec![];
+        for &(i, tenant_rate, _pods, _rps) in &micro_loads {
+            let ClusterTenant::Micro { graph, .. } = &st.tenants[i] else { unreachable!() };
+            let stats =
+                microservice::WindowSim::new(&st.cluster, graph, tenant_rate, CLUSTER_PERIOD_S)
+                    .with_backend(sim_backend)
+                    .run(&mut st.rng_des)
+                    .stats;
+            let p90 = stats.p90();
+            let completion = ms_completion(&stats);
+            micro_scores.push(micro_perf_score(p90) * completion * completion);
+            p90s.push(p90);
+            offered += stats.offered;
+            dropped += stats.dropped;
+            latencies_ms.extend(stats.latencies_ms);
+        }
+
+        // Phase 4: the batch tenants' recurring jobs run under the same
+        // shared contention (one stochastic window draw for the step, as
+        // in the hybrid env, blended with the observed regime).
+        let current = st.cluster.mean_contention();
+        let sampled =
+            st.interference.sample_window_contention(st.cluster.nodes.len(), CLUSTER_PERIOD_S);
+        let contention = Resources::new(
+            0.55 * current.cpu_m + 0.45 * sampled.cpu_m,
+            0.55 * current.ram_mb + 0.45 * sampled.ram_mb,
+            0.55 * current.net_mbps + 0.45 * sampled.net_mbps,
+        );
+        let mut batch_scores = vec![];
+        let mut batch_cost = 0.0;
+        let mut batch_errors = 0u32;
+        let spot_mult = st.price / st.spot_mean;
+        for (i, tenant) in st.tenants.iter().enumerate() {
+            let ClusterTenant::Batch { app, workload } = tenant else { continue };
+            let part = &joint.parts[i];
+            let pods = st.cluster.running_pod_count(app);
+            let spec = RunSpec {
+                workload: *workload,
+                platform: Platform::Spark,
+                deploy: DeployMode::Container,
+                pods: pods.max(1),
+                per_pod: part.per_pod(),
+                cross_zone_frac: placed_cross_zone_frac(&st.cluster, app),
+                contention,
+                data_gb: CLUSTER_BATCH_DATA_GB,
+                external_mem_frac: 0.0,
+                cluster_ram_mb: st.cluster_ram_mb,
+            };
+            let res = run_batch_job(&spec, &mut st.rng_jobs);
+            batch_scores.push(if res.halted {
+                0.0
+            } else {
+                batch_perf_score(*workload, res.elapsed_s)
+            });
+            let elapsed_for_cost = if res.halted {
+                CLUSTER_PERIOD_S
+            } else {
+                res.elapsed_s.min(CLUSTER_PERIOD_S * 5.0)
+            };
+            batch_cost += run_cost(&spec, elapsed_for_cost, spot_mult, 0.2);
+            batch_errors += res.executor_errors;
+        }
+
+        // Blended score: serving SLOs dominate, the batch tenants keep
+        // over-aggressive squeezes honest — same weights as hybrid, but
+        // each side is the mean over its tenant family.
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+        let perf_score = match (micro_scores.is_empty(), batch_scores.is_empty()) {
+            (false, false) => (1.0 - CLUSTER_BATCH_SCORE_WEIGHT) * mean(&micro_scores)
+                + CLUSTER_BATCH_SCORE_WEIGHT * mean(&batch_scores),
+            (false, true) => mean(&micro_scores),
+            (true, false) => mean(&batch_scores),
+            (true, true) => 0.0,
+        };
+
+        let ram_alloc = st.cluster.total_ram_allocated();
+        let resource_frac = st.requested_ram_mb.max(ram_alloc) / st.cluster_ram_mb;
+        let cost =
+            ms_alloc_cost(&st.cluster, CLUSTER_PERIOD_S, st.price, st.spot_mean) + batch_cost;
+
+        // Reactive-scaler feedback describes the serving (last) tenant,
+        // as everywhere in the multi-factor convention.
+        let (last_rate, last_pods, last_rps) = micro_loads
+            .last()
+            .map(|&(_, r, p, rps)| (r, p, rps))
+            .unwrap_or((rate, 0, rate));
+
+        tel.last_action = Some(joint.clone());
+        tel.perf_score = Some(perf_score);
+        tel.cost_norm = match setting {
+            CloudSetting::Public => Some((cost / 0.5).min(1.5)),
+            CloudSetting::Private => Some(0.0),
+        };
+        tel.resource_frac = Some(resource_frac);
+        // A bad window is ordinary feedback, not a halt (as for every
+        // serving env).
+        tel.failure = false;
+        tel.app_cpu_util = (last_rate
+            / (last_pods.max(1) as f64 * (serving.cpu_m / 1000.0) * 120.0))
+            .min(1.0);
+        tel.ram_usage_mb_per_pod = microservice::pod_ram_usage_mb(220.0, last_rps);
+        tel.p90_latency_ms = p90s.last().copied();
+
+        StepRecord {
+            step,
+            t: now,
+            perf_raw: mean(&p90s),
+            perf_score,
+            cost,
+            ram_alloc_mb: ram_alloc,
+            resource_frac,
+            errors: ooms + st.pending as u32 + batch_errors,
+            halted: false,
+            dropped,
+            offered,
+            latencies_ms,
+            action: Some(joint.clone()),
+        }
+    }
+}
+
+/// Run one policy through the many-tenant cluster loop (wrapper mirroring
+/// [`run_hybrid_env`]).
+pub fn run_cluster_env(
+    policy_name: &str,
+    cfg: &ClusterEnvConfig,
+    sys: &SystemConfig,
+    backend: &mut Backend,
+    seed: u64,
+) -> Vec<StepRecord> {
+    let mut env = ClusterEnv::new(cfg.clone());
+    run_env(policy_name, &mut env, sys, backend, seed)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1510,5 +1979,123 @@ mod tests {
                 "resource_frac must cover the requested batch footprint"
             );
         }
+    }
+
+    fn small_cluster(steps: u64, tenants: usize) -> ClusterEnvConfig {
+        let mut cfg = ClusterEnvConfig::new(CloudSetting::Public, steps, tenants);
+        cfg.trace.base_rps = 20.0;
+        cfg.trace.amplitude_rps = 25.0;
+        cfg
+    }
+
+    /// Every registered policy — including the additive-kernel drone and
+    /// the joint HPA — runs the many-tenant loop, emits one action part
+    /// per tenant and actuates all of them on the shared cluster.
+    #[test]
+    fn cluster_env_runs_all_policies() {
+        let sys = sys();
+        let cfg = small_cluster(2, 4);
+        for policy in ["drone", "drone-additive", "k8s-hpa", "k8s-hpa-joint", "autopilot"] {
+            let mut backend = Backend::Native;
+            let recs = run_cluster_env(policy, &cfg, &sys, &mut backend, 7);
+            assert_eq!(recs.len(), 2, "{policy}");
+            for r in &recs {
+                assert!(r.offered > 0, "{policy}: serving tenants must see traffic");
+                assert!(r.dropped <= r.offered);
+                assert!(r.cost > 0.0, "{policy}: the tenants cost money");
+                assert!((0.0..=1.0).contains(&r.perf_score), "{policy}");
+                let a = r.action.as_ref().expect("joint action recorded");
+                assert_eq!(a.parts.len(), 4, "{policy}: one factor per tenant");
+                assert!(a.parts.iter().all(|p| p.total_pods() >= 1), "{policy}");
+            }
+        }
+    }
+
+    /// 12 tenants is the headline configuration: the joint space has 12
+    /// factors (> the coordinate-descent threshold and > the old Halton
+    /// prime table), and the bandit still decides and actuates each step.
+    #[test]
+    fn cluster_env_twelve_tenants_decides() {
+        let sys = sys();
+        let cfg = small_cluster(2, 12);
+        let mut env = ClusterEnv::new(cfg.clone());
+        let mut backend = Backend::Native;
+        let recs = run_env("drone-additive", &mut env, &sys, &mut backend, 3);
+        assert_eq!(recs.len(), 2);
+        assert_eq!(env.joint_space().n_factors(), 12);
+        assert!(env.joint_space().dim() > 24, "wider than the old prime table");
+        for r in &recs {
+            let a = r.action.as_ref().unwrap();
+            assert_eq!(a.parts.len(), 12);
+        }
+    }
+
+    #[test]
+    fn cluster_env_deterministic_per_seed() {
+        let sys = sys();
+        let cfg = small_cluster(2, 4);
+        let mut b1 = Backend::Native;
+        let mut b2 = Backend::Native;
+        let a = run_cluster_env("drone-additive", &cfg, &sys, &mut b1, 5);
+        let b = run_cluster_env("drone-additive", &cfg, &sys, &mut b2, 5);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.perf_raw.to_bits(), y.perf_raw.to_bits());
+            assert_eq!(x.perf_score.to_bits(), y.perf_score.to_bits());
+            assert_eq!(x.cost.to_bits(), y.cost.to_bits());
+            assert_eq!(x.offered, y.offered);
+            assert_eq!(x.dropped, y.dropped);
+            assert_eq!(x.action, y.action);
+        }
+        let mut b3 = Backend::Native;
+        let c = run_cluster_env("drone-additive", &cfg, &sys, &mut b3, 6);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.perf_raw != y.perf_raw));
+    }
+
+    /// Tenant isolation of the load model: each serving tenant's pods are
+    /// a disjoint app family (prefixed service names), so the scoped load
+    /// writer never touches another tenant's pods and the shared batch
+    /// tenants are untouched by any of them.
+    #[test]
+    fn cluster_tenants_have_disjoint_app_families() {
+        let sys = sys();
+        let mut env = ClusterEnv::new(small_cluster(1, 6));
+        let mut root = Pcg64::new(1);
+        env.init(&sys, &mut root);
+        let st = env.st.as_ref().unwrap();
+        let mut apps = std::collections::HashSet::new();
+        for t in &st.tenants {
+            match t {
+                ClusterTenant::Batch { app, .. } => {
+                    assert!(apps.insert(app.clone()), "duplicate app {app}");
+                }
+                ClusterTenant::Micro { graph, .. } => {
+                    for sid in 0..graph.services.len() {
+                        let app = graph.app_name(sid);
+                        assert!(apps.insert(app.clone()), "duplicate app {app}");
+                    }
+                }
+            }
+        }
+        // Micro tenant rate shares are a partition of the cluster rate.
+        let total: f64 = st
+            .tenants
+            .iter()
+            .filter_map(|t| match t {
+                ClusterTenant::Micro { rate_share, .. } => Some(*rate_share),
+                _ => None,
+            })
+            .sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn expired_deadline_truncates_cluster_env() {
+        let sys = sys();
+        let mut cfg = small_cluster(2, 4);
+        cfg.deadline = Some(std::time::Instant::now());
+        let mut backend = Backend::Native;
+        let recs = run_cluster_env("k8s-hpa", &cfg, &sys, &mut backend, 1);
+        assert!(recs.is_empty());
     }
 }

@@ -24,7 +24,10 @@ pub mod regret;
 pub mod tables;
 
 pub use campaign::{run_campaign, CampaignResult, CampaignSpec, Scenario, Suite};
-pub use env::{run_env, run_hybrid_env, Environment, HybridEnv, HybridEnvConfig, TraceEnv};
+pub use env::{
+    run_cluster_env, run_env, run_hybrid_env, ClusterEnv, ClusterEnvConfig, Environment,
+    HybridEnv, HybridEnvConfig, TraceEnv,
+};
 pub use harness::{
     run_batch_env, run_micro_env, run_trace_env, BatchEnvConfig, CloudSetting, MicroEnvConfig,
     StepRecord, TraceEnvConfig,
@@ -103,6 +106,7 @@ fn driver(id: &str) -> Option<Driver> {
         "table3" => Driver::Store(tables::table3),
         "table4" => Driver::Store(tables::table4),
         "table5" => Driver::Store(tables::table5),
+        "table6" => Driver::Store(tables::table6),
         "regret" => Driver::Standalone(|sys, opts| regret::regret(sys, opts.scale)),
         "ablation" => Driver::Standalone(|sys, opts| regret::ablation(sys, opts.scale)),
         _ => return None,
@@ -158,5 +162,5 @@ pub fn run_with_store(
 
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig1", "fig2", "fig4", "fig5", "fig7a", "fig7b", "fig7c", "fig8a", "fig8b", "fig8c",
-    "table2", "table3", "table4", "table5", "regret", "ablation",
+    "table2", "table3", "table4", "table5", "table6", "regret", "ablation",
 ];

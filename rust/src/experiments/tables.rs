@@ -330,3 +330,111 @@ pub fn table5(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
     println!("rows -> {}\n", p.display());
     Ok(())
 }
+
+// ---------------------------------------------------------------------------
+// Table 6 — many-tenant scaling: additive kernel + coordinate descent vs
+// the full-kernel path
+// ---------------------------------------------------------------------------
+
+/// Tenant counts the scaling sweep runs at; 12 is the cluster suite's
+/// headline cell.
+pub const TABLE6_TENANTS: &[usize] = &[2, 4, 8, 12];
+
+/// Decision periods per table 6 scenario at a given `--scale` (shared
+/// with CI's prebuild step) — shorter than table 5's because every step
+/// simulates up to 6 traffic windows and 6 batch jobs.
+pub fn table6_steps(scale: f64) -> u64 {
+    ((60.0 * scale) as u64).max(6)
+}
+
+/// The canonical table 6 env for a tenant count — one formula shared with
+/// CI's prebuild so `drone campaign --experiments cluster` plus this grid
+/// are the exact scenario keys `drone experiment table6` requests.
+pub fn table6_env(tenants: usize, steps: u64) -> EnvKind {
+    let defaults = CampaignSpec::default();
+    EnvKind::Cluster {
+        tenants,
+        steps,
+        base_rps: defaults.micro_base_rps,
+        amplitude_rps: defaults.micro_amplitude_rps,
+        fluid_threshold_rps: None,
+    }
+}
+
+/// The many-tenant scaling measurement: the PR-5 full-kernel drone and
+/// the additive-kernel + coordinate-descent drone run the cluster
+/// scenario at 2/4/8/12 tenants, with the joint-aware reactive baseline
+/// as the control. At low factor counts the two drones coincide (the
+/// additive path only engages past 3 factors and the additive kernel's
+/// extra structure is mild); the spread at 8 and 12 tenants is what the
+/// per-factor machinery buys.
+pub fn table6(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
+    let steps = table6_steps(opts.scale);
+    let policies = ["k8s-hpa-joint", "drone", "drone-additive"];
+    let mut requests = vec![];
+    for &tenants in TABLE6_TENANTS {
+        for &policy in &policies {
+            requests.push(Scenario::request(
+                Suite::Cluster,
+                table6_env(tenants, steps),
+                policy,
+                sys.seed,
+            ));
+        }
+    }
+    let report = store.ensure(&requests, sys, &opts.exec())?;
+    println!("{}", report.describe());
+
+    let warmup = (steps / 3) as usize;
+    let mut tab = Table::new(
+        "Table 6 — many-tenant scaling: full kernel vs additive + coord-descent (post-warmup)",
+        &["tenants", "hpa-joint score", "drone score", "additive score", "additive delta"],
+    );
+    let mut csv = CsvWriter::for_experiment(
+        "table6",
+        &["tenants", "policy", "post_perf_score", "post_p90_ms", "total_cost", "drop_rate",
+          "errors"],
+    );
+    for (ti, &tenants) in TABLE6_TENANTS.iter().enumerate() {
+        let mut cells = vec![format!("{tenants}")];
+        let mut scores = vec![];
+        for (pi, &policy) in policies.iter().enumerate() {
+            let idx = report.indices[ti * policies.len() + pi];
+            let o = &store.outcomes[idx];
+            let post = &o.records[warmup.min(o.records.len())..];
+            let score_v: Vec<f64> = post.iter().map(|r| r.perf_score).collect();
+            let score = if score_v.is_empty() { f64::NAN } else { stats::mean(&score_v) };
+            let raw: Vec<f64> =
+                post.iter().filter(|r| r.perf_raw.is_finite()).map(|r| r.perf_raw).collect();
+            let p90 = if raw.is_empty() { f64::NAN } else { stats::mean(&raw) };
+            let cost: f64 = o.records.iter().map(|r| r.cost).sum();
+            let offered: u64 = o.records.iter().map(|r| r.offered).sum();
+            let dropped: u64 = o.records.iter().map(|r| r.dropped).sum();
+            let errors: u64 = o.records.iter().map(|r| r.errors as u64).sum();
+            scores.push(score);
+            cells.push(if score.is_finite() { format!("{score:.3}") } else { "n/a".into() });
+            csv.row(&[
+                format!("{tenants}"),
+                policy.into(),
+                format!("{score:.4}"),
+                format!("{p90:.2}"),
+                format!("{cost:.4}"),
+                format!("{:.4}", dropped as f64 / offered.max(1) as f64),
+                format!("{errors}"),
+            ]);
+        }
+        // Additive vs full drone, as a relative score delta.
+        cells.push(if scores[1].is_finite() && scores[2].is_finite() && scores[1] > 0.0 {
+            format!("{:+.1}%", (scores[2] - scores[1]) / scores[1] * 100.0)
+        } else {
+            "n/a".into()
+        });
+        tab.row(&cells);
+    }
+    tab.print();
+    println!("(the full kernel + global Halton stops being viable past a few tenants;");
+    println!(" the additive + coordinate-descent path is how the stack reaches 12)");
+    let p = csv.finish()?;
+    println!("rows -> {}\n", p.display());
+    Ok(())
+}

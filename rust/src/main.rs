@@ -44,7 +44,8 @@ fn print_usage() {
         "drone — dynamic resource orchestration for the containerized cloud
 
 USAGE:
-  drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint|trace> [--workload <w>]
+  drone run --policy <name> --env <batch|micro|hybrid|hybrid-joint|trace|cluster>
+            [--workload <w>] [--tenants N]
             [--setting <public|private>] [--steps N] [--seed S] [--config file.toml]
             [--sim-backend <exact|fluid>] [--fluid-threshold RPS]
             [--trace-file NAME|PATH] [--graph-file NAME|PATH] [--trace-scale F]
@@ -89,12 +90,19 @@ drone-bench/v1 schema (used by CI to keep the perf trajectory parseable);
 with --baseline it also fails on any tracked bench whose p99 regressed
 more than --max-regression (default 0.25 = +25%) vs the baseline export.
 
-POLICIES: drone drone-safe cherrypick accordia k8s-hpa autopilot showar
+`run --env cluster` co-locates --tenants N (default 12, min 2)
+heterogeneous tenants — alternating batch and microservice profiles — on
+one shared cluster, all rightsized through one N-factor joint action
+(drone-additive routes the bandit through the additive per-factor kernel
+and coordinate-descent candidates built for this regime).
+
+POLICIES: drone drone-additive drone-safe cherrypick accordia k8s-hpa
+          k8s-hpa-joint autopilot showar
 WORKLOADS: sparkpi lr pagerank sort
 EXPERIMENTS: fig1 fig2 fig4 fig5 fig7a fig7b fig7c fig8a fig8b fig8c
-             table2 table3 table4 table5 regret ablation
+             table2 table3 table4 table5 table6 regret ablation
 SUITES: batch-public batch-private micro-public micro-private hybrid
-        hybrid-joint trace fig1 fig2 fig4"
+        hybrid-joint trace cluster fig1 fig2 fig4"
     );
 }
 
@@ -263,6 +271,28 @@ fn cmd_run(args: &Args, sys: &SystemConfig) -> i32 {
                     format!("{}", r.errors),
                     format!("{:.1}", r.ram_alloc_mb / 1024.0),
                     batch_pods,
+                ]);
+            }
+            tab.print();
+        }
+        "cluster" => {
+            let tenants = args.get_usize("tenants", 12);
+            let mut env = experiments::ClusterEnvConfig::new(setting, steps, tenants);
+            env.sim_backend = sim_backend;
+            let recs = experiments::run_cluster_env(&policy, &env, sys, &mut backend, sys.seed);
+            let mut tab = Table::new(
+                &format!("{policy} on {} co-located tenants ({setting:?})", env.tenants),
+                &["step", "mean_p90_ms", "score", "drops", "offered", "errors", "ram_gb"],
+            );
+            for r in &recs {
+                tab.row(&[
+                    format!("{}", r.step),
+                    format!("{:.1}", r.perf_raw),
+                    format!("{:.3}", r.perf_score),
+                    format!("{}", r.dropped),
+                    format!("{}", r.offered),
+                    format!("{}", r.errors),
+                    format!("{:.1}", r.ram_alloc_mb / 1024.0),
                 ]);
             }
             tab.print();

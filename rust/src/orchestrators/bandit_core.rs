@@ -13,7 +13,7 @@
 use crate::bandit::acquisition;
 use crate::bandit::candidates::{initial_joint, recovery_joint, CandidateGen};
 use crate::bandit::encode::{joint_features, JointAction, JointSpace};
-use crate::bandit::gp::GpHyper;
+use crate::bandit::gp::{GpHyper, KernelKind};
 use crate::bandit::window::{Observation, SlidingWindow};
 use crate::config::BanditConfig;
 use crate::monitor::context::ContextVector;
@@ -43,6 +43,11 @@ pub struct BanditCore {
     pub hyp: GpHyper,
     pub cfg: BanditConfig,
     pub acquisition: Acquisition,
+    /// Covariance structure for both GP targets. `Full` (the default)
+    /// reproduces the classic path bit-for-bit; `Additive` (see
+    /// `gp::additive_for`) prices the posterior per factor — the
+    /// many-tenant configuration.
+    pub kernel: KernelKind,
     /// Context-aware policies embed the live context; context-blind ones
     /// (Cherrypick/Accordia) zero it — constant dims are kernel-invisible.
     pub use_context: bool,
@@ -77,6 +82,7 @@ impl BanditCore {
             hyp,
             cfg,
             acquisition,
+            kernel: KernelKind::Full,
             use_context,
             stickiness: None,
             incumbent: None,
@@ -136,8 +142,15 @@ impl BanditCore {
             x.extend_from_slice(&ctx_arr);
         }
         let n_pad = padded_n(self.cfg.window);
-        let (mu, sigma) =
-            backend.posterior_window(&self.window, &y_scaled, &x, d, self.hyp, n_pad)?;
+        let (mu, sigma) = backend.posterior_window_kernel(
+            &self.window,
+            &y_scaled,
+            &x,
+            d,
+            self.hyp,
+            n_pad,
+            &self.kernel,
+        )?;
         Ok((
             mu.iter().map(|v| v * y_std + y_mean).collect(),
             sigma.iter().map(|v| v * y_std).collect(),
@@ -441,6 +454,42 @@ mod tests {
         let stats = cached.cache_stats().unwrap();
         assert_eq!(stats.rebuilds, 1, "cached path must never refactorize mid-stream");
         assert_eq!(stats.evictions, 30 - 8);
+    }
+
+    /// The many-tenant configuration end to end: a 4-factor space rides
+    /// coordinate-descent candidates and the additive per-factor kernel,
+    /// with the cached backend agreeing with the stateless kernel oracle
+    /// through the full core path (z-scoring included).
+    #[test]
+    fn wide_additive_core_runs_and_backends_agree() {
+        use crate::bandit::gp::additive_for;
+        let js = JointSpace::new(vec![
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+            ActionSpace::hybrid_batch(4),
+            ActionSpace::microservices(4),
+        ]);
+        let cfg = BanditConfig { candidates: 12, window: 8, ..Default::default() };
+        let mut c = BanditCore::new(js.clone(), cfg, Acquisition::Ucb, true, 0);
+        c.kernel = additive_for(&js);
+        let mut cached = Backend::native_cached();
+        let mut oracle = Backend::Native;
+        let mut rng = Pcg64::new(17);
+        let ctx = ContextVector { workload: 0.5, ..Default::default() };
+        let mut a = c.select(&mut cached, &ctx, &mut rng);
+        for step in 0..12 {
+            assert_eq!(a.parts.len(), 4);
+            assert!(a.parts.iter().all(|p| p.total_pods() >= 1));
+            c.record(&a.clone(), &ctx, (step as f64 * 0.37) % 1.0, 0.2);
+            let (encs, _) = c.candidates(&mut rng);
+            let (mu_c, sig_c) = c.posterior_primary(&mut cached, &ctx, &encs).unwrap();
+            let (mu_o, sig_o) = c.posterior_primary(&mut oracle, &ctx, &encs).unwrap();
+            for i in 0..mu_c.len() {
+                assert!((mu_c[i] - mu_o[i]).abs() < 1e-8, "step {step} mu[{i}]");
+                assert!((sig_c[i] - sig_o[i]).abs() < 1e-8, "step {step} sigma[{i}]");
+            }
+            a = c.select(&mut cached, &ctx, &mut rng);
+        }
     }
 
     #[test]

@@ -312,6 +312,92 @@ impl Orchestrator for Showar {
     }
 }
 
+/// Joint-aware HPA (carried ROADMAP item, "k8s-hpa-joint"): the classic
+/// HPA control law applied to **every** factor of the joint space — not
+/// just the serving tenant — under one shared capacity guard. Each tenant
+/// scales replicas toward the CPU-utilization target with the paper's
+/// initial-heuristic per-pod requests (mid-range, profile-free); whenever
+/// the proposed combined RAM footprint would exceed the `p_max` budget,
+/// every tenant's replica count shrinks proportionally (floor one pod).
+/// This is the harshest heuristic the factored suites compare against: it
+/// rightsizes all tenants at once, but reactively, off one shared signal,
+/// with no notion of joint interference — exactly what the factored bandit
+/// exploits.
+pub struct JointHpa {
+    space: JointSpace,
+    pub target_cpu_util: f64,
+    /// Shared capacity guard: fraction of cluster RAM the combined
+    /// footprint may claim (the same budget the safe bandit respects).
+    pub p_max: f64,
+    pods: Vec<usize>,
+    /// Per-factor per-pod requests (from the initial heuristic at full
+    /// availability), held fixed — HPA is horizontal-only.
+    templates: Vec<Action>,
+}
+
+impl JointHpa {
+    pub fn new(space: JointSpace, p_max: f64) -> Self {
+        let templates: Vec<Action> =
+            space.factors().iter().map(|f| initial_action(f, 1.0)).collect();
+        let pods = templates.iter().map(|a| a.total_pods()).collect();
+        Self { space, target_cpu_util: 0.5, p_max, pods, templates }
+    }
+}
+
+impl Orchestrator for JointHpa {
+    fn name(&self) -> &'static str {
+        "k8s-hpa-joint"
+    }
+
+    fn decide(&mut self, tel: &Telemetry, _b: &mut Backend, _rng: &mut Pcg64) -> JointAction {
+        let factors = self.space.factors();
+        // Per-factor HPA step off the shared utilization signal, with the
+        // same memory-stress scale-up suspension as the classic HPA.
+        if tel.app_cpu_util > 0.0 {
+            for (i, f) in factors.iter().enumerate() {
+                let desired =
+                    (self.pods[i] as f64 * tel.app_cpu_util / self.target_cpu_util).ceil();
+                let scaling_up = desired > self.pods[i] as f64;
+                if !(scaling_up && tel.ctx.ram_util > 0.8) {
+                    self.pods[i] = clamp_pods(f, desired);
+                }
+            }
+        }
+        // Shared capacity guard: estimate cluster RAM from the last
+        // observed allocation fraction (the safe bandit's recovery trick)
+        // and shrink every tenant proportionally to fit the budget.
+        let proposed_mb: f64 =
+            self.pods.iter().zip(&self.templates).map(|(&k, t)| k as f64 * t.ram_mb).sum();
+        if let (Some(last), Some(frac)) = (&tel.last_action, tel.resource_frac) {
+            if frac > 0.0 && proposed_mb > 0.0 {
+                let cluster_mb = last.total_ram_mb() / frac.max(0.05);
+                let budget_mb = (self.p_max - 0.03) * cluster_mb;
+                if proposed_mb > budget_mb {
+                    let shrink = budget_mb / proposed_mb;
+                    for (i, f) in factors.iter().enumerate() {
+                        self.pods[i] = clamp_pods(f, self.pods[i] as f64 * shrink);
+                    }
+                }
+            }
+        }
+        JointAction::new(
+            factors
+                .iter()
+                .zip(&self.pods)
+                .zip(&self.templates)
+                .map(|((f, &k), t)| {
+                    f.clamp(Action {
+                        zone_pods: spread_evenly(k, f.zones),
+                        cpu_m: t.cpu_m,
+                        ram_mb: t.ram_mb,
+                        net_mbps: t.net_mbps,
+                    })
+                })
+                .collect(),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -401,6 +487,49 @@ mod tests {
         let a = sh.decide(&t, &mut b, &mut rng);
         let ram = a.primary().ram_mb;
         assert!(ram > 1000.0 && ram < 1600.0, "{ram}");
+    }
+
+    /// The joint-aware HPA drives *every* factor (unlike the classic
+    /// heuristics, which pin co-tenants) and its shared capacity guard
+    /// shrinks all tenants when the combined footprint overruns the budget.
+    #[test]
+    fn joint_hpa_scales_all_factors_under_shared_guard() {
+        let js = JointSpace::new(vec![ActionSpace::default(), ActionSpace::microservices(4)]);
+        let mut h = JointHpa::new(js.clone(), 0.65);
+        let mut b = Backend::Native;
+        let mut rng = Pcg64::new(0);
+        let mut t = tel();
+        // High utilization, no capacity telemetry yet: every factor
+        // scales up independently.
+        t.app_cpu_util = 1.0;
+        let before: Vec<usize> = h.pods.clone();
+        let a1 = h.decide(&t, &mut b, &mut rng);
+        assert_eq!(a1.parts.len(), 2);
+        for (i, part) in a1.parts.iter().enumerate() {
+            assert!(part.total_pods() > before[i], "factor {i} must scale up");
+        }
+        // Now feed back an allocation fraction implying a small cluster:
+        // the shared guard must shrink the combined footprint.
+        let cluster_mb = a1.total_ram_mb() / 0.9; // 90% allocated — over budget
+        t.last_action = Some(a1.clone());
+        t.resource_frac = Some(a1.total_ram_mb() / cluster_mb);
+        t.app_cpu_util = 1.0;
+        t.ctx.ram_util = 0.9; // scale-up suspended; guard still applies
+        let a2 = h.decide(&t, &mut b, &mut rng);
+        assert!(
+            a2.total_ram_mb() < a1.total_ram_mb(),
+            "shared guard must shrink the combined footprint: {} vs {}",
+            a2.total_ram_mb(),
+            a1.total_ram_mb()
+        );
+        assert!(a2.parts.iter().all(|p| p.total_pods() >= 1), "floor one pod per tenant");
+        // Single-factor space: degenerates to per-factor HPA with a guard.
+        let mut solo = JointHpa::new(JointSpace::single(ActionSpace::default()), 0.65);
+        let mut t2 = tel();
+        t2.app_cpu_util = 0.9;
+        let a = solo.decide(&t2, &mut b, &mut rng);
+        assert_eq!(a.parts.len(), 1);
+        assert!(a.primary().total_pods() >= 1);
     }
 
     /// In a multi-factor space the heuristics drive only the serving

@@ -9,7 +9,7 @@ pub mod drone;
 pub mod traits;
 
 pub use baselines_bandit::{Accordia, Cherrypick};
-pub use baselines_heuristic::{Autopilot, KubeHpa, Showar};
+pub use baselines_heuristic::{Autopilot, JointHpa, KubeHpa, Showar};
 pub use drone::{DronePrivate, DronePublic};
 pub use traits::{Orchestrator, Telemetry};
 
@@ -41,10 +41,12 @@ pub fn make(
 ) -> Option<Box<dyn Orchestrator>> {
     Some(match name {
         "drone" => Box::new(DronePublic::new(space, bandit, obj, seed)) as Box<dyn Orchestrator>,
+        "drone-additive" => Box::new(DronePublic::additive(space, bandit, obj, seed)),
         "drone-safe" => Box::new(DronePrivate::new(space, bandit, p_max, seed)),
         "cherrypick" => Box::new(Cherrypick::new(space, bandit, seed)),
         "accordia" => Box::new(Accordia::new(space, bandit, seed)),
         "k8s-hpa" | "k8s" => Box::new(KubeHpa::with_profile(space, profile)),
+        "k8s-hpa-joint" => Box::new(JointHpa::new(space, p_max)),
         "autopilot" => Box::new(Autopilot::with_profile(space, profile)),
         "showar" => Box::new(Showar::with_profile(space, profile)),
         _ => return None,
@@ -53,10 +55,12 @@ pub fn make(
 
 pub const ALL_POLICIES: &[&str] = &[
     "drone",
+    "drone-additive",
     "drone-safe",
     "cherrypick",
     "accordia",
     "k8s-hpa",
+    "k8s-hpa-joint",
     "autopilot",
     "showar",
 ];

@@ -25,7 +25,7 @@ use anyhow::anyhow;
 
 #[cfg(feature = "pjrt")]
 use super::client::XlaRuntime;
-use crate::bandit::gp::{self, GpHyper};
+use crate::bandit::gp::{self, GpHyper, KernelKind};
 use crate::bandit::gp_incremental::{CacheStats, CachedGp};
 use crate::bandit::window::SlidingWindow;
 
@@ -188,6 +188,59 @@ impl Backend {
             }
         }
     }
+
+    /// [`Backend::posterior_window`] with an explicit covariance structure
+    /// — the entry point a kernel-aware core uses. `Full` delegates to
+    /// `posterior_window` verbatim (so the default path stays bit- and
+    /// artifact-identical); `Additive` steers the cached engine's kernel,
+    /// and any backend without a factor cache (including XLA — the AOT'd
+    /// graph only knows the full kernel) is served from the stateless
+    /// native kernel posterior.
+    pub fn posterior_window_kernel(
+        &mut self,
+        window: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        d: usize,
+        hyp: GpHyper,
+        n_pad: usize,
+        kernel: &KernelKind,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        if matches!(kernel, KernelKind::Full) {
+            if let Backend::NativeCached(c) = self {
+                if c.kernel() != kernel {
+                    c.set_kernel(kernel.clone());
+                }
+            }
+            return self.posterior_window(window, ys, x, d, hyp, n_pad);
+        }
+        match self {
+            Backend::NativeCached(c) => {
+                if c.kernel() != kernel {
+                    c.set_kernel(kernel.clone());
+                }
+                Ok(c.posterior(window, ys, x, hyp))
+            }
+            _ => {
+                #[cfg(feature = "pjrt")]
+                if matches!(self, Backend::Xla(_)) {
+                    static WARNED: std::sync::Once = std::sync::Once::new();
+                    WARNED.call_once(|| {
+                        eprintln!(
+                            "warning: XLA artifacts only cover the full kernel; \
+                             serving the additive posterior from the native GP"
+                        );
+                    });
+                }
+                let n_pad = n_pad.max(window.len());
+                let (z, _y_stored, _yr, mask) = window.padded(n_pad);
+                let mut y = vec![0.0; n_pad];
+                y[..ys.len()].copy_from_slice(ys);
+                let (mu, sigma) = gp::gp_posterior_kernel(&z, &y, &mask, x, d, hyp, kernel);
+                Ok((mu, sigma))
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -250,6 +303,47 @@ mod tests {
         let stats = cached.cache_stats().unwrap();
         assert_eq!(stats.rebuilds, 1, "one initial factorization only");
         assert_eq!(stats.evictions, 20 - cap as u64);
+    }
+
+    /// The kernel-aware entry point: `Full` must be bit-identical to
+    /// `posterior_window`, and the additive cached path must agree with the
+    /// stateless kernel posterior across evictions.
+    #[test]
+    fn kernel_entry_point_full_identity_and_additive_parity() {
+        let mut rng = Pcg64::new(4);
+        let (cap, d, m) = (5usize, 6usize, 6usize);
+        let kind = KernelKind::Additive { groups: vec![(0, 3), (3, 3)] };
+        let mut window = SlidingWindow::new(cap, d);
+        let mut cached = Backend::native_cached();
+        let mut plain = Backend::native_cached();
+        let mut oracle = Backend::Native;
+        let hyp = GpHyper::default();
+        for _ in 0..12 {
+            window.push(Observation {
+                z: (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect(),
+                y: rng.normal(),
+                y_resource: 0.0,
+            });
+            let ys: Vec<f64> = window.iter().map(|o| o.y).collect();
+            let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            // Full through the kernel entry point == the plain entry point.
+            let (mu_f, sig_f) = cached
+                .posterior_window_kernel(&window, &ys, &x, d, hyp, 8, &KernelKind::Full)
+                .unwrap();
+            let (mu_p, sig_p) = plain.posterior_window(&window, &ys, &x, d, hyp, 8).unwrap();
+            assert_eq!(mu_f, mu_p);
+            assert_eq!(sig_f, sig_p);
+            // Additive cached vs additive stateless.
+            let (mu_a, sig_a) = cached
+                .posterior_window_kernel(&window, &ys, &x, d, hyp, 8, &kind)
+                .unwrap();
+            let (mu_o, sig_o) =
+                oracle.posterior_window_kernel(&window, &ys, &x, d, hyp, 8, &kind).unwrap();
+            for c in 0..m {
+                assert!((mu_a[c] - mu_o[c]).abs() < 1e-9, "mu[{c}]");
+                assert!((sig_a[c] - sig_o[c]).abs() < 1e-9, "sigma[{c}]");
+            }
+        }
     }
 
     /// A padded `PosteriorRequest` through the cached backend is served

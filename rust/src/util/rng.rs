@@ -151,7 +151,7 @@ impl Pcg64 {
 /// candidate generator (space-filling without a sobol direction table).
 #[derive(Clone, Debug)]
 pub struct Halton {
-    dims: usize,
+    bases: Vec<u64>,
     index: u64,
 }
 
@@ -159,16 +159,45 @@ const PRIMES: [u64; 24] = [
     2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47, 53, 59, 61, 67, 71, 73, 79, 83, 89,
 ];
 
+fn is_prime(n: u64) -> bool {
+    if n < 4 {
+        return n >= 2;
+    }
+    if n % 2 == 0 {
+        return false;
+    }
+    let mut d = 3;
+    while d * d <= n {
+        if n % d == 0 {
+            return false;
+        }
+        d += 2;
+    }
+    true
+}
+
+/// First `n` primes: the static table while it lasts, trial division past it,
+/// so wide joint spaces (many tenants) never silently repeat a base.
+fn first_primes(n: usize) -> Vec<u64> {
+    let mut out: Vec<u64> = PRIMES[..n.min(PRIMES.len())].to_vec();
+    let mut cand = PRIMES[PRIMES.len() - 1] + 2;
+    while out.len() < n {
+        if is_prime(cand) {
+            out.push(cand);
+        }
+        cand += 2;
+    }
+    out
+}
+
 impl Halton {
     pub fn new(dims: usize) -> Self {
-        assert!(dims <= PRIMES.len(), "Halton supports up to {} dims", PRIMES.len());
-        Self { dims, index: 1 }
+        Self { bases: first_primes(dims), index: 1 }
     }
 
     /// Skip ahead (decorrelates repeated uses).
     pub fn with_offset(dims: usize, offset: u64) -> Self {
-        assert!(dims <= PRIMES.len());
-        Self { dims, index: 1 + offset }
+        Self { bases: first_primes(dims), index: 1 + offset }
     }
 
     fn radical_inverse(mut i: u64, base: u64) -> f64 {
@@ -185,9 +214,7 @@ impl Halton {
     pub fn next_point(&mut self) -> Vec<f64> {
         let i = self.index;
         self.index += 1;
-        (0..self.dims)
-            .map(|d| Self::radical_inverse(i, PRIMES[d]))
-            .collect()
+        self.bases.iter().map(|&b| Self::radical_inverse(i, b)).collect()
     }
 }
 
@@ -289,6 +316,29 @@ mod tests {
         let p2 = h.next_point();
         assert!((p1[0] - 0.5).abs() < 1e-12 && (p1[1] - 1.0 / 3.0).abs() < 1e-12);
         assert!((p2[0] - 0.25).abs() < 1e-12 && (p2[1] - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn halton_wide_spaces_get_distinct_prime_bases() {
+        // 8 hybrid-batch/microservice factors is 8 * 7 = 56 joint dims —
+        // far past the old 24-entry PRIMES hard stop.
+        let dims = 56;
+        let bases = first_primes(dims);
+        assert_eq!(bases.len(), dims);
+        assert_eq!(&bases[..24], &PRIMES[..], "static prefix must be reused verbatim");
+        for w in bases.windows(2) {
+            assert!(w[0] < w[1], "bases must be strictly increasing: {:?}", w);
+        }
+        assert!(bases.iter().all(|&b| is_prime(b)));
+        assert_eq!(bases[24], 97, "25th prime");
+        assert_eq!(bases[55], 263, "56th prime");
+        let mut h = Halton::new(dims);
+        let p = h.next_point();
+        assert_eq!(p.len(), dims);
+        // index 1 in base b is 1/b for every dimension.
+        for (d, &b) in bases.iter().enumerate() {
+            assert!((p[d] - 1.0 / b as f64).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -166,6 +166,56 @@ fn hybrid_joint_suite_deterministic_for_any_job_count() {
     assert_ne!(joint_perf, fixed_perf, "joint and fixed hybrid must differ");
 }
 
+/// The many-tenant `cluster` suite (12 heterogeneous tenants through one
+/// factored action space — the regime the additive kernel and
+/// coordinate-descent candidates exist for) obeys the same contract:
+/// part of `--experiments all`, byte-identical canonical `campaign.json`
+/// for any `--jobs`, env descriptor round-trips through the store JSON.
+#[test]
+fn cluster_suite_deterministic_for_any_job_count() {
+    use drone::experiments::campaign::{parse_suites, EnvKind, CLUSTER_TENANTS};
+
+    assert!(
+        parse_suites("all").unwrap().contains(&Suite::Cluster),
+        "cluster must be part of `drone campaign --experiments all`"
+    );
+
+    let sys = test_sys();
+    let spec = CampaignSpec {
+        suites: vec![Suite::Cluster],
+        policies: Some(vec!["drone-additive".into(), "k8s-hpa-joint".into()]),
+        workloads: vec![BatchWorkload::SparkPi],
+        seeds: vec![0, 1],
+        micro_steps: 3,
+        micro_base_rps: 12.0,
+        micro_amplitude_rps: 18.0,
+        ..Default::default()
+    };
+    assert_eq!(enumerate(&spec).len(), 4);
+
+    let serial = run_campaign(&spec, &sys, 1);
+    let parallel = run_campaign(&spec, &sys, 4);
+    assert_eq!(
+        serial.to_json_canonical(),
+        parallel.to_json_canonical(),
+        "cluster campaign.json must not depend on the job count"
+    );
+    for o in &serial.outcomes {
+        match &o.scenario.env {
+            EnvKind::Cluster { tenants, .. } => {
+                assert_eq!(*tenants, CLUSTER_TENANTS, "{}", o.scenario.name())
+            }
+            other => panic!("cluster suite produced {other:?}"),
+        }
+        assert_eq!(o.records.len(), 3, "{}", o.scenario.name());
+        assert_eq!(o.summary.steps, 3);
+    }
+    let j = serial.to_json();
+    assert!(j.contains("\"suite\": \"cluster\""));
+    assert!(j.contains("\"kind\": \"cluster\""));
+    assert!(j.contains("\"tenants\": 12"));
+}
+
 #[test]
 fn repeated_runs_are_reproducible() {
     let sys = test_sys();

@@ -525,3 +525,160 @@ fn prop_joint_space_encode_decode_clamp_round_trips() {
         }
     }
 }
+
+/// Tentpole invariant (issue 8): on a single-factor space the additive
+/// per-factor kernel collapses to one group spanning the whole GP input,
+/// so the cached-Cholesky posterior under `KernelKind::Additive` must
+/// agree with the default full kernel to 1e-8 at every step of seeded
+/// push/evict/query sequences — the precondition for making additive the
+/// cluster suite's default without perturbing single-tenant suites.
+#[test]
+fn prop_additive_kernel_matches_full_on_single_factor() {
+    use drone::bandit::gp::{additive_for, KernelKind};
+    use drone::bandit::gp_incremental::CachedGp;
+    use drone::bandit::window::{Observation, SlidingWindow};
+    let mut rng = Pcg64::new(808);
+    let factor_pool = [
+        ActionSpace::default(),
+        ActionSpace::microservices(4),
+        ActionSpace::hybrid_batch(4),
+        ActionSpace::microservices(3),
+    ];
+    for case in 0..24 {
+        let js = JointSpace::single(factor_pool[case % factor_pool.len()].clone());
+        let d = js.joint_dim();
+        let kind = additive_for(&js);
+        assert_eq!(
+            kind,
+            KernelKind::Additive { groups: vec![(0, d)] },
+            "case {case}: single factor must collapse to one whole-input group"
+        );
+        let cap = 4 + rng.below(12); // 4..=15
+        let hyp = GpHyper {
+            noise_var: [1e-3, 0.01, 0.1][case % 3],
+            lengthscale: rng.uniform(0.4, 1.5),
+            signal_var: rng.uniform(0.5, 2.5),
+        };
+        let mut w = SlidingWindow::new(cap, d);
+        let mut full = CachedGp::new();
+        let mut additive = CachedGp::with_kernel(kind);
+        let pushes = cap * 3 + 2;
+        let mut pushed = 0usize;
+        while pushed < pushes {
+            // Bursts force both engines through multi-op journal replays
+            // (append + evict) between queries, not just single pushes.
+            for _ in 0..1 + rng.below(3) {
+                w.push(Observation {
+                    z: (0..d).map(|_| rng.uniform(-1.5, 1.5)).collect(),
+                    y: rng.normal(),
+                    y_resource: rng.f64(),
+                });
+                pushed += 1;
+            }
+            let m = 1 + rng.below(10);
+            let x: Vec<f64> = (0..m * d).map(|_| rng.uniform(-1.5, 1.5)).collect();
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            let (mu_f, sig_f) = full.posterior(&w, &ys, &x, hyp);
+            let (mu_a, sig_a) = additive.posterior(&w, &ys, &x, hyp);
+            for c in 0..m {
+                assert!(
+                    (mu_f[c] - mu_a[c]).abs() < 1e-8,
+                    "case {case} push {pushed} mu[{c}]: full {} vs additive {}",
+                    mu_f[c],
+                    mu_a[c]
+                );
+                assert!(
+                    (sig_f[c] - sig_a[c]).abs() < 1e-8,
+                    "case {case} push {pushed} sigma[{c}]: full {} vs additive {}",
+                    sig_f[c],
+                    sig_a[c]
+                );
+            }
+        }
+        // Both engines must have served the sequence from one cached
+        // factorization — the additive kernel keeps the incremental path.
+        assert_eq!(full.stats.rebuilds, 1, "case {case}: full refactorized");
+        assert_eq!(additive.stats.rebuilds, 1, "case {case}: additive refactorized");
+    }
+}
+
+/// Tentpole invariant (issue 8): narrow joint spaces (<= 3 factors) must
+/// keep the pre-refactor global-Halton candidate path bit-for-bit. The
+/// reference below replays that path from its public parts — incumbent in
+/// slot 0, `local_frac` Gaussian perturbations off the same `Pcg64`
+/// stream, Halton fill from the same `with_offset` stream — and every
+/// coordinate of `CandidateGen::generate` must match it `to_bits`. A
+/// single-factor coordinate-descent round would be indistinguishable
+/// (one factor's slice == the whole vector), so this pins the gate AND
+/// the narrow path's exact output in one sweep.
+#[test]
+fn prop_single_factor_candidates_match_halton_reference() {
+    use drone::bandit::candidates::{CandidateGen, COORD_DESCENT_MIN_FACTORS};
+    use drone::util::rng::Halton;
+    let mut rng_cases = Pcg64::new(909);
+    let factor_pool = [
+        ActionSpace::default(),
+        ActionSpace::microservices(4),
+        ActionSpace::hybrid_batch(4),
+    ];
+    assert_eq!(COORD_DESCENT_MIN_FACTORS, 3, "gate moved: narrow suites would change");
+    for case in 0..40 {
+        let space = factor_pool[case % factor_pool.len()].clone();
+        let js = JointSpace::single(space);
+        assert_eq!(js.n_factors(), 1);
+        let dim = js.dim();
+        let seed_offset = rng_cases.below(512) as u64;
+        let mut gen = CandidateGen::new(js.clone(), seed_offset);
+        let mut halton_ref = Halton::with_offset(dim, seed_offset);
+        let mut rng_gen = Pcg64::new(5000 + case as u64);
+        let mut rng_ref = rng_gen.clone();
+
+        // Cold start (no incumbent): the whole batch is the raw Halton
+        // stream, in order.
+        let m = 1 + rng_cases.below(48);
+        let batch = gen.generate(m, None, &mut rng_gen);
+        assert_eq!(batch.len(), m, "case {case}");
+        for (i, p) in batch.iter().enumerate() {
+            let h = halton_ref.next_point();
+            for (j, (a, b)) in p.iter().zip(&h).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case} cold cand {i} dim {j}: Halton identity"
+                );
+            }
+        }
+
+        // Warm round (incumbent present): slot 0 is the incumbent encoding
+        // exactly; the local share replays the same Gaussian stream; the
+        // global fill continues the same Halton stream.
+        let inc = js.clamp(js.decode(&vec![0.37; dim]));
+        let batch = gen.generate(m, Some(&inc), &mut rng_gen);
+        let enc = js.encode(&inc);
+        let mut reference: Vec<Vec<f64>> = vec![enc.clone()];
+        let target_with_local = 1 + (((m as f64) * gen.local_frac) as usize).min(m - 1);
+        while reference.len() < target_with_local {
+            let p: Vec<f64> = enc
+                .iter()
+                .map(|&v| (v + gen.local_sigma * rng_ref.normal()).clamp(0.0, 1.0))
+                .collect();
+            reference.push(p);
+        }
+        // The generator consumed the cold batch from the same base rng;
+        // fast-forward the reference stream over it (cold start draws no
+        // Gaussians, so the streams are still aligned here).
+        while reference.len() < m {
+            reference.push(halton_ref.next_point());
+        }
+        assert_eq!(batch.len(), reference.len(), "case {case}");
+        for (i, (p, q)) in batch.iter().zip(&reference).enumerate() {
+            for (j, (a, b)) in p.iter().zip(q).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "case {case} warm cand {i} dim {j}: narrow path changed"
+                );
+            }
+        }
+    }
+}
