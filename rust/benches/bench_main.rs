@@ -378,6 +378,61 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64, col: &mut Collector) {
                 col.add("decide", &r);
             }
         }
+        // The 32-tenant stress cell (issue 9): a 32-factor joint space
+        // pushes the GP input to d=230. Three rows price the decide paths
+        // against each other — the full kernel, the PR-8 additive kernel
+        // with direct candidate scoring, and the block-sparse group-cached
+        // scoring path (cross-covariance recomputed only for the one
+        // factor slice each candidate perturbs), which is what
+        // `drone-additive` actually runs in the cluster suite.
+        {
+            use drone::bandit::gp::additive_for;
+            let factors: Vec<ActionSpace> = (0..32)
+                .map(|t| {
+                    if t % 2 == 0 {
+                        ActionSpace::hybrid_batch(4)
+                    } else {
+                        ActionSpace::microservices(4)
+                    }
+                })
+                .collect();
+            for (label, additive, grouped) in [
+                ("full", false, false),
+                ("additive", true, false),
+                ("additive-grouped", true, true),
+            ] {
+                let js = JointSpace::new(factors.clone());
+                let d = js.joint_dim();
+                let dim = js.dim();
+                let mut core =
+                    BanditCore::new(js, BanditConfig::default(), Acquisition::Ucb, true, 0);
+                if additive {
+                    core.kernel = additive_for(core.candgen.space());
+                }
+                core.block_scoring = grouped;
+                let mut backend = Backend::native_cached();
+                let mut rng2 = Pcg64::new(9);
+                let ctx = ContextVector { workload: 0.5, ..Default::default() };
+                for i in 0..30 {
+                    let a = core.candgen.decode(&vec![0.5; dim]);
+                    core.record(&a, &ctx, (i as f64 * 0.618) % 1.0, 0.3);
+                }
+                let _ = core.select(&mut backend, &ctx, &mut rng2); // primes the incumbent
+                let r = bench(
+                    &format!("decide cluster 32-tenant d={d} kernel={label} m=256 window=30"),
+                    budget_s,
+                    || {
+                        let _ = core.select(&mut backend, &ctx, &mut rng2);
+                    },
+                );
+                if grouped {
+                    // The row must actually measure the grouped path.
+                    let stats = backend.cache_stats().unwrap();
+                    assert!(stats.grouped_queries > 0, "32-tenant grouped bench fell back");
+                }
+                col.add("decide", &r);
+            }
+        }
 
         // End-to-end control step: one bandit decision followed by the
         // 10 s microservice window it controls — the per-step cost a

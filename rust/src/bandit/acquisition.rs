@@ -3,6 +3,13 @@
 //!   - GP-UCB (Eq. 7)            -> Drone, Accordia
 //!   - Expected Improvement      -> Cherrypick
 //!   - safe LCB filtering (Alg.2)-> Drone private cloud
+//!
+//! All functions here are O(m) over the candidate batch; the expensive part
+//! of a decide is producing (mu, sigma). On warm coordinate-descent rounds
+//! with an additive kernel that posterior is served by the block-sparse
+//! grouped path in `gp_incremental` (cross-covariance recomputed only for
+//! the one factor slice a candidate perturbs), so the scores consumed here
+//! cost O(n·d_g) per candidate instead of O(n·d).
 
 use crate::util::stats::{norm_cdf, norm_pdf};
 

@@ -24,6 +24,7 @@
 //! global generator verbatim — bit-identical output, pinned by tests.
 
 use super::encode::{Action, ActionSpace, JointAction, JointSpace};
+use super::gp_incremental::CandidateBlock;
 use crate::util::rng::{Halton, Pcg64};
 
 /// Factor count above which `generate` switches from global Halton fan-out
@@ -41,6 +42,12 @@ pub struct CandidateGen {
     /// Coordinate-descent round counter: `round % n_factors` is the factor
     /// varied this epoch. Only advanced on wide (> threshold) spaces.
     round: u64,
+    /// Structure of the most recent batch, when it was a *warm*
+    /// coordinate-descent round (incumbent in slot 0, every other
+    /// candidate varying only the active factor's slice). `None` after
+    /// global-path or cold-start batches — those carry no block structure
+    /// the posterior could exploit.
+    last_block: Option<CandidateBlock>,
 }
 
 impl CandidateGen {
@@ -52,6 +59,7 @@ impl CandidateGen {
             local_sigma: 0.08,
             local_frac: 0.6,
             round: 0,
+            last_block: None,
         }
     }
 
@@ -72,6 +80,7 @@ impl CandidateGen {
         rng: &mut Pcg64,
     ) -> Vec<Vec<f64>> {
         let dim = self.space.dim();
+        self.last_block = None;
         let mut out: Vec<Vec<f64>> = Vec::with_capacity(m);
         if m == 0 {
             return out;
@@ -130,6 +139,12 @@ impl CandidateGen {
         };
         let inc_enc = incumbent.map(|a| self.space.encode(a));
         let base = inc_enc.clone().unwrap_or_else(|| vec![0.5; dim]);
+        // Warm rounds carry exploitable structure: slot 0 is the incumbent
+        // and every other candidate differs from it only inside the active
+        // slice — exactly what `CachedGp::query_block` wants. Cold starts
+        // (no incumbent) record nothing, keeping that path byte-identical.
+        self.last_block =
+            if inc_enc.is_some() { Some(CandidateBlock { active: (off, len) }) } else { None };
         let mut out: Vec<Vec<f64>> = Vec::with_capacity(m);
         if let Some(enc) = &inc_enc {
             out.push(enc.clone());
@@ -161,6 +176,15 @@ impl CandidateGen {
     /// round (tests/introspection; meaningless for narrow spaces).
     pub fn next_active_factor(&self) -> usize {
         (self.round as usize) % self.space.n_factors().max(1)
+    }
+
+    /// Structure of the most recent `generate` batch, when it was a warm
+    /// coordinate-descent round (`None` otherwise). Offsets are in encoded
+    /// action coordinates; with the context block appended after the
+    /// action encoding, they coincide with the additive kernel's group
+    /// coordinates over `[action || context]` rows.
+    pub fn last_block(&self) -> Option<CandidateBlock> {
+        self.last_block
     }
 
     /// Decode candidate `i` into concrete (per-factor clamped) actions.

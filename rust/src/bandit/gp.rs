@@ -36,7 +36,32 @@ pub enum KernelKind {
     /// totals `signal_var` and the prior-variance initialization of the
     /// posterior is unchanged. Distances (and therefore effective sample
     /// complexity) scale with the widest *group*, not the summed dimension.
-    Additive { groups: Vec<(usize, usize)> },
+    ///
+    /// `group_ls` optionally overrides the shared `GpHyper::lengthscale`
+    /// per group (`group_ls[g]` for `groups[g]`). `None` keeps one shared
+    /// lengthscale and is bit-identical to the pre-override kernel; the
+    /// incremental engine treats a change scoped to one group as a
+    /// partial invalidation (only that group's Gram contribution is
+    /// rebuilt — see `bandit::gp_incremental`).
+    Additive { groups: Vec<(usize, usize)>, group_ls: Option<Vec<f64>> },
+}
+
+impl KernelKind {
+    /// Additive kernel over `groups` with the shared lengthscale (no
+    /// per-group overrides) — the common construction everywhere outside
+    /// hyperparameter-adaptation code.
+    pub fn additive(groups: Vec<(usize, usize)>) -> Self {
+        KernelKind::Additive { groups, group_ls: None }
+    }
+
+    /// Effective lengthscale of additive group `g` under `hyp`: the
+    /// per-group override when present, the shared hyper otherwise.
+    pub fn group_lengthscale(group_ls: &Option<Vec<f64>>, g: usize, hyp: GpHyper) -> f64 {
+        match group_ls {
+            Some(ls) => ls[g],
+            None => hyp.lengthscale,
+        }
+    }
 }
 
 /// Per-factor additive layout for a joint space: one group per action-space
@@ -45,7 +70,7 @@ pub enum KernelKind {
 /// coincide analytically with `Full` (the parity property tests pin this).
 pub fn additive_for(space: &JointSpace) -> KernelKind {
     if space.n_factors() <= 1 {
-        return KernelKind::Additive { groups: vec![(0, space.dim() + CTX_DIM)] };
+        return KernelKind::additive(vec![(0, space.dim() + CTX_DIM)]);
     }
     let mut groups = Vec::with_capacity(space.n_factors() + 1);
     let mut off = 0;
@@ -54,40 +79,96 @@ pub fn additive_for(space: &JointSpace) -> KernelKind {
         off += f.dim();
     }
     groups.push((off, CTX_DIM));
-    KernelKind::Additive { groups }
+    KernelKind::additive(groups)
 }
 
 /// Covariance between row-major point sets a [n,d], b [m,d] under `kind`.
-/// `Full` delegates to `matern32` verbatim, so every existing caller that
-/// routes through here stays bit-identical.
+/// Allocating wrapper over `kernel_cov_into`; `Full` delegates to `matern32`
+/// verbatim, so every existing caller that routes through here stays
+/// bit-identical.
 pub fn kernel_cov(kind: &KernelKind, a: &[f64], b: &[f64], d: usize, hyp: GpHyper) -> Vec<f64> {
+    assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
+    let mut k = vec![0.0; (a.len() / d) * (b.len() / d)];
+    kernel_cov_into(&mut k, kind, a, b, d, hyp);
+    k
+}
+
+/// In-place `kernel_cov`: fills caller-owned `k` (length exactly n·m) so the
+/// hot loops — `CachedGp` append rows, per-decide cross-covariances — reuse
+/// one scratch buffer instead of allocating a fresh `Vec` per pair. Every
+/// entry is written (overwritten or zero-then-accumulated), so a dirty
+/// buffer is fine; the float-op sequence matches the historical allocating
+/// path exactly, which starts from `vec![0.0; n * m]`.
+pub fn kernel_cov_into(
+    k: &mut [f64],
+    kind: &KernelKind,
+    a: &[f64],
+    b: &[f64],
+    d: usize,
+    hyp: GpHyper,
+) {
     match kind {
-        KernelKind::Full => matern32(a, b, d, hyp.lengthscale, hyp.signal_var),
-        KernelKind::Additive { groups } => {
+        KernelKind::Full => matern32_into(k, a, b, d, hyp.lengthscale, hyp.signal_var),
+        KernelKind::Additive { groups, group_ls } => {
             assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
             assert!(!groups.is_empty(), "additive kernel needs at least one group");
+            if let Some(ls) = group_ls {
+                assert_eq!(ls.len(), groups.len(), "group_ls len != n_groups");
+            }
             let n = a.len() / d;
             let m = b.len() / d;
+            assert_eq!(k.len(), n * m);
             let sv = hyp.signal_var / groups.len() as f64;
-            let s = SQRT3 / hyp.lengthscale;
-            let mut k = vec![0.0; n * m];
-            for &(off, len) in groups {
-                assert!(len > 0 && off + len <= d, "group ({off},{len}) out of d={d}");
-                for i in 0..n {
-                    let ai = &a[i * d + off..i * d + off + len];
-                    for j in 0..m {
-                        let bj = &b[j * d + off..j * d + off + len];
-                        let mut sq = 0.0;
-                        for t in 0..len {
-                            let diff = ai[t] - bj[t];
-                            sq += diff * diff;
-                        }
-                        let r = s * sq.max(0.0).sqrt();
-                        k[i * m + j] += sv * (1.0 + r) * (-r).exp();
-                    }
-                }
+            k.fill(0.0);
+            for (g, &group) in groups.iter().enumerate() {
+                let ls = KernelKind::group_lengthscale(group_ls, g, hyp);
+                additive_group_cov_into(k, false, a, b, d, group, sv, ls);
             }
-            k
+        }
+    }
+}
+
+/// One additive group's Matern-3/2 term over feature slice
+/// `[off, off + len)` between row-major point sets a [n,d], b [m,d]:
+/// overwrites `k` when `init`, accumulates into it otherwise. This is the
+/// primitive the additive `kernel_cov` paths, the per-group Gram cache and
+/// the group-cached candidate scoring in `bandit::gp_incremental` are all
+/// built from — accumulating separately-produced group terms in group order
+/// onto a zeroed buffer is the exact float-op sequence of the monolithic
+/// additive loop, which is what keeps the cached per-group path
+/// bit-identical to it.
+#[allow(clippy::too_many_arguments)]
+pub fn additive_group_cov_into(
+    k: &mut [f64],
+    init: bool,
+    a: &[f64],
+    b: &[f64],
+    d: usize,
+    (off, len): (usize, usize),
+    sv: f64,
+    lengthscale: f64,
+) {
+    assert!(len > 0 && off + len <= d, "group ({off},{len}) out of d={d}");
+    let n = a.len() / d;
+    let m = b.len() / d;
+    assert_eq!(k.len(), n * m);
+    let s = SQRT3 / lengthscale;
+    for i in 0..n {
+        let ai = &a[i * d + off..i * d + off + len];
+        for j in 0..m {
+            let bj = &b[j * d + off..j * d + off + len];
+            let mut sq = 0.0;
+            for t in 0..len {
+                let diff = ai[t] - bj[t];
+                sq += diff * diff;
+            }
+            let r = s * sq.max(0.0).sqrt();
+            let term = sv * (1.0 + r) * (-r).exp();
+            if init {
+                k[i * m + j] = term;
+            } else {
+                k[i * m + j] += term;
+            }
         }
     }
 }
@@ -95,10 +176,26 @@ pub fn kernel_cov(kind: &KernelKind, a: &[f64], b: &[f64], d: usize, hyp: GpHype
 /// Matern-3/2 covariance between row-major point sets a [n,d], b [m,d].
 pub fn matern32(a: &[f64], b: &[f64], d: usize, lengthscale: f64, signal_var: f64) -> Vec<f64> {
     assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
+    let mut k = vec![0.0; (a.len() / d) * (b.len() / d)];
+    matern32_into(&mut k, a, b, d, lengthscale, signal_var);
+    k
+}
+
+/// In-place `matern32`: every entry of `k` (length exactly n·m) is
+/// overwritten.
+pub fn matern32_into(
+    k: &mut [f64],
+    a: &[f64],
+    b: &[f64],
+    d: usize,
+    lengthscale: f64,
+    signal_var: f64,
+) {
+    assert!(d > 0 && a.len() % d == 0 && b.len() % d == 0);
     let n = a.len() / d;
     let m = b.len() / d;
+    assert_eq!(k.len(), n * m);
     let s = SQRT3 / lengthscale;
-    let mut k = vec![0.0; n * m];
     for i in 0..n {
         let ai = &a[i * d..(i + 1) * d];
         for j in 0..m {
@@ -112,7 +209,6 @@ pub fn matern32(a: &[f64], b: &[f64], d: usize, lengthscale: f64, signal_var: f6
             k[i * m + j] = signal_var * (1.0 + r) * (-r).exp();
         }
     }
-    k
 }
 
 /// Left-looking Cholesky of a PD matrix (row-major n x n). Returns lower L.
@@ -424,7 +520,7 @@ mod tests {
         let z = rand_mat(&mut rng, n, d);
         let x = rand_mat(&mut rng, m, d);
         let hyp = GpHyper::default();
-        let kind = KernelKind::Additive { groups: vec![(0, d)] };
+        let kind = KernelKind::additive(vec![(0, d)]);
         assert_eq!(
             kernel_cov(&kind, &z, &x, d, hyp),
             matern32(&z, &x, d, hyp.lengthscale, hyp.signal_var)
@@ -443,10 +539,94 @@ mod tests {
         let d = 20;
         let z = rand_mat(&mut rng, 5, d);
         let hyp = GpHyper { signal_var: 2.5, ..Default::default() };
-        let kind = KernelKind::Additive { groups: vec![(0, 7), (7, 7), (14, 6)] };
+        let kind = KernelKind::additive(vec![(0, 7), (7, 7), (14, 6)]);
         let k = kernel_cov(&kind, &z, &z, d, hyp);
         for i in 0..5 {
             assert!((k[i * 5 + i] - 2.5).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn kernel_cov_into_matches_allocating_path_on_dirty_buffers() {
+        let mut rng = Pcg64::new(9);
+        let (n, m, d) = (7, 11, 13);
+        let z = rand_mat(&mut rng, n, d);
+        let x = rand_mat(&mut rng, m, d);
+        let hyp = GpHyper::default();
+        for kind in [
+            KernelKind::Full,
+            KernelKind::additive(vec![(0, 7), (7, 6)]),
+            KernelKind::Additive {
+                groups: vec![(0, 7), (7, 6)],
+                group_ls: Some(vec![0.4, 1.1]),
+            },
+        ] {
+            let mut buf = vec![f64::NAN; n * m]; // poison: every entry must be written
+            kernel_cov_into(&mut buf, &kind, &z, &x, d, hyp);
+            let fresh = kernel_cov(&kind, &z, &x, d, hyp);
+            assert_eq!(buf, fresh, "{kind:?}");
+            assert!(buf.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn group_lengthscale_overrides_default_to_shared_hyper() {
+        // None (and an override vector repeating the shared value) are
+        // bit-identical to the pre-override kernel; a genuinely different
+        // per-group value changes the covariance.
+        let mut rng = Pcg64::new(10);
+        let (n, m, d) = (6, 8, 13);
+        let z = rand_mat(&mut rng, n, d);
+        let x = rand_mat(&mut rng, m, d);
+        let hyp = GpHyper::default();
+        let groups = vec![(0, 7), (7, 6)];
+        let shared = kernel_cov(&KernelKind::additive(groups.clone()), &z, &x, d, hyp);
+        let uniform = KernelKind::Additive {
+            groups: groups.clone(),
+            group_ls: Some(vec![hyp.lengthscale; 2]),
+        };
+        assert_eq!(kernel_cov(&uniform, &z, &x, d, hyp), shared);
+        let skewed = KernelKind::Additive {
+            groups: groups.clone(),
+            group_ls: Some(vec![hyp.lengthscale, 2.0 * hyp.lengthscale]),
+        };
+        let k = kernel_cov(&skewed, &z, &x, d, hyp);
+        assert!(k.iter().zip(&shared).any(|(a, b)| a != b));
+        // k(x, x) still totals signal_var regardless of per-group scales.
+        let diag = kernel_cov(&skewed, &z, &z, d, hyp);
+        for i in 0..n {
+            assert!((diag[i * n + i] - hyp.signal_var).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn additive_group_terms_sum_to_kernel_cov() {
+        // Overwrite-then-accumulate per-group assembly (the Gram-cache
+        // op order) reproduces the monolithic additive covariance
+        // bit-for-bit.
+        let mut rng = Pcg64::new(11);
+        let (n, m, d) = (5, 9, 13);
+        let z = rand_mat(&mut rng, n, d);
+        let x = rand_mat(&mut rng, m, d);
+        let hyp = GpHyper { signal_var: 1.7, ..Default::default() };
+        let groups = vec![(0, 4), (4, 3), (7, 6)];
+        let kind = KernelKind::additive(groups.clone());
+        let sv = hyp.signal_var / groups.len() as f64;
+        let mut per_group = Vec::new();
+        for &g in &groups {
+            let mut term = vec![f64::NAN; n * m];
+            additive_group_cov_into(&mut term, true, &z, &x, d, g, sv, hyp.lengthscale);
+            per_group.push(term);
+        }
+        let mut sum = vec![0.0; n * m];
+        for term in &per_group {
+            for (acc, t) in sum.iter_mut().zip(term) {
+                *acc += t;
+            }
+        }
+        let reference = kernel_cov(&kind, &z, &x, d, hyp);
+        for (a, b) in sum.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -456,7 +636,7 @@ mod tests {
         let single = JointSpace::single(ActionSpace::default());
         assert_eq!(
             additive_for(&single),
-            KernelKind::Additive { groups: vec![(0, single.dim() + CTX_DIM)] }
+            KernelKind::additive(vec![(0, single.dim() + CTX_DIM)])
         );
         let js = JointSpace::new(vec![
             ActionSpace::hybrid_batch(4),
@@ -470,7 +650,7 @@ mod tests {
             (dims[0] + dims[1], dims[2]),
             (dims[0] + dims[1] + dims[2], CTX_DIM),
         ];
-        assert_eq!(additive_for(&js), KernelKind::Additive { groups: expected });
+        assert_eq!(additive_for(&js), KernelKind::additive(expected));
     }
 
     #[test]

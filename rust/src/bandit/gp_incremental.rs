@@ -45,6 +45,26 @@
 //! the signature of a collapsing Schur complement). Both are counted in
 //! [`CacheStats::drift_rebuilds`]; the standard campaign grids never
 //! trigger either condition, so their results are unchanged.
+//!
+//! **Block-sparse additive path.** Under `KernelKind::Additive` the factor
+//! additionally caches every *per-group* Gram row (`term_g(z_i, z_j)` for
+//! each group `g`, strict lower triangle), assembled into the summed
+//! kernel row bit-identically to the monolithic additive loop. Two things
+//! ride on that structure:
+//!
+//!   * **scoped invalidation** — a kernel change that only moves one
+//!     group's lengthscale (`group_ls`) recomputes that group's rows in
+//!     O(n²·d_g) and replays the factorization from the cached rows,
+//!     instead of recomputing every kernel entry; counted in
+//!     [`CacheStats::scoped_rebuilds`] + [`CachedGp::group_rebuilds`];
+//!   * **grouped candidate scoring** — a warm coordinate-descent batch
+//!     (every candidate equal to the incumbent outside one factor slice,
+//!     see [`CandidateBlock`]) splits the cross-covariance as
+//!     `k(z_i, x_c) = rest_i + k_j(z_{i,j}, x_{c,j})` with `rest_i`
+//!     computed once per decide — O(n·d) plus O(n·m·d_j) instead of
+//!     O(n·m·d) — then feeds the same fused `[y | K_zx]` solve; counted
+//!     in [`CacheStats::grouped_queries`] and pinned within 1e-8 of the
+//!     direct additive path (the sum is merely reassociated).
 
 use super::gp::{self, GpHyper, KernelKind};
 use super::window::SlidingWindow;
@@ -76,6 +96,26 @@ pub struct CacheStats {
     pub evictions: u64,
     /// Posterior evaluations served from the cached factor.
     pub queries: u64,
+    /// Scoped (per-group) invalidations: a per-group lengthscale change
+    /// recomputed only the changed groups' Gram rows and replayed the
+    /// factorization from cache, instead of a full kernel recompute.
+    /// Per-group detail lives in [`CachedGp::group_rebuilds`].
+    pub scoped_rebuilds: u64,
+    /// The subset of `queries` served by the block-sparse grouped scoring
+    /// path (coordinate-descent batches over an additive kernel).
+    pub grouped_queries: u64,
+}
+
+/// Structure of a warm coordinate-descent candidate batch: row 0 is the
+/// incumbent and every other row differs from it only inside the `active`
+/// `(offset, len)` feature slice. `CandidateGen` records this when it emits
+/// such a batch; the engine re-verifies the invariant bitwise before
+/// trusting it, so a stale or wrong block can cost speed, never accuracy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CandidateBlock {
+    /// Feature slice (in window coordinates) the batch varies; everything
+    /// outside it is bit-equal to row 0 across the whole batch.
+    pub active: (usize, usize),
 }
 
 /// The cached factor + the inputs it factors, synced to one window epoch.
@@ -101,6 +141,15 @@ struct State {
     /// Lower-triangular Cholesky factor, row-major with stride `cap`;
     /// the leading n x n block is live, everything above the diagonal 0.
     l: Vec<f64>,
+    /// Per-group Gram contributions (additive kernels only, else empty):
+    /// `kg[g * cap² + i * cap + j] = term_g(z_i, z_j)` for `j < i` — the
+    /// strict lower triangle of each group's kernel term, laid out like
+    /// `l`. Summing the cached rows in group order reproduces the additive
+    /// kernel row bit-for-bit, which is what lets a scoped (one-group)
+    /// invalidation replay the factorization without touching the other
+    /// groups' math. The diagonal is not stored: `term_g(z, z)` is exactly
+    /// `signal_var / n_groups` for every group.
+    kg: Vec<f64>,
 }
 
 /// Stateful incremental posterior engine. Create once, hold it across
@@ -115,11 +164,25 @@ pub struct CachedGp {
     /// default; set via [`CachedGp::with_kernel`] (or [`CachedGp::set_kernel`])
     /// for the additive per-factor path.
     kernel: KernelKind,
+    /// Per-group Gram-contribution rebuild counts (additive kernels):
+    /// entry `g` counts how many times group `g`'s rows were recomputed —
+    /// by a full rebuild (every group) or a scoped invalidation (only the
+    /// changed groups). Sized lazily to the widest kernel seen.
+    group_rebuilds: Vec<u64>,
+    /// Reusable cross-covariance buffer for candidate scoring (one
+    /// allocation per engine, not per query).
+    scratch: Vec<f64>,
 }
 
 impl Default for CachedGp {
     fn default() -> Self {
-        Self { state: None, stats: CacheStats::default(), kernel: KernelKind::Full }
+        Self {
+            state: None,
+            stats: CacheStats::default(),
+            kernel: KernelKind::Full,
+            group_rebuilds: Vec::new(),
+            scratch: Vec::new(),
+        }
     }
 }
 
@@ -129,9 +192,35 @@ fn hyp_eq(a: &GpHyper, b: &GpHyper) -> bool {
         && a.signal_var.to_bits() == b.signal_var.to_bits()
 }
 
+/// Indices of additive groups whose effective lengthscale differs bitwise
+/// between two kernels sharing the same group layout; `None` when the
+/// kernels differ structurally (variant or group slices), which demands a
+/// full rebuild.
+fn changed_groups(old: &KernelKind, new: &KernelKind, hyp: GpHyper) -> Option<Vec<usize>> {
+    let well_formed = |ls: &Option<Vec<f64>>, n: usize| ls.as_ref().map_or(true, |v| v.len() == n);
+    match (old, new) {
+        (
+            KernelKind::Additive { groups: ga, group_ls: la },
+            KernelKind::Additive { groups: gb, group_ls: lb },
+        ) if ga == gb && well_formed(la, ga.len()) && well_formed(lb, gb.len()) => Some(
+            (0..ga.len())
+                .filter(|&g| {
+                    KernelKind::group_lengthscale(la, g, hyp).to_bits()
+                        != KernelKind::group_lengthscale(lb, g, hyp).to_bits()
+                })
+                .collect(),
+        ),
+        _ => None,
+    }
+}
+
 impl State {
     fn new(w: &SlidingWindow, hyp: GpHyper, kernel: KernelKind) -> Self {
         let (cap, d) = (w.capacity(), w.dim());
+        let n_groups = match &kernel {
+            KernelKind::Additive { groups, .. } => groups.len(),
+            KernelKind::Full => 0,
+        };
         Self {
             hyp,
             kernel,
@@ -143,6 +232,7 @@ impl State {
             evictions_since_rebuild: 0,
             z: vec![0.0; cap * d],
             l: vec![0.0; cap * cap],
+            kg: vec![0.0; n_groups * cap * cap],
         }
     }
 
@@ -151,19 +241,43 @@ impl State {
         let (n, d, cap) = (self.n, self.d, self.cap);
         debug_assert_eq!(z_new.len(), d);
         debug_assert!(n < cap, "append beyond capacity");
-        // New kernel column against the stored inputs, then the new factor
-        // row via one forward solve L c = k.
-        let mut c = gp::kernel_cov(&self.kernel, &self.z[..n * d], z_new, d, self.hyp);
-        gp::solve_lower_strided(&self.l, cap, n, &mut c, 1);
+        // New kernel column against the stored inputs, written straight
+        // into the factor's next row (no per-append allocation), then the
+        // new factor row via one forward solve L c = k — the solve reads
+        // only rows 0..n, which live entirely in `head`.
+        let (head, tail) = self.l.split_at_mut(n * cap);
+        let row = &mut tail[..n];
+        match &self.kernel {
+            KernelKind::Additive { groups, group_ls } => {
+                // Per-group rows into the Gram cache first, then the sum —
+                // bit-identical to the monolithic additive loop (same
+                // per-entry accumulation order, starting from zero).
+                let sv = self.hyp.signal_var / groups.len() as f64;
+                let gsz = cap * cap;
+                for (g, &grp) in groups.iter().enumerate() {
+                    let ls = KernelKind::group_lengthscale(group_ls, g, self.hyp);
+                    let dst = &mut self.kg[g * gsz + n * cap..g * gsz + n * cap + n];
+                    gp::additive_group_cov_into(dst, true, &self.z[..n * d], z_new, d, grp, sv, ls);
+                }
+                row.fill(0.0);
+                for g in 0..groups.len() {
+                    let src = &self.kg[g * gsz + n * cap..g * gsz + n * cap + n];
+                    for (acc, t) in row.iter_mut().zip(src) {
+                        *acc += t;
+                    }
+                }
+            }
+            kind => gp::kernel_cov_into(row, kind, &self.z[..n * d], z_new, d, self.hyp),
+        }
+        gp::solve_lower_strided(head, cap, n, row, 1);
         // Diagonal: k(z,z) + noise - c·c, with the oracle's JITTER floor.
         // (Matern-3/2 at distance 0 is exactly signal_var — per-group terms
         // sum back to signal_var under the additive kernel.)
         let mut s = self.hyp.signal_var + self.hyp.noise_var;
-        for t in 0..n {
-            s -= c[t] * c[t];
+        for t in row.iter() {
+            s -= t * t;
         }
-        self.l[n * cap..n * cap + n].copy_from_slice(&c);
-        self.l[n * cap + n] = s.max(gp::JITTER).sqrt();
+        tail[n] = s.max(gp::JITTER).sqrt();
         self.z[n * d..(n + 1) * d].copy_from_slice(z_new);
         self.n += 1;
     }
@@ -199,8 +313,65 @@ impl State {
                 self.l.copy_within(src..src + i + 1, i * cap);
             }
             self.z.copy_within(d..n * d, 0);
+            // The per-group Gram rows slide with the factor: strict-lower
+            // row i+1 (entries j = 1..=i) becomes row i (entries 0..i).
+            // Givens only touches `l`, so the cached rows stay exact.
+            if !self.kg.is_empty() {
+                let gsz = cap * cap;
+                let n_groups = self.kg.len() / gsz;
+                for g in 0..n_groups {
+                    let b = g * gsz;
+                    for i in 1..m {
+                        let src = b + (i + 1) * cap + 1;
+                        self.kg.copy_within(src..src + i, b + i * cap);
+                    }
+                }
+            }
         }
         self.n = m;
+    }
+
+    /// Recompute one additive group's cached Gram rows for every live
+    /// window row — the scoped invalidation a per-group lengthscale change
+    /// triggers. O(n²·d_g); every other group's rows stay untouched.
+    fn recompute_group_rows(&mut self, g: usize, grp: (usize, usize), sv: f64, ls: f64) {
+        let (n, d, cap) = (self.n, self.d, self.cap);
+        let base = g * cap * cap;
+        for i in 1..n {
+            let dst = &mut self.kg[base + i * cap..base + i * cap + i];
+            let (prev, zi) = (&self.z[..i * d], &self.z[i * d..(i + 1) * d]);
+            gp::additive_group_cov_into(dst, true, prev, zi, d, grp, sv, ls);
+        }
+    }
+
+    /// Replay the factorization from the cached per-group rows: the same
+    /// float-op sequence as a full rebuild's append loop, minus every
+    /// kernel-row recomputation — so the resulting factor is bit-identical
+    /// to one rebuilt from scratch under the same kernel.
+    fn refactor_from_cached_rows(&mut self) {
+        let (n, cap) = (self.n, self.cap);
+        let gsz = cap * cap;
+        let n_groups = self.kg.len() / gsz.max(1);
+        for i in 0..n {
+            let (head, tail) = self.l.split_at_mut(i * cap);
+            let row = &mut tail[..i];
+            row.fill(0.0);
+            for g in 0..n_groups {
+                let src = &self.kg[g * gsz + i * cap..g * gsz + i * cap + i];
+                for (acc, t) in row.iter_mut().zip(src) {
+                    *acc += t;
+                }
+            }
+            gp::solve_lower_strided(head, cap, i, row, 1);
+            let mut s = self.hyp.signal_var + self.hyp.noise_var;
+            for t in row.iter() {
+                s -= t * t;
+            }
+            tail[i] = s.max(gp::JITTER).sqrt();
+        }
+        // A replayed factorization is as fresh as a rebuilt one: reset the
+        // drift budget.
+        self.evictions_since_rebuild = 0;
     }
 }
 
@@ -234,6 +405,15 @@ impl CachedGp {
         }
         self.state = Some(st);
         self.stats.rebuilds += 1;
+        // A full rebuild recomputes every group's Gram contribution.
+        if let KernelKind::Additive { groups, .. } = &self.kernel {
+            if self.group_rebuilds.len() < groups.len() {
+                self.group_rebuilds.resize(groups.len(), 0);
+            }
+            for c in self.group_rebuilds[..groups.len()].iter_mut() {
+                *c += 1;
+            }
+        }
     }
 
     /// Bring the cached factor up to date with `window` under `hyp`,
@@ -242,6 +422,47 @@ impl CachedGp {
     /// may force a rebuild anyway: every [`DRIFT_REBUILD_EVERY`] evictions,
     /// or as soon as a live factor diagonal nears the JITTER clamp.
     pub fn sync(&mut self, window: &SlidingWindow, hyp: GpHyper) {
+        // Scoped invalidation first: a kernel that differs from the cached
+        // one only in per-group lengthscales (same groups, same window
+        // identity and hypers, journal still replayable) rebuilds just the
+        // changed groups' Gram rows and replays the factorization — then
+        // falls through to the ordinary incremental journal replay below.
+        let scoped = match &self.state {
+            Some(s)
+                if s.kernel != self.kernel
+                    && s.window_id == window.id()
+                    && s.d == window.dim()
+                    && s.cap == window.capacity()
+                    && hyp_eq(&s.hyp, &hyp)
+                    && window.epoch() >= s.epoch
+                    && (window.epoch() - s.epoch) as usize <= window.len() =>
+            {
+                changed_groups(&s.kernel, &self.kernel, hyp)
+            }
+            _ => None,
+        };
+        if let Some(changed) = scoped {
+            let s = self.state.as_mut().expect("scoped sync implies state");
+            if let (false, KernelKind::Additive { groups, group_ls }) =
+                (changed.is_empty(), &self.kernel)
+            {
+                if self.group_rebuilds.len() < groups.len() {
+                    self.group_rebuilds.resize(groups.len(), 0);
+                }
+                let sv = hyp.signal_var / groups.len() as f64;
+                for &g in &changed {
+                    let ls = KernelKind::group_lengthscale(group_ls, g, hyp);
+                    s.recompute_group_rows(g, groups[g], sv, ls);
+                    self.group_rebuilds[g] += 1;
+                }
+                s.refactor_from_cached_rows();
+                self.stats.scoped_rebuilds += 1;
+            }
+            // Equal effective lengthscales (e.g. None vs an explicit
+            // uniform vector): the factor is already exact — just adopt
+            // the new kernel value.
+            s.kernel = self.kernel.clone();
+        }
         let replayable = match &self.state {
             None => false,
             Some(s) => {
@@ -305,13 +526,16 @@ impl CachedGp {
         let mut mu = vec![0.0; m];
         let mut var = vec![s.hyp.signal_var; m];
         if n > 0 {
-            let kzx = gp::kernel_cov(&s.kernel, &s.z[..n * d], x, d, s.hyp);
+            // Cross-covariance into the engine's reusable scratch buffer
+            // (same float ops as the allocating path).
+            self.scratch.resize(n * m, 0.0);
+            gp::kernel_cov_into(&mut self.scratch, &s.kernel, &s.z[..n * d], x, d, s.hyp);
             // Fused RHS [y | K_zx] -> one forward solve, as in the oracle.
             let r = 1 + m;
             let mut rhs = vec![0.0; n * r];
             for i in 0..n {
                 rhs[i * r] = ys[i];
-                rhs[i * r + 1..(i + 1) * r].copy_from_slice(&kzx[i * m..(i + 1) * m]);
+                rhs[i * r + 1..(i + 1) * r].copy_from_slice(&self.scratch[i * m..(i + 1) * m]);
             }
             gp::solve_lower_strided(&s.l, s.cap, n, &mut rhs, r);
             for i in 0..n {
@@ -327,6 +551,108 @@ impl CachedGp {
         (mu, sigma)
     }
 
+    /// [`CachedGp::query`] with optional batch structure: when the batch
+    /// is a warm coordinate-descent block over an additive kernel, the
+    /// cross-covariance of candidate `c` splits as
+    /// `k(z_i, x_c) = rest_i + k_j(z_{i,j}, x_{c,j})` with `rest_i` (the
+    /// incumbent's cross-covariance minus the active group) shared by the
+    /// whole batch — O(n·d) once plus O(n·m·d_j) per batch instead of
+    /// O(n·m·d) — fused into the same `[y | K_zx]` solve. Falls back to
+    /// the direct path whenever the structure doesn't hold, so a wrong or
+    /// stale block can cost speed, never accuracy.
+    pub fn query_block(
+        &mut self,
+        ys: &[f64],
+        x: &[f64],
+        block: Option<&CandidateBlock>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        if let Some(b) = block {
+            if let Some(out) = self.try_query_grouped(ys, x, b.active) {
+                return out;
+            }
+        }
+        self.query(ys, x)
+    }
+
+    /// The grouped scoring fast path; `None` when any precondition fails
+    /// (non-additive kernel, empty factor, the active slice isn't a group,
+    /// or any candidate differs from row 0 outside the slice).
+    fn try_query_grouped(
+        &mut self,
+        ys: &[f64],
+        x: &[f64],
+        active: (usize, usize),
+    ) -> Option<(Vec<f64>, Vec<f64>)> {
+        let s = self.state.as_ref()?;
+        let (n, d) = (s.n, s.d);
+        if n == 0 || x.len() % d != 0 {
+            return None;
+        }
+        let m = x.len() / d;
+        if m == 0 {
+            return None;
+        }
+        let (groups, group_ls) = match &s.kernel {
+            KernelKind::Additive { groups, group_ls } => (groups, group_ls),
+            KernelKind::Full => return None,
+        };
+        let ga = groups.iter().position(|&g| g == active)?;
+        let (off, len) = active;
+        // Verify the coordinate-descent invariant bitwise: every candidate
+        // equals row 0 (the incumbent) outside the active slice. O(m·d)
+        // u64 compares — cheap next to the kernel math it licenses
+        // skipping, and what makes a wrong block harmless.
+        let base = &x[..d];
+        for c in 1..m {
+            let row = &x[c * d..(c + 1) * d];
+            for t in (0..off).chain(off + len..d) {
+                if row[t].to_bits() != base[t].to_bits() {
+                    return None;
+                }
+            }
+        }
+        assert_eq!(ys.len(), n, "targets must align with the synced window");
+        self.stats.queries += 1;
+        self.stats.grouped_queries += 1;
+        let sv = s.hyp.signal_var / groups.len() as f64;
+        // The incumbent's cross-covariance minus the active group — one
+        // O(n·d) pass shared by every candidate.
+        let mut rest = vec![0.0; n];
+        for (g, &grp) in groups.iter().enumerate() {
+            if g != ga {
+                let ls = KernelKind::group_lengthscale(group_ls, g, s.hyp);
+                gp::additive_group_cov_into(&mut rest, false, &s.z[..n * d], base, d, grp, sv, ls);
+            }
+        }
+        // The active group's term per (window row, candidate): the only
+        // O(n·m) kernel work, over d_j dims instead of d.
+        let ls = KernelKind::group_lengthscale(group_ls, ga, s.hyp);
+        self.scratch.resize(n * m, 0.0);
+        gp::additive_group_cov_into(&mut self.scratch, true, &s.z[..n * d], x, d, active, sv, ls);
+        // Fused RHS [y | K_zx] -> one forward solve, as in the direct path.
+        let r = 1 + m;
+        let mut rhs = vec![0.0; n * r];
+        for i in 0..n {
+            rhs[i * r] = ys[i];
+            let ri = rest[i];
+            for c in 0..m {
+                rhs[i * r + 1 + c] = ri + self.scratch[i * m + c];
+            }
+        }
+        gp::solve_lower_strided(&s.l, s.cap, n, &mut rhs, r);
+        let mut mu = vec![0.0; m];
+        let mut var = vec![s.hyp.signal_var; m];
+        for i in 0..n {
+            let w = rhs[i * r];
+            let v_row = &rhs[i * r + 1..(i + 1) * r];
+            for c in 0..m {
+                mu[c] += v_row[c] * w;
+                var[c] -= v_row[c] * v_row[c];
+            }
+        }
+        Some((mu, var.iter().map(|&v| v.max(0.0).sqrt()).collect()))
+    }
+
     /// Sync + query in one call — the decision hot path's entry point.
     pub fn posterior(
         &mut self,
@@ -337,6 +663,27 @@ impl CachedGp {
     ) -> (Vec<f64>, Vec<f64>) {
         self.sync(window, hyp);
         self.query(ys, x)
+    }
+
+    /// Sync + structured query — the block-aware decide entry point.
+    pub fn posterior_block(
+        &mut self,
+        window: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        hyp: GpHyper,
+        block: Option<&CandidateBlock>,
+    ) -> (Vec<f64>, Vec<f64>) {
+        self.sync(window, hyp);
+        self.query_block(ys, x, block)
+    }
+
+    /// Per-group Gram rebuild counts (see [`CacheStats::scoped_rebuilds`]):
+    /// entry `g` counts recomputations of group `g`'s cached rows, whether
+    /// from full rebuilds (all groups) or scoped invalidations (changed
+    /// groups only). Empty until an additive kernel builds a factor.
+    pub fn group_rebuilds(&self) -> &[u64] {
+        &self.group_rebuilds
     }
 
     /// Current factor size (for tests/introspection).
@@ -605,7 +952,7 @@ mod tests {
     fn additive_kernel_engine_matches_kernel_oracle() {
         let mut rng = Pcg64::new(23);
         let d = 6;
-        let kind = KernelKind::Additive { groups: vec![(0, 2), (2, 2), (4, 2)] };
+        let kind = KernelKind::additive(vec![(0, 2), (2, 2), (4, 2)]);
         let cap = 8;
         let mut w = SlidingWindow::new(cap, d);
         let mut eng = CachedGp::with_kernel(kind.clone());
@@ -658,5 +1005,111 @@ mod tests {
         }
         assert_eq!(eng.stats.rebuilds, 1);
         assert_eq!(eng.stats.queries, 18);
+    }
+
+    /// Scoped invalidation: changing one group's lengthscale recomputes
+    /// only that group's cached Gram rows (plus a factor replay) instead of
+    /// a counted full rebuild, and the refactored posterior matches a
+    /// from-scratch engine under the new kernel to machine precision (the
+    /// replay performs the same op sequence over bit-exact cached rows).
+    #[test]
+    fn scoped_group_lengthscale_change_avoids_full_rebuild() {
+        let mut rng = Pcg64::new(31);
+        let d = 6;
+        let groups = vec![(0usize, 2usize), (2, 2), (4, 2)];
+        let cap = 8;
+        let hyp = GpHyper::default();
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::with_kernel(KernelKind::additive(groups.clone()));
+        let x: Vec<f64> = (0..4 * d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        for _ in 0..12 {
+            w.push(rand_obs(&mut rng, d));
+            let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+            eng.posterior(&w, &ys, &x, hyp);
+        }
+        assert_eq!(eng.stats.rebuilds, 1);
+        assert_eq!(eng.group_rebuilds(), &[1, 1, 1]);
+        // Retune group 1 only; groups 0 and 2 keep the shared default.
+        let skewed = KernelKind::Additive {
+            groups: groups.clone(),
+            group_ls: Some(vec![hyp.lengthscale, 0.6, hyp.lengthscale]),
+        };
+        eng.set_kernel(skewed.clone());
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        let (mu_s, sig_s) = eng.posterior(&w, &ys, &x, hyp);
+        assert_eq!(eng.stats.rebuilds, 1, "no counted full rebuild");
+        assert_eq!(eng.stats.scoped_rebuilds, 1);
+        assert_eq!(eng.group_rebuilds(), &[1, 2, 1], "only group 1 recomputed");
+        let mut fresh = CachedGp::with_kernel(skewed);
+        let (mu_f, sig_f) = fresh.posterior(&w, &ys, &x, hyp);
+        assert!(max_abs_diff(&mu_s, &mu_f) < 1e-12, "scoped refactor vs fresh build mu");
+        assert!(max_abs_diff(&sig_s, &sig_f) < 1e-12, "scoped refactor vs fresh build sigma");
+        // An equal-effective-lengthscale switch (explicit uniform vector vs
+        // None) adopts the kernel with zero factor work.
+        let uniform = KernelKind::Additive {
+            groups: groups.clone(),
+            group_ls: Some(vec![hyp.lengthscale; 3]),
+        };
+        let mut eng2 = CachedGp::with_kernel(KernelKind::additive(groups));
+        eng2.posterior(&w, &ys, &x, hyp);
+        eng2.set_kernel(uniform);
+        eng2.posterior(&w, &ys, &x, hyp);
+        assert_eq!(eng2.stats.rebuilds, 1, "kernel adopted without a rebuild");
+        assert_eq!(eng2.stats.scoped_rebuilds, 0, "no factor work either");
+        assert_eq!(eng2.group_rebuilds(), &[1, 1, 1]);
+    }
+
+    /// The grouped scoring fast path agrees with direct scoring on a
+    /// coordinate-descent-shaped batch, and falls back (with identical
+    /// results) whenever the block structure doesn't hold.
+    #[test]
+    fn grouped_query_matches_direct_and_falls_back_safely() {
+        let mut rng = Pcg64::new(32);
+        let d = 6;
+        let groups = vec![(0usize, 2usize), (2, 2), (4, 2)];
+        let hyp = GpHyper::default();
+        let mut w = SlidingWindow::new(10, d);
+        let mut eng = CachedGp::with_kernel(KernelKind::additive(groups));
+        for _ in 0..14 {
+            w.push(rand_obs(&mut rng, d));
+        }
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        // Row 0 is the incumbent; rows 1..m perturb only slice [2, 4).
+        let base: Vec<f64> = (0..d).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let m = 6;
+        let mut x = Vec::with_capacity(m * d);
+        x.extend_from_slice(&base);
+        for _ in 1..m {
+            let mut row = base.clone();
+            row[2] = rng.uniform(-1.0, 1.0);
+            row[3] = rng.uniform(-1.0, 1.0);
+            x.extend_from_slice(&row);
+        }
+        let block = CandidateBlock { active: (2, 2) };
+        let (mu_g, sig_g) = eng.posterior_block(&w, &ys, &x, hyp, Some(&block));
+        assert_eq!(eng.stats.grouped_queries, 1);
+        let (mu_d, sig_d) = eng.query(&ys, &x);
+        assert!(max_abs_diff(&mu_g, &mu_d) < 1e-8, "grouped vs direct mu");
+        assert!(max_abs_diff(&sig_g, &sig_d) < 1e-8, "grouped vs direct sigma");
+        // A slice that is not a kernel group -> silent fallback to direct.
+        let bad = CandidateBlock { active: (1, 2) };
+        let (mu_f, sig_f) = eng.query_block(&ys, &x, Some(&bad));
+        assert_eq!(eng.stats.grouped_queries, 1, "fallback must not count as grouped");
+        assert_eq!(mu_f, mu_d);
+        assert_eq!(sig_f, sig_d);
+        // A batch violating the row-0 invariant inside a valid slice also
+        // falls back: perturb a coordinate outside the active group.
+        let mut x_bad = x.clone();
+        x_bad[d] += 0.25; // row 1, coordinate 0 (group 0) differs from base
+        let (mu_b, _) = eng.query_block(&ys, &x_bad, Some(&block));
+        let (mu_b_direct, _) = eng.query(&ys, &x_bad);
+        assert_eq!(eng.stats.grouped_queries, 1);
+        assert_eq!(mu_b, mu_b_direct);
+        // A Full-kernel engine never takes the grouped path.
+        let mut full = CachedGp::new();
+        let (mu_full, _) = full.posterior_block(&w, &ys, &x, hyp, Some(&block));
+        assert_eq!(full.stats.grouped_queries, 0);
+        let (mu_full_direct, _) = full.query(&ys, &x);
+        assert_eq!(mu_full, mu_full_direct);
     }
 }

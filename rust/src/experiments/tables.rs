@@ -337,8 +337,9 @@ pub fn table5(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
 // ---------------------------------------------------------------------------
 
 /// Tenant counts the scaling sweep runs at; 12 is the cluster suite's
-/// headline cell.
-pub const TABLE6_TENANTS: &[usize] = &[2, 4, 8, 12];
+/// headline cell, 32 is the block-sparse decide path's stress cell (a
+/// 32-factor joint space, GP input in the hundreds of dims).
+pub const TABLE6_TENANTS: &[usize] = &[2, 4, 8, 12, 32];
 
 /// Decision periods per table 6 scenario at a given `--scale` (shared
 /// with CI's prebuild step) — shorter than table 5's because every step
@@ -363,11 +364,12 @@ pub fn table6_env(tenants: usize, steps: u64) -> EnvKind {
 
 /// The many-tenant scaling measurement: the PR-5 full-kernel drone and
 /// the additive-kernel + coordinate-descent drone run the cluster
-/// scenario at 2/4/8/12 tenants, with the joint-aware reactive baseline
-/// as the control. At low factor counts the two drones coincide (the
-/// additive path only engages past 3 factors and the additive kernel's
-/// extra structure is mild); the spread at 8 and 12 tenants is what the
-/// per-factor machinery buys.
+/// scenario at 2/4/8/12/32 tenants, with the joint-aware reactive
+/// baseline as the control. At low factor counts the two drones coincide
+/// (the additive path only engages past 3 factors and the additive
+/// kernel's extra structure is mild); the spread at 8+ tenants is what
+/// the per-factor machinery buys, and the 32-tenant cell is served by the
+/// block-sparse group-cached decide path.
 pub fn table6(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> anyhow::Result<()> {
     let steps = table6_steps(opts.scale);
     let policies = ["k8s-hpa-joint", "drone", "drone-additive"];

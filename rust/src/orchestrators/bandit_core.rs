@@ -58,6 +58,11 @@ pub struct BanditCore {
     pub stickiness: Option<f64>,
     pub incumbent: Option<JointAction>,
     pub t: u64,
+    /// Pass warm coordinate-descent block structure to the backend so the
+    /// cached additive engine can take the group-sparse scoring path. On
+    /// by default; off prices the PR-8 additive path for A/B benchmarks
+    /// (results agree within solver reassociation noise either way).
+    pub block_scoring: bool,
 }
 
 impl BanditCore {
@@ -87,6 +92,7 @@ impl BanditCore {
             stickiness: None,
             incumbent: None,
             t: 0,
+            block_scoring: true,
         }
     }
 
@@ -142,7 +148,16 @@ impl BanditCore {
             x.extend_from_slice(&ctx_arr);
         }
         let n_pad = padded_n(self.cfg.window);
-        let (mu, sigma) = backend.posterior_window_kernel(
+        // Warm coordinate-descent batches carry block structure the cached
+        // additive engine can exploit (slot 0 = incumbent, one varying
+        // factor slice). The engine re-verifies the invariant bitwise and
+        // falls back to direct scoring on any mismatch, so passing a stale
+        // block (e.g. posterior on a hand-built batch) is harmless.
+        let block = match &self.kernel {
+            KernelKind::Additive { .. } if self.block_scoring => self.candgen.last_block(),
+            _ => None,
+        };
+        let (mu, sigma) = backend.posterior_window_kernel_block(
             &self.window,
             &y_scaled,
             &x,
@@ -150,6 +165,7 @@ impl BanditCore {
             self.hyp,
             n_pad,
             &self.kernel,
+            block.as_ref(),
         )?;
         Ok((
             mu.iter().map(|v| v * y_std + y_mean).collect(),
@@ -490,6 +506,14 @@ mod tests {
             }
             a = c.select(&mut cached, &ctx, &mut rng);
         }
+        // Warm coordinate-descent rounds over the additive kernel must ride
+        // the block-sparse grouped scoring path (and still match the oracle
+        // above) — the cold start and any structure mismatch fall back.
+        let stats = cached.cache_stats().unwrap();
+        assert!(
+            stats.grouped_queries > 0,
+            "warm rounds must take the grouped path, got {stats:?}"
+        );
     }
 
     #[test]

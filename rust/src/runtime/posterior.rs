@@ -26,7 +26,7 @@ use anyhow::anyhow;
 #[cfg(feature = "pjrt")]
 use super::client::XlaRuntime;
 use crate::bandit::gp::{self, GpHyper, KernelKind};
-use crate::bandit::gp_incremental::{CacheStats, CachedGp};
+use crate::bandit::gp_incremental::{CacheStats, CachedGp, CandidateBlock};
 use crate::bandit::window::SlidingWindow;
 
 pub struct PosteriorRequest<'a> {
@@ -206,6 +206,28 @@ impl Backend {
         n_pad: usize,
         kernel: &KernelKind,
     ) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.posterior_window_kernel_block(window, ys, x, d, hyp, n_pad, kernel, None)
+    }
+
+    /// [`Backend::posterior_window_kernel`] with optional candidate-batch
+    /// structure: when the batch is a warm coordinate-descent block (see
+    /// `bandit::gp_incremental::CandidateBlock`) and the cached engine
+    /// serves an additive kernel, scoring takes the block-sparse grouped
+    /// path — O(n·m·d_j) cross-covariance instead of O(n·m·d). Every other
+    /// combination ignores the block, so `Full`-kernel and stateless
+    /// routes stay exactly as before.
+    #[allow(clippy::too_many_arguments)]
+    pub fn posterior_window_kernel_block(
+        &mut self,
+        window: &SlidingWindow,
+        ys: &[f64],
+        x: &[f64],
+        d: usize,
+        hyp: GpHyper,
+        n_pad: usize,
+        kernel: &KernelKind,
+        block: Option<&CandidateBlock>,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
         if matches!(kernel, KernelKind::Full) {
             if let Backend::NativeCached(c) = self {
                 if c.kernel() != kernel {
@@ -219,7 +241,7 @@ impl Backend {
                 if c.kernel() != kernel {
                     c.set_kernel(kernel.clone());
                 }
-                Ok(c.posterior(window, ys, x, hyp))
+                Ok(c.posterior_block(window, ys, x, hyp, block))
             }
             _ => {
                 #[cfg(feature = "pjrt")]
@@ -312,7 +334,7 @@ mod tests {
     fn kernel_entry_point_full_identity_and_additive_parity() {
         let mut rng = Pcg64::new(4);
         let (cap, d, m) = (5usize, 6usize, 6usize);
-        let kind = KernelKind::Additive { groups: vec![(0, 3), (3, 3)] };
+        let kind = KernelKind::additive(vec![(0, 3), (3, 3)]);
         let mut window = SlidingWindow::new(cap, d);
         let mut cached = Backend::native_cached();
         let mut plain = Backend::native_cached();

@@ -550,7 +550,7 @@ fn prop_additive_kernel_matches_full_on_single_factor() {
         let kind = additive_for(&js);
         assert_eq!(
             kind,
-            KernelKind::Additive { groups: vec![(0, d)] },
+            KernelKind::additive(vec![(0, d)]),
             "case {case}: single factor must collapse to one whole-input group"
         );
         let cap = 4 + rng.below(12); // 4..=15
@@ -599,6 +599,120 @@ fn prop_additive_kernel_matches_full_on_single_factor() {
         // factorization — the additive kernel keeps the incremental path.
         assert_eq!(full.stats.rebuilds, 1, "case {case}: full refactorized");
         assert_eq!(additive.stats.rebuilds, 1, "case {case}: additive refactorized");
+    }
+}
+
+/// Tentpole invariant (issue 9): the group-cached candidate scoring path —
+/// cross-covariance recomputed only for the one factor slice a candidate
+/// perturbs — must agree with direct additive recomputation to 1e-8 on mu
+/// AND sigma over 1-, 3-, 12- and 32-factor spaces; and a lengthscale
+/// retune scoped to one group must invalidate only that group's cached
+/// Gram rows (a scoped rebuild), never a counted full rebuild.
+#[test]
+fn prop_grouped_scoring_matches_direct_across_factor_counts() {
+    use drone::bandit::gp::{additive_for, KernelKind};
+    use drone::bandit::gp_incremental::{CachedGp, CandidateBlock};
+    use drone::bandit::window::{Observation, SlidingWindow};
+    let mut rng = Pcg64::new(910);
+    let factor_pool = [
+        ActionSpace::default(),
+        ActionSpace::microservices(4),
+        ActionSpace::hybrid_batch(4),
+        ActionSpace::microservices(3),
+    ];
+    for &n_factors in &[1usize, 3, 12, 32] {
+        let js = JointSpace::new(
+            (0..n_factors).map(|i| factor_pool[i % factor_pool.len()].clone()).collect(),
+        );
+        let d = js.joint_dim();
+        let kind = additive_for(&js);
+        let groups = match &kind {
+            KernelKind::Additive { groups, .. } => groups.clone(),
+            KernelKind::Full => unreachable!("additive_for always returns Additive"),
+        };
+        let cap = 12;
+        let hyp = GpHyper::default();
+        let mut w = SlidingWindow::new(cap, d);
+        let mut eng = CachedGp::with_kernel(kind);
+        for _ in 0..cap + 4 {
+            w.push(Observation {
+                z: (0..d).map(|_| rng.uniform(-1.5, 1.5)).collect(),
+                y: rng.normal(),
+                y_resource: rng.f64(),
+            });
+        }
+        let ys: Vec<f64> = w.iter().map(|o| o.y).collect();
+        // Coordinate-descent-shaped batches: one active group per round,
+        // every candidate bitwise-equal to row 0 outside the active slice.
+        for round in 0..6 {
+            let ga = rng.below(groups.len());
+            let (off, len) = groups[ga];
+            let m = 2 + rng.below(12);
+            let base: Vec<f64> = (0..d).map(|_| rng.uniform(-1.5, 1.5)).collect();
+            let mut x = base.clone();
+            for _ in 1..m {
+                let mut row = base.clone();
+                for t in off..off + len {
+                    row[t] = rng.uniform(-1.5, 1.5);
+                }
+                x.extend_from_slice(&row);
+            }
+            let block = CandidateBlock { active: (off, len) };
+            let (mu_g, sig_g) = eng.posterior_block(&w, &ys, &x, hyp, Some(&block));
+            let (mu_d, sig_d) = eng.query(&ys, &x);
+            for c in 0..m {
+                assert!(
+                    (mu_g[c] - mu_d[c]).abs() < 1e-8,
+                    "{n_factors} factors round {round} mu[{c}]: grouped {} vs direct {}",
+                    mu_g[c],
+                    mu_d[c]
+                );
+                assert!(
+                    (sig_g[c] - sig_d[c]).abs() < 1e-8,
+                    "{n_factors} factors round {round} sigma[{c}]: grouped {} vs direct {}",
+                    sig_g[c],
+                    sig_d[c]
+                );
+            }
+        }
+        assert_eq!(
+            eng.stats.grouped_queries, 6,
+            "{n_factors} factors: every structured batch must take the grouped path"
+        );
+        assert_eq!(eng.stats.rebuilds, 1, "{n_factors} factors: one build serves all rounds");
+
+        // Scoped hyperparameter invalidation: retune one group's
+        // lengthscale and require a scoped rebuild of just that group.
+        let target = rng.below(groups.len());
+        let mut ls = vec![hyp.lengthscale; groups.len()];
+        ls[target] = hyp.lengthscale * 0.5;
+        eng.set_kernel(KernelKind::Additive { groups: groups.clone(), group_ls: Some(ls) });
+        let xq: Vec<f64> = (0..3 * d).map(|_| rng.uniform(-1.5, 1.5)).collect();
+        let (mu_s, sig_s) = eng.posterior(&w, &ys, &xq, hyp);
+        assert_eq!(eng.stats.rebuilds, 1, "{n_factors} factors: retune must not full-rebuild");
+        assert_eq!(eng.stats.scoped_rebuilds, 1, "{n_factors} factors: one scoped rebuild");
+        for (g, &c) in eng.group_rebuilds().iter().enumerate() {
+            let want = if g == target { 2 } else { 1 };
+            assert_eq!(c, want, "{n_factors} factors: group {g} rebuild count");
+        }
+        // The scoped refactor must match a from-scratch engine under the
+        // retuned kernel (same op sequence over bit-exact cached rows).
+        let mut fresh = CachedGp::with_kernel(eng.kernel().clone());
+        let (mu_f, sig_f) = fresh.posterior(&w, &ys, &xq, hyp);
+        for c in 0..3 {
+            assert!(
+                (mu_s[c] - mu_f[c]).abs() < 1e-8,
+                "{n_factors} factors scoped mu[{c}]: {} vs fresh {}",
+                mu_s[c],
+                mu_f[c]
+            );
+            assert!(
+                (sig_s[c] - sig_f[c]).abs() < 1e-8,
+                "{n_factors} factors scoped sigma[{c}]: {} vs fresh {}",
+                sig_s[c],
+                sig_f[c]
+            );
+        }
     }
 }
 
