@@ -564,6 +564,134 @@ fn perf_benches(sys: &SystemConfig, budget_s: f64, col: &mut Collector) {
 }
 
 // ---------------------------------------------------------------------------
+// campaign-store benches (sharded jsonl + index)
+// ---------------------------------------------------------------------------
+
+/// The persistence hot paths at campaign scale: a 10k-scenario
+/// micro-public shard next to a 64-scenario batch-public shard, so the
+/// lazy-read row can show a small-suite read that never pays for the big
+/// shard. All fixtures are synthetic one-step outcomes fabricated through
+/// `CampaignStore::merge` — no environment executes here.
+fn store_benches(sys: &SystemConfig, budget_s: f64, col: &mut Collector) {
+    use drone::experiments::campaign::{
+        summarize, EnvKind, Scenario, ScenarioOutcome, StepRow, Suite,
+    };
+    use drone::experiments::{CampaignStore, ExecPolicy};
+
+    const BIG: u64 = 10_000; // micro-public shard records
+    const SMALL: u64 = 64; // batch-public shard records
+
+    println!("\n== perf: campaign store (sharded jsonl + index, {BIG}-scenario scale) ==");
+
+    let micro_env = || EnvKind::Micro {
+        steps: 3,
+        base_rps: 60.0,
+        amplitude_rps: 140.0,
+        fluid_threshold_rps: None,
+    };
+    let batch_env = || EnvKind::Batch {
+        workload: drone::apps::batch::BatchWorkload::SparkPi,
+        steps: 4,
+        stress: 0.0,
+    };
+    let synth = |suite: Suite, env: EnvKind, seed: u64| -> ScenarioOutcome {
+        let records = vec![StepRow {
+            perf_raw: 1.25,
+            perf_score: 0.5,
+            cost: 0.01,
+            ram_alloc_mb: 512.0,
+            resource_frac: 0.25,
+            offered: 10,
+            ..Default::default()
+        }];
+        let summary = summarize(&records);
+        ScenarioOutcome {
+            scenario: Scenario::request(suite, env, "k8s-hpa", seed),
+            summary,
+            records,
+        }
+    };
+    let no_exec = ExecPolicy { no_exec: true, jobs: 1, ..Default::default() };
+
+    // Fixture store: built once, outside timing, in its own scratch dir.
+    let root = std::env::temp_dir().join(format!("drone-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let dir = root.join("campaign");
+    {
+        let mut store = CampaignStore::open(&dir);
+        let mut fixtures: Vec<ScenarioOutcome> = (0..BIG)
+            .map(|s| synth(Suite::MicroPublic, micro_env(), s))
+            .collect();
+        fixtures.extend((0..SMALL).map(|s| synth(Suite::BatchPublic, batch_env(), s)));
+        let added = store.merge(fixtures, sys).expect("seeding bench store");
+        assert_eq!(added as u64, BIG + SMALL, "bench fixture store incomplete");
+    }
+
+    // Opening reads only the small index — never a shard.
+    let r = bench(&format!("store open index-only @{}k", BIG / 1000), budget_s, || {
+        let store = CampaignStore::open(&dir);
+        assert_eq!(store.len() as u64, BIG + SMALL);
+    });
+    col.add("store", &r);
+
+    // Cold read of the big shard: one ensure request forces exactly one
+    // shard parse (10k canonical-JSON lines).
+    let micro_req = [Scenario::request(Suite::MicroPublic, micro_env(), "k8s-hpa", 0)];
+    let mut r = bench(&format!("store cold-load {}k-scenario shard", BIG / 1000), budget_s, || {
+        let mut store = CampaignStore::open(&dir);
+        let report = store.ensure(&micro_req, sys, &no_exec).expect("cold load");
+        assert_eq!(report.executed, 0);
+    });
+    r.throughput = Some((BIG as f64 / (r.mean_ms / 1000.0), "rec/s"));
+    col.add("store", &r);
+
+    // The laziness payoff: serving the 64-scenario batch suite from a
+    // 10k-scenario store parses only the small shard.
+    let batch_reqs: Vec<Scenario> = (0..SMALL)
+        .map(|s| Scenario::request(Suite::BatchPublic, batch_env(), "k8s-hpa", s))
+        .collect();
+    let r = bench(
+        &format!("store lazy-read {SMALL}-scenario shard @{}k", BIG / 1000),
+        budget_s,
+        || {
+            let mut store = CampaignStore::open(&dir);
+            let report = store.ensure(&batch_reqs, sys, &no_exec).expect("lazy read");
+            assert_eq!(report.cached as u64, SMALL);
+        },
+    );
+    col.add("store", &r);
+
+    // Warm cache hits: pure key matching over a loaded store, no I/O.
+    let warm_reqs: Vec<Scenario> = (0..256)
+        .map(|s| Scenario::request(Suite::MicroPublic, micro_env(), "k8s-hpa", s))
+        .collect();
+    let mut warm = CampaignStore::open(&dir);
+    let _ = warm.ensure(&warm_reqs, sys, &no_exec).expect("warming bench store");
+    let r = bench(&format!("store warm-ensure 256 cached @{}k", BIG / 1000), budget_s, || {
+        let report = warm.ensure(&warm_reqs, sys, &no_exec).expect("warm ensure");
+        assert_eq!(report.cached, 256);
+    });
+    col.add("store", &r);
+
+    // O(Δ) appends: each iteration merges 256 brand-new outcomes (fresh
+    // seeds) into the already-10k-line shard — the cost must track the
+    // delta plus the small index rewrite, not the store size.
+    let mut next_seed = BIG;
+    let mut r = bench(&format!("store append 256 new @{}k", BIG / 1000), budget_s, || {
+        let fresh: Vec<ScenarioOutcome> = (0..256)
+            .map(|i| synth(Suite::MicroPublic, micro_env(), next_seed + i))
+            .collect();
+        next_seed += 256;
+        let added = warm.merge(fresh, sys).expect("appending to bench store");
+        assert_eq!(added, 256);
+    });
+    r.throughput = Some((256.0 / (r.mean_ms / 1000.0), "rec/s"));
+    col.add("store", &r);
+
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+// ---------------------------------------------------------------------------
 // main
 // ---------------------------------------------------------------------------
 
@@ -592,9 +720,10 @@ fn main() {
     println!("drone bench harness (scale {scale}); filters: {filters:?}");
 
     // The figure/table drivers read and persist the campaign store; point
-    // them at a scratch directory so benches stay hermetic (a warm
-    // results/campaign.json would make every experiment bench measure JSON
-    // parsing instead of environment execution) and never touch results/.
+    // them at a scratch directory so benches stay hermetic (warm shards
+    // under results/campaign/ would make every experiment bench measure
+    // JSONL parsing instead of environment execution) and never touch
+    // results/.
     if std::env::var_os("DRONE_RESULTS_DIR").is_none() {
         let dir = std::env::temp_dir().join(format!("drone-bench-{}", std::process::id()));
         std::env::set_var("DRONE_RESULTS_DIR", &dir);
@@ -602,10 +731,15 @@ fn main() {
     }
 
     // --json implies the perf micro-benches: the export's required groups
-    // (queue/window/decide) all live there.
+    // (queue/window/decide) all live there. The campaign-store group rides
+    // the same export (tracked-optional in benchfmt), so persistence
+    // regressions trip the same bench-check gate.
     let mut col = Collector::new();
     if wants("perf") || json_path.is_some() {
         perf_benches(&sys, 1.0, &mut col);
+    }
+    if wants("perf") || wants("store") || json_path.is_some() {
+        store_benches(&sys, 1.0, &mut col);
     }
     if let Some(path) = &json_path {
         let meta = [

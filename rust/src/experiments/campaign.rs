@@ -15,14 +15,14 @@
 //!     next, never for any random state;
 //!   - the aggregator merges per-step [`StepRow`]s into per-scenario
 //!     summaries, per-(suite, workload, policy) aggregates, the familiar
-//!     stdout tables, and machine-readable `campaign.json` / `campaign.csv`
-//!     under `results/`.
+//!     stdout tables, and machine-readable outputs under `results/`: the
+//!     sharded `campaign/` store plus `campaign.csv`.
 //!
 //! Since PR 3 the registry covers every environment the figure/table
 //! drivers need — not just the four paper suites but also the fig1 RAM
 //! sweep, the fig2 Sort-variance sweep and the fig4 affinity variants —
-//! and `campaign.json` carries the per-step records (performance, cost,
-//! allocation, latency digests) those drivers aggregate. The drivers
+//! and the store's shard lines carry the per-step records (performance,
+//! cost, allocation, latency digests) those drivers aggregate. The drivers
 //! themselves are pure readers of [`super::store::CampaignStore`]; none of
 //! them runs a private environment loop anymore.
 //!
@@ -564,6 +564,13 @@ pub const FIG7C_STRESS: f64 = 0.05;
 /// smaller counts).
 pub const CLUSTER_TENANTS: usize = 12;
 
+/// The cluster suite's stress tenant count: the 32-factor joint space the
+/// block-sparse group-cached decide path exists for. With the sharded
+/// campaign store making merges O(new results), the campaign grid carries
+/// this cell at full scale alongside the headline cell, and `table6`
+/// serves its 32-tenant row straight from the store.
+pub const CLUSTER_STRESS_TENANTS: usize = 32;
+
 /// Expand the spec into the ordered scenario list. Order (and therefore
 /// scenario ids) is deterministic: suites, then workloads, then policies,
 /// then seeds — exactly the nesting a human would write as four loops.
@@ -600,15 +607,19 @@ pub fn enumerate(spec: &CampaignSpec) -> Vec<Scenario> {
                 amplitude_rps: spec.micro_amplitude_rps,
                 fluid_threshold_rps: spec.micro_fluid_threshold_rps,
             }],
-            // One many-tenant cell at the headline tenant count (table6
-            // sweeps 2/4/8/12 through its own store requests).
-            Suite::Cluster => vec![EnvKind::Cluster {
-                tenants: CLUSTER_TENANTS,
-                steps: spec.micro_steps,
-                base_rps: spec.micro_base_rps,
-                amplitude_rps: spec.micro_amplitude_rps,
-                fluid_threshold_rps: spec.micro_fluid_threshold_rps,
-            }],
+            // Two many-tenant cells: the headline tenant count and the
+            // 32-tenant stress cell (table6 sweeps the smaller counts
+            // through its own store requests).
+            Suite::Cluster => [CLUSTER_TENANTS, CLUSTER_STRESS_TENANTS]
+                .iter()
+                .map(|&tenants| EnvKind::Cluster {
+                    tenants,
+                    steps: spec.micro_steps,
+                    base_rps: spec.micro_base_rps,
+                    amplitude_rps: spec.micro_amplitude_rps,
+                    fluid_threshold_rps: spec.micro_fluid_threshold_rps,
+                })
+                .collect(),
             // One replay cell: the builtin trace over the preset graph,
             // truncated to the campaign's micro step budget.
             Suite::Trace => vec![EnvKind::Trace {
@@ -1246,7 +1257,8 @@ pub fn aggregate(outcomes: &[ScenarioOutcome]) -> Vec<AggregateRow> {
 }
 
 // ---------------------------------------------------------------------------
-// Outputs: stdout tables, campaign.csv, campaign.json
+// Outputs: stdout tables, campaign.csv, result JSON (canonical form is
+// what the store's shard lines are built from)
 // ---------------------------------------------------------------------------
 
 impl CampaignResult {
@@ -1333,42 +1345,9 @@ impl CampaignResult {
         s.push_str(&format!("  \"seeds\": [{}],\n", seeds.join(", ")));
         s.push_str("  \"scenarios\": [\n");
         for (i, o) in self.outcomes.iter().enumerate() {
-            let sc = &o.scenario;
-            let m = &o.summary;
-            s.push_str("    {");
-            s.push_str(&format!("\"id\": {}, ", sc.id));
-            s.push_str(&format!("\"name\": {}, ", json_str(&sc.name())));
-            s.push_str(&format!("\"suite\": {}, ", json_str(sc.suite.name())));
-            s.push_str(&format!("\"workload\": {}, ", json_str(&sc.env.workload_name())));
-            s.push_str(&format!(
-                "\"setting\": {}, ",
-                json_str(match sc.setting {
-                    CloudSetting::Public => "public",
-                    CloudSetting::Private => "private",
-                })
-            ));
-            s.push_str(&format!("\"policy\": {}, ", json_str(&sc.policy)));
-            s.push_str(&format!("\"seed\": {}, ", sc.seed));
-            s.push_str(&format!("\"env\": {}, ", sc.env.to_json()));
-            s.push_str(&format!("\"steps\": {}, ", m.steps));
-            s.push_str(&format!("\"halts\": {}, ", m.halts));
-            s.push_str(&format!("\"errors\": {}, ", m.errors));
-            s.push_str(&format!("\"offered\": {}, ", m.offered));
-            s.push_str(&format!("\"dropped\": {}, ", m.dropped));
-            s.push_str(&format!("\"mean_perf_raw\": {}, ", json_f64(m.mean_perf_raw)));
-            s.push_str(&format!("\"post_perf_raw\": {}, ", json_f64(m.post_perf_raw)));
-            s.push_str(&format!("\"mean_perf_score\": {}, ", json_f64(m.mean_perf_score)));
-            s.push_str(&format!("\"total_cost\": {}, ", json_f64(m.total_cost)));
-            s.push_str(&format!(
-                "\"mean_resource_frac\": {}, ",
-                json_f64(m.mean_resource_frac)
-            ));
-            s.push_str(&format!("\"records\": {}, ", records_json(&o.records)));
-            s.push_str(&format!("\"timed_out\": {}", m.timed_out));
-            if with_timing {
-                s.push_str(&format!(", \"wall_clock_ms\": {}", json_f64(m.wall_clock_ms)));
-            }
-            s.push_str(if i + 1 < self.outcomes.len() { "},\n" } else { "}\n" });
+            s.push_str("    ");
+            s.push_str(&scenario_json_line(o, o.scenario.id, with_timing));
+            s.push_str(if i + 1 < self.outcomes.len() { ",\n" } else { "\n" });
         }
         s.push_str("  ],\n");
         s.push_str("  \"aggregates\": [\n");
@@ -1441,6 +1420,51 @@ impl CampaignResult {
         let csv_path = csv.finish()?;
         Ok(csv_path)
     }
+}
+
+/// One scenario outcome as a single-line canonical JSON object — the unit
+/// shared by the monolithic `CampaignResult::to_json*` renderers and the
+/// sharded store's JSONL lines. Field order and float formatting are fixed
+/// so identical outcomes render byte-identical lines regardless of
+/// `--jobs` or host. `id` is the caller's numbering (global scenario id in
+/// the monolith, position-in-shard for store lines); `with_timing` opt-in
+/// appends `wall_clock_ms`, which canonical/shard renderings exclude.
+pub(crate) fn scenario_json_line(o: &ScenarioOutcome, id: usize, with_timing: bool) -> String {
+    let sc = &o.scenario;
+    let m = &o.summary;
+    let mut s = String::with_capacity(1024);
+    s.push('{');
+    s.push_str(&format!("\"id\": {}, ", id));
+    s.push_str(&format!("\"name\": {}, ", json_str(&sc.name())));
+    s.push_str(&format!("\"suite\": {}, ", json_str(sc.suite.name())));
+    s.push_str(&format!("\"workload\": {}, ", json_str(&sc.env.workload_name())));
+    s.push_str(&format!(
+        "\"setting\": {}, ",
+        json_str(match sc.setting {
+            CloudSetting::Public => "public",
+            CloudSetting::Private => "private",
+        })
+    ));
+    s.push_str(&format!("\"policy\": {}, ", json_str(&sc.policy)));
+    s.push_str(&format!("\"seed\": {}, ", sc.seed));
+    s.push_str(&format!("\"env\": {}, ", sc.env.to_json()));
+    s.push_str(&format!("\"steps\": {}, ", m.steps));
+    s.push_str(&format!("\"halts\": {}, ", m.halts));
+    s.push_str(&format!("\"errors\": {}, ", m.errors));
+    s.push_str(&format!("\"offered\": {}, ", m.offered));
+    s.push_str(&format!("\"dropped\": {}, ", m.dropped));
+    s.push_str(&format!("\"mean_perf_raw\": {}, ", json_f64(m.mean_perf_raw)));
+    s.push_str(&format!("\"post_perf_raw\": {}, ", json_f64(m.post_perf_raw)));
+    s.push_str(&format!("\"mean_perf_score\": {}, ", json_f64(m.mean_perf_score)));
+    s.push_str(&format!("\"total_cost\": {}, ", json_f64(m.total_cost)));
+    s.push_str(&format!("\"mean_resource_frac\": {}, ", json_f64(m.mean_resource_frac)));
+    s.push_str(&format!("\"records\": {}, ", records_json(&o.records)));
+    s.push_str(&format!("\"timed_out\": {}", m.timed_out));
+    if with_timing {
+        s.push_str(&format!(", \"wall_clock_ms\": {}", json_f64(m.wall_clock_ms)));
+    }
+    s.push('}');
+    s
 }
 
 /// Columnar per-step records for one scenario — compact to write, trivial
@@ -1764,19 +1788,29 @@ mod tests {
             ..Default::default()
         };
         let scenarios = enumerate(&spec);
-        // 1 env * 3 policies * 2 seeds.
-        assert_eq!(scenarios.len(), 6);
+        // 2 envs (12- and 32-tenant cells) * 3 policies * 2 seeds.
+        assert_eq!(scenarios.len(), 12);
         assert_eq!(scenarios[0].name(), "cluster/12tenants/k8s-hpa-joint/s0");
+        assert_eq!(scenarios[6].name(), "cluster/32tenants/k8s-hpa-joint/s0");
+        let mut seen = std::collections::BTreeSet::new();
         for sc in &scenarios {
             assert!(sc.suite.matches_env(&sc.env));
             match &sc.env {
                 EnvKind::Cluster { tenants, steps, .. } => {
-                    assert_eq!(*tenants, CLUSTER_TENANTS);
+                    assert!(
+                        *tenants == CLUSTER_TENANTS || *tenants == CLUSTER_STRESS_TENANTS,
+                        "unexpected tenant count {tenants}"
+                    );
+                    seen.insert(*tenants);
                     assert_eq!(*steps, spec.micro_steps);
                 }
                 other => panic!("cluster suite must enumerate cluster envs, got {other:?}"),
             }
         }
+        assert_eq!(seen.into_iter().collect::<Vec<_>>(), vec![
+            CLUSTER_TENANTS,
+            CLUSTER_STRESS_TENANTS
+        ]);
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! store: the driver builds the explicit scenario list its series need,
 //! lets [`CampaignStore::ensure`] serve cached outcomes (running the
 //! shared deterministic parallel runner only for scenarios the store does
-//! not hold yet), and aggregates per-step records out of `campaign.json`.
-//! The store itself is opened once by `experiments::run` and threaded into
-//! every driver by `&mut` reference, so `drone experiment all` parses
-//! `campaign.json` exactly once.
+//! not hold yet), and aggregates per-step records out of the sharded
+//! `results/campaign/` directory. The store itself is opened once by
+//! `experiments::run` and threaded into every driver by `&mut` reference;
+//! ensure() parses each suite's `<suite>.jsonl` shard lazily on first
+//! request, so `drone experiment all` parses each shard at most once and
+//! a single figure touches only the suites it actually reads.
 //! No figure runs a private `run_batch_env`/`run_micro_env` loop anymore,
 //! so regenerating figures from a warm store executes zero environments,
 //! shares scenarios across figures (fig7a/fig7b, fig8b/fig8c), and scales

@@ -1,18 +1,20 @@
 //! Experiment drivers: one module per paper table/figure (DESIGN.md §5).
 //! Environment-backed drivers are pure readers of the campaign store
-//! (`store::CampaignStore` over `campaign.json`); the campaign's scenario
-//! registry + parallel runner is the single execution path, and every
-//! environment it runs goes through the `env::Environment` trait + the
-//! generic `env::run_env` decision-loop driver. Each driver prints the
-//! paper's rows/series and writes results/<id>.csv.
+//! (`store::CampaignStore` over the sharded `results/campaign/`
+//! directory); the campaign's scenario registry + parallel runner is the
+//! single execution path, and every environment it runs goes through the
+//! `env::Environment` trait + the generic `env::run_env` decision-loop
+//! driver. Each driver prints the paper's rows/series and writes
+//! results/<id>.csv.
 //!
 //! [`run`] opens the campaign store **at most once** (lazily, on the
 //! first store-backed driver) and threads `&mut CampaignStore` through
-//! every driver it dispatches, so `drone experiment all` parses
-//! `campaign.json` a single time instead of once per driver (the old
-//! `open_default()`-per-driver pattern paid the O(store) parse up to ~13
-//! times), and a trace-only invocation like `drone experiment fig5` never
-//! parses it at all.
+//! every driver it dispatches. Opening parses nothing — the store reads
+//! only its small index — and each per-suite shard is parsed at most once
+//! per invocation, the first time a driver requests a scenario from that
+//! suite. `drone experiment all` therefore pays one parse per suite it
+//! actually renders, and a trace-only invocation like `drone experiment
+//! fig5` parses no shard at all (in particular never the cluster shard).
 
 pub mod campaign;
 pub mod env;
@@ -125,9 +127,9 @@ pub fn is_store_backed(id: &str) -> bool {
 }
 
 /// Run the requested experiments against one lazily-opened campaign
-/// store: `campaign.json` is parsed at most once per invocation however
-/// many drivers run (and not at all when every requested id is
-/// trace-only), and scenarios shared between drivers (fig7a/fig7b,
+/// store: each suite's shard is parsed at most once per invocation
+/// however many drivers read it (and no shard at all when every requested
+/// id is trace-only), and scenarios shared between drivers (fig7a/fig7b,
 /// fig8b/fig8c) are executed/refreshed at most once.
 pub fn run(ids: &[&str], sys: &SystemConfig, opts: &RunOpts) -> anyhow::Result<()> {
     let mut store: Option<CampaignStore> = None;

@@ -1,5 +1,5 @@
-//! The campaign store: `campaign.json` as a content-addressed cache of
-//! scenario outcomes.
+//! The campaign store: a sharded, content-addressed cache of scenario
+//! outcomes under `results/campaign/`.
 //!
 //! Figure and table drivers no longer run their own environment loops.
 //! Each driver builds the explicit [`Scenario`] list its series need and
@@ -9,30 +9,93 @@
 //! are executed through the same deterministic parallel runner as `drone
 //! campaign`, appended, and persisted. Regenerating a figure from a warm
 //! store therefore re-executes **zero** environments — the property CI
-//! asserts — and a cold store produces byte-identical records for any
+//! asserts — and a cold store produces byte-identical shards for any
 //! `--jobs` count.
+//!
+//! # On-disk layout
+//!
+//! ```text
+//! results/campaign/
+//!   index.json           atomic header: schema, config fingerprint,
+//!                        per-shard record counts + content digests
+//!   <suite>.jsonl        one canonical-JSON scenario record per line
+//! results/campaign.json.bak   original monolith, kept after migration
+//! ```
+//!
+//! Each shard line is the round6-normalized canonical rendering of one
+//! outcome (no wall-clock timing — that observability lives in
+//! `campaign.csv`), so identical campaigns produce byte-identical shards.
+//! The index carries an FNV-1a 64 digest over each shard's indexed byte
+//! prefix.
+//!
+//! # O(Δ), laziness, and crash consistency
+//!
+//! * `ensure` is append-only: executed misses append to only the touched
+//!   suites' shards (continuing the streamed digest — the untouched bytes
+//!   are never re-read) and then patch the index, so a merge costs
+//!   O(new results), not O(store). `--refresh` and timed-out replacement
+//!   rewrite only the affected shard; `--compact` compacts shard-by-shard.
+//! * Reads are lazy: a shard is parsed only when a driver first requests a
+//!   scenario from that suite ([`store_parse_count`] counts file parses,
+//!   [`shard_parse_count`] per suite), so trace-only invocations never
+//!   touch the cluster shard.
+//! * Shards are written first and the index last (tmp + rename on both
+//!   rewrite paths; appends are plain appends). A shard with no index
+//!   entry is ignored and re-derived; shard bytes beyond the indexed
+//!   prefix (a torn append) are dropped and truncated away on the next
+//!   persist, so a crash at any point leaves a store that opens clean.
+//!
+//! Legacy monolithic `campaign.json` stores auto-migrate on open: the file
+//! is split into shards + index and the original preserved as
+//! `campaign.json.bak`.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::SystemConfig;
-use crate::util::json::Json;
+use crate::util::json::{parse_jsonl, Json};
 
 use super::campaign::{
-    aggregate, run_scenarios, CampaignResult, EnvKind, Scenario, ScenarioOutcome, StepRow,
-    Suite, Summary, LATENCY_DIGEST_POINTS,
+    aggregate, run_scenarios, scenario_json_line, CampaignResult, EnvKind, Scenario,
+    ScenarioOutcome, StepRow, Suite, Summary, LATENCY_DIGEST_POINTS,
 };
 
-/// Process-wide count of `campaign.json` parses. `drone experiment all`
-/// must open (and therefore parse) the store exactly once — the one-pass
-/// threading contract asserted in tests/figure_cache.rs.
+/// Process-wide count of store file parses (shard loads plus legacy
+/// monolith migrations). Opening a sharded store parses nothing — only
+/// the first request touching a suite pays for that suite's shard, the
+/// lazy-read contract asserted in tests/figure_cache.rs.
 static STORE_PARSES: AtomicU64 = AtomicU64::new(0);
+
+/// Per-suite shard parse counts (keyed by suite name). Each shard must be
+/// parsed at most once per process however many drivers request it, and a
+/// suite no driver requests must stay at zero.
+static SHARD_PARSES: Mutex<BTreeMap<String, u64>> = Mutex::new(BTreeMap::new());
 
 pub fn store_parse_count() -> u64 {
     STORE_PARSES.load(Ordering::Relaxed)
+}
+
+pub fn shard_parse_count(suite: &str) -> u64 {
+    SHARD_PARSES.lock().unwrap().get(suite).copied().unwrap_or(0)
+}
+
+/// FNV-1a 64-bit, streamed: feeding bytes in any split produces the same
+/// digest, which is what lets appends continue a shard's stored digest
+/// without re-reading the bytes already on disk.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a64(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
 }
 
 /// How `ensure` may execute missing scenarios.
@@ -99,12 +162,37 @@ impl EnsureReport {
     }
 }
 
+/// On-disk bookkeeping for one suite's shard. `disk_records`/`digest`
+/// mirror the index entry; `loaded` flips when the shard's records are in
+/// `outcomes`; `dirty` forces a full tmp+rename rewrite on the next
+/// persist (in-place replacement, compaction, or recovered torn tails).
+#[derive(Clone, Copy)]
+struct ShardState {
+    disk_records: usize,
+    digest: u64,
+    loaded: bool,
+    dirty: bool,
+}
+
+impl ShardState {
+    /// A shard with nothing on disk yet (new suite, or content discarded).
+    fn fresh() -> Self {
+        Self { disk_records: 0, digest: FNV_OFFSET, loaded: true, dirty: false }
+    }
+}
+
 pub struct CampaignStore {
-    path: PathBuf,
+    /// The shard directory (`results/campaign/`).
+    dir: PathBuf,
+    /// The pre-sharding monolith path (`results/campaign.json`), watched
+    /// for auto-migration.
+    legacy_path: PathBuf,
+    /// Loaded outcomes only — unloaded shards contribute to [`Self::len`]
+    /// via their index record counts.
     pub outcomes: Vec<ScenarioOutcome>,
     /// [`SystemConfig::fingerprint`] the stored outcomes ran under (from
-    /// the file header; set by `ensure`). A mismatch invalidates the whole
-    /// store — records from another config must never be cache hits.
+    /// the index header; set by `ensure`). A mismatch invalidates the
+    /// whole store — records from another config must never be cache hits.
     fingerprint: Option<String>,
     /// Latency-digest size the stored records were compressed with
     /// (absent header field = 64, the pre-`--digest-points` format).
@@ -113,62 +201,222 @@ pub struct CampaignStore {
     /// opened store (not persisted): bounds a refresh to once per key per
     /// process, however many drivers request the scenario.
     refreshed: BTreeSet<String>,
+    /// Scenario key -> index in `outcomes`, maintained incrementally on
+    /// load and placement so `ensure` never rescans the store.
+    by_key: BTreeMap<String, usize>,
+    /// Suite name -> shard state, mirroring the index.
+    shards: BTreeMap<String, ShardState>,
 }
 
 impl CampaignStore {
-    /// Open `results/campaign.json` (honouring `DRONE_RESULTS_DIR`).
+    /// Open `results/campaign/` (honouring `DRONE_RESULTS_DIR`).
     pub fn open_default() -> Self {
-        Self::open(crate::util::csv::results_dir().join("campaign.json"))
+        Self::open(crate::util::csv::results_dir().join("campaign"))
     }
 
-    /// Open a store file; a missing file is an empty store, an unreadable
-    /// one is warned about and treated as empty (it will be rewritten on
-    /// the next `ensure` that executes something).
+    /// Open a store. Both spellings address the same store: a `.json`
+    /// path names the legacy monolith (its shard directory sits beside it,
+    /// extension stripped), anything else names the shard directory
+    /// itself. A missing store is empty; an unreadable index or legacy
+    /// file is warned about and treated as empty (it will be rewritten on
+    /// the next `ensure` that executes something). A legacy monolith with
+    /// no index auto-migrates: split into shards + index, original kept
+    /// as `campaign.json.bak`.
     pub fn open(path: impl AsRef<Path>) -> Self {
-        let path = path.as_ref().to_path_buf();
-        let (fingerprint, digest_points, outcomes) = match std::fs::read_to_string(&path) {
+        let path = path.as_ref();
+        let (dir, legacy_path) = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+            (path.with_extension(""), path.to_path_buf())
+        } else {
+            (path.to_path_buf(), path.with_extension("json"))
+        };
+        let mut store = Self {
+            dir,
+            legacy_path,
+            outcomes: vec![],
+            fingerprint: None,
+            digest_points: LATENCY_DIGEST_POINTS,
+            refreshed: BTreeSet::new(),
+            by_key: BTreeMap::new(),
+            shards: BTreeMap::new(),
+        };
+        let index_path = store.dir.join("index.json");
+        match std::fs::read_to_string(&index_path) {
             Ok(text) => {
-                STORE_PARSES.fetch_add(1, Ordering::Relaxed);
-                match parse_store(&text) {
-                    Ok(parsed) => parsed,
-                    Err(e) => {
-                        eprintln!(
-                            "warning: ignoring unreadable campaign store {}: {e:#}",
-                            path.display()
-                        );
-                        (None, LATENCY_DIGEST_POINTS, vec![])
+                match parse_index(&text) {
+                    Ok((fingerprint, digest_points, shards)) => {
+                        store.fingerprint = fingerprint;
+                        store.digest_points = digest_points;
+                        store.shards = shards;
                     }
+                    Err(e) => eprintln!(
+                        "warning: ignoring unreadable campaign index {}: {e:#}",
+                        index_path.display()
+                    ),
+                }
+                if store.legacy_path.exists() {
+                    eprintln!(
+                        "warning: campaign store {} coexists with legacy {}; the sharded \
+                         index wins (remove the legacy file to silence this)",
+                        store.dir.display(),
+                        store.legacy_path.display()
+                    );
                 }
             }
-            Err(_) => (None, LATENCY_DIGEST_POINTS, vec![]),
-        };
-        Self { path, outcomes, fingerprint, digest_points, refreshed: BTreeSet::new() }
+            Err(_) => {
+                if let Ok(text) = std::fs::read_to_string(&store.legacy_path) {
+                    store.migrate_legacy(&text);
+                }
+            }
+        }
+        store
     }
 
+    /// The shard directory this store persists under.
     pub fn path(&self) -> &Path {
-        &self.path
+        &self.dir
     }
 
+    /// Scenarios in the store: loaded outcomes plus the indexed records of
+    /// shards not parsed yet.
     pub fn len(&self) -> usize {
         self.outcomes.len()
+            + self
+                .shards
+                .values()
+                .filter(|s| !s.loaded)
+                .map(|s| s.disk_records)
+                .sum::<usize>()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.outcomes.is_empty()
+        self.len() == 0
     }
 
+    /// Lookup among *loaded* outcomes (shards are not pulled in — use
+    /// `ensure` to request a scenario through the lazy-read path).
     pub fn find(&self, sc: &Scenario) -> Option<&ScenarioOutcome> {
-        let key = sc.key();
-        self.outcomes.iter().find(|o| o.scenario.key() == key)
+        self.by_key.get(&sc.key()).map(|&i| &self.outcomes[i])
+    }
+
+    fn shard_path(&self, suite: &str) -> PathBuf {
+        self.dir.join(format!("{suite}.jsonl"))
+    }
+
+    /// Parse one suite's shard into `outcomes`, once. Only the indexed
+    /// byte prefix is trusted: a digest or record-count mismatch discards
+    /// the shard (warned, re-derived by the next execution), and bytes
+    /// beyond the prefix — a torn append that never made it into the
+    /// index — are dropped and truncated away on the next persist.
+    fn load_shard(&mut self, suite: &str) {
+        let (want, want_digest) = match self.shards.get(suite) {
+            Some(st) if !st.loaded => (st.disk_records, st.digest),
+            _ => return,
+        };
+        let path = self.shard_path(suite);
+        let parsed = match std::fs::read_to_string(&path) {
+            Ok(text) => {
+                STORE_PARSES.fetch_add(1, Ordering::Relaxed);
+                *SHARD_PARSES.lock().unwrap().entry(suite.to_string()).or_insert(0) += 1;
+                parse_shard_prefix(&text, want, want_digest)
+            }
+            Err(e) => Err(anyhow!("reading shard: {e}")),
+        };
+        match parsed {
+            Ok((outcomes, torn_tail)) => {
+                println!(
+                    "campaign store: loaded shard {suite} ({} scenarios)",
+                    outcomes.len()
+                );
+                for mut o in outcomes {
+                    let idx = self.outcomes.len();
+                    o.scenario.id = idx;
+                    self.by_key.insert(o.scenario.key(), idx);
+                    self.outcomes.push(o);
+                }
+                let st = self.shards.get_mut(suite).unwrap();
+                st.loaded = true;
+                st.dirty = torn_tail;
+            }
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring unreadable campaign shard {}: {e:#}",
+                    path.display()
+                );
+                let st = self.shards.get_mut(suite).unwrap();
+                st.loaded = true;
+                st.disk_records = 0;
+                st.digest = FNV_OFFSET;
+                st.dirty = true;
+            }
+        }
+    }
+
+    /// Parse every shard (compaction and whole-store exports need the full
+    /// content; figure/table drivers should stay on the lazy `ensure`
+    /// path). Shards load in suite-name order, so the in-memory outcome
+    /// order is deterministic.
+    pub fn load_all(&mut self) {
+        let suites: Vec<String> = self.shards.keys().cloned().collect();
+        for suite in suites {
+            self.load_shard(&suite);
+        }
+    }
+
+    /// Cross-config safety shared by `ensure` and `merge`: records cached
+    /// under a different SystemConfig (cluster size, bandit, objective,
+    /// interference) or latency-digest size describe a different system —
+    /// discard them rather than serve them as hits. The wipe deletes the
+    /// index *first*, then the shard files, so a crash mid-wipe leaves
+    /// only unindexed shards (which open ignores).
+    fn align_config(&mut self, fp: &str, digest_points: usize) {
+        if self.fingerprint.as_deref() != Some(fp) {
+            if self.len() > 0 {
+                eprintln!(
+                    "warning: campaign store {} was built under a different system config; \
+                     discarding {} cached scenarios",
+                    self.dir.display(),
+                    self.len()
+                );
+                self.wipe();
+            }
+            self.fingerprint = Some(fp.to_string());
+        }
+        if self.digest_points != digest_points {
+            if self.len() > 0 {
+                eprintln!(
+                    "warning: campaign store {} holds {}-point latency digests but \
+                     {} were requested; discarding {} cached scenarios",
+                    self.dir.display(),
+                    self.digest_points,
+                    digest_points,
+                    self.len()
+                );
+                self.wipe();
+            }
+            self.digest_points = digest_points;
+        }
+    }
+
+    fn wipe(&mut self) {
+        let _ = std::fs::remove_file(self.dir.join("index.json"));
+        for suite in self.shards.keys() {
+            let _ = std::fs::remove_file(self.shard_path(suite));
+        }
+        self.outcomes.clear();
+        self.by_key.clear();
+        self.shards.clear();
     }
 
     /// Serve `requests` from the store, executing (and persisting) any
-    /// scenarios it does not hold yet. Duplicate requests collapse onto
-    /// one execution, and a cached outcome whose records were truncated by
-    /// a fired `--timeout` is treated as stale — it is re-executed and
-    /// replaced in place rather than served as if complete (`--refresh`
-    /// forces the same staleness on every matching hit, once per key per
-    /// opened store). Request order is preserved in the report's indices.
+    /// scenarios it does not hold yet. Only the requested suites' shards
+    /// are read, and executed misses append to only those suites' shards
+    /// — suites this batch does not name are neither parsed nor
+    /// rewritten. Duplicate requests collapse onto one execution, and a
+    /// cached outcome whose records were truncated by a fired `--timeout`
+    /// is treated as stale — it is re-executed and replaced in place
+    /// rather than served as if complete (`--refresh` forces the same
+    /// staleness on every matching hit, once per key per opened store).
+    /// Request order is preserved in the report's indices.
     pub fn ensure(
         &mut self,
         requests: &[Scenario],
@@ -180,44 +428,14 @@ impl CampaignStore {
                 "--refresh forces re-execution while --no-exec forbids it; drop one"
             ));
         }
-        // Cross-config safety: records cached under a different
-        // SystemConfig (cluster size, bandit, objective, interference)
-        // describe a different system — discard them rather than serve
-        // them as hits for this config's scenario keys.
-        let fp = sys.fingerprint();
-        if self.fingerprint.as_deref() != Some(fp.as_str()) {
-            if !self.outcomes.is_empty() {
-                eprintln!(
-                    "warning: campaign store {} was built under a different system config; \
-                     discarding {} cached scenarios",
-                    self.path.display(),
-                    self.outcomes.len()
-                );
-                self.outcomes.clear();
-            }
-            self.fingerprint = Some(fp);
-        }
-        // Same story for the latency-digest size: 64-point records served
-        // to a `--digest-points 256` request would silently flatten the
-        // deep tail the caller asked for.
-        if self.digest_points != exec.digest_points {
-            if !self.outcomes.is_empty() {
-                eprintln!(
-                    "warning: campaign store {} holds {}-point latency digests but \
-                     {} were requested; discarding {} cached scenarios",
-                    self.path.display(),
-                    self.digest_points,
-                    exec.digest_points,
-                    self.outcomes.len()
-                );
-                self.outcomes.clear();
-            }
-            self.digest_points = exec.digest_points;
-        }
+        self.align_config(&sys.fingerprint(), exec.digest_points);
 
-        let mut by_key: BTreeMap<String, usize> = BTreeMap::new();
-        for (i, o) in self.outcomes.iter().enumerate() {
-            by_key.insert(o.scenario.key(), i);
+        // Lazy reads: parse only the suites this batch names, in sorted
+        // order so the in-memory load order is request-set deterministic.
+        let wanted: BTreeSet<String> =
+            requests.iter().map(|r| r.suite.name().to_string()).collect();
+        for suite in &wanted {
+            self.load_shard(suite);
         }
 
         enum Slot {
@@ -232,7 +450,7 @@ impl CampaignStore {
         let mut pending: BTreeMap<String, usize> = BTreeMap::new();
         for req in requests {
             let key = req.key();
-            let fresh_hit = by_key.get(&key).copied().filter(|&i| {
+            let fresh_hit = self.by_key.get(&key).copied().filter(|&i| {
                 // A timed-out outcome did not run its full grid; serving
                 // it as cached would silently build figures from partial
                 // records forever. Only the current call's own timeout
@@ -246,10 +464,10 @@ impl CampaignStore {
             } else if let Some(&mi) = pending.get(&key) {
                 slots.push(Slot::New(mi));
             } else {
-                pending.insert(key, missing.len());
+                pending.insert(key.clone(), missing.len());
                 slots.push(Slot::New(missing.len()));
                 missing.push(req.clone());
-                replace_at.push(by_key.get(&key).copied());
+                replace_at.push(self.by_key.get(&key).copied());
             }
         }
 
@@ -261,7 +479,7 @@ impl CampaignStore {
                 return Err(anyhow!(
                     "campaign store {} is missing {} of {} requested scenarios \
                      (first: {}); drop --no-exec or prebuild them with `drone campaign`",
-                    self.path.display(),
+                    self.dir.display(),
                     missing.len(),
                     requests.len(),
                     missing[0].name()
@@ -277,17 +495,27 @@ impl CampaignStore {
             for m in &missing {
                 self.refreshed.insert(m.key());
             }
+            let mut touched: BTreeSet<String> = BTreeSet::new();
             for (mut outcome, rep) in new.into_iter().zip(&replace_at) {
+                let suite = outcome.scenario.suite.name().to_string();
                 let idx = rep.unwrap_or(self.outcomes.len());
                 outcome.scenario.id = idx;
                 if idx < self.outcomes.len() {
+                    // In-place replacement: the line keeps its shard
+                    // position but changes bytes, so the shard rewrites.
                     self.outcomes[idx] = outcome;
+                    if let Some(st) = self.shards.get_mut(&suite) {
+                        st.dirty = true;
+                    }
                 } else {
+                    self.shards.entry(suite.clone()).or_insert_with(ShardState::fresh);
+                    self.by_key.insert(outcome.scenario.key(), idx);
                     self.outcomes.push(outcome);
                 }
+                touched.insert(suite);
                 placed.push(idx);
             }
-            self.save().context("persisting campaign store")?;
+            self.persist(&touched).context("persisting campaign store")?;
         }
 
         let indices = slots
@@ -298,6 +526,42 @@ impl CampaignStore {
             })
             .collect();
         Ok(EnsureReport { cached, executed, indices })
+    }
+
+    /// Merge pre-computed outcomes into the store without executing
+    /// anything: outcomes whose key the store already holds are skipped,
+    /// the rest append to their suites' shards through the same O(Δ)
+    /// persist path `ensure` uses. Returns the number of outcomes added.
+    /// (This is how the store benches and tests fabricate large stores —
+    /// outcomes must have been produced under `sys` at the store's
+    /// latency-digest size.)
+    pub fn merge(&mut self, outcomes: Vec<ScenarioOutcome>, sys: &SystemConfig) -> Result<usize> {
+        self.align_config(&sys.fingerprint(), self.digest_points);
+        let wanted: BTreeSet<String> =
+            outcomes.iter().map(|o| o.scenario.suite.name().to_string()).collect();
+        for suite in &wanted {
+            self.load_shard(suite);
+        }
+        let mut touched: BTreeSet<String> = BTreeSet::new();
+        let mut added = 0usize;
+        for mut o in outcomes {
+            let key = o.scenario.key();
+            if self.by_key.contains_key(&key) {
+                continue;
+            }
+            let idx = self.outcomes.len();
+            o.scenario.id = idx;
+            let suite = o.scenario.suite.name().to_string();
+            self.shards.entry(suite.clone()).or_insert_with(ShardState::fresh);
+            touched.insert(suite);
+            self.by_key.insert(key, idx);
+            self.outcomes.push(o);
+            added += 1;
+        }
+        if added > 0 {
+            self.persist(&touched).context("persisting campaign store")?;
+        }
+        Ok(added)
     }
 
     /// Compaction (`drone campaign --compact`): drop every cached
@@ -317,12 +581,18 @@ impl CampaignStore {
     ///   * duplicate keys (first occurrence wins).
     ///
     /// Returns the number of scenarios dropped; the caller persists via
-    /// the (atomic) [`CampaignStore::save`].
+    /// [`CampaignStore::save`], which rewrites shard-by-shard and drops
+    /// emptied shards from the index.
     pub fn compact(&mut self, sys: &SystemConfig) -> usize {
+        self.load_all();
         let before = self.outcomes.len();
         let fp = sys.fingerprint();
         if self.fingerprint.as_deref() != Some(fp.as_str()) {
             self.outcomes.clear();
+            self.by_key.clear();
+            for st in self.shards.values_mut() {
+                st.dirty = true;
+            }
             self.fingerprint = Some(fp);
             return before;
         }
@@ -336,16 +606,26 @@ impl CampaignStore {
                 && !o.summary.timed_out
                 && seen.insert(sc.key())
         });
-        // Re-number the surviving scenarios (ids are positional).
+        // Re-number the survivors (ids are positional) and rebuild the
+        // key map; every shard rewrites on the next save.
         for (i, o) in self.outcomes.iter_mut().enumerate() {
             o.scenario.id = i;
+        }
+        self.by_key.clear();
+        for (i, o) in self.outcomes.iter().enumerate() {
+            self.by_key.insert(o.scenario.key(), i);
+        }
+        for st in self.shards.values_mut() {
+            st.dirty = true;
         }
         before - self.outcomes.len()
     }
 
-    /// The store's content as a `CampaignResult` (aggregates recomputed
-    /// over everything it holds, seeds in first-seen order).
-    pub fn to_result(&self) -> CampaignResult {
+    /// The store's content as a `CampaignResult` (every shard loaded,
+    /// aggregates recomputed over everything it holds, seeds in
+    /// first-seen order).
+    pub fn to_result(&mut self) -> CampaignResult {
+        self.load_all();
         let mut seeds: Vec<u64> = vec![];
         for o in &self.outcomes {
             if !seeds.contains(&o.scenario.seed) {
@@ -361,26 +641,284 @@ impl CampaignStore {
         }
     }
 
-    /// Persist the store as full campaign JSON (with per-scenario timing).
-    /// The write is atomic (temp file + rename) so a crash mid-save cannot
-    /// leave a truncated store that `open` would discard as corrupt.
-    pub fn save(&self) -> Result<PathBuf> {
-        if let Some(parent) = self.path.parent() {
-            std::fs::create_dir_all(parent)?;
+    /// Persist every loaded shard (rewriting the dirty ones) and the
+    /// index, so the index exists on disk even for a fully cached or
+    /// empty grid. Unloaded shards are untouched. Returns the store
+    /// directory.
+    pub fn save(&mut self) -> Result<PathBuf> {
+        let touched: BTreeSet<String> = self
+            .shards
+            .iter()
+            .filter(|(_, st)| st.loaded)
+            .map(|(suite, _)| suite.clone())
+            .collect();
+        self.persist(&touched)?;
+        Ok(self.dir.clone())
+    }
+
+    /// Crash-consistent persistence: shard contents land first, the index
+    /// last (tmp + rename), so at no point does the index reference bytes
+    /// that are not on disk. After the index rename, shard files it does
+    /// not reference (and stale temp files) are deleted.
+    fn persist(&mut self, touched: &BTreeSet<String>) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        for suite in touched {
+            self.write_shard(suite)
+                .with_context(|| format!("writing campaign shard {suite}"))?;
         }
-        // Per-process temp name: two concurrent drivers saving the same
-        // store must not interleave writes into one temp file before the
-        // rename (last rename still wins, but each installs a complete
-        // file).
-        let tmp = self.path.with_extension(format!("json.tmp.{}", std::process::id()));
-        std::fs::write(&tmp, self.to_result().to_json())?;
-        std::fs::rename(&tmp, &self.path)?;
-        Ok(self.path.clone())
+        self.write_index().context("writing campaign index")
+    }
+
+    /// One suite's canonical shard lines (without trailing newlines), in
+    /// store order; line ids are shard-positional.
+    fn shard_lines(&self, suite: &str) -> Vec<String> {
+        let mut lines = vec![];
+        for o in &self.outcomes {
+            if o.scenario.suite.name() == suite {
+                lines.push(scenario_json_line(o, lines.len(), false));
+            }
+        }
+        lines
+    }
+
+    /// Write one loaded shard. Clean shards with new records take the
+    /// O(Δ) path — only the new lines are rendered, appended to the file
+    /// and folded into the streamed digest; nothing already on disk is
+    /// re-read, re-rendered, or rewritten. Dirty shards (replacement,
+    /// compaction, recovered corruption) and brand-new shards rewrite
+    /// atomically via tmp + rename, which also clobbers any unindexed
+    /// leftover of the same name. A shard with no records left is removed
+    /// entirely.
+    fn write_shard(&mut self, suite: &str) -> Result<()> {
+        let path = self.shard_path(suite);
+        let total =
+            self.outcomes.iter().filter(|o| o.scenario.suite.name() == suite).count();
+        if total == 0 {
+            let _ = std::fs::remove_file(&path);
+            self.shards.remove(suite);
+            return Ok(());
+        }
+        let state = *self.shards.get(suite).expect("persisting unregistered shard");
+        if state.dirty || state.disk_records == 0 || total < state.disk_records {
+            let lines = self.shard_lines(suite);
+            let mut text = String::with_capacity(lines.iter().map(|l| l.len() + 1).sum());
+            for line in &lines {
+                text.push_str(line);
+                text.push('\n');
+            }
+            let tmp = self.dir.join(format!("{suite}.jsonl.tmp.{}", std::process::id()));
+            std::fs::write(&tmp, &text)?;
+            std::fs::rename(&tmp, &path)?;
+            let st = self.shards.get_mut(suite).expect("persisting unregistered shard");
+            st.digest = fnv1a64(FNV_OFFSET, text.as_bytes());
+            st.disk_records = lines.len();
+            st.dirty = false;
+        } else if total > state.disk_records {
+            let mut f = std::fs::OpenOptions::new().append(true).create(true).open(&path)?;
+            let mut digest = state.digest;
+            let mut pos = 0usize;
+            for o in &self.outcomes {
+                if o.scenario.suite.name() != suite {
+                    continue;
+                }
+                if pos >= state.disk_records {
+                    let line = scenario_json_line(o, pos, false);
+                    f.write_all(line.as_bytes())?;
+                    f.write_all(b"\n")?;
+                    digest = fnv1a64(digest, line.as_bytes());
+                    digest = fnv1a64(digest, b"\n");
+                }
+                pos += 1;
+            }
+            f.flush()?;
+            let st = self.shards.get_mut(suite).expect("persisting unregistered shard");
+            st.digest = digest;
+            st.disk_records = total;
+        }
+        Ok(())
+    }
+
+    /// Atomically install the index, then sweep the directory: shard
+    /// files the fresh index does not reference are re-derivable garbage
+    /// (crash leftovers), as are temp files from crashed writers.
+    fn write_index(&self) -> Result<()> {
+        let mut s = String::with_capacity(256 + self.shards.len() * 96);
+        s.push_str("{\n");
+        s.push_str("  \"schema\": \"drone-campaign-index/v1\",\n");
+        s.push_str(&format!(
+            "  \"config\": {},\n",
+            super::campaign::json_str(self.fingerprint.as_deref().unwrap_or(""))
+        ));
+        if self.digest_points != LATENCY_DIGEST_POINTS {
+            // Back-compat: the default digest size is implicit, matching
+            // the monolith header convention.
+            s.push_str(&format!("  \"digest_points\": {},\n", self.digest_points));
+        }
+        s.push_str("  \"shards\": [\n");
+        for (i, (suite, st)) in self.shards.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"suite\": {}, \"records\": {}, \"digest\": \"{:016x}\"}}{}\n",
+                super::campaign::json_str(suite),
+                st.disk_records,
+                st.digest,
+                if i + 1 < self.shards.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        let tmp = self.dir.join(format!("index.json.tmp.{}", std::process::id()));
+        std::fs::write(&tmp, &s)?;
+        std::fs::rename(&tmp, self.dir.join("index.json"))?;
+        if let Ok(entries) = std::fs::read_dir(&self.dir) {
+            for entry in entries.flatten() {
+                let name = entry.file_name().to_string_lossy().to_string();
+                let unindexed = name
+                    .strip_suffix(".jsonl")
+                    .map(|stem| !self.shards.contains_key(stem))
+                    .unwrap_or(false);
+                if unindexed || name.contains(".tmp.") {
+                    let _ = std::fs::remove_file(entry.path());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// One-time migration from the monolithic `campaign.json`: parse it,
+    /// split the outcomes into per-suite shards (order preserved, so the
+    /// shards are byte-identical to what a fresh run of the same grid
+    /// writes), persist shards + index, and retire the original as
+    /// `campaign.json.bak`. On any failure the parsed content stays
+    /// loaded in memory and the next successful persist completes the
+    /// migration.
+    fn migrate_legacy(&mut self, text: &str) {
+        STORE_PARSES.fetch_add(1, Ordering::Relaxed);
+        let (fingerprint, digest_points, outcomes) = match parse_store(text) {
+            Ok(parsed) => parsed,
+            Err(e) => {
+                eprintln!(
+                    "warning: ignoring unreadable campaign store {}: {e:#}",
+                    self.legacy_path.display()
+                );
+                return;
+            }
+        };
+        self.fingerprint = fingerprint;
+        self.digest_points = digest_points;
+        let mut touched: BTreeSet<String> = BTreeSet::new();
+        for mut o in outcomes {
+            let idx = self.outcomes.len();
+            o.scenario.id = idx;
+            let suite = o.scenario.suite.name().to_string();
+            self.shards.entry(suite.clone()).or_insert_with(ShardState::fresh);
+            touched.insert(suite);
+            self.by_key.insert(o.scenario.key(), idx);
+            self.outcomes.push(o);
+        }
+        let bak = self.legacy_path.with_extension("json.bak");
+        let migrated = self.persist(&touched).and_then(|()| {
+            std::fs::rename(&self.legacy_path, &bak).map_err(anyhow::Error::from)
+        });
+        match migrated {
+            Ok(()) => println!(
+                "campaign store: migrated legacy {} -> {} ({} scenarios; original kept as {})",
+                self.legacy_path.display(),
+                self.dir.display(),
+                self.outcomes.len(),
+                bak.display()
+            ),
+            Err(e) => eprintln!(
+                "warning: campaign store migration of {} did not persist: {e:#} \
+                 (content stays available in memory)",
+                self.legacy_path.display()
+            ),
+        }
     }
 }
 
 // ---------------------------------------------------------------------------
-// campaign.json -> outcomes
+// index.json / <suite>.jsonl -> shard states and outcomes
+// ---------------------------------------------------------------------------
+
+/// Parse `campaign/index.json` into (config fingerprint, digest points,
+/// shard states). Reading the index is O(suites) — no scenario records
+/// are touched, which is what keeps `open` parse-free.
+fn parse_index(text: &str) -> Result<(Option<String>, usize, BTreeMap<String, ShardState>)> {
+    let j = Json::parse(text)?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != "drone-campaign-index/v1" {
+        return Err(anyhow!(
+            "unsupported campaign index schema {schema:?} (want drone-campaign-index/v1)"
+        ));
+    }
+    let fingerprint = j.get("config").and_then(Json::as_str).map(str::to_string);
+    let digest_points = j
+        .get("digest_points")
+        .and_then(Json::as_u64)
+        .map(|v| v as usize)
+        .unwrap_or(LATENCY_DIGEST_POINTS);
+    let entries = j
+        .get("shards")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shards array"))?;
+    let mut shards = BTreeMap::new();
+    for (i, sh) in entries.iter().enumerate() {
+        let suite = str_field(sh, "suite").with_context(|| format!("shard #{i}"))?.to_string();
+        let records = sh
+            .get("records")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("shard #{i}: missing integer field \"records\""))?
+            as usize;
+        let hex = str_field(sh, "digest").with_context(|| format!("shard #{i}"))?;
+        let digest = u64::from_str_radix(hex, 16)
+            .map_err(|e| anyhow!("shard #{i}: bad digest {hex:?}: {e}"))?;
+        shards.insert(
+            suite,
+            ShardState { disk_records: records, digest, loaded: false, dirty: false },
+        );
+    }
+    Ok((fingerprint, digest_points, shards))
+}
+
+/// Parse the indexed prefix of one shard: exactly `want` lines whose
+/// FNV-1a digest (newlines included) must match the index. Returns the
+/// parsed outcomes and whether un-indexed tail bytes followed the prefix
+/// (a torn append — dropped, and truncated on the next persist).
+fn parse_shard_prefix(
+    text: &str,
+    want: usize,
+    want_digest: u64,
+) -> Result<(Vec<ScenarioOutcome>, bool)> {
+    let mut digest = FNV_OFFSET;
+    let mut prefix_len = 0usize;
+    let mut n = 0usize;
+    for line in text.split_inclusive('\n') {
+        if n == want {
+            break;
+        }
+        digest = fnv1a64(digest, line.as_bytes());
+        prefix_len += line.len();
+        n += 1;
+    }
+    if n < want {
+        return Err(anyhow!("shard holds {n} of {want} indexed records"));
+    }
+    if digest != want_digest {
+        return Err(anyhow!(
+            "shard content digest mismatch (index {want_digest:016x}, file {digest:016x})"
+        ));
+    }
+    let values = parse_jsonl(&text[..prefix_len])?;
+    let outcomes = values
+        .iter()
+        .enumerate()
+        .map(|(i, v)| parse_scenario(v, i).with_context(|| format!("record #{i}")))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((outcomes, prefix_len < text.len()))
+}
+
+// ---------------------------------------------------------------------------
+// legacy campaign.json -> outcomes
 // ---------------------------------------------------------------------------
 
 fn parse_store(text: &str) -> Result<(Option<String>, usize, Vec<ScenarioOutcome>)> {
@@ -545,14 +1083,32 @@ mod tests {
         }
     }
 
+    fn micro_spec() -> CampaignSpec {
+        CampaignSpec {
+            suites: vec![Suite::MicroPublic],
+            policies: Some(vec!["k8s-hpa".into()]),
+            workloads: vec![],
+            seeds: vec![0],
+            micro_steps: 3,
+            ..Default::default()
+        }
+    }
+
+    /// Store addressed by its legacy path, as every call site spells it;
+    /// the shard directory sits beside it with the extension stripped.
     fn tmp_store_path(tag: &str) -> PathBuf {
         std::env::temp_dir()
             .join(format!("drone-store-{}-{tag}", std::process::id()))
             .join("campaign.json")
     }
 
-    /// Full write -> parse -> rewrite fidelity: the canonical JSON of a
-    /// reloaded store is byte-identical to the original result's.
+    fn store_dir(path: &Path) -> PathBuf {
+        path.with_extension("")
+    }
+
+    /// Legacy-migration fidelity: the canonical JSON of a store opened on
+    /// a monolithic v2 file is byte-identical to the original result's,
+    /// and the monolith retires to `campaign.json.bak`.
     #[test]
     fn roundtrip_preserves_canonical_json() {
         let sys = small_sys();
@@ -561,9 +1117,11 @@ mod tests {
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
         std::fs::write(&path, result.to_json()).unwrap();
 
-        let store = CampaignStore::open(&path);
+        let mut store = CampaignStore::open(&path);
         assert_eq!(store.len(), result.outcomes.len());
         assert_eq!(store.to_result().to_json_canonical(), result.to_json_canonical());
+        assert!(!path.exists(), "monolith retires after migration");
+        assert!(path.with_extension("json.bak").exists());
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
@@ -618,6 +1176,173 @@ mod tests {
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
+    /// The tentpole's O(Δ) contract: a miss in one suite appends to that
+    /// suite's shard only — other shards' bytes are untouched — and an
+    /// append leaves the prior shard content as a byte prefix (no
+    /// whole-store, and no whole-shard, rewrite).
+    #[test]
+    fn ensure_appends_only_touched_shards() {
+        let sys = small_sys();
+        let batch = enumerate(&small_spec());
+        let micro = enumerate(&micro_spec());
+        let path = tmp_store_path("appendonly");
+        let dir = store_dir(&path);
+        let exec = ExecPolicy { jobs: 2, ..Default::default() };
+
+        let mut store = CampaignStore::open(&path);
+        store.ensure(&batch[..2], &sys, &exec).unwrap();
+        let batch_shard = dir.join("batch-public.jsonl");
+        let before = std::fs::read(&batch_shard).unwrap();
+
+        // A miss in another suite must not touch the batch shard's bytes.
+        store.ensure(&micro, &sys, &exec).unwrap();
+        assert_eq!(std::fs::read(&batch_shard).unwrap(), before);
+        assert!(dir.join("micro-public.jsonl").exists());
+
+        // A miss in the same suite appends: old bytes stay a prefix.
+        store.ensure(&batch, &sys, &exec).unwrap();
+        let after = std::fs::read(&batch_shard).unwrap();
+        assert!(after.len() > before.len());
+        assert_eq!(&after[..before.len()], &before[..]);
+
+        // And the appended store is fully warm on reopen.
+        let mut reopened = CampaignStore::open(&path);
+        let all: Vec<Scenario> = batch.iter().chain(&micro).cloned().collect();
+        let warm = reopened.ensure(&all, &sys, &exec).unwrap();
+        assert_eq!((warm.cached, warm.executed), (all.len(), 0));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    /// Crash-consistency satellite: the index is the source of truth.
+    /// Bytes appended to a shard without an index update (a torn append)
+    /// are dropped while the indexed prefix still serves; an unindexed
+    /// shard file is ignored and re-derived; a shard truncated below its
+    /// indexed count is discarded and re-executed.
+    #[test]
+    fn torn_writes_recover_to_the_indexed_prefix() {
+        let sys = small_sys();
+        let batch = enumerate(&small_spec());
+        let path = tmp_store_path("torn");
+        let dir = store_dir(&path);
+        let exec = ExecPolicy { jobs: 2, ..Default::default() };
+
+        CampaignStore::open(&path).ensure(&batch, &sys, &exec).unwrap();
+        let batch_shard = dir.join("batch-public.jsonl");
+
+        // (a) Torn append past the indexed prefix: prefix serves, 0 runs.
+        let clean = std::fs::read(&batch_shard).unwrap();
+        let mut torn = clean.clone();
+        torn.extend_from_slice(b"{\"id\": 99, \"nam");
+        std::fs::write(&batch_shard, &torn).unwrap();
+        let mut store = CampaignStore::open(&path);
+        let report = store.ensure(&batch, &sys, &exec).unwrap();
+        assert_eq!((report.cached, report.executed), (batch.len(), 0));
+        // The recovered shard is dirty: the next persist truncates the
+        // tail away.
+        store.save().unwrap();
+        assert_eq!(std::fs::read(&batch_shard).unwrap(), clean);
+
+        // (b) A shard file with no index entry is garbage: requests for
+        // that suite re-derive it, and persisting replaces the file.
+        let rogue = dir.join("micro-public.jsonl");
+        std::fs::write(&rogue, b"{not a record\n").unwrap();
+        let micro = enumerate(&micro_spec());
+        let mut store = CampaignStore::open(&path);
+        let report = store.ensure(&micro, &sys, &exec).unwrap();
+        assert_eq!((report.cached, report.executed), (0, micro.len()));
+        let mut warm = CampaignStore::open(&path);
+        assert_eq!(warm.ensure(&micro, &sys, &exec).unwrap().executed, 0);
+
+        // (c) A shard truncated below its indexed record count fails the
+        // prefix check and is re-executed wholesale.
+        let text = std::fs::read_to_string(&batch_shard).unwrap();
+        let first_line: String = text.lines().take(1).map(|l| format!("{l}\n")).collect();
+        std::fs::write(&batch_shard, first_line).unwrap();
+        let mut store = CampaignStore::open(&path);
+        let report = store.ensure(&batch, &sys, &exec).unwrap();
+        assert_eq!((report.cached, report.executed), (0, batch.len()));
+        let mut warm = CampaignStore::open(&path);
+        assert_eq!(warm.ensure(&batch, &sys, &exec).unwrap().executed, 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    /// Migration satellite: opening a legacy v2 monolith produces shards
+    /// and an index byte-for-byte identical to a fresh run of the same
+    /// grid, serves warm reads with 0 executed, and a second open is a
+    /// no-op (no legacy file left to migrate, bytes untouched).
+    #[test]
+    fn legacy_monolith_migrates_byte_for_byte() {
+        let sys = small_sys();
+        let spec = small_spec();
+        let requests = enumerate(&spec);
+        let exec = ExecPolicy { jobs: 2, ..Default::default() };
+
+        // Fresh-run reference store.
+        let fresh_path = tmp_store_path("migrate-fresh");
+        CampaignStore::open(&fresh_path).ensure(&requests, &sys, &exec).unwrap();
+        let fresh_dir = store_dir(&fresh_path);
+
+        // Legacy monolith, then open -> auto-migration.
+        let legacy_path = tmp_store_path("migrate-legacy");
+        std::fs::create_dir_all(legacy_path.parent().unwrap()).unwrap();
+        let monolith = run_campaign(&spec, &sys, 2).to_json();
+        std::fs::write(&legacy_path, &monolith).unwrap();
+        let store = CampaignStore::open(&legacy_path);
+        assert_eq!(store.len(), requests.len());
+        let legacy_dir = store_dir(&legacy_path);
+
+        // Shards + index match the fresh run byte-for-byte.
+        for name in ["index.json", "batch-public.jsonl"] {
+            assert_eq!(
+                std::fs::read(legacy_dir.join(name)).unwrap(),
+                std::fs::read(fresh_dir.join(name)).unwrap(),
+                "{name} differs between migration and fresh run"
+            );
+        }
+        // Original preserved as .bak, monolith gone.
+        assert!(!legacy_path.exists());
+        assert_eq!(
+            std::fs::read_to_string(legacy_path.with_extension("json.bak")).unwrap(),
+            monolith
+        );
+
+        // Warm reads serve with 0 executed.
+        let mut warm = CampaignStore::open(&legacy_path);
+        let report = warm.ensure(&requests, &sys, &exec).unwrap();
+        assert_eq!((report.cached, report.executed), (requests.len(), 0));
+
+        // Second open is a no-op: same bytes, no new migration.
+        let index_before = std::fs::read(legacy_dir.join("index.json")).unwrap();
+        let again = CampaignStore::open(&legacy_path);
+        assert_eq!(again.len(), requests.len());
+        assert!(!legacy_path.exists());
+        assert_eq!(std::fs::read(legacy_dir.join("index.json")).unwrap(), index_before);
+        let _ = std::fs::remove_dir_all(fresh_path.parent().unwrap());
+        let _ = std::fs::remove_dir_all(legacy_path.parent().unwrap());
+    }
+
+    /// `merge` is the no-execution ingest path (store benches build their
+    /// 10k-scenario fixtures with it): present keys are skipped, new ones
+    /// append, and the result is warm for `ensure`.
+    #[test]
+    fn merge_appends_precomputed_outcomes() {
+        let sys = small_sys();
+        let spec = small_spec();
+        let requests = enumerate(&spec);
+        let result = run_campaign(&spec, &sys, 2);
+        let path = tmp_store_path("merge");
+
+        let mut store = CampaignStore::open(&path);
+        assert_eq!(store.merge(result.outcomes.clone(), &sys).unwrap(), requests.len());
+        assert_eq!(store.merge(result.outcomes.clone(), &sys).unwrap(), 0, "idempotent");
+
+        let mut warm = CampaignStore::open(&path);
+        let exec = ExecPolicy { jobs: 1, ..Default::default() };
+        let report = warm.ensure(&requests, &sys, &exec).unwrap();
+        assert_eq!((report.cached, report.executed), (requests.len(), 0));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
     #[test]
     fn no_exec_refuses_missing_scenarios() {
         let sys = small_sys();
@@ -628,7 +1353,7 @@ mod tests {
         let err = store.ensure(&requests, &sys, &exec).unwrap_err();
         assert!(err.to_string().contains("--no-exec"), "{err}");
         assert!(store.is_empty(), "no_exec must not execute or persist anything");
-        assert!(!path.exists());
+        assert!(!store_dir(&path).join("index.json").exists());
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
@@ -720,9 +1445,8 @@ mod tests {
     }
 
     /// `--digest-points` satellite, store side: a store built at one
-    /// digest size is discarded (not served) at another, while files
-    /// without the header field — every store written before the flag
-    /// existed, and every default-size store since — read back as
+    /// digest size is discarded (not served) at another, while indexes
+    /// without the header field — every default-size store — read back as
     /// 64-point and stay warm for default requests.
     #[test]
     fn digest_points_mismatch_invalidates_but_default_is_back_compat() {
@@ -732,23 +1456,24 @@ mod tests {
         spec.seeds = vec![0];
         let requests = enumerate(&spec);
         let path = tmp_store_path("digest");
+        let index_path = store_dir(&path).join("index.json");
 
-        // Build at the default size: the file must omit the header field
-        // (pre-flag byte layout) and be warm for default requests.
+        // Build at the default size: the index must omit the header field
+        // (back-compat layout) and be warm for default requests.
         let exec64 = ExecPolicy { jobs: 1, ..Default::default() };
         CampaignStore::open(&path).ensure(&requests, &sys, &exec64).unwrap();
-        let text = std::fs::read_to_string(&path).unwrap();
+        let text = std::fs::read_to_string(&index_path).unwrap();
         assert!(!text.contains("digest_points"), "default stores omit the header field");
         let mut warm = CampaignStore::open(&path);
         assert_eq!(warm.ensure(&requests, &sys, &exec64).unwrap().executed, 0);
 
         // A different digest size invalidates the cache and stamps the
-        // rewritten store with its size.
+        // rewritten index with its size.
         let exec16 = ExecPolicy { jobs: 1, digest_points: 16, ..Default::default() };
         let mut other = CampaignStore::open(&path);
         let report = other.ensure(&requests, &sys, &exec16).unwrap();
         assert_eq!((report.cached, report.executed), (0, requests.len()));
-        let text = std::fs::read_to_string(&path).unwrap();
+        let text = std::fs::read_to_string(&index_path).unwrap();
         assert!(text.contains("\"digest_points\": 16"));
         // ... and is warm for 16-point requests after reopening.
         let mut again = CampaignStore::open(&path);
@@ -762,8 +1487,9 @@ mod tests {
     /// `--compact` satellite: entries that no registered suite/config can
     /// produce any more are dropped — timed-out leftovers, unknown
     /// policies, suite/env mismatches, duplicates — and the compacted
-    /// store is persisted atomically (no temp file survives, and the
-    /// rewritten file parses clean).
+    /// store is persisted atomically shard-by-shard (no temp file
+    /// survives, emptied shards disappear, and the rewritten store parses
+    /// clean).
     #[test]
     fn compact_drops_stale_entries_and_saves_atomically() {
         use crate::experiments::campaign::summarize;
@@ -774,6 +1500,7 @@ mod tests {
         spec.seeds = vec![0];
         let requests = enumerate(&spec);
         let path = tmp_store_path("compact");
+        let dir = store_dir(&path);
         let exec = ExecPolicy { jobs: 2, ..Default::default() };
 
         let mut store = CampaignStore::open(&path);
@@ -781,7 +1508,10 @@ mod tests {
         let live = store.len();
         assert_eq!(live, 2);
 
-        // Inject stale entries of every kind compaction must catch.
+        // Inject stale entries of every kind compaction must catch
+        // (pushed straight into `outcomes`: compact() rebuilds the key
+        // map and marks every shard dirty, so the bypassed bookkeeping
+        // never leaks into a persist).
         let mk = |suite: Suite, env: EnvKind, policy: &str, timed_out: bool| {
             let mut summary = summarize(&[]);
             summary.timed_out = timed_out;
@@ -819,8 +1549,7 @@ mod tests {
         store.save().unwrap();
         // Atomic save: no temp file left behind, and reopening yields the
         // compacted content (which is warm for the original requests).
-        let dir = path.parent().unwrap();
-        let stray: Vec<_> = std::fs::read_dir(dir)
+        let stray: Vec<_> = std::fs::read_dir(&dir)
             .unwrap()
             .filter_map(|e| e.ok())
             .filter(|e| e.file_name().to_string_lossy().contains("tmp"))
@@ -831,25 +1560,36 @@ mod tests {
         let warm = reopened.ensure(&requests, &sys, &exec).unwrap();
         assert_eq!((warm.cached, warm.executed), (requests.len(), 0));
 
-        // A config change compacts to empty (fingerprint mismatch).
+        // A config change compacts to empty (fingerprint mismatch), and
+        // saving the emptied store removes the now-recordless shards.
         let mut other = small_sys();
         other.cluster.workers = 9;
         let mut cold = CampaignStore::open(&path);
         assert_eq!(cold.compact(&other), live);
         assert!(cold.is_empty());
-        let _ = std::fs::remove_dir_all(dir);
+        cold.save().unwrap();
+        assert!(!dir.join("batch-public.jsonl").exists(), "emptied shard removed");
+        assert!(dir.join("index.json").exists(), "index survives empty");
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }
 
     #[test]
     fn corrupt_store_is_treated_as_empty() {
         let path = tmp_store_path("corrupt");
         std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        // Corrupt legacy monolith.
         std::fs::write(&path, "{not json").unwrap();
         let store = CampaignStore::open(&path);
         assert!(store.is_empty());
         // Old-schema files are rejected too (not silently misread).
         std::fs::write(&path, "{\"schema\": \"drone-campaign/v1\", \"scenarios\": []}")
             .unwrap();
+        assert!(CampaignStore::open(&path).is_empty());
+        std::fs::remove_file(&path).unwrap();
+        // Corrupt index: also empty (and re-derived by the next run).
+        let dir = store_dir(&path);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("index.json"), "{not json").unwrap();
         assert!(CampaignStore::open(&path).is_empty());
         let _ = std::fs::remove_dir_all(path.parent().unwrap());
     }

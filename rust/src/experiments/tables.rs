@@ -338,7 +338,11 @@ pub fn table5(sys: &SystemConfig, opts: &RunOpts, store: &mut CampaignStore) -> 
 
 /// Tenant counts the scaling sweep runs at; 12 is the cluster suite's
 /// headline cell, 32 is the block-sparse decide path's stress cell (a
-/// 32-factor joint space, GP input in the hundreds of dims).
+/// 32-factor joint space, GP input in the hundreds of dims). Both 12 and
+/// 32 ([`campaign::CLUSTER_STRESS_TENANTS`]) are in the cluster suite's
+/// campaign grid, so `drone campaign --experiments cluster` prebuilds
+/// them at full campaign scale and this sweep reads them back from the
+/// cluster shard.
 pub const TABLE6_TENANTS: &[usize] = &[2, 4, 8, 12, 32];
 
 /// Decision periods per table 6 scenario at a given `--scale` (shared

@@ -61,15 +61,20 @@ USAGE:
   drone bench-check <BENCH_N.json> [--baseline OLD.json] [--max-regression F]
 
 Environment-backed figures/tables read scenario records from the campaign
-store (results/campaign.json, opened once per invocation), executing only
-scenarios it does not hold; --no-exec turns missing scenarios into an
-error (pure-reader mode), --refresh forces re-execution of matching cached
-scenarios (replaced in place), --timeout caps each scenario's wall clock
-(truncating its records) and --digest-points sizes the latency quantile
-digest (default 64; a store built at another size is rebuilt).
+store (results/campaign/, one <suite>.jsonl shard per suite plus an
+index.json; opened once per invocation, each shard parsed lazily on the
+first driver that requests its suite), executing only scenarios it does
+not hold; --no-exec turns missing scenarios into an error (pure-reader
+mode), --refresh forces re-execution of matching cached scenarios
+(replaced in place, rewriting only their suites' shards), --timeout caps
+each scenario's wall clock (truncating its records) and --digest-points
+sizes the latency quantile digest (default 64; a store built at another
+size is rebuilt). A legacy monolithic results/campaign.json migrates
+automatically on open (original kept as campaign.json.bak).
 `campaign --compact` drops stored scenarios whose key no longer matches
 any registered suite or the current config fingerprint (plus timed-out
-leftovers and duplicates), reporting compacted(n).
+leftovers and duplicates), rewriting shard by shard and reporting
+compacted(n).
 
 --sim-backend selects the microservice window simulator for `drone run`
 (micro/hybrid/trace envs): `exact` (default; per-request DES, what all
@@ -323,8 +328,8 @@ fn cmd_experiment(args: &Args, sys: &SystemConfig) -> i32 {
         vec![id]
     };
     // `experiments::run` opens the campaign store once and threads it
-    // through every driver — `drone experiment all` is one-pass over
-    // campaign.json.
+    // through every driver — `drone experiment all` parses each suite's
+    // shard at most once, and only for the suites its drivers read.
     if let Err(e) = experiments::run(&ids, sys, &opts) {
         eprintln!("{e:#}");
         return 1;
@@ -432,10 +437,11 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     );
 
     // Run through the campaign store so repeated/overlapping campaign
-    // invocations accumulate in results/campaign.json instead of each run
-    // clobbering the scenarios previous ones (or the figure drivers)
-    // cached. Scenarios already in the store are served from it — results
-    // are deterministic, so re-running them would reproduce the same rows.
+    // invocations accumulate in the results/campaign/ shards instead of
+    // each run clobbering the scenarios previous ones (or the figure
+    // drivers) cached. Scenarios already in the store are served from it —
+    // results are deterministic, so re-running them would reproduce the
+    // same rows — and fresh ones append to only their suites' shards.
     let started = std::time::Instant::now();
     let mut store = experiments::CampaignStore::open_default();
     let exec = experiments::ExecPolicy {
@@ -476,8 +482,8 @@ fn cmd_campaign(args: &Args, sys: &SystemConfig) -> i32 {
     result.print_tables();
     println!("{}", report.describe());
     if report.executed == 0 {
-        // Nothing ran, so ensure() did not rewrite the store; save anyway
-        // so the file exists even for a fully cached grid.
+        // Nothing ran, so ensure() did not touch the shards; save anyway
+        // so the index exists even for a fully cached grid.
         if let Err(e) = store.save() {
             eprintln!("writing campaign store failed: {e:#}");
             return 1;

@@ -10,8 +10,10 @@
 //! mapping group name -> array of bench rows. Three groups are mandatory
 //! for the tracked trajectory — `queue` (event-queue micro-benches),
 //! `window` (window sim at low/high RPS x exact/fluid) and `decide`
-//! (end-to-end decide+advance) — extra groups are allowed and ignored by
-//! the check.
+//! (end-to-end decide+advance). The optional `store` group (campaign
+//! store append/load) is tracked by the regression gate when both sides
+//! carry it but may be absent — older baselines predate it. Any other
+//! extra group is allowed and ignored by the check.
 
 use crate::util::json::Json;
 
@@ -20,6 +22,16 @@ pub const SCHEMA: &str = "drone-bench/v1";
 
 /// Groups that must be present (non-empty) for the export to validate.
 pub const REQUIRED_GROUPS: [&str; 3] = ["queue", "window", "decide"];
+
+/// Optional groups the p99 gate also tracks when both exports carry
+/// them. Unlike [`REQUIRED_GROUPS`] they may be missing from either side
+/// (older baselines predate the `store` group) and never count toward
+/// the zero-overlap check, so adding one cannot fail an old baseline.
+pub const TRACKED_OPTIONAL_GROUPS: [&str; 1] = ["store"];
+
+fn tracked(group: &str) -> bool {
+    REQUIRED_GROUPS.contains(&group) || TRACKED_OPTIONAL_GROUPS.contains(&group)
+}
 
 /// One measured bench, as it appears in a group array.
 #[derive(Clone, Debug)]
@@ -181,14 +193,14 @@ pub fn validate(text: &str) -> Result<String, String> {
 /// most 25% slower than the baseline before the check fails.
 pub const MAX_P99_REGRESSION: f64 = 0.25;
 
-/// Collect `(group, name) -> p99_ms` for the tracked (required) groups of
-/// a validated export. Extra groups are observability-only and never
-/// gate, so they are skipped here too.
+/// Collect `(group, name) -> p99_ms` for the tracked groups (required
+/// plus tracked-optional) of a validated export. Other extra groups are
+/// observability-only and never gate, so they are skipped here too.
 fn p99_by_bench(doc: &Json) -> Vec<((String, String), f64)> {
     let mut out = vec![];
     let Some(Json::Obj(groups)) = doc.get("groups") else { return out };
     for (gname, rows) in groups {
-        if !REQUIRED_GROUPS.contains(&gname.as_str()) {
+        if !tracked(gname.as_str()) {
             continue;
         }
         for row in rows.as_arr().unwrap_or(&[]) {
@@ -206,11 +218,13 @@ fn p99_by_bench(doc: &Json) -> Vec<((String, String), f64)> {
 
 /// Compare a fresh export against a baseline export (both must pass
 /// [`validate`] first). Benches are matched by (group, name) within the
-/// required groups only, so added, removed or renamed benches never trip
-/// the gate — but zero matches is an error (a wholesale rename would
-/// otherwise make the check vacuously green). Ok carries a one-line
-/// summary; Err lists every matched bench whose p99 regressed by more
-/// than `max_regression` (fractional: 0.25 = +25%).
+/// required and tracked-optional groups, so added, removed or renamed
+/// benches never trip the gate — but zero matches *within the required
+/// groups* is an error (a wholesale rename would otherwise make the
+/// check vacuously green; tracked-optional overlap alone cannot stand in
+/// for it). Ok carries a one-line summary; Err lists every matched bench
+/// whose p99 regressed by more than `max_regression` (fractional: 0.25 =
+/// +25%).
 pub fn compare(new_text: &str, baseline_text: &str, max_regression: f64) -> Result<String, String> {
     validate(new_text).map_err(|e| format!("new export: {e}"))?;
     validate(baseline_text).map_err(|e| format!("baseline: {e}"))?;
@@ -220,6 +234,7 @@ pub fn compare(new_text: &str, baseline_text: &str, max_regression: f64) -> Resu
     let bases = p99_by_bench(&base_doc);
 
     let mut matched = 0usize;
+    let mut matched_required = 0usize;
     let mut worst: f64 = f64::NEG_INFINITY;
     let mut regressions = vec![];
     for (key, new_p99) in &news {
@@ -230,6 +245,9 @@ pub fn compare(new_text: &str, baseline_text: &str, max_regression: f64) -> Resu
             continue;
         }
         matched += 1;
+        if REQUIRED_GROUPS.contains(&key.0.as_str()) {
+            matched_required += 1;
+        }
         let delta = new_p99 / base_p99 - 1.0;
         worst = worst.max(delta);
         if delta > max_regression {
@@ -244,7 +262,7 @@ pub fn compare(new_text: &str, baseline_text: &str, max_regression: f64) -> Resu
             ));
         }
     }
-    if matched == 0 {
+    if matched_required == 0 {
         return Err("no benches in common with the baseline (required groups); \
                     refresh the baseline artifact"
             .into());
@@ -377,6 +395,52 @@ mod tests {
         // Regression outside the required groups: observability only.
         groups.push(("experiments", vec![row_p99("fig7a", 500.0)]));
         assert!(compare(&render(&[], &groups), &baseline, MAX_P99_REGRESSION).is_ok());
+    }
+
+    #[test]
+    fn store_group_is_gated_when_both_sides_carry_it() {
+        let mut with_store = full_groups();
+        with_store.push(("store", vec![row_p99("append 256 new @10k", 2.1)]));
+        let baseline = render(&[], &with_store);
+        // Store regression past the gate fails even with required groups
+        // unchanged: the optional group is tracked, not ignored.
+        let mut slower = full_groups();
+        slower.push(("store", vec![row_p99("append 256 new @10k", 9.0)]));
+        let err = compare(&render(&[], &slower), &baseline, MAX_P99_REGRESSION).unwrap_err();
+        assert!(err.contains("store/append 256 new @10k"), "{err}");
+    }
+
+    #[test]
+    fn store_group_absent_from_either_side_is_not_an_error() {
+        // New export grew the store group; old baseline predates it.
+        let old_baseline = render(&[], &full_groups());
+        let mut with_store = full_groups();
+        with_store.push(("store", vec![row_p99("cold-load 10k-scenario shard", 5.0)]));
+        assert!(compare(&render(&[], &with_store), &old_baseline, MAX_P99_REGRESSION).is_ok());
+        // And the reverse: a baseline with the group compared against an
+        // export without it (filtered run) — unmatched, not an error.
+        let baseline_with_store = render(&[], &with_store);
+        assert!(
+            compare(&render(&[], &full_groups()), &baseline_with_store, MAX_P99_REGRESSION)
+                .is_ok()
+        );
+    }
+
+    #[test]
+    fn store_overlap_alone_does_not_satisfy_the_zero_overlap_check() {
+        let mut with_store = full_groups();
+        with_store.push(("store", vec![row_p99("append 256 new @10k", 2.0)]));
+        let baseline = render(&[], &with_store);
+        // Every required bench renamed; only the store bench still
+        // matches. The gate must still demand required-group overlap.
+        let renamed = vec![
+            ("queue", vec![row("q2")]),
+            ("window", vec![row("w2")]),
+            ("decide", vec![row("d2")]),
+            ("store", vec![row_p99("append 256 new @10k", 2.0)]),
+        ];
+        let err = compare(&render(&[], &renamed), &baseline, MAX_P99_REGRESSION).unwrap_err();
+        assert!(err.contains("no benches in common"), "{err}");
     }
 
     #[test]

@@ -96,6 +96,20 @@ impl Json {
     }
 }
 
+/// Parse line-delimited JSON (the sharded campaign store's `.jsonl`
+/// format): one value per non-empty line. Errors carry the 1-based line
+/// number so a corrupt shard points at the offending record.
+pub fn parse_jsonl(text: &str) -> Result<Vec<Json>> {
+    let mut out = vec![];
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(Json::parse(line).map_err(|e| anyhow!("line {}: {e:#}", i + 1))?);
+    }
+    Ok(out)
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -290,6 +304,17 @@ mod tests {
         assert_eq!(Json::parse("false").unwrap(), Json::Bool(false));
         assert_eq!(Json::parse("-1.5e2").unwrap(), Json::Num(-150.0));
         assert_eq!(Json::parse("\"a\"").unwrap(), Json::Str("a".into()));
+    }
+
+    #[test]
+    fn parses_jsonl_lines_and_reports_bad_line() {
+        let vals = parse_jsonl("{\"a\": 1}\n\n[2, 3]\n").unwrap();
+        assert_eq!(vals.len(), 2);
+        assert_eq!(vals[0].get("a").and_then(Json::as_u64), Some(1));
+        assert_eq!(vals[1].num_vec().unwrap(), vec![2.0, 3.0]);
+        assert!(parse_jsonl("").unwrap().is_empty());
+        let err = parse_jsonl("{\"a\": 1}\n{torn").unwrap_err();
+        assert!(err.to_string().contains("line 2"), "{err}");
     }
 
     #[test]

@@ -166,14 +166,18 @@ fn hybrid_joint_suite_deterministic_for_any_job_count() {
     assert_ne!(joint_perf, fixed_perf, "joint and fixed hybrid must differ");
 }
 
-/// The many-tenant `cluster` suite (12 heterogeneous tenants through one
-/// factored action space — the regime the additive kernel and
-/// coordinate-descent candidates exist for) obeys the same contract:
-/// part of `--experiments all`, byte-identical canonical `campaign.json`
-/// for any `--jobs`, env descriptor round-trips through the store JSON.
+/// The many-tenant `cluster` suite (12 heterogeneous tenants as the
+/// headline cell plus the 32-tenant stress cell, each through one
+/// factored action space — the regime the additive kernel,
+/// coordinate-descent candidates and block-sparse scoring exist for)
+/// obeys the same contract: part of `--experiments all`, byte-identical
+/// canonical output for any `--jobs`, env descriptor round-trips through
+/// the store JSON.
 #[test]
 fn cluster_suite_deterministic_for_any_job_count() {
-    use drone::experiments::campaign::{parse_suites, EnvKind, CLUSTER_TENANTS};
+    use drone::experiments::campaign::{
+        parse_suites, EnvKind, CLUSTER_STRESS_TENANTS, CLUSTER_TENANTS,
+    };
 
     assert!(
         parse_suites("all").unwrap().contains(&Suite::Cluster),
@@ -191,7 +195,8 @@ fn cluster_suite_deterministic_for_any_job_count() {
         micro_amplitude_rps: 18.0,
         ..Default::default()
     };
-    assert_eq!(enumerate(&spec).len(), 4);
+    // 2 tenant counts (12 headline + 32 stress) * 2 policies * 2 seeds.
+    assert_eq!(enumerate(&spec).len(), 8);
 
     let serial = run_campaign(&spec, &sys, 1);
     let parallel = run_campaign(&spec, &sys, 4);
@@ -200,20 +205,32 @@ fn cluster_suite_deterministic_for_any_job_count() {
         parallel.to_json_canonical(),
         "cluster campaign.json must not depend on the job count"
     );
+    let mut seen = std::collections::BTreeSet::new();
     for o in &serial.outcomes {
         match &o.scenario.env {
             EnvKind::Cluster { tenants, .. } => {
-                assert_eq!(*tenants, CLUSTER_TENANTS, "{}", o.scenario.name())
+                assert!(
+                    [CLUSTER_TENANTS, CLUSTER_STRESS_TENANTS].contains(tenants),
+                    "{}",
+                    o.scenario.name()
+                );
+                seen.insert(*tenants);
             }
             other => panic!("cluster suite produced {other:?}"),
         }
         assert_eq!(o.records.len(), 3, "{}", o.scenario.name());
         assert_eq!(o.summary.steps, 3);
     }
+    assert_eq!(
+        seen.into_iter().collect::<Vec<_>>(),
+        vec![CLUSTER_TENANTS, CLUSTER_STRESS_TENANTS],
+        "the grid must carry both the headline and the stress cell"
+    );
     let j = serial.to_json();
     assert!(j.contains("\"suite\": \"cluster\""));
     assert!(j.contains("\"kind\": \"cluster\""));
     assert!(j.contains("\"tenants\": 12"));
+    assert!(j.contains("\"tenants\": 32"));
 }
 
 #[test]

@@ -2,9 +2,11 @@
 //! series from a warm campaign store executes **zero** environments, the
 //! records it serves are byte-identical to the ones a fresh run produces
 //! regardless of `--jobs`, one opened store serves any number of driver
-//! request batches with exactly **one** `campaign.json` parse (the
-//! one-pass threading `experiments::run` relies on), and `--refresh`
-//! re-executes each cached scenario exactly once per opened store.
+//! request batches with exactly **one** parse per suite shard it actually
+//! reads — opening parses nothing, and suites no driver requests (e.g.
+//! the cluster shard) are never parsed at all (the lazy threading
+//! `experiments::run` relies on) — and `--refresh` re-executes each
+//! cached scenario exactly once per opened store.
 //!
 //! This file deliberately holds a single `#[test]` — the env-execution
 //! and store-parse counters are process-global, and any concurrently
@@ -15,7 +17,9 @@
 use drone::config::SystemConfig;
 use drone::experiments::campaign::{EnvKind, Scenario, Suite};
 use drone::experiments::harness::env_execution_count;
-use drone::experiments::store::{store_parse_count, CampaignStore, ExecPolicy};
+use drone::experiments::store::{
+    shard_parse_count, store_parse_count, CampaignStore, ExecPolicy,
+};
 
 fn test_sys() -> SystemConfig {
     let mut sys = SystemConfig::default();
@@ -67,8 +71,10 @@ fn warm_store_serves_figures_without_env_execution() {
     let dir = std::env::temp_dir().join(format!("drone-figcache-{}", std::process::id()));
     let path = dir.join("campaign.json");
 
-    // Cold pass: everything executes, exactly once per scenario.
+    // Cold pass: everything executes, exactly once per scenario, and an
+    // empty store involves no shard parse at all (there are no shards).
     let exec = ExecPolicy { jobs: 4, no_exec: false, timeout_s: 0.0, ..Default::default() };
+    let cold_parses = store_parse_count();
     let mut cold = CampaignStore::open(&path);
     let before_cold = env_execution_count();
     let first = cold.ensure(&requests, &sys, &exec).unwrap();
@@ -78,6 +84,7 @@ fn warm_store_serves_figures_without_env_execution() {
         requests.len() as u64,
         "cold pass runs each scenario exactly once"
     );
+    assert_eq!(store_parse_count(), cold_parses, "a cold store has nothing to parse");
 
     // Warm pass from disk: zero executions, even in pure-reader mode.
     let strict = ExecPolicy { jobs: 4, no_exec: true, timeout_s: 0.0, ..Default::default() };
@@ -119,20 +126,42 @@ fn warm_store_serves_figures_without_env_execution() {
         "figure-backing records must be byte-identical for any job count"
     );
 
-    // One-pass threading: `drone experiment all` opens the store once and
-    // hands every driver the same `&mut CampaignStore`, so however many
-    // driver request batches run, campaign.json is parsed exactly once.
+    // Lazy one-pass threading: `drone experiment all` opens the store once
+    // and hands every driver the same `&mut CampaignStore`. Opening parses
+    // nothing; each suite's shard is parsed exactly once, the first time a
+    // driver batch requests that suite — and suites no batch names (the
+    // cluster shard, here any suite but the two requested) are never
+    // parsed at all.
     let parses_before = store_parse_count();
+    let batch_before = shard_parse_count("batch-public");
+    let micro_before = shard_parse_count("micro-public");
+    let cluster_before = shard_parse_count("cluster");
     let mut threaded = CampaignStore::open(&path); // the one open in experiments::run
-    assert_eq!(store_parse_count(), parses_before + 1, "open parses the file once");
-    for batch in [&requests[..2], &requests[2..4], &requests[..]] {
+    assert_eq!(store_parse_count(), parses_before, "open reads only the index");
+    // First two batches request only batch-public scenarios: exactly one
+    // shard parse between them, and the micro shard stays untouched.
+    for batch in [&requests[..2], &requests[2..4]] {
         let report = threaded.ensure(batch, &sys, &strict).unwrap();
         assert_eq!(report.executed, 0);
     }
+    assert_eq!(store_parse_count(), parses_before + 1, "one parse for the batch shard");
+    assert_eq!(shard_parse_count("batch-public"), batch_before + 1);
     assert_eq!(
-        store_parse_count(),
-        parses_before + 1,
-        "serving every driver from the threaded store must not re-parse campaign.json"
+        shard_parse_count("micro-public"),
+        micro_before,
+        "batch-only drivers must not parse the micro shard"
+    );
+    // The full request set pulls in micro-public: one more shard parse,
+    // and re-serving the batch scenarios re-parses nothing.
+    let report = threaded.ensure(&requests, &sys, &strict).unwrap();
+    assert_eq!(report.executed, 0);
+    assert_eq!(store_parse_count(), parses_before + 2, "one parse per touched shard");
+    assert_eq!(shard_parse_count("batch-public"), batch_before + 1);
+    assert_eq!(shard_parse_count("micro-public"), micro_before + 1);
+    assert_eq!(
+        shard_parse_count("cluster"),
+        cluster_before,
+        "a suite no driver requests is never parsed"
     );
 
     // --refresh: cached hits are re-executed and replaced in place — but
